@@ -1,0 +1,40 @@
+//! DDSL compiler example: parse each sample program under
+//! `examples/ddsl/`, print the recognized algorithm family, the GTI
+//! strategy the planner selected (the paper's strategy table), and the
+//! dataset bindings a runner would attach.
+//!
+//! Run with:  cargo run --release --example ddsl_compile
+
+use accd::ddsl;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("examples/ddsl");
+    let mut paths: Vec<_> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|e| e == "dd"))
+        .collect();
+    paths.sort();
+    anyhow::ensure!(!paths.is_empty(), "no .dd programs in {}", dir.display());
+
+    for path in paths {
+        let src = std::fs::read_to_string(&path)?;
+        println!("== {} ==", path.display());
+        match ddsl::compile_program(&src) {
+            Ok(plan) => {
+                println!("  kind:     {:?}", plan.kind);
+                println!("  strategy: {}", plan.strategy);
+                println!(
+                    "  metric:   {}{}",
+                    if plan.metric.weighted { "weighted " } else { "" },
+                    plan.metric.norm
+                );
+                for (name, size, dim) in &plan.bindings {
+                    println!("  bind:     {name} ({size} x {dim})");
+                }
+            }
+            Err(e) => println!("  compile error: {e}"),
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! End-to-end driver: exercises the **full** system on one real small
+//! workload, proving all layers compose (this is the repo's headline
+//! validation run, recorded in EXPERIMENTS.md §End-to-end):
+//!
+//!   DDSL source → lexer/parser/typecheck → GTI strategy selection →
+//!   DSE explorer picks the hardware design point → engine executes
+//!   the plan (CPU GTI filter + PJRT-loaded Pallas distance tiles) →
+//!   result cross-checked against naive + TOP + CBLAS baselines →
+//!   paper-style speedup/energy table printed.
+//!
+//! Run with:  cargo run --release --example end_to_end
+
+use accd::baselines::{cblas, naive, top};
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::synthetic;
+use accd::ddsl;
+use accd::dse::{explorer::Workload, Explorer};
+use accd::util::bench::{fmt_x, Table};
+
+/// K-means over a 12k x 24-D set with 96 clusters, expressed in DDSL.
+const PROGRAM: &str = r#"
+    DVar K int 96;
+    DVar D int 24;
+    DVar psize int 12000;
+    DVar csize int 96;
+    DSet pSet float psize D;
+    DSet cSet float csize D;
+    DSet distMat float psize csize;
+    DSet idMat int psize csize;
+    DSet pkMat int psize K;
+    DVar S int;
+    AccD_Iter(12) {
+        S = false;
+        AccD_Comp_Dist(pSet, cSet, distMat, idMat, D, "L2", 0);
+        AccD_Dist_Select(distMat, idMat, K, "smallest", pkMat);
+        AccD_Update(cSet, pSet, pkMat, S)
+    }
+"#;
+
+fn main() -> anyhow::Result<()> {
+    // --- Stage 1: DDSL compilation --------------------------------------
+    let plan = ddsl::compile_program(PROGRAM)?;
+    println!("[1/5] DDSL compiled: strategy = {}", plan.strategy);
+    let ddsl::plan::PlanKind::KmeansLike { k, max_iters, .. } = plan.kind else {
+        anyhow::bail!("planner mis-classified the program");
+    };
+    let (_, psize, pdim) = plan.bindings[0].clone();
+
+    // --- Stage 2: DSE ----------------------------------------------------
+    let workload =
+        Workload { src_size: psize, trg_size: k, d: pdim, n_iteration: 3, alpha: 10.0 };
+    let dse = Explorer::default().explore(&workload)?;
+    println!(
+        "[2/5] DSE: {} configs -> block={} simd={} unroll={} src_groups={} (modeled {:.4}s)",
+        dse.evaluated, dse.best.block, dse.best.simd, dse.best.unroll, dse.best.n_src_grp,
+        dse.best_latency
+    );
+
+    // --- Stage 3: engine with the DSE-selected design --------------------
+    let mut cfg = AccdConfig::new();
+    cfg.hw = dse.best.to_hw(cfg.hw.freq_mhz);
+    cfg.gti.src_groups = dse.best.n_src_grp;
+    cfg.gti.trg_groups = dse.best.n_trg_grp.min(k);
+    let seed = cfg.seed;
+    let dataset = synthetic::clustered(psize, pdim, 110, 0.025, seed);
+    let mut engine = Engine::new(cfg)?;
+    let accd_run = engine.kmeans(&dataset, k, max_iters)?;
+    println!("[3/5] AccD run: {}", accd_run.report.summary());
+
+    // --- Stage 4: baselines ----------------------------------------------
+    let base = naive::kmeans(&dataset, k, max_iters, seed)?;
+    let top_run = top::kmeans(&dataset, k, max_iters, seed)?;
+    let cblas_run = cblas::kmeans(&dataset, k, max_iters, seed)?;
+    println!("[4/5] baselines done");
+
+    // --- Stage 5: cross-check + table ------------------------------------
+    let tol = 1e-3 * (1.0 + base.sse);
+    anyhow::ensure!(
+        (accd_run.sse - base.sse).abs() <= tol,
+        "AccD SSE {} diverged from naive {}",
+        accd_run.sse,
+        base.sse
+    );
+    let mut table = Table::new(&["impl", "wall (s)", "speedup", "energy (J)", "energy-eff"]);
+    for (name, report) in [
+        ("Baseline", &base.report),
+        ("TOP", &top_run.report),
+        ("CBLAS", &cblas_run.report),
+        ("AccD", &accd_run.report),
+    ] {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.3}", report.wall_secs),
+            fmt_x(base.report.wall_secs / report.wall_secs),
+            format!("{:.1}", report.energy_j),
+            fmt_x(base.report.energy_j / report.energy_j),
+        ]);
+    }
+    table.print("end-to-end: K-means 12k x 24-D, k=96 (results verified equal)");
+    println!("\n[5/5] all layers verified: DDSL -> DSE -> GTI filter -> PJRT tiles -> results");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Perf probe: per-call cost and throughput of the accelerator tiles
+//! across the shipped size variants.  This is the measurement tool the
+//! §Perf iteration log in EXPERIMENTS.md is built from — run it after
+//! kernel or runtime changes to see where the dispatch/compute
+//! crossover sits.
+//!
+//! Run with:  cargo run --release --example perf_probe
+
+use accd::runtime::Runtime;
+use accd::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let mut rng = Rng::new(1);
+    let d = 16usize;
+    let iters = 20;
+    println!("-- distance tiles (l2sq, d={d}) --");
+    for (tm, tn) in [(64usize, 64usize), (512, 512), (512, 64), (64, 512)] {
+        let a: Vec<f32> = (0..tm * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..tn * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let _ = rt.distance_tile_sized("l2sq", tm, tn, d, &a, &b).unwrap(); // compile
+        let t = Instant::now();
+        for _ in 0..iters {
+            let _ = rt.distance_tile_sized("l2sq", tm, tn, d, &a, &b).unwrap();
+        }
+        let per = t.elapsed().as_secs_f64() / iters as f64;
+        let macs = (tm * tn * d) as f64;
+        println!(
+            "distance {tm}x{tn}x{d}: {:.1}us/call, {:.2} GMAC/s",
+            per * 1e6,
+            macs / per / 1e9
+        );
+    }
+    println!("-- fused kmeans-assign tiles (d={d}) --");
+    for tm in [64usize, 512] {
+        for kp in [64usize, 512] {
+            let a: Vec<f32> = (0..tm * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let c: Vec<f32> = (0..kp * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let _ = rt.kmeans_assign_tile_sized(tm, kp, d, &a, &c).unwrap();
+            let t = Instant::now();
+            for _ in 0..iters {
+                let _ = rt.kmeans_assign_tile_sized(tm, kp, d, &a, &c).unwrap();
+            }
+            let per = t.elapsed().as_secs_f64() / iters as f64;
+            println!(
+                "kmeans m{tm} k{kp} d{d}: {:.1}us/call, {:.2} GMAC/s",
+                per * 1e6,
+                (tm * kp * d) as f64 / per / 1e9
+            );
+        }
+    }
+    println!("-- nbody force tiles --");
+    for (tm, tn) in [(64usize, 64usize), (512, 512)] {
+        let pi: Vec<f32> = (0..tm * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let pj: Vec<f32> = (0..tn * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let m: Vec<f32> = (0..tn).map(|_| rng.range_f32(0.1, 1.0)).collect();
+        let _ = rt.nbody_accel_sized(tm, tn, &pi, &pj, &m, 1e-4, 0.5).unwrap();
+        let t = Instant::now();
+        for _ in 0..iters {
+            let _ = rt.nbody_accel_sized(tm, tn, &pi, &pj, &m, 1e-4, 0.5).unwrap();
+        }
+        let per = t.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "nbody {tm}x{tn}: {:.1}us/call, {:.2} Gpair/s",
+            per * 1e6,
+            (tm * tn) as f64 / per / 1e9
+        );
+    }
+}

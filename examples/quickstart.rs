@@ -1,0 +1,43 @@
+//! Quickstart: the 60-second tour of the AccD engine.
+//!
+//! Builds a small clustered dataset, runs AccD K-means on the CPU-FPGA
+//! engine, and contrasts it with the naive CPU baseline — the same
+//! comparison every paper figure is built on.
+//!
+//! Run with:  cargo run --release --example quickstart
+//! (requires `make artifacts` once beforehand)
+
+use accd::baselines::naive;
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::synthetic;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: 20k points in 16-D with real cluster structure.
+    let dataset = synthetic::clustered(20_000, 16, 70, 0.03, 42);
+    println!("dataset: {} ({} x {})", dataset.name, dataset.n(), dataset.d());
+
+    // 2. The AccD engine: loads AOT artifacts, creates the PJRT client.
+    let cfg = AccdConfig::new();
+    let mut engine = Engine::new(cfg)?;
+    println!("accelerator platform: {}", engine.runtime.platform());
+
+    // 3. AccD K-means: GTI filtering on CPU + distance tiles on the
+    //    accelerator.
+    let k = 64;
+    let accd = engine.kmeans(&dataset, k, 15)?;
+    println!("\n[AccD CPU-FPGA]\n{}", accd.report.summary());
+
+    // 4. The naive baseline the paper normalizes against.
+    let base = naive::kmeans(&dataset, k, 15, 42)?;
+    println!("\n[naive baseline]\n{}", base.report.summary());
+
+    // 5. The headline numbers.
+    println!(
+        "\nspeedup: {:.2}x | energy efficiency: {:.2}x | SSE match: {:.4}% difference",
+        accd.report.speedup_vs(&base.report),
+        accd.report.energy_eff_vs(&base.report),
+        100.0 * (accd.sse - base.sse).abs() / base.sse.max(1e-12),
+    );
+    Ok(())
+}

@@ -1,0 +1,282 @@
+"""AOT artifact pipeline: lower every L2 graph to HLO text + manifest.
+
+Run via `make artifacts` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids, so text round-trips cleanly.  Lowered with
+return_tuple=True and unwrapped with to_tuple1()/to_vec() on the rust
+side.
+
+Every artifact is self-checked against the pure-jnp oracle (kernels/ref)
+on random inputs before it is written, and the full set is described by
+artifacts/manifest.json which the rust runtime loads at startup.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue
+# ---------------------------------------------------------------------------
+
+# Tile shape for the distance hot path.  The rust runtime pads every
+# group batch up to these multiples, so one executable per (metric, d)
+# covers all datasets.  d is padded to the next entry of D_PAD (zeros
+# pad the feature axis — distance-neutral for both L2^2 and L1).
+TILE_M = 64
+TILE_N = 64
+D_PAD = [4, 8, 16, 32, 64, 128]
+
+# Large-tile variants (perf pass, EXPERIMENTS.md §Perf): the CPU-PJRT
+# "FPGA" costs ~100us of dispatch per execute, which dwarfs a 64x64
+# tile's compute.  512-row/col variants let one call carry 64x the
+# work; the rust device mixes 512- and 64-tiles greedily so padding
+# waste stays bounded by the 64-tile grid.  Inside a 512 variant the
+# Pallas BlockSpec still tiles at 256 (VMEM-sized blocks).
+TILE_VARIANTS = [64, 512]
+BIG_BLOCK = 256
+
+# Fused KNN tile Top-K width: the rust side merges per-tile Top-K lists,
+# so KNN_TILE_K only has to bound the per-tile contribution.
+KNN_TILE_K = 32
+
+# N-body force tile (always 3-D positions).
+NBODY_TILE = 64
+
+# K-means fused-assign tile: centers padded to these counts.  Padded
+# center slots are filled with +LARGE sentinel rows on the rust side so
+# argmin never selects them.
+KMEANS_K_PAD = [64, 128, 256, 512, 1024]
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def catalogue():
+    """Yield (name, fn, example_specs, check) for every artifact.
+
+    `check(fn_outputs, np_inputs)` validates lowered semantics against
+    the oracle; it receives numpy arrays.
+    """
+    entries = []
+
+    def block_for(rows):
+        """Pallas block edge used inside a tile of `rows` inputs."""
+        return min(rows, BIG_BLOCK) if rows > TILE_M else TILE_M
+
+    for d in D_PAD:
+        for tm in TILE_VARIANTS:
+            for tn in TILE_VARIANTS:
+                bm, bn = block_for(tm), block_for(tn)
+                entries.append(
+                    dict(
+                        name=f"distance_l2sq_m{tm}_n{tn}_d{d}",
+                        fn=functools.partial(_dist_tile, metric="l2sq", bm=bm, bn=bn),
+                        specs=[_spec((tm, d)), _spec((tn, d))],
+                        ref=lambda a, b: (ref.pairwise_l2sq(a, b),),
+                        kind="distance",
+                        meta=dict(metric="l2sq", bm=tm, bn=tn, d=d),
+                    )
+                )
+                # L1 only ships at the base tile: it is not on any hot
+                # path (DDSL metric support), so the 512 variants would
+                # only add compile time.
+                if tm == TILE_M and tn == TILE_N:
+                    entries.append(
+                        dict(
+                            name=f"distance_l1_m{tm}_n{tn}_d{d}",
+                            fn=functools.partial(_dist_tile, metric="l1", bm=bm, bn=bn),
+                            specs=[_spec((tm, d)), _spec((tn, d))],
+                            ref=lambda a, b: (ref.pairwise_l1(a, b),),
+                            kind="distance",
+                            meta=dict(metric="l1", bm=tm, bn=tn, d=d),
+                        )
+                    )
+
+    for d in D_PAD:
+        for k in KMEANS_K_PAD:
+            for tm in TILE_VARIANTS:
+                entries.append(
+                    dict(
+                        name=f"kmeans_assign_m{tm}_k{k}_d{d}",
+                        fn=model.kmeans_assign_tile,
+                        specs=[_spec((tm, d)), _spec((k, d))],
+                        ref=lambda p, c: ref.kmeans_assign(p, c),
+                        kind="kmeans_assign",
+                        meta=dict(metric="l2sq", bm=tm, k=k, d=d),
+                    )
+                )
+
+    for d in D_PAD:
+        entries.append(
+            dict(
+                name=f"knn_tile_m{TILE_M}_n{TILE_N}_d{d}_k{KNN_TILE_K}",
+                fn=functools.partial(model.distance_topk_tile, k=KNN_TILE_K),
+                specs=[_spec((TILE_M, d)), _spec((TILE_N, d))],
+                ref=lambda a, b: ref.topk_smallest(ref.pairwise_l2sq(a, b), KNN_TILE_K),
+                kind="knn_tile",
+                meta=dict(metric="l2sq", bm=TILE_M, bn=TILE_N, d=d, k=KNN_TILE_K),
+            )
+        )
+
+    for tm in TILE_VARIANTS:
+        for tn in TILE_VARIANTS:
+            entries.append(
+                dict(
+                    name=f"nbody_accel_m{tm}_n{tn}",
+                    fn=model.nbody_accel_tile,
+                    specs=[
+                        _spec((tm, 3)),
+                        _spec((tn, 3)),
+                        _spec((tn,)),
+                        _spec((2,)),
+                    ],
+                    ref=None,  # checked by dedicated pytest (test_model.py)
+                    kind="nbody_accel",
+                    meta=dict(bm=tm, bn=tn),
+                )
+            )
+
+    return entries
+
+
+def _dist_tile(a, b, metric, bm, bn):
+    from .kernels import distance as K
+
+    return (K.pairwise_distance(a, b, metric=metric, bm=bm, bn=bn),)
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def self_check(entry, rng):
+    """Run the jitted graph on random inputs and compare to the oracle."""
+    if entry["ref"] is None:
+        return
+    args = [
+        jnp.asarray(rng.standard_normal(s.shape).astype(np.float32))
+        for s in entry["specs"]
+    ]
+    got = entry["fn"](*args)
+    want = entry["ref"](*args)
+    if not isinstance(want, tuple):
+        want = (want,)
+    for g, w in zip(got, want):
+        if g.dtype in (jnp.int32, jnp.int64):
+            # index outputs: compare the *values* they select instead of
+            # raw indices (argmin/top_k tie-breaking may differ).
+            continue
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=2e-4, atol=1e-3,
+            err_msg=f"self-check failed for {entry['name']}",
+        )
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources, for the no-op rebuild check."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in sorted(os.walk(base)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact-name prefixes"
+    )
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    fp = input_fingerprint()
+
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as fh:
+                old = json.load(fh)
+            if old.get("fingerprint") == fp and all(
+                os.path.exists(os.path.join(out_dir, e["file"]))
+                for e in old.get("artifacts", [])
+            ):
+                print(f"artifacts up-to-date ({len(old['artifacts'])} entries)")
+                return
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    rng = np.random.default_rng(0)
+    manifest = dict(
+        version=1,
+        fingerprint=fp,
+        tile=dict(m=TILE_M, n=TILE_N, d_pad=D_PAD, knn_k=KNN_TILE_K,
+                  kmeans_k_pad=KMEANS_K_PAD, nbody=NBODY_TILE,
+                  variants=TILE_VARIANTS),
+        artifacts=[],
+    )
+
+    entries = catalogue()
+    if args.only:
+        prefixes = args.only.split(",")
+        entries = [e for e in entries if any(e["name"].startswith(p) for p in prefixes)]
+
+    for i, entry in enumerate(entries):
+        self_check(entry, rng)
+        lowered = jax.jit(entry["fn"]).lower(*entry["specs"])
+        text = to_hlo_text(lowered)
+        fname = entry["name"] + ".hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        manifest["artifacts"].append(
+            dict(
+                name=entry["name"],
+                file=fname,
+                kind=entry["kind"],
+                inputs=[list(s.shape) for s in entry["specs"]],
+                meta=entry["meta"],
+            )
+        )
+        print(f"[{i + 1}/{len(entries)}] {fname} ({len(text)} chars)")
+
+    with open(manifest_path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"wrote {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Pure-jnp correctness oracles for the AccD distance kernels.
+
+These are the L1 reference implementations: every Pallas kernel in this
+package must match the corresponding function here (up to float
+tolerance) under pytest.  They are also used by aot.py's self-check
+before an artifact is written.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_l2sq(a, b):
+    """Squared Euclidean distance matrix.
+
+    a: (m, d), b: (n, d)  ->  (m, n) with out[i, j] = ||a_i - b_j||^2.
+
+    Uses the same RSS + matmul decomposition as the paper's Eq. 4 so the
+    numerics (including cancellation behaviour) match the Pallas kernel.
+    """
+    rss_a = jnp.sum(a * a, axis=1, keepdims=True)  # (m, 1)
+    rss_b = jnp.sum(b * b, axis=1, keepdims=True).T  # (1, n)
+    cross = a @ b.T  # (m, n)
+    out = rss_a - 2.0 * cross + rss_b
+    # Clamp tiny negative values produced by cancellation: distances are
+    # non-negative by definition and downstream sqrt must not NaN.
+    return jnp.maximum(out, 0.0)
+
+
+def pairwise_l2(a, b):
+    """Euclidean distance matrix (sqrt of pairwise_l2sq)."""
+    return jnp.sqrt(pairwise_l2sq(a, b))
+
+
+def pairwise_l1(a, b):
+    """L1 (Manhattan) distance matrix.
+
+    a: (m, d), b: (n, d)  ->  (m, n) with out[i, j] = sum_k |a_ik - b_jk|.
+    """
+    return jnp.sum(jnp.abs(a[:, None, :] - b[None, :, :]), axis=-1)
+
+
+def pairwise_weighted_l2sq(a, b, w):
+    """Weighted squared Euclidean distance: sum_k w_k * (a_ik - b_jk)^2.
+
+    Implemented by pre-scaling with sqrt(w) so the matmul decomposition
+    still applies; w: (d,).
+    """
+    sw = jnp.sqrt(w)
+    return pairwise_l2sq(a * sw[None, :], b * sw[None, :])
+
+
+def pairwise_weighted_l1(a, b, w):
+    """Weighted L1 distance: sum_k w_k * |a_ik - b_jk|; w: (d,)."""
+    return jnp.sum(
+        w[None, None, :] * jnp.abs(a[:, None, :] - b[None, :, :]), axis=-1
+    )
+
+
+def rowwise_square_sum(a):
+    """Row-wise Square Sum (RSS) from the paper's Fig. 6: (m, d) -> (m,)."""
+    return jnp.sum(a * a, axis=1)
+
+
+def kmeans_assign(points, centers):
+    """One K-means assignment step: argmin center + its distance.
+
+    points: (m, d), centers: (k, d) -> (idx: (m,) int32, dist: (m,) f32)
+    """
+    d = pairwise_l2sq(points, centers)
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    return idx, jnp.min(d, axis=1)
+
+
+def topk_smallest(dist, k):
+    """Top-K smallest values + indices per row of a distance matrix.
+
+    dist: (m, n) -> (vals: (m, k), idx: (m, k) int32), ascending.
+    """
+    neg_vals, idx = jax.lax.top_k(-dist, k)
+    return -neg_vals, idx.astype(jnp.int32)

@@ -1,0 +1,99 @@
+"""Layer-2 JAX compute graphs for AccD (build-time only).
+
+Each public function here is a jittable graph that the AOT pipeline
+(aot.py) lowers to one HLO-text artifact per concrete shape.  The rust
+coordinator (rust/src/runtime) loads these artifacts through PJRT and
+calls them from the hot path — python never runs at request time.
+
+Graphs provided (all shapes static; the rust side pads tiles):
+
+  distance_tile        (bm, d) x (bn, d)        -> (bm, bn)     the hot tile
+  distance_tile_l1     same, L1 metric
+  kmeans_assign_tile   (bm, d) x (k, d)         -> idx, dist    fused assign
+  distance_topk_tile   (bm, d) x (bn, d)        -> vals, idx    fused KNN tile
+  nbody_accel_tile     (bm, 3) x (bn, 3) x mass -> (bm, 3)      force accum
+
+The distance tiles call the Pallas kernel (kernels/distance.py) so the
+L1 kernel lowers into the same HLO module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distance as K
+
+
+def distance_tile(a, b):
+    """Squared-L2 distance tile — the paper's Eq. 4 kernel (Fig. 6)."""
+    return (K.pairwise_distance(a, b, metric="l2sq", bm=a.shape[0], bn=b.shape[0]),)
+
+
+def distance_tile_l1(a, b):
+    """L1 distance tile (paper Table I: Unweighted L1 metric)."""
+    return (K.pairwise_distance(a, b, metric="l1", bm=a.shape[0], bn=b.shape[0]),)
+
+
+def distance_tile_weighted(a, b, w):
+    """Weighted-L2sq distance tile (paper Table I: weighted metric)."""
+    return (K.pairwise_weighted(a, b, w, metric="l2sq", bm=a.shape[0], bn=b.shape[0]),)
+
+
+def kmeans_assign_tile(points, centers):
+    """Fused distance + argmin tile for K-means assignment.
+
+    Keeps the (bm, k) distance matrix on-device and returns only the
+    assignment index and its distance — the (bm*k -> bm) transfer saving
+    the paper gets from running Dist_Select on the FPGA side.
+    """
+    dmat = K.pairwise_distance(
+        points, centers, metric="l2sq", bm=points.shape[0], bn=centers.shape[0]
+    )
+    idx = jnp.argmin(dmat, axis=1).astype(jnp.int32)
+    best = jnp.min(dmat, axis=1)
+    return idx, best
+
+
+def distance_topk_tile(a, b, k):
+    """Fused distance + Top-K selection tile for KNN-join.
+
+    Computes the (bm, bn) tile then reduces to the per-source-point
+    Top-K candidates within this tile; the rust side merges tiles.
+
+    NOTE: deliberately lowered through `sort` rather than
+    `jax.lax.top_k` — the latter emits a `topk(..., largest=true)` HLO
+    instruction that xla_extension 0.5.1's text parser rejects, while
+    variadic `sort` round-trips fine (see aot_recipe notes).
+    """
+    dmat = K.pairwise_distance(a, b, metric="l2sq", bm=a.shape[0], bn=b.shape[0])
+    k = min(k, b.shape[0])
+    iota = jax.lax.broadcasted_iota(jnp.int32, dmat.shape, 1)
+    vals_sorted, idx_sorted = jax.lax.sort((dmat, iota), dimension=1, num_keys=1)
+    return vals_sorted[:, :k], idx_sorted[:, :k]
+
+
+def nbody_accel_tile(pos_i, pos_j, mass_j, params):
+    """Radius-limited gravitational acceleration tile.
+
+    pos_i: (bm, 3), pos_j: (bn, 3), mass_j: (bn,),
+    params: (2,) = [eps2 softening, rmax2 interaction-radius^2].
+
+    Only neighbors within sqrt(rmax2) contribute (the paper's N-body
+    benchmark computes forces for particles "within a radius R");
+    padding rows carry mass 0 and therefore contribute nothing.
+    Returns (bm, 3) acceleration contribution — fused with the distance
+    tile so the distance matrix never leaves the device.
+    """
+    eps2, rmax2 = params[0], params[1]
+    d = pos_i[:, None, :] - pos_j[None, :, :]  # (bm, bn, 3)
+    r2 = jnp.sum(d * d, axis=-1)  # (bm, bn)
+    in_range = (r2 <= rmax2).astype(jnp.float32)
+    r2s = r2 + eps2
+    inv_r3 = jax.lax.rsqrt(r2s) / r2s  # 1 / r^3
+    w = mass_j[None, :] * inv_r3 * in_range
+    acc = -jnp.sum(d * w[..., None], axis=1)
+    return (acc,)
+
+
+def rss_tile(a):
+    """Standalone Row-wise Square Sum (paper Fig. 6 pre-compute stage)."""
+    return (K.rss(a, bm=a.shape[0]),)

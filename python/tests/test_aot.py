@@ -1,0 +1,67 @@
+"""AOT pipeline tests: fingerprint no-op, manifest schema, catalogue."""
+
+import json
+import os
+import subprocess
+import sys
+
+from compile import aot
+
+
+def test_fingerprint_is_stable_and_source_sensitive():
+    fp1 = aot.input_fingerprint()
+    fp2 = aot.input_fingerprint()
+    assert fp1 == fp2 and len(fp1) == 64
+
+
+def test_catalogue_tile_variants_present():
+    names = {e["name"] for e in aot.catalogue()}
+    for tv in aot.TILE_VARIANTS:
+        assert f"kmeans_assign_m{tv}_k64_d16" in names
+        assert f"nbody_accel_m{tv}_n{tv}" in names
+    # L1 ships only at the base tile (not on a hot path).
+    assert "distance_l1_m64_n64_d16" in names
+    assert "distance_l1_m512_n512_d16" not in names
+
+
+def test_manifest_matches_catalogue(tmp_path=None):
+    manifest_path = os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json"
+    )
+    if not os.path.exists(manifest_path):
+        import pytest
+
+        pytest.skip("run `make artifacts` first")
+    with open(manifest_path) as fh:
+        m = json.load(fh)
+    assert m["version"] == 1
+    assert m["tile"]["variants"] == aot.TILE_VARIANTS
+    names = {e["name"] for e in m["artifacts"]}
+    expected = {e["name"] for e in aot.catalogue()}
+    assert names == expected
+    # Every referenced file exists and is non-trivial HLO text.
+    art_dir = os.path.dirname(manifest_path)
+    for e in m["artifacts"]:
+        p = os.path.join(art_dir, e["file"])
+        assert os.path.getsize(p) > 200, e["file"]
+        with open(p) as fh:
+            head = fh.read(4096)
+        assert "ENTRY" in head or "HloModule" in head
+
+
+def test_aot_noop_when_up_to_date():
+    """Second invocation must detect the fingerprint and skip."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.exists(os.path.join(art_dir, "manifest.json")):
+        import pytest
+
+        pytest.skip("run `make artifacts` first")
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", art_dir],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "up-to-date" in out.stdout

@@ -1,0 +1,137 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Every Pallas kernel must match the pure-jnp oracle in kernels/ref.py.
+Hypothesis sweeps shapes and dtypes; fixed cases pin the tile shapes the
+AOT catalogue actually ships.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distance as K
+from compile.kernels import ref
+
+
+def rand(shape, seed, scale=2.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).uniform(-scale, scale, size=shape).astype(np.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fixed tile shapes (the shipped artifact geometry)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [4, 8, 16, 32, 64, 128])
+def test_l2sq_matches_ref_at_artifact_dims(d):
+    a, b = rand((64, d), 1), rand((64, d), 2)
+    npt.assert_allclose(
+        K.pairwise_distance(a, b, metric="l2sq"),
+        ref.pairwise_l2sq(a, b),
+        rtol=2e-4,
+        atol=1e-3,
+    )
+
+
+@pytest.mark.parametrize("d", [4, 16, 128])
+def test_l1_matches_ref_at_artifact_dims(d):
+    a, b = rand((64, d), 3), rand((64, d), 4)
+    npt.assert_allclose(
+        K.pairwise_distance(a, b, metric="l1"),
+        ref.pairwise_l1(a, b),
+        rtol=2e-4,
+        atol=1e-3,
+    )
+
+
+def test_weighted_l2sq_and_l1_match_ref():
+    d = 16
+    a, b = rand((64, d), 5), rand((64, d), 6)
+    w = jnp.abs(rand((d,), 7, scale=1.0)) + 0.01
+    npt.assert_allclose(
+        K.pairwise_weighted(a, b, w, metric="l2sq"),
+        ref.pairwise_weighted_l2sq(a, b, w),
+        rtol=5e-4,
+        atol=2e-3,
+    )
+    npt.assert_allclose(
+        K.pairwise_weighted(a, b, w, metric="l1"),
+        ref.pairwise_weighted_l1(a, b, w),
+        rtol=2e-4,
+        atol=1e-3,
+    )
+
+
+def test_rss_matches_ref():
+    a = rand((128, 32), 8)
+    npt.assert_allclose(K.rss(a), ref.rowwise_square_sum(a), rtol=1e-5, atol=1e-5)
+
+
+def test_distances_nonnegative_and_self_zero():
+    a = rand((64, 16), 9)
+    d = K.pairwise_distance(a, a, metric="l2sq")
+    assert float(jnp.min(d)) >= 0.0
+    npt.assert_allclose(jnp.diagonal(d), jnp.zeros(64), atol=1e-3)
+
+
+def test_tile_shape_must_divide():
+    a, b = rand((60, 8), 10), rand((64, 8), 11)
+    with pytest.raises(ValueError):
+        K.pairwise_distance(a, b, metric="l2sq")
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, grids, dtypes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    d=st.sampled_from([1, 2, 3, 5, 8, 17, 33]),
+    seed=st.integers(0, 2**31 - 1),
+    metric=st.sampled_from(["l2sq", "l1"]),
+)
+def test_tiled_grid_matches_ref(mt, nt, d, seed, metric):
+    """Multi-tile grids (m, n > one tile) agree with the oracle."""
+    bm = bn = 16  # small tiles keep interpret-mode runtime in check
+    a, b = rand((mt * bm, d), seed), rand((nt * bn, d), seed + 1)
+    got = K.pairwise_distance(a, b, metric=metric, bm=bm, bn=bn)
+    want = ref.pairwise_l2sq(a, b) if metric == "l2sq" else ref.pairwise_l1(a, b)
+    npt.assert_allclose(got, want, rtol=5e-4, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.sampled_from([2, 4, 9, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_zero_feature_padding_neutral(d, seed):
+    """Zero-padding the feature axis never changes distances."""
+    a, b = rand((16, d), seed), rand((16, d), seed + 1)
+    pad = 3
+    ap = jnp.pad(a, ((0, 0), (0, pad)))
+    bp = jnp.pad(b, ((0, 0), (0, pad)))
+    npt.assert_allclose(
+        K.pairwise_distance(ap, bp, metric="l2sq", bm=16, bn=16),
+        K.pairwise_distance(a, b, metric="l2sq", bm=16, bn=16),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([1e-3, 1.0, 1e3]))
+def test_l2sq_stable_across_magnitudes(seed, scale):
+    """Eq. 4 decomposition stays accurate across value magnitudes
+    (catastrophic cancellation is clamped, never negative)."""
+    a, b = rand((16, 8), seed, scale), rand((16, 8), seed + 1, scale)
+    got = np.asarray(K.pairwise_distance(a, b, metric="l2sq", bm=16, bn=16))
+    assert (got >= 0.0).all()
+    want = np.asarray(ref.pairwise_l2sq(a, b))
+    npt.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * scale * scale)

@@ -1,0 +1,136 @@
+"""L2 model-graph correctness: shapes + semantics of every AOT graph."""
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed, scale=2.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).uniform(-scale, scale, size=shape).astype(np.float32)
+    )
+
+
+def test_distance_tile_tuple_contract():
+    a, b = rand((64, 16), 1), rand((64, 16), 2)
+    out = model.distance_tile(a, b)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (64, 64)
+
+
+def test_kmeans_assign_tile_semantics():
+    pts, ctr = rand((64, 8), 3), rand((32, 8), 4)
+    idx, dist = model.kmeans_assign_tile(pts, ctr)
+    want_idx, want_dist = ref.kmeans_assign(pts, ctr)
+    # Indices may differ on exact ties; distances must match.
+    npt.assert_allclose(dist, want_dist, rtol=2e-4, atol=1e-3)
+    # Index consistency: distance at idx equals the min distance.
+    dmat = ref.pairwise_l2sq(pts, ctr)
+    at = jnp.take_along_axis(dmat, idx[:, None].astype(jnp.int32), axis=1)[:, 0]
+    npt.assert_allclose(at, want_dist, rtol=2e-4, atol=1e-3)
+    assert idx.dtype == jnp.int32
+
+
+def test_kmeans_assign_avoids_sentinel_rows():
+    pts = rand((64, 8), 5)
+    ctr = np.array(rand((32, 8), 6), copy=True)
+    ctr[20:, 0] = 1.0e15  # sentinel padding rows
+    idx, _ = model.kmeans_assign_tile(pts, jnp.asarray(ctr))
+    assert int(jnp.max(idx)) < 20
+
+
+def test_distance_topk_tile_sorted_and_consistent():
+    a, b = rand((64, 16), 7), rand((64, 16), 8)
+    vals, idx = model.distance_topk_tile(a, b, k=32)
+    assert vals.shape == (64, 32)
+    assert idx.dtype == jnp.int32
+    dmat = np.asarray(ref.pairwise_l2sq(a, b))
+    v = np.asarray(vals)
+    assert (np.diff(v, axis=1) >= -1e-5).all(), "per-row values not ascending"
+    for r in range(64):
+        want = np.sort(dmat[r])[:32]
+        npt.assert_allclose(v[r], want, rtol=2e-4, atol=1e-3)
+        npt.assert_allclose(dmat[r, np.asarray(idx)[r]], v[r], rtol=2e-4, atol=1e-3)
+
+
+def test_nbody_accel_tile_matches_direct_sum():
+    pos_i, pos_j = rand((64, 3), 9, 1.0), rand((64, 3), 10, 1.0)
+    mass = jnp.abs(rand((64,), 11, 1.0)) + 0.1
+    eps2, rmax2 = 1e-4, 0.7
+    (acc,) = model.nbody_accel_tile(pos_i, pos_j, mass, jnp.array([eps2, rmax2]))
+    pi, pj, m = map(np.asarray, (pos_i, pos_j, mass))
+    want = np.zeros((64, 3), dtype=np.float64)
+    for i in range(64):
+        d = pi[i] - pj  # (64, 3)
+        r2 = (d * d).sum(axis=1)
+        mask = r2 <= rmax2
+        r2s = r2 + eps2
+        w = m * mask / (np.sqrt(r2s) * r2s)
+        want[i] = -(d * w[:, None]).sum(axis=0)
+    npt.assert_allclose(np.asarray(acc), want, rtol=1e-3, atol=1e-3)
+
+
+def test_nbody_zero_mass_rows_are_inert():
+    pos_i, pos_j = rand((64, 3), 12, 1.0), rand((64, 3), 13, 1.0)
+    mass = np.array(jnp.abs(rand((64,), 14, 1.0)) + 0.1, copy=True)
+    mass[32:] = 0.0
+    params = jnp.array([1e-4, 10.0])
+    (a1,) = model.nbody_accel_tile(pos_i, pos_j, jnp.asarray(mass), params)
+    pos_j2 = np.array(pos_j, copy=True)
+    pos_j2[32:] += 7.0  # move the zero-mass rows far away
+    (a2,) = model.nbody_accel_tile(pos_i, jnp.asarray(pos_j2), jnp.asarray(mass), params)
+    npt.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.sampled_from([1, 4, 16, 64]), seed=st.integers(0, 2**31 - 1))
+def test_topk_tile_k_sweep(k, seed):
+    a, b = rand((16, 4), seed), rand((64, 4), seed + 1)
+    # bm=16 tile, bn=64: use pairwise over custom tile shape via model
+    vals, idx = model.distance_topk_tile(
+        jnp.pad(a, ((0, 48), (0, 0))), b, k=k
+    )
+    dmat = np.asarray(ref.pairwise_l2sq(a, b))
+    v = np.asarray(vals)[:16]
+    for r in range(16):
+        want = np.sort(dmat[r])[: min(k, 64)]
+        npt.assert_allclose(v[r][: len(want)], want, rtol=5e-4, atol=2e-3)
+
+
+def test_aot_catalogue_is_complete_and_self_checking():
+    """The AOT catalogue covers every (metric, d) the manifest promises
+    and every entry passes its oracle self-check."""
+    from compile import aot
+
+    entries = aot.catalogue()
+    names = {e["name"] for e in entries}
+    for d in aot.D_PAD:
+        assert f"distance_l2sq_m{aot.TILE_M}_n{aot.TILE_N}_d{d}" in names
+        assert f"distance_l1_m{aot.TILE_M}_n{aot.TILE_N}_d{d}" in names
+        for k in aot.KMEANS_K_PAD:
+            assert f"kmeans_assign_m{aot.TILE_M}_k{k}_d{d}" in names
+    rng = np.random.default_rng(0)
+    # Self-check a representative subset (full set runs in `make artifacts`).
+    for e in entries[:4]:
+        aot.self_check(e, rng)
+
+
+def test_hlo_text_lowering_produces_parseable_module():
+    """Lowered HLO text must use the old parser's vocabulary: in
+    particular no `topk(...)` instruction (xla_extension 0.5.1 rejects
+    it — the reason distance_topk_tile lowers through sort)."""
+    import jax
+
+    from compile import aot
+
+    spec = jax.ShapeDtypeStruct((64, 8), jnp.float32)
+    lowered = jax.jit(lambda a, b: model.distance_topk_tile(a, b, k=32)).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert " topk(" not in text, "jax.lax.top_k leaked into the HLO"
+    assert "sort(" in text

@@ -1,0 +1,68 @@
+//! Fig. 10 — AccD performance-benefit breakdown on K-means:
+//! TOP (CPU), TOP (CPU-FPGA), AccD (CPU), AccD (CPU-FPGA), all
+//! normalized to the naive CPU baseline.
+//!
+//! The paper's finding this bench reproduces: point-level TI (TOP)
+//! ported to the accelerator *loses* ground (divergent candidate sets
+//! defeat dense tiling), while coarse GTI gains a large factor there
+//! — the co-design argument in one table.  Paper averages: TOP CPU
+//! 3.77x, TOP CPU-FPGA 2.63x, AccD CPU 2.69x, AccD CPU-FPGA 37.37x.
+
+use accd::data::tablev;
+use accd::figures;
+use accd::util::bench::{fmt_x, Table};
+use accd::util::geomean;
+
+fn main() {
+    let scale = figures::bench_scale();
+    eprintln!("fig10: K-means breakdown at scale {scale}");
+    let rows = match figures::fig10_breakdown(scale) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fig10 failed (run `make artifacts`?): {e}");
+            std::process::exit(1);
+        }
+    };
+    let speedups = figures::speedups(&rows);
+    let modeled = figures::modeled_speedups(&rows);
+    let impls = ["top_cpu", "top_fpga", "accd_cpu", "accd_fpga"];
+    let mut table = Table::new(&[
+        "dataset",
+        "TOP (CPU)",
+        "TOP (CPU-FPGA)",
+        "AccD (CPU)",
+        "AccD (CPU-FPGA)",
+        "AccD (DE10 model)",
+    ]);
+    let mut per_impl: std::collections::HashMap<&str, Vec<f64>> = Default::default();
+    for spec in &tablev::kmeans_datasets() {
+        let mut cells = vec![spec.name.to_string()];
+        for imp in impls {
+            let s = speedups
+                .iter()
+                .find(|(d, i, _)| d == spec.name && i == imp)
+                .map(|(_, _, s)| *s)
+                .unwrap_or(f64::NAN);
+            per_impl.entry(imp).or_default().push(s);
+            cells.push(fmt_x(s));
+        }
+        let am = modeled
+            .iter()
+            .find(|(d, i, _)| d == spec.name && i == "accd_fpga")
+            .map(|(_, _, s)| *s)
+            .unwrap_or(f64::NAN);
+        per_impl.entry("accd_model").or_default().push(am);
+        cells.push(fmt_x(am));
+        table.row(cells);
+    }
+    let mut geo = vec!["geomean".to_string()];
+    for imp in impls {
+        geo.push(fmt_x(geomean(&per_impl[imp])));
+    }
+    geo.push(fmt_x(geomean(&per_impl["accd_model"])));
+    table.row(geo);
+    table.print(&format!(
+        "Fig. 10: K-means speedup breakdown vs Baseline (scale {scale}; paper avg: 3.77x / 2.63x / 2.69x / 37.37x). \
+         Last column projects AccD CPU-FPGA onto the DE10-Pro via the Eq. 5-8 cost model"
+    ));
+}

@@ -1,0 +1,49 @@
+//! Fig. 8b — KNN-join performance comparison across the Table V
+//! KNN datasets (Baseline / TOP / CBLAS / AccD), normalized speedups.
+
+use accd::data::tablev;
+use accd::figures;
+use accd::util::bench::{fmt_x, Table};
+use accd::util::geomean;
+
+fn main() {
+    let scale = figures::bench_scale();
+    let specs = tablev::knn_datasets();
+    eprintln!("fig8b: KNN-join sweep at scale {scale} ({} datasets)", specs.len());
+    let rows = match figures::fig8_knn(scale, &specs) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fig8b failed (run `make artifacts`?): {e}");
+            std::process::exit(1);
+        }
+    };
+    let speedups = figures::speedups(&rows);
+    let modeled = figures::modeled_speedups(&rows);
+    let mut table =
+        Table::new(&["dataset", "TOP", "CBLAS", "AccD (measured)", "AccD (DE10 model)"]);
+    let mut per_impl: std::collections::HashMap<&str, Vec<f64>> = Default::default();
+    for spec in &specs {
+        let get = |set: &[(String, String, f64)], imp: &str| {
+            set.iter()
+                .find(|(d, i, _)| d == spec.name && i == imp)
+                .map(|(_, _, s)| *s)
+                .unwrap_or(f64::NAN)
+        };
+        let (t, c, a) =
+            (get(&speedups, "top"), get(&speedups, "cblas"), get(&speedups, "accd"));
+        let am = get(&modeled, "accd");
+        per_impl.entry("top").or_default().push(t);
+        per_impl.entry("cblas").or_default().push(c);
+        per_impl.entry("accd").or_default().push(a);
+        per_impl.entry("accd_model").or_default().push(am);
+        table.row(vec![spec.name.to_string(), fmt_x(t), fmt_x(c), fmt_x(a), fmt_x(am)]);
+    }
+    table.row(vec![
+        "geomean".to_string(),
+        fmt_x(geomean(&per_impl["top"])),
+        fmt_x(geomean(&per_impl["cblas"])),
+        fmt_x(geomean(&per_impl["accd"])),
+        fmt_x(geomean(&per_impl["accd_model"])),
+    ]);
+    table.print(&format!("Fig. 8b: KNN-join speedup vs Baseline (scale {scale})"));
+}

@@ -1,0 +1,48 @@
+//! Fig. 8c — N-body simulation performance comparison across the
+//! Table V particle counts (Baseline / TOP / AccD), normalized
+//! speedups.  The CBLAS column is absent as in the paper's setup the
+//! matrix decomposition does not apply to the radius-masked force
+//! kernel.
+
+use accd::data::tablev;
+use accd::figures;
+use accd::util::bench::{fmt_x, Table};
+use accd::util::geomean;
+
+fn main() {
+    let scale = figures::bench_scale();
+    let specs = tablev::nbody_datasets();
+    eprintln!("fig8c: N-body sweep at scale {scale} ({} datasets)", specs.len());
+    let rows = match figures::fig8_nbody(scale, &specs) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fig8c failed (run `make artifacts`?): {e}");
+            std::process::exit(1);
+        }
+    };
+    let speedups = figures::speedups(&rows);
+    let modeled = figures::modeled_speedups(&rows);
+    let mut table = Table::new(&["dataset", "TOP", "AccD (measured)", "AccD (DE10 model)"]);
+    let mut per_impl: std::collections::HashMap<&str, Vec<f64>> = Default::default();
+    for spec in &specs {
+        let get = |set: &[(String, String, f64)], imp: &str| {
+            set.iter()
+                .find(|(d, i, _)| d == spec.name && i == imp)
+                .map(|(_, _, s)| *s)
+                .unwrap_or(f64::NAN)
+        };
+        let (t, a) = (get(&speedups, "top"), get(&speedups, "accd"));
+        let am = get(&modeled, "accd");
+        per_impl.entry("top").or_default().push(t);
+        per_impl.entry("accd").or_default().push(a);
+        per_impl.entry("accd_model").or_default().push(am);
+        table.row(vec![spec.name.to_string(), fmt_x(t), fmt_x(a), fmt_x(am)]);
+    }
+    table.row(vec![
+        "geomean".to_string(),
+        fmt_x(geomean(&per_impl["top"])),
+        fmt_x(geomean(&per_impl["accd"])),
+        fmt_x(geomean(&per_impl["accd_model"])),
+    ]);
+    table.print(&format!("Fig. 8c: N-body speedup vs Baseline (scale {scale})"));
+}

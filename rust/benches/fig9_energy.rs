@@ -1,0 +1,89 @@
+//! Fig. 9 — energy-efficiency comparison (TOP / CBLAS / AccD vs
+//! Baseline) for all three algorithm families, using the calibrated
+//! power model (fpga::power) on the measured run times.
+//!
+//! Paper headline: AccD averages 99.63x better energy efficiency, with
+//! 116.85x on K-means.
+
+use accd::data::tablev;
+use accd::figures;
+use accd::util::bench::{fmt_x, Table};
+use accd::util::geomean;
+
+fn print_family(
+    title: &str,
+    specs: &[accd::data::DatasetSpec],
+    rows: &[figures::FigRow],
+    impls: &[&str],
+) {
+    let effs = figures::energy_effs(rows);
+    let modeled = figures::modeled_energy_effs(rows);
+    let mut headers = vec!["dataset"];
+    headers.extend_from_slice(impls);
+    headers.push("accd (DE10 model)");
+    let mut table = Table::new(&headers);
+    let mut per_impl: std::collections::HashMap<&str, Vec<f64>> = Default::default();
+    for spec in specs {
+        let mut cells = vec![spec.name.to_string()];
+        for &imp in impls {
+            let e = effs
+                .iter()
+                .find(|(d, i, _)| d == spec.name && i == imp)
+                .map(|(_, _, s)| *s)
+                .unwrap_or(f64::NAN);
+            per_impl.entry(imp).or_default().push(e);
+            cells.push(fmt_x(e));
+        }
+        let em = modeled
+            .iter()
+            .find(|(d, i, _)| d == spec.name && i == "accd")
+            .map(|(_, _, s)| *s)
+            .unwrap_or(f64::NAN);
+        per_impl.entry("accd_model").or_default().push(em);
+        cells.push(fmt_x(em));
+        table.row(cells);
+    }
+    let mut geo = vec!["geomean".to_string()];
+    for &imp in impls {
+        geo.push(fmt_x(geomean(&per_impl[imp])));
+    }
+    geo.push(fmt_x(geomean(&per_impl["accd_model"])));
+    table.row(geo);
+    table.print(title);
+}
+
+fn main() {
+    let scale = figures::bench_scale();
+    eprintln!("fig9: energy sweep at scale {scale}");
+    let km_specs = tablev::kmeans_datasets();
+    let knn_specs = tablev::knn_datasets();
+    let nb_specs = tablev::nbody_datasets();
+    let run = || -> accd::Result<()> {
+        let km = figures::fig8_kmeans(scale, &km_specs)?;
+        print_family(
+            &format!("Fig. 9a: K-means energy efficiency vs Baseline (scale {scale}; paper avg 116.85x for AccD)"),
+            &km_specs,
+            &km,
+            &["top", "cblas", "accd"],
+        );
+        let knn = figures::fig8_knn(scale, &knn_specs)?;
+        print_family(
+            &format!("Fig. 9b: KNN-join energy efficiency vs Baseline (scale {scale})"),
+            &knn_specs,
+            &knn,
+            &["top", "cblas", "accd"],
+        );
+        let nb = figures::fig8_nbody(scale, &nb_specs)?;
+        print_family(
+            &format!("Fig. 9c: N-body energy efficiency vs Baseline (scale {scale})"),
+            &nb_specs,
+            &nb,
+            &["top", "accd"],
+        );
+        Ok(())
+    };
+    if let Err(e) = run() {
+        eprintln!("fig9 failed (run `make artifacts`?): {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,92 @@
+//! Micro-benchmarks of the hot-path building blocks, used by the perf
+//! pass (EXPERIMENTS.md §Perf) to localize bottlenecks:
+//!
+//! * PJRT distance tile (per metric / d)
+//! * fused K-means assignment tile
+//! * N-body force tile
+//! * CPU-side substrates: sgemm_nt, TopK merge, grouping build
+//! * inter-group layout scheduling
+
+use accd::baselines::cblas;
+use accd::config::AccdConfig;
+use accd::data::synthetic;
+use accd::gti::Grouping;
+use accd::runtime::Runtime;
+use accd::util::bench::Bencher;
+use accd::util::rng::Rng;
+use accd::util::topk::TopK;
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rng = Rng::new(9);
+
+    // --- device tiles ------------------------------------------------------
+    match Runtime::load("artifacts") {
+        Ok(rt) => {
+            let t = rt.manifest().tile.clone();
+            for d in [4usize, 16, 64, 128] {
+                let a: Vec<f32> = (0..t.m * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                let bb: Vec<f32> = (0..t.n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                b.run(&format!("pjrt/distance_l2sq/d{d}"), || {
+                    rt.distance_tile("l2sq", d, &a, &bb).unwrap()
+                });
+            }
+            let d = 16;
+            let a: Vec<f32> = (0..t.m * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let bb: Vec<f32> = (0..t.n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            b.run("pjrt/distance_l1/d16", || rt.distance_tile("l1", d, &a, &bb).unwrap());
+            for k_pad in [64usize, 256, 1024] {
+                let c: Vec<f32> = (0..k_pad * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                b.run(&format!("pjrt/kmeans_assign/k{k_pad}_d{d}"), || {
+                    rt.kmeans_assign_tile(k_pad, d, &a, &c).unwrap()
+                });
+            }
+            let bt = t.nbody;
+            let pi: Vec<f32> = (0..bt * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let pj: Vec<f32> = (0..bt * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let m: Vec<f32> = (0..bt).map(|_| rng.range_f32(0.1, 1.0)).collect();
+            b.run("pjrt/nbody_tile", || {
+                rt.nbody_accel_tile_masked(&pi, &pj, &m, 1e-4, 0.5).unwrap()
+            });
+        }
+        Err(e) => eprintln!("skipping device micro-benches: {e}"),
+    }
+
+    // --- CPU substrates -----------------------------------------------------
+    let m = synthetic::uniform(256, 64, 1).points;
+    let n = synthetic::uniform(256, 64, 2).points;
+    let mut c = vec![0.0f32; 256 * 256];
+    b.run("cpu/sgemm_nt/256x256x64", || {
+        cblas::sgemm_nt(m.as_slice(), n.as_slice(), &mut c, 256, 256, 64)
+    });
+
+    let vals: Vec<f32> = (0..10_000).map(|_| rng.f32()).collect();
+    b.run("cpu/topk_merge/10k_k100", || {
+        let mut h = TopK::new(100);
+        for (i, &v) in vals.iter().enumerate() {
+            h.push(v, i as u32);
+        }
+        h.into_sorted()
+    });
+
+    let ds = synthetic::clustered(20_000, 16, 70, 0.03, 3);
+    b.run("cpu/grouping_build/20k_z70", || {
+        Grouping::build(&ds.points, 70, 3, 4096, 5).unwrap()
+    });
+
+    // --- layout scheduling ---------------------------------------------------
+    let cands: Vec<Vec<u32>> = (0..500)
+        .map(|_| {
+            let mut c: Vec<u32> = (0..64u32).filter(|_| rng.f32() < 0.3).collect();
+            c.sort_unstable();
+            c
+        })
+        .collect();
+    b.run("cpu/layout_schedule/500grp", || accd::layout::schedule_source_groups(&cands));
+
+    // --- config provenance ----------------------------------------------------
+    let cfg = AccdConfig::new();
+    b.run("cpu/config_json_roundtrip", || {
+        AccdConfig::from_json(&cfg.to_json()).unwrap()
+    });
+}

@@ -1,0 +1,21 @@
+//! Baseline implementations — the comparison columns of the paper's
+//! evaluation (Table IV):
+//!
+//! * [`naive`] — "Baseline": straightforward for-loop CPU
+//!   implementations with no optimization; every speedup in Figs. 8-10
+//!   is normalized against these.
+//! * [`top`] — "TOP": point-level triangle-inequality optimization on
+//!   the CPU (Hamerly-style for K-means, landmark pruning for
+//!   KNN-join, Verlet-style neighbor lists for N-body), plus the
+//!   TOP-on-CPU-FPGA hybrid used in Fig. 10.
+//! * [`cblas`] — "CBLAS": matrix-decomposed distance computation via a
+//!   hand-blocked SGEMM on the CPU (the vendored registry has no BLAS,
+//!   so the kernel is in-tree; see `cblas::sgemm_nt`).
+//!
+//! All baselines return the same result types as the AccD coordinator
+//! so the integration tests can require exact (or tolerance-level)
+//! agreement between implementations.
+
+pub mod cblas;
+pub mod naive;
+pub mod top;

@@ -1,0 +1,278 @@
+//! "Baseline" column: naive for-loop CPU implementations (Table IV).
+//!
+//! No pruning, no blocking, no vectorization beyond what rustc does on
+//! its own — the normalization denominator for every paper figure.
+
+use crate::data::{Dataset, Matrix};
+use crate::fpga::{Platform, PowerModel};
+use crate::metrics::RunReport;
+use crate::util::rng::Rng;
+use crate::util::topk::TopK;
+use crate::{Error, Result};
+
+/// Naive K-means: full `n x k` distance scan per iteration.
+pub fn kmeans(ds: &Dataset, k: usize, max_iters: usize, seed: u64) -> Result<KmeansOut> {
+    if k == 0 || k > ds.n() {
+        return Err(Error::Data(format!("kmeans: k={k} out of range")));
+    }
+    let t0 = std::time::Instant::now();
+    let (n, d) = (ds.n(), ds.d());
+    let mut rng = Rng::new(seed ^ 0x6B6D_6561_6E73);
+    let mut centers = ds.points.gather_rows(&rng.sample_indices(n, k));
+    let mut assign = vec![0u32; n];
+    let mut iterations = 0usize;
+    let mut dist_comps = 0u64;
+    for _ in 0..=max_iters {
+        // Assignment: exhaustive scan.
+        let mut changed = 0usize;
+        for i in 0..n {
+            let mut best = (0usize, f32::INFINITY);
+            for c in 0..k {
+                let d2 = ds.points.dist2(i, &centers, c);
+                if d2 < best.1 {
+                    best = (c, d2);
+                }
+            }
+            dist_comps += k as u64;
+            if assign[i] != best.0 as u32 {
+                assign[i] = best.0 as u32;
+                changed += 1;
+            }
+        }
+        if iterations > 0 && changed == 0 {
+            break;
+        }
+        if iterations == max_iters {
+            break;
+        }
+        iterations += 1;
+        // Update.
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0u64; k];
+        for i in 0..n {
+            let a = assign[i] as usize;
+            counts[a] += 1;
+            for (x, &v) in ds.points.row(i).iter().enumerate() {
+                sums[a * d + x] += v as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let row = centers.row_mut(c);
+                for x in 0..d {
+                    row[x] = (sums[c * d + x] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    let sse: f64 =
+        (0..n).map(|i| ds.points.dist2(i, &centers, assign[i] as usize) as f64).sum();
+    let mut report = base_report("kmeans", &ds.name, "baseline", t0, iterations);
+    report.filter.total_pairs = dist_comps;
+    report.filter.surviving_pairs = dist_comps;
+    report.quality = sse;
+    finish_seq_power(&mut report);
+    Ok(KmeansOut { centers, assign, sse, iterations, report })
+}
+
+/// Shared output shape with the coordinator's K-means.
+#[derive(Debug, Clone)]
+pub struct KmeansOut {
+    pub centers: Matrix,
+    pub assign: Vec<u32>,
+    pub sse: f64,
+    pub iterations: usize,
+    pub report: RunReport,
+}
+
+/// Naive KNN-join: full `m x n` distance matrix row by row + heap.
+pub fn knn_join(src: &Dataset, trg: &Dataset, k: usize) -> Result<KnnOut> {
+    if k == 0 || k > trg.n() {
+        return Err(Error::Data(format!("knn: k={k} out of range")));
+    }
+    let t0 = std::time::Instant::now();
+    let mut neighbors = Vec::with_capacity(src.n());
+    for i in 0..src.n() {
+        let mut heap = TopK::new(k);
+        for j in 0..trg.n() {
+            heap.push(src.points.dist2(i, &trg.points, j), j as u32);
+        }
+        neighbors.push(heap.into_sorted());
+    }
+    let mut report = base_report("knn_join", &src.name, "baseline", t0, 1);
+    report.filter.total_pairs = (src.n() * trg.n()) as u64;
+    report.filter.surviving_pairs = report.filter.total_pairs;
+    report.quality = neighbors
+        .iter()
+        .filter_map(|nb| nb.last().map(|&(d2, _)| d2 as f64))
+        .sum::<f64>()
+        / neighbors.len().max(1) as f64;
+    finish_seq_power(&mut report);
+    Ok(KnnOut { neighbors, k, report })
+}
+
+#[derive(Debug, Clone)]
+pub struct KnnOut {
+    pub neighbors: Vec<Vec<(f32, u32)>>,
+    pub k: usize,
+    pub report: RunReport,
+}
+
+/// Naive N-body: all-pairs radius-masked gravity + symplectic Euler.
+pub fn nbody(
+    ds: &Dataset,
+    masses: &[f32],
+    steps: usize,
+    dt: f32,
+    radius: f32,
+) -> Result<NbodyOut> {
+    if ds.d() != 3 {
+        return Err(Error::Shape("nbody requires 3-D positions".into()));
+    }
+    let t0 = std::time::Instant::now();
+    let n = ds.n();
+    let mut pos = ds.points.clone();
+    let mut vel = Matrix::zeros(n, 3);
+    let eps2 = 1e-4f32;
+    let rmax2 = radius * radius;
+    let mut pairs = 0u64;
+    for _ in 0..steps {
+        let mut acc = vec![0.0f32; n * 3];
+        for i in 0..n {
+            let pi = pos.row(i);
+            let (mut ax, mut ay, mut az) = (0.0f32, 0.0, 0.0);
+            for j in 0..n {
+                let pj = pos.row(j);
+                let dx = pi[0] - pj[0];
+                let dy = pi[1] - pj[1];
+                let dz = pi[2] - pj[2];
+                let r2 = dx * dx + dy * dy + dz * dz;
+                if r2 > rmax2 {
+                    continue;
+                }
+                let r2s = r2 + eps2;
+                let inv_r3 = 1.0 / (r2s.sqrt() * r2s);
+                let w = masses[j] * inv_r3;
+                ax -= dx * w;
+                ay -= dy * w;
+                az -= dz * w;
+            }
+            pairs += n as u64;
+            acc[i * 3] = ax;
+            acc[i * 3 + 1] = ay;
+            acc[i * 3 + 2] = az;
+        }
+        for i in 0..n {
+            let v = vel.row_mut(i);
+            v[0] += acc[i * 3] * dt;
+            v[1] += acc[i * 3 + 1] * dt;
+            v[2] += acc[i * 3 + 2] * dt;
+        }
+        for i in 0..n {
+            let (vx, vy, vz) = {
+                let v = vel.row(i);
+                (v[0], v[1], v[2])
+            };
+            let p = pos.row_mut(i);
+            p[0] += vx * dt;
+            p[1] += vy * dt;
+            p[2] += vz * dt;
+        }
+    }
+    let mut report = base_report("nbody", &ds.name, "baseline", t0, steps);
+    report.filter.total_pairs = pairs;
+    report.filter.surviving_pairs = pairs;
+    report.quality = (0..n)
+        .map(|i| {
+            let v = vel.row(i);
+            0.5 * masses[i] as f64 * (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]) as f64
+        })
+        .sum();
+    finish_seq_power(&mut report);
+    Ok(NbodyOut { positions: pos, velocities: vel, steps, report })
+}
+
+#[derive(Debug, Clone)]
+pub struct NbodyOut {
+    pub positions: Matrix,
+    pub velocities: Matrix,
+    pub steps: usize,
+    pub report: RunReport,
+}
+
+pub(crate) fn base_report(
+    alg: &str,
+    ds: &str,
+    imp: &str,
+    t0: std::time::Instant,
+    iterations: usize,
+) -> RunReport {
+    let mut r = RunReport::new(alg, ds, imp);
+    r.wall_secs = t0.elapsed().as_secs_f64();
+    r.iterations = iterations;
+    r
+}
+
+/// Fill energy fields for a sequential-CPU run at full utilization.
+pub(crate) fn finish_seq_power(report: &mut RunReport) {
+    let pm = PowerModel::default();
+    report.energy_j = pm.joules(Platform::CpuSequential, report.wall_secs, 1.0);
+    report.avg_watts = pm.watts(Platform::CpuSequential, 1.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn kmeans_converges_and_sse_decreases() {
+        let ds = synthetic::clustered(300, 4, 5, 0.02, 1);
+        let one = kmeans(&ds, 5, 1, 7).unwrap();
+        let many = kmeans(&ds, 5, 20, 7).unwrap();
+        assert!(many.sse <= one.sse * 1.0001, "{} vs {}", many.sse, one.sse);
+        assert!(many.iterations <= 20);
+        // Every point assigned to its true nearest center.
+        for i in 0..ds.n() {
+            let a = many.assign[i] as usize;
+            let da = ds.points.dist2(i, &many.centers, a);
+            for c in 0..5 {
+                assert!(da <= ds.points.dist2(i, &many.centers, c) + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn knn_matches_exhaustive_sort() {
+        let s = synthetic::uniform(40, 3, 2);
+        let t = synthetic::uniform(60, 3, 3);
+        let out = knn_join(&s, &t, 5).unwrap();
+        for i in 0..s.n() {
+            let mut all: Vec<(f32, u32)> =
+                (0..t.n()).map(|j| (s.points.dist2(i, &t.points, j), j as u32)).collect();
+            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            for (rank, &(d2, id)) in out.neighbors[i].iter().enumerate() {
+                assert!((d2 - all[rank].0).abs() < 1e-6, "rank {rank} of point {i}");
+                let _ = id;
+            }
+        }
+    }
+
+    #[test]
+    fn nbody_momentum_roughly_conserved() {
+        // Equal masses, no external force: total momentum stays ~0 when
+        // the interaction is symmetric (radius covers everything).
+        let ds = synthetic::plummer(60, 1.0, 4);
+        let m = synthetic::equal_masses(60, 1.0);
+        let out = nbody(&ds, &m, 3, 1e-3, 100.0).unwrap();
+        let mut p = [0.0f64; 3];
+        for i in 0..60 {
+            for c in 0..3 {
+                p[c] += (m[i] * out.velocities.row(i)[c]) as f64;
+            }
+        }
+        for c in 0..3 {
+            assert!(p[c].abs() < 1e-4, "momentum component {c} = {}", p[c]);
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Configuration system: every tunable of the engine in one place.
+//!
+//! `AccdConfig` is the root; it nests the algorithmic (GTI), hardware
+//! (FPGA model) and explorer configs.  Configs load from JSON files
+//! (`--config path.json` on the CLI), with field-level overrides from
+//! CLI options, and serialize back to JSON for provenance in result
+//! files.
+
+use crate::util::json::{self, Value};
+use crate::{Error, Result};
+
+/// Algorithm-level (GTI) parameters — paper §IV & §VI-A.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GtiConfig {
+    /// Number of source-point groups (0 = auto: ~sqrt(n)).
+    pub src_groups: usize,
+    /// Number of target-point groups (0 = auto).
+    pub trg_groups: usize,
+    /// Grouping refinement iterations (paper's n_iteration).
+    pub grouping_iters: usize,
+    /// Sample size for grouping (grouping runs on a sample, then
+    /// assigns all points — keeps filter cost sublinear).
+    pub grouping_sample: usize,
+}
+
+impl Default for GtiConfig {
+    fn default() -> Self {
+        Self { src_groups: 0, trg_groups: 0, grouping_iters: 3, grouping_sample: 4096 }
+    }
+}
+
+/// Hardware-level kernel parameters — paper §VI-A.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    /// Computation block edge (paper `blk`).
+    pub block: usize,
+    /// SIMD workers per block (paper `simd`).
+    pub simd: usize,
+    /// Per-distance unroll factor (paper `unroll`).
+    pub unroll: usize,
+    /// Design clock in MHz (paper `frequency`).
+    pub freq_mhz: f64,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        Self { block: 64, simd: 16, unroll: 8, freq_mhz: 250.0 }
+    }
+}
+
+/// Root configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AccdConfig {
+    pub gti: GtiConfig,
+    pub hw: HwConfig,
+    /// Artifact directory (default "artifacts").
+    pub artifact_dir: String,
+    /// Use the accelerator (false = CPU-only AccD, Fig. 10's third bar).
+    pub use_fpga: bool,
+    /// Global seed for all stochastic components.
+    pub seed: u64,
+}
+
+impl AccdConfig {
+    pub fn new() -> Self {
+        Self {
+            gti: GtiConfig::default(),
+            hw: HwConfig::default(),
+            artifact_dir: "artifacts".to_string(),
+            use_fpga: true,
+            seed: 42,
+        }
+    }
+
+    /// Parse from a JSON document; missing fields keep defaults.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut cfg = Self::new();
+        let g = v.get("gti");
+        if !matches!(g, Value::Null) {
+            cfg.gti.src_groups = g.get("src_groups").as_usize().unwrap_or(cfg.gti.src_groups);
+            cfg.gti.trg_groups = g.get("trg_groups").as_usize().unwrap_or(cfg.gti.trg_groups);
+            cfg.gti.grouping_iters =
+                g.get("grouping_iters").as_usize().unwrap_or(cfg.gti.grouping_iters);
+            cfg.gti.grouping_sample =
+                g.get("grouping_sample").as_usize().unwrap_or(cfg.gti.grouping_sample);
+        }
+        let h = v.get("hw");
+        if !matches!(h, Value::Null) {
+            cfg.hw.block = h.get("block").as_usize().unwrap_or(cfg.hw.block);
+            cfg.hw.simd = h.get("simd").as_usize().unwrap_or(cfg.hw.simd);
+            cfg.hw.unroll = h.get("unroll").as_usize().unwrap_or(cfg.hw.unroll);
+            cfg.hw.freq_mhz = h.get("freq_mhz").as_f64().unwrap_or(cfg.hw.freq_mhz);
+        }
+        if let Some(s) = v.get("artifact_dir").as_str() {
+            cfg.artifact_dir = s.to_string();
+        }
+        if let Some(b) = v.get("use_fpga").as_bool() {
+            cfg.use_fpga = b;
+        }
+        if let Some(s) = v.get("seed").as_usize() {
+            cfg.seed = s as u64;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {path}: {e}")))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.hw.block == 0 || !self.hw.block.is_power_of_two() {
+            return Err(Error::Config(format!(
+                "hw.block must be a power of two, got {}",
+                self.hw.block
+            )));
+        }
+        if self.hw.simd == 0 || self.hw.unroll == 0 {
+            return Err(Error::Config("hw.simd and hw.unroll must be positive".into()));
+        }
+        if self.hw.freq_mhz <= 0.0 {
+            return Err(Error::Config("hw.freq_mhz must be positive".into()));
+        }
+        Ok(())
+    }
+
+    /// Serialize for provenance in result files.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            (
+                "gti",
+                json::obj(vec![
+                    ("src_groups", json::num(self.gti.src_groups as f64)),
+                    ("trg_groups", json::num(self.gti.trg_groups as f64)),
+                    ("grouping_iters", json::num(self.gti.grouping_iters as f64)),
+                    ("grouping_sample", json::num(self.gti.grouping_sample as f64)),
+                ]),
+            ),
+            (
+                "hw",
+                json::obj(vec![
+                    ("block", json::num(self.hw.block as f64)),
+                    ("simd", json::num(self.hw.simd as f64)),
+                    ("unroll", json::num(self.hw.unroll as f64)),
+                    ("freq_mhz", json::num(self.hw.freq_mhz)),
+                ]),
+            ),
+            ("artifact_dir", json::s(self.artifact_dir.clone())),
+            ("use_fpga", Value::Bool(self.use_fpga)),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        AccdConfig::new().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = AccdConfig::new();
+        cfg.hw.block = 32;
+        cfg.gti.src_groups = 99;
+        cfg.use_fpga = false;
+        let re = AccdConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, re);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let v = json::parse(r#"{"hw": {"block": 128}}"#).unwrap();
+        let cfg = AccdConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.hw.block, 128);
+        assert_eq!(cfg.hw.simd, HwConfig::default().simd);
+    }
+
+    #[test]
+    fn invalid_block_rejected() {
+        let v = json::parse(r#"{"hw": {"block": 48}}"#).unwrap();
+        assert!(AccdConfig::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! The public engine: owns runtime + device + config.
+
+use std::sync::Arc;
+
+use crate::config::AccdConfig;
+use crate::data::Dataset;
+use crate::fpga::{FpgaDevice, PowerModel};
+use crate::runtime::Runtime;
+use crate::Result;
+
+use super::{kmeans, knn, nbody, KmeansResult, KnnResult, NbodyResult};
+
+/// AccD execution engine (one per process).
+///
+/// Construction loads the artifact manifest and creates the PJRT
+/// client; executables compile lazily per algorithm.  All entry points
+/// are `&mut self` because runs accumulate device statistics that each
+/// call resets.
+pub struct Engine {
+    pub config: AccdConfig,
+    pub runtime: Arc<Runtime>,
+    pub device: FpgaDevice,
+    pub power: PowerModel,
+}
+
+impl Engine {
+    pub fn new(config: AccdConfig) -> Result<Self> {
+        config.validate()?;
+        let runtime = Arc::new(Runtime::load(&config.artifact_dir)?);
+        let device = FpgaDevice::new(runtime.clone(), config.hw.clone());
+        Ok(Self { config, runtime, device, power: PowerModel::default() })
+    }
+
+    /// K-means clustering with Trace-based + Group-level GTI.
+    pub fn kmeans(&mut self, ds: &Dataset, k: usize, max_iters: usize) -> Result<KmeansResult> {
+        kmeans::run(self, ds, k, max_iters)
+    }
+
+    /// KNN-join with Two-landmark + Group-level GTI (Euclidean).
+    pub fn knn_join(&mut self, src: &Dataset, trg: &Dataset, k: usize) -> Result<KnnResult> {
+        knn::run(self, src, trg, k)
+    }
+
+    /// Metric-aware KNN-join (paper Table I `mtr`): neighbor values are
+    /// squared distances for [`crate::gti::Metric::L2`] and plain sums
+    /// for [`crate::gti::Metric::L1`].
+    pub fn knn_join_metric(
+        &mut self,
+        src: &Dataset,
+        trg: &Dataset,
+        k: usize,
+        metric: crate::gti::Metric,
+    ) -> Result<KnnResult> {
+        knn::run_metric(self, src, trg, k, metric)
+    }
+
+    /// N-body simulation with the full hybrid GTI.
+    pub fn nbody(
+        &mut self,
+        ds: &Dataset,
+        masses: &[f32],
+        steps: usize,
+        dt: f32,
+        radius: f32,
+    ) -> Result<NbodyResult> {
+        nbody::run(self, ds, masses, steps, dt, radius)
+    }
+
+    /// Effective source-group count for a dataset (config override or
+    /// auto heuristic).
+    pub fn src_groups(&self, n: usize) -> usize {
+        if self.config.gti.src_groups > 0 {
+            self.config.gti.src_groups.min(n)
+        } else {
+            crate::gti::Grouping::auto_groups(n)
+        }
+    }
+
+    /// Effective target-group count.
+    pub fn trg_groups(&self, n: usize) -> usize {
+        if self.config.gti.trg_groups > 0 {
+            self.config.gti.trg_groups.min(n)
+        } else {
+            crate::gti::Grouping::auto_groups(n)
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! AccD K-means: Trace-based + Group-level GTI + fused assignment tiles.
+//!
+//! Algorithm outline (paper §IV-B-b/c, the "hierarchy bound" of §VII):
+//!
+//! 1. Group the points once (`z_src` groups, membership fixed) and pack
+//!    them contiguously (layout §V-A).  Group the k centers into
+//!    `z_trg` center-groups (membership fixed across iterations).
+//! 2. Iteration 0 assigns every point exactly via the fused
+//!    distance+argmin tiles.
+//! 3. Each later iteration: move centers to member means, compute per-
+//!    center drifts; widen every point's upper bound by its assigned
+//!    center's drift (trace-based, Fig. 2c); recompute the cheap Eq. 2
+//!    group-pair lower bounds; a source group whose lb to some center-
+//!    group exceeds its max member ub skips that center-group entirely
+//!    (group-level filter, Fig. 3b).  Surviving (group x center-set)
+//!    rectangles are dense and go to the device.
+//!
+//! Soundness argument for the prune rule is spelled out in
+//! `gti::filter` and exercised by `rust/tests/integration_algorithms.rs`
+//! which checks exact agreement with the naive CPU baseline.
+
+use crate::data::{Dataset, Matrix};
+use crate::fpga::FpgaDevice;
+use crate::gti::{bounds, Grouping};
+use crate::layout::PackedSet;
+use crate::metrics::RunReport;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+use super::engine::Engine;
+use super::pipeline;
+
+/// Result of a K-means run.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    /// Final cluster centers, `(k, d)`.
+    pub centers: Matrix,
+    /// Assignment of every input point to a center.
+    pub assign: Vec<u32>,
+    /// Sum of squared distances to assigned centers (exact).
+    pub sse: f64,
+    /// Iterations executed (excluding the init pass).
+    pub iterations: usize,
+    pub report: RunReport,
+}
+
+pub(super) fn run(
+    engine: &mut Engine,
+    ds: &Dataset,
+    k: usize,
+    max_iters: usize,
+) -> Result<KmeansResult> {
+    if k == 0 || k > ds.n() {
+        return Err(Error::Data(format!("kmeans: k={k} out of range for n={}", ds.n())));
+    }
+    let t0 = std::time::Instant::now();
+    engine.device.reset_stats();
+    let mut report = RunReport::new("kmeans", &ds.name, "accd");
+    let cfg = engine.config.clone();
+    let tile = engine.runtime.manifest().tile.clone();
+    let d = ds.d();
+    let d_pad = tile.pad_d(d)?;
+
+    // --- CPU side: grouping + packing (filter stage) -------------------
+    let filt0 = std::time::Instant::now();
+    let z_src = engine.src_groups(ds.n());
+    let grouping = Grouping::build(
+        &ds.points,
+        z_src,
+        cfg.gti.grouping_iters,
+        cfg.gti.grouping_sample,
+        cfg.seed,
+    )?;
+    let packed = PackedSet::pack(&ds.points, &grouping, 8);
+
+    // Initial centers: k distinct random points.
+    let mut rng = Rng::new(cfg.seed ^ 0x6B6D_6561_6E73); // "kmeans" salt
+    let mut centers = ds.points.gather_rows(&rng.sample_indices(ds.n(), k));
+
+    // Group the centers (membership fixed; positions will drift).
+    let z_trg = engine.trg_groups(k).min(k);
+    let mut center_grouping =
+        Grouping::build(&centers, z_trg, cfg.gti.grouping_iters, k, cfg.seed ^ 0xC0)?;
+    report.filter_secs += filt0.elapsed().as_secs_f64();
+
+    // --- Iteration 0: exact assignment of everything -------------------
+    let k_pad = tile.pad_kmeans_k(k)?;
+    let centers_slab = pad_centers(&centers, k_pad, d_pad);
+    let mut assign = vec![0u32; ds.n()]; // packed-row order
+    let mut ub = vec![0.0f32; ds.n()]; // upper bound on dist to assigned
+    assign_full(&engine.device, &packed, &centers_slab, k, k_pad, d_pad, &mut assign, &mut ub)?;
+
+    // --- Iterations -----------------------------------------------------
+    let mut iterations = 0usize;
+    let mut drift = vec![0.0f32; k];
+    for _iter in 0..max_iters {
+        iterations += 1;
+        // Center update (CPU): means over packed points.
+        let filt = std::time::Instant::now();
+        let moved = update_centers(&packed, &assign, &mut centers, k);
+        drift.copy_from_slice(&moved);
+        let max_drift = moved.iter().cloned().fold(0.0f32, f32::max);
+        // Trace-based: widen ubs by assigned center drift.
+        for (i, a) in assign.iter().enumerate() {
+            ub[i] += drift[*a as usize];
+        }
+        // Center grouping follows its members (recenter + radii).
+        let cg_drift = recenter_center_groups(&mut center_grouping, &centers);
+        let _ = cg_drift;
+        // Group-level bounds: Eq. 2 on (source group, center group).
+        let pair_bounds = bounds::group_pair_bounds(&grouping, &center_grouping);
+        report.filter.bound_comps += (grouping.num_groups() * z_trg) as u64;
+        // Per source group: ub = max member ub.
+        let mut grp_ub = vec![0.0f32; grouping.num_groups()];
+        for g in 0..grouping.num_groups() {
+            let (start, len) = (packed.group_start(g), packed.group_len(g));
+            let mut m = 0.0f32;
+            for i in start..start + len {
+                m = m.max(ub[i]);
+            }
+            grp_ub[g] = m;
+        }
+        report.filter_secs += filt.elapsed().as_secs_f64();
+
+        // Candidate center-groups per source group.  Source groups
+        // sharing the same candidate signature are merged into ONE
+        // device batch (the paper's Fig. 4b inter-group schedule
+        // applied to dispatch — perf pass §Perf): with z_trg small,
+        // most groups share candidates, so the accelerator sees a few
+        // large row slabs instead of thousands of 64-row tiles.
+        let mut changed = 0usize;
+        let mut batches: std::collections::BTreeMap<Vec<u32>, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for g in 0..grouping.num_groups() {
+            let len = packed.group_len(g);
+            if len == 0 {
+                continue;
+            }
+            let mut cand_groups: Vec<u32> = Vec::new();
+            for b in 0..z_trg {
+                report.filter.group_pairs += 1;
+                if pair_bounds[g][b].lb <= grp_ub[g] {
+                    report.filter.surviving_group_pairs += 1;
+                    cand_groups.push(b as u32);
+                }
+            }
+            report.filter.total_pairs += (len * k) as u64;
+            if !cand_groups.is_empty() {
+                batches.entry(cand_groups).or_default().push(g);
+            }
+        }
+        let jobs: Vec<(Vec<u32>, Vec<usize>)> = batches.into_iter().collect();
+
+        // Stream merged batches through the bounded pipeline.
+        let device = &engine.device;
+        let mut job_err: Option<Error> = None;
+        let mut results: Vec<(Vec<u32>, Vec<u32>, Vec<i32>, Vec<f32>)> = Vec::new();
+        {
+            let jobs_ref = &jobs;
+            pipeline::run(
+                8,
+                |i| jobs_ref.get(i as usize).cloned(),
+                |(cand_groups, src_groups)| {
+                    if job_err.is_some() {
+                        return;
+                    }
+                    let cand_centers: Vec<u32> = cand_groups
+                        .iter()
+                        .flat_map(|&b| center_grouping.members[b as usize].iter().copied())
+                        .collect();
+                    // Packed-row list of all member points of the batch.
+                    let rows: Vec<u32> = src_groups
+                        .iter()
+                        .flat_map(|&g| {
+                            let (s, l) = (packed.group_start(g), packed.group_len(g));
+                            (s as u32)..(s + l) as u32
+                        })
+                        .collect();
+                    report.filter.surviving_pairs +=
+                        (rows.len() * cand_centers.len()) as u64;
+                    match assign_rows(
+                        device,
+                        &packed.points,
+                        &rows,
+                        &centers,
+                        &cand_centers,
+                        &tile.kmeans_k_pad,
+                        d_pad,
+                    ) {
+                        Ok((idx, dist)) => results.push((rows, cand_centers, idx, dist)),
+                        Err(e) => job_err = Some(e),
+                    }
+                },
+            );
+        }
+        if let Some(e) = job_err {
+            return Err(e);
+        }
+        for (rows, cand, idx, dist) in results {
+            for (r, &packed_row) in rows.iter().enumerate() {
+                let true_center = cand[idx[r] as usize];
+                let i = packed_row as usize;
+                if assign[i] != true_center {
+                    assign[i] = true_center;
+                    changed += 1;
+                }
+                ub[i] = dist[r].max(0.0).sqrt();
+            }
+        }
+
+        if changed == 0 && max_drift < 1e-6 {
+            break;
+        }
+    }
+
+    // --- Final exact pass: SSE + assignment validation ------------------
+    let centers_slab = pad_centers(&centers, k_pad, d_pad);
+    let mut final_dist = vec![0.0f32; ds.n()];
+    assign_full(
+        &engine.device,
+        &packed,
+        &centers_slab,
+        k,
+        k_pad,
+        d_pad,
+        &mut assign,
+        &mut final_dist,
+    )?;
+    let sse: f64 = final_dist.iter().map(|&x| (x * x) as f64).sum();
+
+    // Unpack assignment to original point order.
+    let mut assign_orig = vec![0u32; ds.n()];
+    for (new_row, &old) in packed.new2old.iter().enumerate() {
+        assign_orig[old as usize] = assign[new_row];
+    }
+
+    // --- Report ----------------------------------------------------------
+    report.iterations = iterations;
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    report.device = engine.device.stats();
+    report.device_wall_secs = report.device.wall_secs;
+    report.device_modeled_secs = report.device.modeled_secs;
+    report.quality = sse;
+    report.energy_j = engine.power.accd_joules(
+        report.wall_secs,
+        report.filter_secs,
+        1.0,
+        report.device.wall_secs,
+    );
+    report.avg_watts = report.energy_j / report.wall_secs.max(1e-9);
+
+    Ok(KmeansResult { centers, assign: assign_orig, sse, iterations, report })
+}
+
+/// Exact assignment of every packed point against the full center slab.
+#[allow(clippy::too_many_arguments)]
+fn assign_full(
+    device: &FpgaDevice,
+    packed: &PackedSet,
+    centers_slab: &[f32],
+    k: usize,
+    k_pad: usize,
+    d_pad: usize,
+    assign: &mut [u32],
+    best_dist: &mut [f32],
+) -> Result<()> {
+    let n = packed.points.rows();
+    let d = packed.points.cols();
+    let tile_m = device.runtime().manifest().tile.m;
+    let rows_pad = crate::util::round_up(n.max(1), tile_m);
+    let slab = FpgaDevice::pad_slab(packed.points.as_slice(), n, d, rows_pad, d_pad);
+    let (idx, dist) = device.kmeans_assign_block(&slab, n, d_pad, centers_slab, k_pad)?;
+    for i in 0..n {
+        let ci = idx[i] as usize;
+        debug_assert!(ci < k, "assignment hit a padded center slot");
+        assign[i] = ci as u32;
+        best_dist[i] = dist[i].max(0.0).sqrt();
+    }
+    Ok(())
+}
+
+/// Assignment of an arbitrary packed-row batch against a candidate
+/// center list.  Returns per-row (index into candidates, squared
+/// distance).  Candidates are chunked when they exceed the largest
+/// padded-center artifact, with a running min across chunks.
+fn assign_rows(
+    device: &FpgaDevice,
+    points: &Matrix,
+    rows: &[u32],
+    centers: &Matrix,
+    candidates: &[u32],
+    k_pads: &[usize],
+    d_pad: usize,
+) -> Result<(Vec<i32>, Vec<f32>)> {
+    let len = rows.len();
+    let kc = candidates.len();
+    let max_pad = *k_pads.last().expect("kmeans_k_pad empty");
+    let mut best_idx = vec![0i32; len];
+    let mut best_dist = vec![f32::INFINITY; len];
+    let tile_m = device.runtime().manifest().tile.m;
+    let rows_pad = crate::util::round_up(len.max(1), tile_m);
+    let slab = FpgaDevice::pad_rows(points, rows, rows_pad, d_pad);
+    let mut off = 0usize;
+    while off < kc {
+        let chunk = (kc - off).min(max_pad);
+        let chunk_ids = &candidates[off..off + chunk];
+        let k_pad = k_pads
+            .iter()
+            .copied()
+            .find(|&p| p >= chunk)
+            .unwrap_or(max_pad);
+        let idx: Vec<usize> = chunk_ids.iter().map(|&c| c as usize).collect();
+        let cand_mat = centers.gather_rows(&idx);
+        let cslab = pad_centers(&cand_mat, k_pad, d_pad);
+        let (ti, td) = device.kmeans_assign_block(&slab, len, d_pad, &cslab, k_pad)?;
+        for r in 0..len {
+            if td[r] < best_dist[r] {
+                best_dist[r] = td[r];
+                best_idx[r] = (off + ti[r] as usize) as i32;
+            }
+        }
+        off += chunk;
+    }
+    Ok((best_idx, best_dist))
+}
+
+/// Pad centers to `(k_pad, d_pad)` with far-away sentinel rows so the
+/// fused argmin can never select padding.
+fn pad_centers(centers: &Matrix, k_pad: usize, d_pad: usize) -> Vec<f32> {
+    let (k, d) = (centers.rows(), centers.cols());
+    let mut slab = vec![0.0f32; k_pad * d_pad];
+    for c in 0..k {
+        slab[c * d_pad..c * d_pad + d].copy_from_slice(centers.row(c));
+    }
+    // Sentinel: 1e18 squared distance dominates any real distance while
+    // staying far from f32 overflow when squared... use 1e15 coordinate.
+    for c in k..k_pad {
+        slab[c * d_pad] = 1.0e15;
+    }
+    slab
+}
+
+/// Move centers to member means; returns per-center drift distances.
+fn update_centers(packed: &PackedSet, assign: &[u32], centers: &mut Matrix, k: usize) -> Vec<f32> {
+    let d = centers.cols();
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0u64; k];
+    for (i, &a) in assign.iter().enumerate() {
+        let row = packed.points.row(i);
+        let a = a as usize;
+        counts[a] += 1;
+        for x in 0..d {
+            sums[a * d + x] += row[x] as f64;
+        }
+    }
+    let mut drift = vec![0.0f32; k];
+    for c in 0..k {
+        if counts[c] == 0 {
+            continue; // empty cluster keeps its position
+        }
+        let inv = 1.0 / counts[c] as f64;
+        let row = centers.row_mut(c);
+        let mut d2 = 0.0f32;
+        for x in 0..d {
+            let nc = (sums[c * d + x] * inv) as f32;
+            let delta = nc - row[x];
+            d2 += delta * delta;
+            row[x] = nc;
+        }
+        drift[c] = d2.sqrt();
+    }
+    drift
+}
+
+/// Recenter the center-grouping around the moved centers; returns per
+/// center-group drift (max member drift is folded into radii already).
+fn recenter_center_groups(cg: &mut Grouping, centers: &Matrix) -> Vec<f32> {
+    cg.recenter(centers)
+}

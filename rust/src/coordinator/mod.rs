@@ -1,0 +1,26 @@
+//! The L3 coordinator: AccD's heterogeneous execution engine.
+//!
+//! This is where the paper's CPU-FPGA split lives (§V intro): the
+//! engine runs GTI grouping/filtering and all control flow on the CPU,
+//! and streams the surviving dense distance blocks to the accelerator
+//! device.  One submodule per algorithm family:
+//!
+//! * [`kmeans`] — Trace-based + Group-level GTI (paper's K-means).
+//! * [`knn`] — Two-landmark + Group-level GTI (paper's KNN-join).
+//! * [`nbody`] — Two-landmark + Trace-based + Group-level (N-body).
+//! * [`pipeline`] — bounded-queue dataflow executor used to stream
+//!   jobs between the filter stage and the device stage.
+//!
+//! [`Engine`] owns the runtime + device and exposes the public API the
+//! examples and benches call.
+
+pub mod engine;
+pub mod kmeans;
+pub mod knn;
+pub mod nbody;
+pub mod pipeline;
+
+pub use engine::Engine;
+pub use kmeans::KmeansResult;
+pub use knn::KnnResult;
+pub use nbody::NbodyResult;

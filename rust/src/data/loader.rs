@@ -1,0 +1,129 @@
+//! CSV loader for users who have the real UCI files from Table V.
+//!
+//! Accepts plain numeric CSV (optional header), selects all numeric
+//! columns, and ignores rows with parse failures up to a tolerance so
+//! the typical UCI "mostly numeric with a label column" layout loads
+//! without preprocessing.
+
+use std::io::BufRead;
+use std::path::Path;
+
+use super::{Dataset, Matrix};
+use crate::{Error, Result};
+
+/// Options for [`load_csv`].
+#[derive(Debug, Clone)]
+pub struct CsvOptions {
+    pub delimiter: char,
+    /// Skip the first line if it fails to parse fully (header detection).
+    pub allow_header: bool,
+    /// Columns to drop (e.g. label columns), by index.
+    pub drop_cols: Vec<usize>,
+    /// Abort if more than this fraction of data rows fail to parse.
+    pub max_bad_row_frac: f64,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        Self { delimiter: ',', allow_header: true, drop_cols: vec![], max_bad_row_frac: 0.01 }
+    }
+}
+
+/// Load a numeric CSV file as a Dataset.
+pub fn load_csv(path: impl AsRef<Path>, opts: &CsvOptions) -> Result<Dataset> {
+    let path = path.as_ref();
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let mut data: Vec<f32> = Vec::new();
+    let mut cols: Option<usize> = None;
+    let mut bad_rows = 0usize;
+    let mut total_rows = 0usize;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let parsed: Vec<Option<f32>> = trimmed
+            .split(opts.delimiter)
+            .enumerate()
+            .filter(|(i, _)| !opts.drop_cols.contains(i))
+            .map(|(_, tok)| tok.trim().parse::<f32>().ok())
+            .collect();
+        let ok = parsed.iter().all(|p| p.is_some()) && !parsed.is_empty();
+        if !ok {
+            if lineno == 0 && opts.allow_header {
+                continue; // header line
+            }
+            bad_rows += 1;
+            total_rows += 1;
+            continue;
+        }
+        let row: Vec<f32> = parsed.into_iter().map(|p| p.unwrap()).collect();
+        match cols {
+            None => cols = Some(row.len()),
+            Some(c) if c != row.len() => {
+                bad_rows += 1;
+                total_rows += 1;
+                continue;
+            }
+            _ => {}
+        }
+        data.extend_from_slice(&row);
+        total_rows += 1;
+    }
+
+    let cols = cols.ok_or_else(|| Error::Data(format!("{}: no numeric rows", path.display())))?;
+    if total_rows > 0 && (bad_rows as f64 / total_rows as f64) > opts.max_bad_row_frac {
+        return Err(Error::Data(format!(
+            "{}: {bad_rows}/{total_rows} rows failed to parse",
+            path.display()
+        )));
+    }
+    let rows = data.len() / cols;
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("csv").to_string();
+    Ok(Dataset::new(name, Matrix::from_vec(data, rows, cols)?, 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(name: &str, content: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(name);
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn loads_plain_csv() {
+        let p = write_tmp("accd_test_plain.csv", "1.0,2.0\n3.0,4.0\n");
+        let ds = load_csv(&p, &CsvOptions::default()).unwrap();
+        assert_eq!((ds.n(), ds.d()), (2, 2));
+        assert_eq!(ds.points.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn skips_header() {
+        let p = write_tmp("accd_test_header.csv", "x,y\n1,2\n3,4\n");
+        let ds = load_csv(&p, &CsvOptions::default()).unwrap();
+        assert_eq!(ds.n(), 2);
+    }
+
+    #[test]
+    fn drops_label_column() {
+        let p = write_tmp("accd_test_label.csv", "1,2,cat\n3,4,dog\n");
+        let opts = CsvOptions { drop_cols: vec![2], ..Default::default() };
+        let ds = load_csv(&p, &opts).unwrap();
+        assert_eq!((ds.n(), ds.d()), (2, 2));
+    }
+
+    #[test]
+    fn rejects_too_many_bad_rows() {
+        let p = write_tmp("accd_test_bad.csv", "1,2\nx,y\nz,w\n");
+        assert!(load_csv(&p, &CsvOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Datasets and dense matrices.
+//!
+//! The paper evaluates on UCI datasets (Table V) that are not shipped
+//! with this repository; `synthetic` generates statistically comparable
+//! stand-ins (same size/dimension, mixture-of-Gaussians structure so TI
+//! filtering has real pruning opportunities — see DESIGN.md
+//! §Substitutions), and `loader` reads CSV for users who have the real
+//! files.
+
+pub mod loader;
+pub mod synthetic;
+pub mod tablev;
+
+pub use tablev::{kmeans_datasets, knn_datasets, nbody_datasets, DatasetSpec};
+
+use crate::{Error, Result};
+
+/// Dense row-major f32 matrix — the point-set container used everywhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "matrix data length {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Self { data, rows, cols })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Gather rows by index into a new matrix (layout optimizer core op).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (o, &i) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Copy rows into a zero-padded buffer of `rows_padded x cols_padded`
+    /// (feature axis zero-padding is distance-neutral for L2^2/L1).
+    pub fn padded(&self, rows_padded: usize, cols_padded: usize) -> Result<Vec<f32>> {
+        if rows_padded < self.rows || cols_padded < self.cols {
+            return Err(Error::Shape(format!(
+                "padded shape {rows_padded}x{cols_padded} smaller than {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        let mut out = vec![0.0f32; rows_padded * cols_padded];
+        for i in 0..self.rows {
+            out[i * cols_padded..i * cols_padded + self.cols].copy_from_slice(self.row(i));
+        }
+        Ok(out)
+    }
+
+    /// Squared L2 distance between row `i` and `other`'s row `j`.
+    #[inline]
+    pub fn dist2(&self, i: usize, other: &Matrix, j: usize) -> f32 {
+        let (a, b) = (self.row(i), other.row(j));
+        let mut s = 0.0f32;
+        for k in 0..self.cols {
+            let d = a[k] - b[k];
+            s += d * d;
+        }
+        s
+    }
+}
+
+/// A named point set plus provenance, the unit the engine operates on.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub points: Matrix,
+    /// Generator seed (0 for loaded data) — recorded in EXPERIMENTS.md.
+    pub seed: u64,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, points: Matrix, seed: u64) -> Self {
+        Self { name: name.into(), points, seed }
+    }
+
+    pub fn n(&self) -> usize {
+        self.points.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.points.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates_shape() {
+        assert!(Matrix::from_vec(vec![0.0; 6], 2, 3).is_ok());
+        assert!(Matrix::from_vec(vec![0.0; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn gather_rows_reorders() {
+        let m = Matrix::from_vec(vec![1., 2., 3., 4., 5., 6.], 3, 2).unwrap();
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.row(0), &[5., 6.]);
+        assert_eq!(g.row(1), &[1., 2.]);
+    }
+
+    #[test]
+    fn padded_zero_fills() {
+        let m = Matrix::from_vec(vec![1., 2., 3., 4.], 2, 2).unwrap();
+        let p = m.padded(3, 4).unwrap();
+        assert_eq!(p.len(), 12);
+        assert_eq!(&p[0..4], &[1., 2., 0., 0.]);
+        assert_eq!(&p[4..8], &[3., 4., 0., 0.]);
+        assert_eq!(&p[8..12], &[0.; 4]);
+        assert!(m.padded(1, 2).is_err());
+    }
+
+    #[test]
+    fn dist2_is_squared_euclidean() {
+        let a = Matrix::from_vec(vec![0., 0., 3., 4.], 2, 2).unwrap();
+        assert_eq!(a.dist2(0, &a, 1), 25.0);
+        assert_eq!(a.dist2(1, &a, 1), 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Synthetic dataset generators.
+//!
+//! Stand-ins for the paper's UCI datasets (see DESIGN.md
+//! §Substitutions): mixture-of-Gaussians clusters reproduce the "real
+//! data has cluster structure" property that triangle-inequality
+//! filtering exploits; `uniform` gives the adversarial no-structure
+//! case used in ablations; `plummer` generates the centrally-condensed
+//! particle distributions typical of gravitational N-body initial
+//! conditions.
+
+use super::{Dataset, Matrix};
+use crate::util::rng::Rng;
+
+/// Mixture of `centers` Gaussians in [0,1]^d with per-cluster sigma
+/// `spread`.  Density (the paper's alpha in Eq. 7) rises as `spread`
+/// falls, which is exactly the knob the GTI ablation benches sweep.
+pub fn clustered(n: usize, d: usize, centers: usize, spread: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut mu = Matrix::zeros(centers.max(1), d);
+    for c in 0..centers.max(1) {
+        for k in 0..d {
+            mu.row_mut(c)[k] = rng.f32();
+        }
+    }
+    let mut pts = Matrix::zeros(n, d);
+    for i in 0..n {
+        let c = rng.below(centers.max(1));
+        for k in 0..d {
+            pts.row_mut(i)[k] = mu.row(c)[k] + spread * rng.normal();
+        }
+    }
+    Dataset::new(format!("clustered_n{n}_d{d}_c{centers}"), pts, seed)
+}
+
+/// Uniform points in [0,1]^d — worst case for TI filtering.
+pub fn uniform(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut pts = Matrix::zeros(n, d);
+    for i in 0..n {
+        for k in 0..d {
+            pts.row_mut(i)[k] = rng.f32();
+        }
+    }
+    Dataset::new(format!("uniform_n{n}_d{d}"), pts, seed)
+}
+
+/// Plummer-sphere particle positions (3-D), the standard N-body initial
+/// condition: radius CDF r = a / sqrt(u^{-2/3} - 1).
+pub fn plummer(n: usize, scale: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut pts = Matrix::zeros(n, 3);
+    for i in 0..n {
+        // Draw radius from the Plummer cumulative mass profile.
+        let u = rng.f64().max(1e-9) as f32;
+        let r = scale / (u.powf(-2.0 / 3.0) - 1.0).max(1e-9).sqrt();
+        let r = r.min(10.0 * scale); // clip the heavy tail
+        // Uniform direction on the sphere.
+        let z = rng.range_f32(-1.0, 1.0);
+        let phi = rng.range_f32(0.0, 2.0 * std::f32::consts::PI);
+        let s = (1.0 - z * z).max(0.0).sqrt();
+        let row = pts.row_mut(i);
+        row[0] = r * s * phi.cos();
+        row[1] = r * s * phi.sin();
+        row[2] = r * z;
+    }
+    Dataset::new(format!("plummer_n{n}"), pts, seed)
+}
+
+/// Particle masses for N-body runs: equal mass summing to `total`.
+pub fn equal_masses(n: usize, total: f32) -> Vec<f32> {
+    vec![total / n as f32; n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clustered_shape_and_determinism() {
+        let a = clustered(100, 8, 5, 0.05, 42);
+        let b = clustered(100, 8, 5, 0.05, 42);
+        assert_eq!(a.n(), 100);
+        assert_eq!(a.d(), 8);
+        assert_eq!(a.points, b.points);
+        let c = clustered(100, 8, 5, 0.05, 43);
+        assert_ne!(a.points, c.points);
+    }
+
+    #[test]
+    fn clustered_has_tighter_structure_than_uniform() {
+        // Mean nearest-neighbor distance should be markedly smaller for
+        // clustered data at equal n/d — the property GTI exploits.
+        let cl = clustered(300, 4, 10, 0.01, 7);
+        let un = uniform(300, 4, 7);
+        let mean_nn = |m: &Matrix| {
+            let mut total = 0.0f64;
+            for i in 0..m.rows() {
+                let mut best = f32::INFINITY;
+                for j in 0..m.rows() {
+                    if i != j {
+                        best = best.min(m.dist2(i, &m.clone(), j));
+                    }
+                }
+                total += best as f64;
+            }
+            total / m.rows() as f64
+        };
+        assert!(mean_nn(&cl.points) < mean_nn(&un.points));
+    }
+
+    #[test]
+    fn uniform_in_unit_cube() {
+        let u = uniform(200, 6, 3);
+        assert!(u.points.as_slice().iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn plummer_is_centrally_condensed() {
+        let p = plummer(2000, 1.0, 11);
+        let radii: Vec<f32> =
+            (0..p.n()).map(|i| p.points.row(i).iter().map(|x| x * x).sum::<f32>().sqrt()).collect();
+        let inner = radii.iter().filter(|&&r| r < 1.0).count();
+        // Plummer: ~35% of mass inside the scale radius r < a.
+        assert!(inner > p.n() / 5, "inner fraction too small: {inner}/{}", p.n());
+    }
+
+    #[test]
+    fn equal_masses_sum() {
+        let m = equal_masses(128, 1.0);
+        assert!((m.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+}

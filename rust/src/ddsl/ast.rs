@@ -1,0 +1,139 @@
+//! DDSL abstract syntax tree (paper §III constructs).
+
+/// Scalar/element types supported by DDSL (paper §III-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    Int,
+    Float,
+    Double,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "int" => Some(Self::Int),
+            "float" => Some(Self::Float),
+            "double" => Some(Self::Double),
+            _ => None,
+        }
+    }
+}
+
+/// A size/dimension expression: literal or reference to a `DVar`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SizeExpr {
+    Lit(usize),
+    Var(String),
+}
+
+/// Scalar literal values for `DVar` initializers / assignments.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num(f64),
+    Bool(bool),
+}
+
+/// Definition constructs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decl {
+    /// `DVar name type [init];`
+    Var { name: String, ty: DType, init: Option<Value> },
+    /// `DSet name type size dim;`
+    Set { name: String, ty: DType, size: SizeExpr, dim: SizeExpr },
+}
+
+/// Distance metric of a `AccD_Comp_Dist` (paper Table I `mtr`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Metric {
+    pub weighted: bool,
+    /// "L1" or "L2".
+    pub norm: String,
+}
+
+impl Metric {
+    /// Parse the paper's metric strings: `"Unweighted L1"`,
+    /// `"Weighted L2"`, plain `"L2"`, ...
+    pub fn parse(s: &str) -> Option<Self> {
+        let lower = s.to_ascii_lowercase();
+        let weighted = lower.contains("weighted") && !lower.contains("unweighted");
+        let norm = if lower.contains("l1") {
+            "L1"
+        } else if lower.contains("l2") || lower.contains("euclid") {
+            "L2"
+        } else {
+            return None;
+        };
+        Some(Metric { weighted, norm: norm.to_string() })
+    }
+}
+
+/// Operation and control constructs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `AccD_Comp_Dist(p1, p2, disMat, idMat, dim, mtr, weightMat);`
+    CompDist {
+        src: String,
+        trg: String,
+        dist_mat: String,
+        id_mat: String,
+        dim: SizeExpr,
+        metric: Metric,
+        /// `0` for unweighted, or the weight-matrix DSet name.
+        weight: Option<String>,
+    },
+    /// `AccD_Dist_Select(distMat, idMat, range, scope, outMat);`
+    DistSelect {
+        dist_mat: String,
+        id_mat: String,
+        /// K (Top-K) or a distance threshold (range search).
+        range: SizeExpr,
+        /// "smallest" | "largest" | "within".
+        scope: String,
+        out_mat: String,
+    },
+    /// `AccD_Update(var, p1, ..., pm, status);`
+    Update { target: String, inputs: Vec<String>, status: String },
+    /// `AccD_Iter(cond|maxIter) { ... }`
+    Iter { cond: IterCond, body: Vec<Stmt> },
+    /// `name = value;`
+    Assign { name: String, value: Value },
+}
+
+/// Iteration exit condition (paper §III-E).
+#[derive(Debug, Clone, PartialEq)]
+pub enum IterCond {
+    /// Loop while the named status variable is true.
+    Status(String),
+    /// Fixed maximum iteration count.
+    MaxIters(usize),
+}
+
+/// A full DDSL program.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Program {
+    pub decls: Vec<Decl>,
+    pub body: Vec<Stmt>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_parsing_covers_paper_strings() {
+        let m = Metric::parse("Unweighted L1").unwrap();
+        assert!(!m.weighted);
+        assert_eq!(m.norm, "L1");
+        let m = Metric::parse("Weighted L2").unwrap();
+        assert!(m.weighted);
+        assert_eq!(m.norm, "L2");
+        assert_eq!(Metric::parse("Euclidean").unwrap().norm, "L2");
+        assert!(Metric::parse("cosine").is_none());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float"), Some(DType::Float));
+        assert_eq!(DType::parse("void"), None);
+    }
+}

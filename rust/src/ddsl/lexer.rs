@@ -1,0 +1,207 @@
+//! DDSL lexer: source text → token stream with positions.
+
+use crate::{Error, Result};
+
+/// One token with its source line (for diagnostics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub line: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenKind {
+    /// Identifiers and keywords (`DVar`, `AccD_Iter`, names, types).
+    Ident(String),
+    /// Integer or float literal.
+    Number(f64),
+    /// Double-quoted string (metric names like "Unweighted L1").
+    Str(String),
+    /// `true` / `false` keywords lex as Bool.
+    Bool(bool),
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    Comma,
+    Semi,
+    Eq,
+    /// `!` (used in exit conditions like `!S`).
+    Bang,
+}
+
+/// Lex a DDSL source file.  `/* ... */` and `// ...` comments are
+/// skipped; unknown characters are hard errors with line info.
+pub fn lex(src: &str) -> Result<Vec<Token>> {
+    let mut out = Vec::new();
+    let bytes = src.as_bytes();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '/' if bytes.get(i + 1) == Some(&b'*') => {
+                // block comment
+                let start_line = line;
+                i += 2;
+                loop {
+                    if i + 1 >= bytes.len() {
+                        return Err(Error::Ddsl(format!(
+                            "unterminated comment starting line {start_line}"
+                        )));
+                    }
+                    if bytes[i] == b'*' && bytes[i + 1] == b'/' {
+                        i += 2;
+                        break;
+                    }
+                    if bytes[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            '/' if bytes.get(i + 1) == Some(&b'/') => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '(' => {
+                out.push(Token { kind: TokenKind::LParen, line });
+                i += 1;
+            }
+            ')' => {
+                out.push(Token { kind: TokenKind::RParen, line });
+                i += 1;
+            }
+            '{' => {
+                out.push(Token { kind: TokenKind::LBrace, line });
+                i += 1;
+            }
+            '}' => {
+                out.push(Token { kind: TokenKind::RBrace, line });
+                i += 1;
+            }
+            ',' => {
+                out.push(Token { kind: TokenKind::Comma, line });
+                i += 1;
+            }
+            ';' => {
+                out.push(Token { kind: TokenKind::Semi, line });
+                i += 1;
+            }
+            '=' => {
+                out.push(Token { kind: TokenKind::Eq, line });
+                i += 1;
+            }
+            '!' => {
+                out.push(Token { kind: TokenKind::Bang, line });
+                i += 1;
+            }
+            '"' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < bytes.len() && bytes[j] != b'"' {
+                    if bytes[j] == b'\n' {
+                        return Err(Error::Ddsl(format!("unterminated string on line {line}")));
+                    }
+                    j += 1;
+                }
+                if j >= bytes.len() {
+                    return Err(Error::Ddsl(format!("unterminated string on line {line}")));
+                }
+                out.push(Token {
+                    kind: TokenKind::Str(src[start..j].to_string()),
+                    line,
+                });
+                i = j + 1;
+            }
+            c if c.is_ascii_digit()
+                || (c == '-' && bytes.get(i + 1).is_some_and(|b| b.is_ascii_digit())) =>
+            {
+                let start = i;
+                i += 1;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_digit() || bytes[i] == b'.' || bytes[i] == b'e')
+                {
+                    i += 1;
+                }
+                let text = &src[start..i];
+                let n = text.parse::<f64>().map_err(|_| {
+                    Error::Ddsl(format!("bad number {text:?} on line {line}"))
+                })?;
+                out.push(Token { kind: TokenKind::Number(n), line });
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < bytes.len()
+                    && ((bytes[i] as char).is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                let word = &src[start..i];
+                let kind = match word {
+                    "true" => TokenKind::Bool(true),
+                    "false" => TokenKind::Bool(false),
+                    _ => TokenKind::Ident(word.to_string()),
+                };
+                out.push(Token { kind, line });
+            }
+            other => {
+                return Err(Error::Ddsl(format!(
+                    "unexpected character {other:?} on line {line}"
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_paper_snippet() {
+        let toks = lex(r#"
+            /* Define a single variable */
+            DVar K int 10;
+            AccD_Comp_Dist(pSet, cSet, distMat, idMat, D, "Unweighted L1", 0);
+        "#)
+        .unwrap();
+        assert!(matches!(&toks[0].kind, TokenKind::Ident(s) if s == "DVar"));
+        assert!(matches!(toks[2].kind, TokenKind::Ident(ref s) if s == "int"));
+        assert!(matches!(toks[3].kind, TokenKind::Number(n) if n == 10.0));
+        assert!(toks.iter().any(|t| matches!(&t.kind, TokenKind::Str(s) if s == "Unweighted L1")));
+    }
+
+    #[test]
+    fn tracks_line_numbers_through_comments() {
+        let toks = lex("// comment\n/* multi\nline */\nDVar x int;\n").unwrap();
+        assert_eq!(toks[0].line, 4);
+    }
+
+    #[test]
+    fn booleans_and_bang() {
+        let toks = lex("S = false; !S").unwrap();
+        assert!(matches!(toks[2].kind, TokenKind::Bool(false)));
+        assert!(matches!(toks[4].kind, TokenKind::Bang));
+    }
+
+    #[test]
+    fn rejects_unterminated_string_and_comment() {
+        assert!(lex("\"abc").is_err());
+        assert!(lex("/* abc").is_err());
+        assert!(lex("$").is_err());
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let toks = lex("DVar t float -1.5;").unwrap();
+        assert!(matches!(toks[3].kind, TokenKind::Number(n) if n == -1.5));
+    }
+}

@@ -1,0 +1,40 @@
+//! DDSL — the Distance-related Domain-Specific Language (paper §III).
+//!
+//! A C-like language with five construct families:
+//!
+//! * **Definition**: `DVar name type [init];` and
+//!   `DSet name type size dim;`
+//! * **Operation**: `AccD_Comp_Dist(...)`, `AccD_Dist_Select(...)`,
+//!   `AccD_Update(...)`
+//! * **Control**: `AccD_Iter(cond|maxIter) { ... }` and scalar
+//!   assignments like `S = false;`
+//!
+//! Compilation pipeline: [`lexer`] → [`parser`] → [`typecheck`] →
+//! [`plan`].  The planner performs the paper's strategy selection: it
+//! pattern-matches the (typed) program against the three GTI execution
+//! templates — iterative/distinct-sets (K-means-like → Trace+Group),
+//! one-shot Top-K (KNN-join-like → Two-landmark+Group), and
+//! iterative/self-join (N-body-like → the full hybrid) — and emits an
+//! [`plan::ExecutionPlan`] the engine can run.
+//!
+//! The K-means program from the paper's §III-F parses verbatim (modulo
+//! whitespace); see `examples/ddsl/kmeans.dd`.
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+pub mod plan;
+pub mod typecheck;
+
+pub use ast::Program;
+pub use plan::{ExecutionPlan, GtiStrategy};
+
+use crate::Result;
+
+/// Full pipeline: source text → validated execution plan.
+pub fn compile_program(src: &str) -> Result<ExecutionPlan> {
+    let tokens = lexer::lex(src)?;
+    let program = parser::parse(&tokens)?;
+    let typed = typecheck::check(&program)?;
+    plan::lower(&typed)
+}

@@ -1,0 +1,325 @@
+//! DDSL recursive-descent parser: tokens → [`Program`].
+
+use super::ast::*;
+use super::lexer::{Token, TokenKind};
+use crate::{Error, Result};
+
+pub fn parse(tokens: &[Token]) -> Result<Program> {
+    let mut p = Parser { tokens, pos: 0 };
+    let mut program = Program::default();
+    while !p.at_end() {
+        if p.peek_ident("DVar") || p.peek_ident("DSet") {
+            program.decls.push(p.decl()?);
+        } else {
+            program.body.push(p.stmt()?);
+        }
+    }
+    Ok(program)
+}
+
+struct Parser<'a> {
+    tokens: &'a [Token],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn at_end(&self) -> bool {
+        self.pos >= self.tokens.len()
+    }
+
+    fn line(&self) -> usize {
+        self.tokens
+            .get(self.pos.min(self.tokens.len().saturating_sub(1)))
+            .map(|t| t.line)
+            .unwrap_or(0)
+    }
+
+    fn err(&self, msg: &str) -> Error {
+        Error::Ddsl(format!("{msg} (line {})", self.line()))
+    }
+
+    fn peek(&self) -> Option<&TokenKind> {
+        self.tokens.get(self.pos).map(|t| &t.kind)
+    }
+
+    fn peek_ident(&self, word: &str) -> bool {
+        matches!(self.peek(), Some(TokenKind::Ident(s)) if s == word)
+    }
+
+    /// Advance and return an owned copy of the token (owned so error
+    /// paths can re-borrow `self` for diagnostics).
+    fn bump(&mut self) -> Option<TokenKind> {
+        let t = self.tokens.get(self.pos).map(|t| t.kind.clone());
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, kind: &TokenKind, what: &str) -> Result<()> {
+        if self.peek() == Some(kind) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {what}, found {:?}", self.peek())))
+        }
+    }
+
+    fn ident(&mut self, what: &str) -> Result<String> {
+        match self.bump() {
+            Some(TokenKind::Ident(s)) => Ok(s.clone()),
+            other => Err(self.err(&format!("expected {what}, found {other:?}"))),
+        }
+    }
+
+    fn size_expr(&mut self, what: &str) -> Result<SizeExpr> {
+        match self.bump() {
+            Some(TokenKind::Number(n)) if n >= 0.0 && n.fract() == 0.0 => {
+                Ok(SizeExpr::Lit(n as usize))
+            }
+            Some(TokenKind::Ident(s)) => Ok(SizeExpr::Var(s.clone())),
+            other => Err(self.err(&format!("expected {what}, found {other:?}"))),
+        }
+    }
+
+    fn decl(&mut self) -> Result<Decl> {
+        let kw = self.ident("declaration keyword")?;
+        match kw.as_str() {
+            "DVar" => {
+                let name = self.ident("variable name")?;
+                let ty_name = self.ident("type")?;
+                let ty = DType::parse(&ty_name)
+                    .ok_or_else(|| self.err(&format!("unknown type {ty_name:?}")))?;
+                let init = match self.peek() {
+                    Some(TokenKind::Number(n)) => {
+                        let v = Value::Num(*n);
+                        self.pos += 1;
+                        Some(v)
+                    }
+                    Some(TokenKind::Bool(b)) => {
+                        let v = Value::Bool(*b);
+                        self.pos += 1;
+                        Some(v)
+                    }
+                    _ => None,
+                };
+                self.expect(&TokenKind::Semi, "';'")?;
+                Ok(Decl::Var { name, ty, init })
+            }
+            "DSet" => {
+                let name = self.ident("set name")?;
+                let ty_name = self.ident("type")?;
+                let ty = DType::parse(&ty_name)
+                    .ok_or_else(|| self.err(&format!("unknown type {ty_name:?}")))?;
+                let size = self.size_expr("set size")?;
+                let dim = self.size_expr("set dimension")?;
+                self.expect(&TokenKind::Semi, "';'")?;
+                Ok(Decl::Set { name, ty, size, dim })
+            }
+            other => Err(self.err(&format!("unknown declaration {other:?}"))),
+        }
+    }
+
+    fn stmt(&mut self) -> Result<Stmt> {
+        match self.peek() {
+            Some(TokenKind::Ident(s)) => match s.as_str() {
+                "AccD_Comp_Dist" => self.comp_dist(),
+                "AccD_Dist_Select" => self.dist_select(),
+                "AccD_Update" => self.update(),
+                "AccD_Iter" => self.iter(),
+                _ => self.assign(),
+            },
+            other => Err(self.err(&format!("expected statement, found {other:?}"))),
+        }
+    }
+
+    fn comp_dist(&mut self) -> Result<Stmt> {
+        self.ident("AccD_Comp_Dist")?;
+        self.expect(&TokenKind::LParen, "'('")?;
+        let src = self.ident("source set")?;
+        self.expect(&TokenKind::Comma, "','")?;
+        let trg = self.ident("target set")?;
+        self.expect(&TokenKind::Comma, "','")?;
+        let dist_mat = self.ident("distance matrix")?;
+        self.expect(&TokenKind::Comma, "','")?;
+        let id_mat = self.ident("id matrix")?;
+        self.expect(&TokenKind::Comma, "','")?;
+        let dim = self.size_expr("dimension")?;
+        self.expect(&TokenKind::Comma, "','")?;
+        let metric = match self.bump() {
+            Some(TokenKind::Str(s)) => Metric::parse(&s)
+                .ok_or_else(|| Error::Ddsl(format!("unknown metric {s:?}")))?,
+            other => return Err(self.err(&format!("expected metric string, found {other:?}"))),
+        };
+        self.expect(&TokenKind::Comma, "','")?;
+        let weight = match self.bump() {
+            Some(TokenKind::Number(n)) if n == 0.0 => None,
+            Some(TokenKind::Ident(s)) => Some(s.clone()),
+            other => return Err(self.err(&format!("expected weight matrix or 0, found {other:?}"))),
+        };
+        self.expect(&TokenKind::RParen, "')'")?;
+        self.expect(&TokenKind::Semi, "';'")?;
+        Ok(Stmt::CompDist { src, trg, dist_mat, id_mat, dim, metric, weight })
+    }
+
+    fn dist_select(&mut self) -> Result<Stmt> {
+        self.ident("AccD_Dist_Select")?;
+        self.expect(&TokenKind::LParen, "'('")?;
+        let dist_mat = self.ident("distance matrix")?;
+        self.expect(&TokenKind::Comma, "','")?;
+        let id_mat = self.ident("id matrix")?;
+        self.expect(&TokenKind::Comma, "','")?;
+        let range = self.size_expr("range (K or threshold)")?;
+        self.expect(&TokenKind::Comma, "','")?;
+        let scope = match self.bump() {
+            Some(TokenKind::Str(s)) => s.clone(),
+            other => return Err(self.err(&format!("expected scope string, found {other:?}"))),
+        };
+        self.expect(&TokenKind::Comma, "','")?;
+        let out_mat = self.ident("output matrix")?;
+        self.expect(&TokenKind::RParen, "')'")?;
+        self.expect(&TokenKind::Semi, "';'")?;
+        if !["smallest", "largest", "within"].contains(&scope.as_str()) {
+            return Err(Error::Ddsl(format!("unknown selection scope {scope:?}")));
+        }
+        Ok(Stmt::DistSelect { dist_mat, id_mat, range, scope, out_mat })
+    }
+
+    fn update(&mut self) -> Result<Stmt> {
+        self.ident("AccD_Update")?;
+        self.expect(&TokenKind::LParen, "'('")?;
+        let mut names = vec![self.ident("update target")?];
+        while self.peek() == Some(&TokenKind::Comma) {
+            self.pos += 1;
+            names.push(self.ident("update argument")?);
+        }
+        self.expect(&TokenKind::RParen, "')'")?;
+        // Paper's example omits the trailing semicolon on AccD_Update;
+        // accept both.
+        if self.peek() == Some(&TokenKind::Semi) {
+            self.pos += 1;
+        }
+        if names.len() < 2 {
+            return Err(self.err("AccD_Update needs a target and a status variable"));
+        }
+        let status = names.pop().unwrap();
+        let target = names.remove(0);
+        Ok(Stmt::Update { target, inputs: names, status })
+    }
+
+    fn iter(&mut self) -> Result<Stmt> {
+        self.ident("AccD_Iter")?;
+        self.expect(&TokenKind::LParen, "'('")?;
+        let cond = match self.bump() {
+            Some(TokenKind::Ident(s)) => IterCond::Status(s.clone()),
+            Some(TokenKind::Number(n)) if n > 0.0 && n.fract() == 0.0 => {
+                IterCond::MaxIters(n as usize)
+            }
+            other => return Err(self.err(&format!("expected exit condition, found {other:?}"))),
+        };
+        self.expect(&TokenKind::RParen, "')'")?;
+        self.expect(&TokenKind::LBrace, "'{'")?;
+        let mut body = Vec::new();
+        while self.peek() != Some(&TokenKind::RBrace) {
+            if self.at_end() {
+                return Err(self.err("unterminated AccD_Iter block"));
+            }
+            body.push(self.stmt()?);
+        }
+        self.expect(&TokenKind::RBrace, "'}'")?;
+        Ok(Stmt::Iter { cond, body })
+    }
+
+    fn assign(&mut self) -> Result<Stmt> {
+        let name = self.ident("variable name")?;
+        self.expect(&TokenKind::Eq, "'='")?;
+        let value = match self.bump() {
+            Some(TokenKind::Number(n)) => Value::Num(n),
+            Some(TokenKind::Bool(b)) => Value::Bool(b),
+            other => return Err(self.err(&format!("expected value, found {other:?}"))),
+        };
+        self.expect(&TokenKind::Semi, "';'")?;
+        Ok(Stmt::Assign { name, value })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    /// The paper's §III-F K-means program, verbatim structure.
+    pub const KMEANS_DDSL: &str = r#"
+        DVar K int 10;
+        DVar D int 20;
+        DVar psize int 1400;
+        DVar csize int 200;
+        DSet pSet float psize D;
+        DSet cSet float csize D;
+        DSet distMat float psize csize;
+        DSet idMat int psize csize;
+        DSet pkMat int psize K;
+        DVar S int;
+        AccD_Iter(S) {
+            S = false;
+            /* Compute the inter-dataset distances */
+            AccD_Comp_Dist(pSet, cSet, distMat, idMat, D, "Unweighted L1", 0);
+            /* Select the distances of interests */
+            AccD_Dist_Select(distMat, idMat, K, "smallest", pkMat);
+            /* Update the cluster center */
+            AccD_Update(cSet, pSet, pkMat, S)
+        }
+    "#;
+
+    #[test]
+    fn parses_paper_kmeans_program() {
+        let prog = parse(&lex(KMEANS_DDSL).unwrap()).unwrap();
+        assert_eq!(prog.decls.len(), 10);
+        assert_eq!(prog.body.len(), 1);
+        let Stmt::Iter { cond, body } = &prog.body[0] else {
+            panic!("expected AccD_Iter at top level");
+        };
+        assert_eq!(*cond, IterCond::Status("S".into()));
+        assert_eq!(body.len(), 4);
+        assert!(matches!(&body[1], Stmt::CompDist { metric, .. } if metric.norm == "L1"));
+        assert!(
+            matches!(&body[2], Stmt::DistSelect { scope, .. } if scope == "smallest")
+        );
+        assert!(matches!(&body[3], Stmt::Update { target, .. } if target == "cSet"));
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = parse(&lex("DVar x unknown;").unwrap()).unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_scope() {
+        let src = r#"
+            DSet a float 10 2;
+            AccD_Dist_Select(a, a, 3, "median", a);
+        "#;
+        assert!(parse(&lex(src).unwrap()).is_err());
+    }
+
+    #[test]
+    fn iter_with_max_count() {
+        let src = "AccD_Iter(25) { S = true; }";
+        let prog = parse(&lex(src).unwrap()).unwrap();
+        assert!(matches!(&prog.body[0], Stmt::Iter { cond: IterCond::MaxIters(25), .. }));
+    }
+
+    #[test]
+    fn weighted_metric_with_weight_set() {
+        let src = r#"
+            AccD_Comp_Dist(a, b, dm, im, 8, "Weighted L2", wMat);
+        "#;
+        let prog = parse(&lex(src).unwrap()).unwrap();
+        assert!(matches!(
+            &prog.body[0],
+            Stmt::CompDist { weight: Some(w), metric, .. }
+                if w == "wMat" && metric.weighted
+        ));
+    }
+}

@@ -1,0 +1,281 @@
+//! DDSL planner: typed program → GTI execution plan.
+//!
+//! This is the compiler stage that embodies the paper's strategy table
+//! (§VII intro): the program's *structure* decides which combination of
+//! GTI bound computations applies:
+//!
+//! | pattern                                   | strategy              |
+//! |-------------------------------------------|-----------------------|
+//! | iterative, distinct sets, target updated  | Trace + Group         |
+//! | one-shot Top-K                            | Two-landmark + Group  |
+//! | iterative, self-join (src == trg updated) | Two-landmark + Trace + Group |
+//!
+//! The emitted [`ExecutionPlan`] names the engine entry point, the
+//! metric, and the datasets to bind; `Engine`-side execution happens in
+//! the CLI / examples where concrete data is attached.
+
+use super::ast::{IterCond, Metric, SizeExpr, Stmt};
+use super::typecheck::TypedProgram;
+use crate::{Error, Result};
+
+/// Which GTI bound computations the plan enables (paper §IV-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GtiStrategy {
+    pub two_landmark: bool,
+    pub trace_based: bool,
+    pub group_level: bool,
+}
+
+impl std::fmt::Display for GtiStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut parts = Vec::new();
+        if self.two_landmark {
+            parts.push("Two-landmark");
+        }
+        if self.trace_based {
+            parts.push("Trace-based");
+        }
+        if self.group_level {
+            parts.push("Group-level");
+        }
+        write!(f, "{}", parts.join(" + "))
+    }
+}
+
+/// The algorithm family the planner recognized.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanKind {
+    /// Iterative clustering: assign + update target set.
+    KmeansLike {
+        points: String,
+        centers: String,
+        k: usize,
+        max_iters: usize,
+    },
+    /// One-shot Top-K join.
+    KnnJoinLike { src: String, trg: String, k: usize },
+    /// Iterative self-join with radius selection.
+    NbodyLike { particles: String, radius_expr: usize, max_iters: usize },
+}
+
+/// A complete, runnable plan.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub kind: PlanKind,
+    pub strategy: GtiStrategy,
+    pub metric: Metric,
+    /// Set shapes the runner must bind, `(name, size, dim)`.
+    pub bindings: Vec<(String, usize, usize)>,
+}
+
+/// Default iteration cap for status-variable loops (the paper's
+/// convergence-driven `AccD_Iter(S)` form).
+const DEFAULT_MAX_ITERS: usize = 50;
+
+pub fn lower(tp: &TypedProgram) -> Result<ExecutionPlan> {
+    // Locate the (single) CompDist, the Select, and whether they sit in
+    // an Iter with an Update.
+    let (iter, body): (Option<&IterCond>, &[Stmt]) = match tp.body.as_slice() {
+        [Stmt::Iter { cond, body }] => (Some(cond), body.as_slice()),
+        other => (None, other),
+    };
+
+    let comp = body.iter().find_map(|s| match s {
+        Stmt::CompDist { src, trg, metric, .. } => Some((src, trg, metric)),
+        _ => None,
+    });
+    let select = body.iter().find_map(|s| match s {
+        Stmt::DistSelect { range, scope, .. } => Some((range, scope)),
+        _ => None,
+    });
+    let update = body.iter().find_map(|s| match s {
+        Stmt::Update { target, .. } => Some(target),
+        _ => None,
+    });
+
+    let (src, trg, metric) = comp.ok_or_else(|| {
+        Error::Ddsl("program contains no AccD_Comp_Dist — nothing to accelerate".into())
+    })?;
+    let (range, scope) = select.ok_or_else(|| {
+        Error::Ddsl("program contains no AccD_Dist_Select — result undefined".into())
+    })?;
+
+    let src_info = tp.set(src)?;
+    let trg_info = tp.set(trg)?;
+    let range_val = match range {
+        SizeExpr::Lit(n) => *n,
+        SizeExpr::Var(name) => match tp.vars.get(name).and_then(|v| v.init.clone()) {
+            Some(super::ast::Value::Num(n)) => n as usize,
+            _ => {
+                return Err(Error::Ddsl(format!(
+                    "selection range {name:?} has no integer value"
+                )))
+            }
+        },
+    };
+    let max_iters = match iter {
+        Some(IterCond::MaxIters(n)) => *n,
+        Some(IterCond::Status(_)) => DEFAULT_MAX_ITERS,
+        None => 1,
+    };
+
+    let bindings = vec![
+        (src_info.name.clone(), src_info.size, src_info.dim),
+        (trg_info.name.clone(), trg_info.size, trg_info.dim),
+    ];
+
+    // Strategy selection (the paper's table).
+    let plan = if iter.is_some() && src == trg {
+        // Self-join, iterative: N-body family.
+        ExecutionPlan {
+            kind: PlanKind::NbodyLike {
+                particles: src.clone(),
+                radius_expr: range_val,
+                max_iters,
+            },
+            strategy: GtiStrategy { two_landmark: true, trace_based: true, group_level: true },
+            metric: metric.clone(),
+            bindings,
+        }
+    } else if iter.is_some() && update.map(|u| u == trg).unwrap_or(false) {
+        // Iterative with target update: K-means family.
+        if scope != "smallest" {
+            return Err(Error::Ddsl(format!(
+                "clustering requires \"smallest\" selection, got {scope:?}"
+            )));
+        }
+        ExecutionPlan {
+            kind: PlanKind::KmeansLike {
+                points: src.clone(),
+                centers: trg.clone(),
+                k: trg_info.size,
+                max_iters,
+            },
+            strategy: GtiStrategy { two_landmark: false, trace_based: true, group_level: true },
+            metric: metric.clone(),
+            bindings,
+        }
+    } else if iter.is_none() {
+        // One-shot Top-K: KNN-join family.
+        if range_val == 0 || range_val > trg_info.size {
+            return Err(Error::Ddsl(format!(
+                "Top-K range {range_val} out of bounds for target size {}",
+                trg_info.size
+            )));
+        }
+        ExecutionPlan {
+            kind: PlanKind::KnnJoinLike { src: src.clone(), trg: trg.clone(), k: range_val },
+            strategy: GtiStrategy { two_landmark: true, trace_based: false, group_level: true },
+            metric: metric.clone(),
+            bindings,
+        }
+    } else {
+        return Err(Error::Ddsl(
+            "unrecognized program pattern: iterative without target update".into(),
+        ));
+    };
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::compile_program;
+    use super::*;
+
+    const KMEANS: &str = r#"
+        DVar K int 10;
+        DVar D int 20;
+        DVar psize int 1400;
+        DVar csize int 200;
+        DSet pSet float psize D;
+        DSet cSet float csize D;
+        DSet distMat float psize csize;
+        DSet idMat int psize csize;
+        DSet pkMat int psize K;
+        DVar S int;
+        AccD_Iter(S) {
+            S = false;
+            AccD_Comp_Dist(pSet, cSet, distMat, idMat, D, "Unweighted L1", 0);
+            AccD_Dist_Select(distMat, idMat, K, "smallest", pkMat);
+            AccD_Update(cSet, pSet, pkMat, S)
+        }
+    "#;
+
+    #[test]
+    fn kmeans_program_selects_trace_plus_group() {
+        let plan = compile_program(KMEANS).unwrap();
+        assert!(matches!(
+            plan.kind,
+            PlanKind::KmeansLike { k: 200, .. }
+        ));
+        assert_eq!(
+            plan.strategy,
+            GtiStrategy { two_landmark: false, trace_based: true, group_level: true }
+        );
+        assert_eq!(plan.metric.norm, "L1");
+        assert_eq!(plan.strategy.to_string(), "Trace-based + Group-level");
+    }
+
+    #[test]
+    fn knn_program_selects_two_landmark_plus_group() {
+        let src = r#"
+            DVar K int 5;
+            DSet q float 100 4;
+            DSet t float 300 4;
+            DSet dm float 100 300;
+            DSet im int 100 300;
+            DSet outM int 100 K;
+            AccD_Comp_Dist(q, t, dm, im, 4, "L2", 0);
+            AccD_Dist_Select(dm, im, K, "smallest", outM);
+        "#;
+        let plan = compile_program(src).unwrap();
+        assert!(matches!(plan.kind, PlanKind::KnnJoinLike { k: 5, .. }));
+        assert_eq!(
+            plan.strategy,
+            GtiStrategy { two_landmark: true, trace_based: false, group_level: true }
+        );
+    }
+
+    #[test]
+    fn nbody_program_selects_full_hybrid() {
+        let src = r#"
+            DVar R int 2;
+            DVar S int;
+            DSet p float 500 3;
+            DSet dm float 500 500;
+            DSet im int 500 500;
+            DSet nb int 500 R;
+            AccD_Iter(30) {
+                AccD_Comp_Dist(p, p, dm, im, 3, "L2", 0);
+                AccD_Dist_Select(dm, im, R, "within", nb);
+                AccD_Update(p, nb, S)
+            }
+        "#;
+        let plan = compile_program(src).unwrap();
+        assert!(matches!(plan.kind, PlanKind::NbodyLike { max_iters: 30, .. }));
+        assert_eq!(
+            plan.strategy,
+            GtiStrategy { two_landmark: true, trace_based: true, group_level: true }
+        );
+    }
+
+    #[test]
+    fn program_without_comp_dist_is_rejected() {
+        let err = compile_program("DVar x int 1; x = 2;").unwrap_err();
+        assert!(err.to_string().contains("AccD_Comp_Dist"), "{err}");
+    }
+
+    #[test]
+    fn topk_out_of_range_rejected() {
+        let src = r#"
+            DSet q float 10 2;
+            DSet t float 5 2;
+            DSet dm float 10 5;
+            DSet im int 10 5;
+            DSet o int 10 9;
+            AccD_Comp_Dist(q, t, dm, im, 2, "L2", 0);
+            AccD_Dist_Select(dm, im, 9, "smallest", o);
+        "#;
+        assert!(compile_program(src).is_err());
+    }
+}

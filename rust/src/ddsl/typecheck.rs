@@ -1,0 +1,259 @@
+//! DDSL semantic analysis: symbol resolution + shape/type checking.
+//!
+//! Produces a [`TypedProgram`] in which every `SizeExpr` is resolved to
+//! a concrete value and every referenced name is verified to exist with
+//! the right kind (scalar vs set) and compatible shape.
+
+use std::collections::HashMap;
+
+use super::ast::*;
+use crate::{Error, Result};
+
+/// A resolved DSet: concrete rows/cols.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SetInfo {
+    pub name: String,
+    pub ty: DType,
+    pub size: usize,
+    pub dim: usize,
+}
+
+/// A resolved scalar variable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VarInfo {
+    pub name: String,
+    pub ty: DType,
+    pub init: Option<Value>,
+}
+
+/// The validated program: symbol tables + the original statement tree.
+#[derive(Debug, Clone)]
+pub struct TypedProgram {
+    pub vars: HashMap<String, VarInfo>,
+    pub sets: HashMap<String, SetInfo>,
+    pub body: Vec<Stmt>,
+}
+
+impl TypedProgram {
+    pub fn set(&self, name: &str) -> Result<&SetInfo> {
+        self.sets
+            .get(name)
+            .ok_or_else(|| Error::Ddsl(format!("undeclared DSet {name:?}")))
+    }
+}
+
+/// Resolve a size expression against the scalar table.
+fn resolve(vars: &HashMap<String, VarInfo>, e: &SizeExpr) -> Result<usize> {
+    match e {
+        SizeExpr::Lit(n) => Ok(*n),
+        SizeExpr::Var(name) => {
+            let v = vars
+                .get(name)
+                .ok_or_else(|| Error::Ddsl(format!("undeclared size variable {name:?}")))?;
+            match v.init {
+                Some(Value::Num(n)) if n >= 0.0 && n.fract() == 0.0 => Ok(n as usize),
+                _ => Err(Error::Ddsl(format!(
+                    "size variable {name:?} has no integer initializer"
+                ))),
+            }
+        }
+    }
+}
+
+pub fn check(program: &Program) -> Result<TypedProgram> {
+    let mut vars: HashMap<String, VarInfo> = HashMap::new();
+    let mut sets: HashMap<String, SetInfo> = HashMap::new();
+    for d in &program.decls {
+        match d {
+            Decl::Var { name, ty, init } => {
+                if vars.contains_key(name) || sets.contains_key(name) {
+                    return Err(Error::Ddsl(format!("duplicate declaration {name:?}")));
+                }
+                vars.insert(
+                    name.clone(),
+                    VarInfo { name: name.clone(), ty: *ty, init: init.clone() },
+                );
+            }
+            Decl::Set { name, ty, size, dim } => {
+                if vars.contains_key(name) || sets.contains_key(name) {
+                    return Err(Error::Ddsl(format!("duplicate declaration {name:?}")));
+                }
+                let size = resolve(&vars, size)?;
+                let dim = resolve(&vars, dim)?;
+                if size == 0 || dim == 0 {
+                    return Err(Error::Ddsl(format!("DSet {name:?} has zero extent")));
+                }
+                sets.insert(
+                    name.clone(),
+                    SetInfo { name: name.clone(), ty: *ty, size, dim },
+                );
+            }
+        }
+    }
+
+    // Walk statements, validating references.
+    fn walk(
+        stmts: &[Stmt],
+        vars: &HashMap<String, VarInfo>,
+        sets: &HashMap<String, SetInfo>,
+    ) -> Result<()> {
+        for s in stmts {
+            match s {
+                Stmt::CompDist { src, trg, dist_mat, id_mat, dim, metric, weight } => {
+                    let si = sets
+                        .get(src)
+                        .ok_or_else(|| Error::Ddsl(format!("undeclared source set {src:?}")))?;
+                    let ti = sets
+                        .get(trg)
+                        .ok_or_else(|| Error::Ddsl(format!("undeclared target set {trg:?}")))?;
+                    if si.dim != ti.dim {
+                        return Err(Error::Ddsl(format!(
+                            "dimension mismatch: {src} is d={}, {trg} is d={}",
+                            si.dim, ti.dim
+                        )));
+                    }
+                    let d = resolve(vars, dim)?;
+                    if d != si.dim {
+                        return Err(Error::Ddsl(format!(
+                            "AccD_Comp_Dist dim {d} != set dimension {}",
+                            si.dim
+                        )));
+                    }
+                    let dm = sets.get(dist_mat).ok_or_else(|| {
+                        Error::Ddsl(format!("undeclared distance matrix {dist_mat:?}"))
+                    })?;
+                    if dm.size != si.size || dm.dim != ti.size {
+                        return Err(Error::Ddsl(format!(
+                            "distance matrix {dist_mat} is {}x{}, expected {}x{}",
+                            dm.size, dm.dim, si.size, ti.size
+                        )));
+                    }
+                    if !sets.contains_key(id_mat) {
+                        return Err(Error::Ddsl(format!("undeclared id matrix {id_mat:?}")));
+                    }
+                    if metric.weighted {
+                        let w = weight.as_ref().ok_or_else(|| {
+                            Error::Ddsl("weighted metric requires a weight matrix".into())
+                        })?;
+                        let wi = sets.get(w).ok_or_else(|| {
+                            Error::Ddsl(format!("undeclared weight matrix {w:?}"))
+                        })?;
+                        if wi.dim != si.dim && wi.size != si.dim {
+                            return Err(Error::Ddsl(format!(
+                                "weight matrix {w} has shape {}x{}, expected 1x{}",
+                                wi.size, wi.dim, si.dim
+                            )));
+                        }
+                    }
+                }
+                Stmt::DistSelect { dist_mat, id_mat, range, out_mat, .. } => {
+                    for m in [dist_mat, id_mat, out_mat] {
+                        if !sets.contains_key(m) {
+                            return Err(Error::Ddsl(format!("undeclared matrix {m:?}")));
+                        }
+                    }
+                    let _ = resolve(vars, range)?;
+                }
+                Stmt::Update { target, inputs, status } => {
+                    if !sets.contains_key(target) {
+                        return Err(Error::Ddsl(format!("undeclared update target {target:?}")));
+                    }
+                    for i in inputs {
+                        if !sets.contains_key(i) && !vars.contains_key(i) {
+                            return Err(Error::Ddsl(format!("undeclared update input {i:?}")));
+                        }
+                    }
+                    if !vars.contains_key(status) {
+                        return Err(Error::Ddsl(format!(
+                            "undeclared status variable {status:?}"
+                        )));
+                    }
+                }
+                Stmt::Iter { cond, body } => {
+                    if let IterCond::Status(name) = cond {
+                        if !vars.contains_key(name) {
+                            return Err(Error::Ddsl(format!(
+                                "undeclared iteration status variable {name:?}"
+                            )));
+                        }
+                    }
+                    walk(body, vars, sets)?;
+                }
+                Stmt::Assign { name, .. } => {
+                    if !vars.contains_key(name) {
+                        return Err(Error::Ddsl(format!("assignment to undeclared {name:?}")));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+    walk(&program.body, &vars, &sets)?;
+
+    Ok(TypedProgram { vars, sets, body: program.body.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lexer::lex, parser::parse};
+    use super::*;
+
+    fn compile(src: &str) -> Result<TypedProgram> {
+        check(&parse(&lex(src).unwrap())?)
+    }
+
+    #[test]
+    fn resolves_sizes_through_dvars() {
+        let t = compile(
+            "DVar n int 100; DVar d int 8; DSet a float n d;",
+        )
+        .unwrap();
+        let a = t.set("a").unwrap();
+        assert_eq!((a.size, a.dim), (100, 8));
+    }
+
+    #[test]
+    fn rejects_undeclared_references() {
+        assert!(compile(
+            r#"DSet a float 10 2; DSet dm float 10 10; DSet im int 10 10;
+               AccD_Comp_Dist(a, ghost, dm, im, 2, "L2", 0);"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        assert!(compile(
+            r#"DSet a float 10 2; DSet b float 5 3;
+               DSet dm float 10 5; DSet im int 10 5;
+               AccD_Comp_Dist(a, b, dm, im, 2, "L2", 0);"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_distance_matrix_shape() {
+        assert!(compile(
+            r#"DSet a float 10 2; DSet b float 5 2;
+               DSet dm float 10 7; DSet im int 10 5;
+               AccD_Comp_Dist(a, b, dm, im, 2, "L2", 0);"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_and_zero_extent() {
+        assert!(compile("DVar x int 1; DVar x int 2;").is_err());
+        assert!(compile("DSet a float 0 2;").is_err());
+    }
+
+    #[test]
+    fn weighted_metric_requires_weights() {
+        assert!(compile(
+            r#"DSet a float 4 2; DSet b float 4 2;
+               DSet dm float 4 4; DSet im int 4 4;
+               AccD_Comp_Dist(a, b, dm, im, 2, "Weighted L2", 0);"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! The genetic-algorithm explorer loop (paper Fig. 7).
+
+use crate::fpga::cost::{CostModel, WorkloadModel};
+use crate::fpga::resource::{ResourceModel, StratixBudget};
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+use super::space::{Config, DesignSpace};
+
+/// Result of one exploration run.
+#[derive(Debug, Clone)]
+pub struct ExploreOutcome {
+    pub best: Config,
+    /// Modeled end-to-end latency of the best point (seconds).
+    pub best_latency: f64,
+    pub generations: usize,
+    /// Configurations evaluated / discarded by Eq. 10.
+    pub evaluated: usize,
+    pub infeasible: usize,
+    /// Best latency per generation (for convergence plots).
+    pub history: Vec<f64>,
+}
+
+/// Explorer parameters.
+#[derive(Debug, Clone)]
+pub struct Explorer {
+    pub population: usize,
+    pub survivors: usize,
+    pub mutation_rate: f32,
+    pub max_generations: usize,
+    /// Relative improvement threshold that terminates the search
+    /// (the paper's "modeling results difference ... lower than a
+    /// predefined threshold").
+    pub threshold: f64,
+    pub budget: StratixBudget,
+    pub resource_model: ResourceModel,
+    /// Physical block instances the board can host concurrently.
+    pub max_parallel_blocks: usize,
+    pub freq_mhz: f64,
+    pub seed: u64,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Self {
+            population: 32,
+            survivors: 8,
+            mutation_rate: 0.3,
+            max_generations: 40,
+            threshold: 1e-3,
+            budget: StratixBudget::default(),
+            resource_model: ResourceModel::default(),
+            max_parallel_blocks: 8,
+            freq_mhz: 250.0,
+            seed: 0xD5E,
+        }
+    }
+}
+
+/// A workload description for the explorer (what the paper feeds the
+/// analytical model with).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub src_size: usize,
+    pub trg_size: usize,
+    pub d: usize,
+    pub n_iteration: usize,
+    /// Point-density alpha for the Eq. 7 saving estimate.
+    pub alpha: f64,
+}
+
+impl Explorer {
+    /// Modeled fitness (latency; lower = better) of one configuration,
+    /// or None if it violates Eq. 10.
+    pub fn evaluate(&self, w: &Workload, c: &Config) -> Option<f64> {
+        let hw = c.to_hw(self.freq_mhz);
+        let cost = CostModel::new(hw.clone());
+        let mut wm = WorkloadModel {
+            src_size: w.src_size,
+            trg_size: w.trg_size,
+            d: w.d,
+            n_src_grp: c.n_src_grp,
+            n_trg_grp: c.n_trg_grp,
+            n_iteration: w.n_iteration,
+            ratio_surviving: 1.0,
+            dtype_bytes: 4,
+        };
+        wm.ratio_surviving = wm.eq7_surviving_ratio(w.alpha);
+        let lat = cost.latency(&wm);
+        let total = lat.total();
+        let bw = cost.bandwidth(&wm, total);
+        let est = self.resource_model.estimate(
+            &hw,
+            w.d,
+            w.src_size,
+            w.trg_size,
+            self.max_parallel_blocks,
+            bw,
+        );
+        if est.fits(&self.budget) {
+            Some(total)
+        } else {
+            None
+        }
+    }
+
+    /// Run the Fig. 7 loop.
+    pub fn explore(&self, w: &Workload) -> Result<ExploreOutcome> {
+        let space = DesignSpace::for_workload(w.src_size, w.trg_size);
+        let mut rng = Rng::new(self.seed);
+        // Phase 1 (first round): random seed population.
+        let mut population: Vec<Config> =
+            (0..self.population).map(|_| space.sample(&mut rng)).collect();
+        let mut evaluated = 0usize;
+        let mut infeasible = 0usize;
+        let mut history: Vec<f64> = Vec::new();
+        let mut best: Option<(Config, f64)> = None;
+
+        for gen in 0..self.max_generations {
+            // Phase 2 + 3: model + validate.
+            let mut scored: Vec<(Config, f64)> = Vec::new();
+            for c in &population {
+                evaluated += 1;
+                match self.evaluate(w, c) {
+                    Some(lat) => scored.push((c.clone(), lat)),
+                    None => infeasible += 1,
+                }
+            }
+            if scored.is_empty() {
+                // Whole generation infeasible: reseed.
+                population = (0..self.population).map(|_| space.sample(&mut rng)).collect();
+                continue;
+            }
+            scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let gen_best = scored[0].clone();
+            let improved = match &best {
+                None => true,
+                Some((_, b)) => gen_best.1 < *b * (1.0 - self.threshold),
+            };
+            if best.is_none() || gen_best.1 < best.as_ref().unwrap().1 {
+                best = Some(gen_best.clone());
+            }
+            history.push(best.as_ref().unwrap().1);
+            if gen > 0 && !improved {
+                // Converged: consecutive generations within threshold.
+                return Ok(ExploreOutcome {
+                    best: best.as_ref().unwrap().0.clone(),
+                    best_latency: best.as_ref().unwrap().1,
+                    generations: gen + 1,
+                    evaluated,
+                    infeasible,
+                    history,
+                });
+            }
+            // Phase 1 (later rounds): crossover + mutate the premium set.
+            let elite: Vec<Config> =
+                scored.iter().take(self.survivors).map(|(c, _)| c.clone()).collect();
+            let mut next = elite.clone();
+            while next.len() < self.population {
+                let a = &elite[rng.below(elite.len())];
+                let b = &elite[rng.below(elite.len())];
+                let mut child = space.crossover(&mut rng, a, b);
+                if rng.f32() < self.mutation_rate {
+                    child = space.mutate(&mut rng, &child);
+                }
+                next.push(child);
+            }
+            population = next;
+        }
+        let (cfg, lat) = best.ok_or_else(|| {
+            Error::Dse("no feasible configuration found in the design space".into())
+        })?;
+        Ok(ExploreOutcome {
+            best: cfg,
+            best_latency: lat,
+            generations: self.max_generations,
+            evaluated,
+            infeasible,
+            history,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workload() -> Workload {
+        Workload { src_size: 70_000, trg_size: 265, d: 60, n_iteration: 3, alpha: 10.0 }
+    }
+
+    #[test]
+    fn explorer_finds_feasible_design() {
+        let out = Explorer::default().explore(&workload()).unwrap();
+        assert!(out.best_latency.is_finite() && out.best_latency > 0.0);
+        assert!(out.evaluated > 0);
+        // The winner must itself validate.
+        assert!(Explorer::default().evaluate(&workload(), &out.best).is_some());
+    }
+
+    #[test]
+    fn history_is_monotone_nonincreasing() {
+        let out = Explorer::default().explore(&workload()).unwrap();
+        for w in out.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let a = Explorer::default().explore(&workload()).unwrap();
+        let b = Explorer::default().explore(&workload()).unwrap();
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.generations, b.generations);
+    }
+
+    #[test]
+    fn infeasible_configs_are_rejected() {
+        let ex = Explorer::default();
+        let monster = Config { n_src_grp: 10, n_trg_grp: 10, block: 128, simd: 32, unroll: 16 };
+        // 512 lanes => 512 DSPs per block x 8 instances >> 648 budget.
+        assert!(ex.evaluate(&workload(), &monster).is_none());
+    }
+
+    #[test]
+    fn tight_budget_still_converges_or_errors_cleanly() {
+        let mut ex = Explorer::default();
+        ex.budget.dsps = 4.0; // almost nothing fits
+        match ex.explore(&workload()) {
+            Ok(out) => {
+                // Whatever survived must fit the tiny budget.
+                assert!(ex.evaluate(&workload(), &out.best).is_some());
+            }
+            Err(e) => assert!(e.to_string().contains("no feasible")),
+        }
+    }
+
+    #[test]
+    fn better_hardware_beats_worse_hardware_in_model() {
+        let ex = Explorer::default();
+        // Both fit the DSP budget (lanes x 8 instances <= 648 DSPs).
+        let small = Config { n_src_grp: 130, n_trg_grp: 8, block: 64, simd: 2, unroll: 2 };
+        let large = Config { n_src_grp: 130, n_trg_grp: 8, block: 64, simd: 8, unroll: 8 };
+        let (ls, ll) = (
+            ex.evaluate(&workload(), &small).unwrap(),
+            ex.evaluate(&workload(), &large).unwrap(),
+        );
+        assert!(ll < ls, "more lanes should model faster: {ll} vs {ls}");
+    }
+}

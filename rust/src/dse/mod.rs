@@ -1,0 +1,22 @@
+//! AccD Explorer: design-space exploration — paper §VI-B, Fig. 7.
+//!
+//! Three phases per iteration, exactly the paper's loop:
+//!
+//! 1. **Configuration generation & selection** — first round seeds
+//!    random configurations; later rounds apply genetic crossover +
+//!    mutation over the surviving "premium" configurations.
+//! 2. **Performance & resource modeling** — Eqs. 5-8 latency model and
+//!    Eq. 9 resource scaling ([`crate::fpga::cost`] /
+//!    [`crate::fpga::resource`]).
+//! 3. **Constraints validation** — Eq. 10 budget check; infeasible
+//!    configurations are discarded, survivors are ranked by modeled
+//!    latency.
+//!
+//! Termination: best-fitness improvement below `threshold` between
+//! consecutive generations, or `max_generations`.
+
+pub mod explorer;
+pub mod space;
+
+pub use explorer::{ExploreOutcome, Explorer};
+pub use space::{Config as DesignConfig, DesignSpace};

@@ -1,0 +1,146 @@
+//! The design space: tunable parameters + their legal ranges (§VI-A).
+
+use crate::config::HwConfig;
+use crate::util::rng::Rng;
+
+/// One design point: algorithm-level group counts + hardware-level
+/// kernel shape (the paper's parameter list in §VI-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    pub n_src_grp: usize,
+    pub n_trg_grp: usize,
+    pub block: usize,
+    pub simd: usize,
+    pub unroll: usize,
+}
+
+impl Config {
+    pub fn to_hw(&self, freq_mhz: f64) -> HwConfig {
+        HwConfig { block: self.block, simd: self.simd, unroll: self.unroll, freq_mhz }
+    }
+}
+
+/// Legal ranges for each axis; values are sampled from the given lists
+/// (all powers of two for the hardware axes, matching what an OpenCL
+/// kernel generator would instantiate).
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    pub src_grp_choices: Vec<usize>,
+    pub trg_grp_choices: Vec<usize>,
+    pub block_choices: Vec<usize>,
+    pub simd_choices: Vec<usize>,
+    pub unroll_choices: Vec<usize>,
+}
+
+impl DesignSpace {
+    /// Space for a workload of `src_size` x `trg_size` points.
+    pub fn for_workload(src_size: usize, trg_size: usize) -> Self {
+        let grp = |n: usize| -> Vec<usize> {
+            let root = (n as f64).sqrt() as usize;
+            [root / 4, root / 2, root, root * 2, root * 4]
+                .into_iter()
+                .map(|g| g.clamp(1, n.max(1)))
+                .collect()
+        };
+        Self {
+            src_grp_choices: grp(src_size),
+            trg_grp_choices: grp(trg_size),
+            block_choices: vec![16, 32, 64, 128],
+            simd_choices: vec![1, 2, 4, 8, 16, 32],
+            unroll_choices: vec![1, 2, 4, 8, 16],
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Config {
+        let pick = |rng: &mut Rng, xs: &[usize]| xs[rng.below(xs.len())];
+        Config {
+            n_src_grp: pick(rng, &self.src_grp_choices),
+            n_trg_grp: pick(rng, &self.trg_grp_choices),
+            block: pick(rng, &self.block_choices),
+            simd: pick(rng, &self.simd_choices),
+            unroll: pick(rng, &self.unroll_choices),
+        }
+    }
+
+    /// Uniform crossover of two parents.
+    pub fn crossover(&self, rng: &mut Rng, a: &Config, b: &Config) -> Config {
+        let pick = |rng: &mut Rng, x, y| if rng.f32() < 0.5 { x } else { y };
+        Config {
+            n_src_grp: pick(rng, a.n_src_grp, b.n_src_grp),
+            n_trg_grp: pick(rng, a.n_trg_grp, b.n_trg_grp),
+            block: pick(rng, a.block, b.block),
+            simd: pick(rng, a.simd, b.simd),
+            unroll: pick(rng, a.unroll, b.unroll),
+        }
+    }
+
+    /// Mutate one axis to a neighboring choice.
+    pub fn mutate(&self, rng: &mut Rng, c: &Config) -> Config {
+        let mut out = c.clone();
+        let step = |rng: &mut Rng, xs: &[usize], cur: usize| -> usize {
+            let i = xs.iter().position(|&x| x == cur).unwrap_or(0);
+            let j = if rng.f32() < 0.5 { i.saturating_sub(1) } else { (i + 1).min(xs.len() - 1) };
+            xs[j]
+        };
+        match rng.below(5) {
+            0 => out.n_src_grp = step(rng, &self.src_grp_choices, c.n_src_grp),
+            1 => out.n_trg_grp = step(rng, &self.trg_grp_choices, c.n_trg_grp),
+            2 => out.block = step(rng, &self.block_choices, c.block),
+            3 => out.simd = step(rng, &self.simd_choices, c.simd),
+            _ => out.unroll = step(rng, &self.unroll_choices, c.unroll),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_stay_in_space() {
+        let space = DesignSpace::for_workload(100_000, 1_000);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let c = space.sample(&mut rng);
+            assert!(space.src_grp_choices.contains(&c.n_src_grp));
+            assert!(space.block_choices.contains(&c.block));
+        }
+    }
+
+    #[test]
+    fn crossover_inherits_from_parents() {
+        let space = DesignSpace::for_workload(10_000, 500);
+        let mut rng = Rng::new(2);
+        let a = space.sample(&mut rng);
+        let b = space.sample(&mut rng);
+        let c = space.crossover(&mut rng, &a, &b);
+        assert!(c.simd == a.simd || c.simd == b.simd);
+        assert!(c.block == a.block || c.block == b.block);
+    }
+
+    #[test]
+    fn mutation_changes_at_most_one_axis() {
+        let space = DesignSpace::for_workload(10_000, 500);
+        let mut rng = Rng::new(3);
+        let c = space.sample(&mut rng);
+        let m = space.mutate(&mut rng, &c);
+        let diffs = [
+            c.n_src_grp != m.n_src_grp,
+            c.n_trg_grp != m.n_trg_grp,
+            c.block != m.block,
+            c.simd != m.simd,
+            c.unroll != m.unroll,
+        ]
+        .iter()
+        .filter(|&&x| x)
+        .count();
+        assert!(diffs <= 1);
+    }
+
+    #[test]
+    fn tiny_workload_groups_clamped() {
+        let space = DesignSpace::for_workload(4, 4);
+        assert!(space.src_grp_choices.iter().all(|&g| (1..=4).contains(&g)));
+    }
+}

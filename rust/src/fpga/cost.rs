@@ -1,0 +1,181 @@
+//! Analytical performance model — paper §VI-B Eqs. 5-8.
+//!
+//! `Latency = Latency_filt + Latency_comp` where the filter term covers
+//! the CPU-side grouping/bound work and the comp term the FPGA-side
+//! distance tiles.  The model is used twice: (1) by the DSE explorer to
+//! rank configurations without running them, and (2) by the device to
+//! report modeled-FPGA time next to the measured PJRT wall time.
+
+use crate::config::HwConfig;
+
+/// Inputs describing one algorithm execution for the model.
+#[derive(Debug, Clone)]
+pub struct WorkloadModel {
+    pub src_size: usize,
+    pub trg_size: usize,
+    pub d: usize,
+    pub n_src_grp: usize,
+    pub n_trg_grp: usize,
+    /// Grouping refinement iterations (paper `n_iteration`).
+    pub n_iteration: usize,
+    /// Surviving fraction of distance computations after GTI filtering
+    /// (paper's `ratio_save`; measured when available, else Eq. 7).
+    pub ratio_surviving: f64,
+    /// Bytes per scalar (4 for f32).
+    pub dtype_bytes: usize,
+}
+
+impl WorkloadModel {
+    /// Eq. 7 estimate of the surviving ratio when no measurement
+    /// exists.  `alpha` is the point-density parameter; larger alpha
+    /// (denser data) means less pruning.  The paper's formula yields a
+    /// *saving* factor; we clamp its complement into (0, 1].
+    pub fn eq7_surviving_ratio(&self, alpha: f64) -> f64 {
+        let group_pts = (self.src_size * self.trg_size) as f64
+            / (self.n_src_grp.max(1) * self.n_trg_grp.max(1)) as f64;
+        let save = (self.n_iteration as f64 / alpha.max(1e-9)) * group_pts.sqrt();
+        // Normalize: saving saturates; express survivors as 1/(1+save').
+        1.0 / (1.0 + save / (self.src_size as f64).sqrt())
+    }
+}
+
+/// Latency split the model produces (seconds).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    /// CPU-side GTI filtering (Eq. 6 first line).
+    pub filt_secs: f64,
+    /// FPGA-side remaining distance computation (Eq. 6 second line).
+    pub comp_secs: f64,
+    /// Host<->device transfer at the modeled bandwidth.
+    pub xfer_secs: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.filt_secs + self.comp_secs + self.xfer_secs
+    }
+}
+
+/// The configured analytical model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub hw: HwConfig,
+    /// Host scalar distance-op throughput (ops/sec) for the filter term.
+    /// Calibrated on the Xeon-class host: ~1 GF effective scalar.
+    pub cpu_flops: f64,
+    /// External memory bandwidth of the accelerator board (bytes/sec).
+    /// DE10-Pro DDR4: ~17 GB/s usable.
+    pub fpga_bw: f64,
+}
+
+impl CostModel {
+    pub fn new(hw: HwConfig) -> Self {
+        Self { hw, cpu_flops: 1.0e9, fpga_bw: 17.0e9 }
+    }
+
+    /// Eq. 6, `Latency_filt`: grouping + bound computation on the CPU.
+    /// The dominant term is `n_trg_grp * n_src_grp * d` bound work plus
+    /// the sample-bounded grouping refinement.
+    pub fn latency_filt(&self, w: &WorkloadModel) -> f64 {
+        let bound_ops = (w.n_src_grp * w.n_trg_grp * w.d) as f64;
+        let grouping_ops = ((w.src_size + w.trg_size) * w.d) as f64
+            * w.n_iteration as f64
+            / w.n_iteration.max(1) as f64; // one assignment pass per build
+        (bound_ops + grouping_ops) / self.cpu_flops
+    }
+
+    /// Eq. 6, `Latency_comp`: surviving distance computations on the
+    /// accelerator at `blk^2 * simd * unroll` MACs per cycle.
+    pub fn latency_comp(&self, w: &WorkloadModel) -> f64 {
+        let surviving =
+            w.src_size as f64 * w.trg_size as f64 * w.ratio_surviving * w.d as f64;
+        let macs_per_cycle =
+            (self.hw.block * self.hw.block) as f64 * self.hw.simd as f64 * self.hw.unroll as f64
+                / (self.hw.block * self.hw.block) as f64; // simd*unroll lanes active
+        let cycles = surviving / macs_per_cycle.max(1.0);
+        cycles / (self.hw.freq_mhz * 1e6)
+    }
+
+    /// Eq. 8 bandwidth requirement given total latency.
+    pub fn bandwidth(&self, w: &WorkloadModel, latency: f64) -> f64 {
+        ((w.src_size + w.trg_size) * w.d * w.dtype_bytes) as f64 / latency.max(1e-12)
+    }
+
+    /// Full Eq. 5 evaluation.
+    pub fn latency(&self, w: &WorkloadModel) -> LatencyBreakdown {
+        let filt = self.latency_filt(w);
+        let comp = self.latency_comp(w);
+        let bytes = ((w.src_size + w.trg_size) * w.d * w.dtype_bytes) as f64;
+        let xfer = bytes / self.fpga_bw;
+        LatencyBreakdown { filt_secs: filt, comp_secs: comp, xfer_secs: xfer }
+    }
+
+    /// Modeled seconds for `tiles` accelerator tiles of shape
+    /// `(tm x tn x d)` — the per-tile form of `Latency_comp` used by
+    /// the device's running clock.
+    pub fn tile_seconds(&self, tiles: u64, tm: usize, tn: usize, d: usize) -> f64 {
+        let macs = tiles as f64 * (tm * tn * d) as f64;
+        let lanes = (self.hw.simd * self.hw.unroll) as f64;
+        macs / lanes / (self.hw.freq_mhz * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl() -> WorkloadModel {
+        WorkloadModel {
+            src_size: 100_000,
+            trg_size: 1_000,
+            d: 32,
+            n_src_grp: 100,
+            n_trg_grp: 10,
+            n_iteration: 3,
+            ratio_surviving: 0.2,
+            dtype_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn more_lanes_cut_comp_latency() {
+        let slow = CostModel::new(HwConfig { simd: 1, unroll: 1, ..Default::default() });
+        let fast = CostModel::new(HwConfig { simd: 16, unroll: 8, ..Default::default() });
+        let w = wl();
+        assert!(fast.latency_comp(&w) < slow.latency_comp(&w) / 50.0);
+    }
+
+    #[test]
+    fn filtering_reduces_comp_term() {
+        let m = CostModel::new(HwConfig::default());
+        let mut w = wl();
+        let full = m.latency_comp(&WorkloadModel { ratio_surviving: 1.0, ..w.clone() });
+        w.ratio_surviving = 0.1;
+        assert!((m.latency_comp(&w) - full * 0.1).abs() / full < 1e-9);
+    }
+
+    #[test]
+    fn eq7_monotonic_in_density() {
+        let w = wl();
+        // Denser data (higher alpha) -> more survivors.
+        assert!(w.eq7_surviving_ratio(10.0) > w.eq7_surviving_ratio(1.0));
+        let r = w.eq7_surviving_ratio(1.0);
+        assert!(r > 0.0 && r <= 1.0);
+    }
+
+    #[test]
+    fn bandwidth_matches_eq8() {
+        let m = CostModel::new(HwConfig::default());
+        let w = wl();
+        let bw = m.bandwidth(&w, 1.0);
+        assert_eq!(bw, ((w.src_size + w.trg_size) * w.d * 4) as f64);
+    }
+
+    #[test]
+    fn tile_seconds_scales_linearly() {
+        let m = CostModel::new(HwConfig::default());
+        let one = m.tile_seconds(1, 64, 64, 32);
+        let ten = m.tile_seconds(10, 64, 64, 32);
+        assert!((ten - 10.0 * one).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,339 @@
+//! Functional accelerator device: tile jobs in, tile results out.
+//!
+//! Wraps [`crate::runtime::Runtime`] with padding, batching and the
+//! simulated-clock bookkeeping.  Every job the GTI filter emits is a
+//! dense (source group x candidate target groups) rectangle; the device
+//! splits it into manifest-sized tiles, executes them on PJRT, and
+//! accumulates both wall-clock and modeled-FPGA time.
+
+use std::sync::Arc;
+
+use super::cost::CostModel;
+use crate::config::HwConfig;
+use crate::data::Matrix;
+use crate::runtime::Runtime;
+use crate::util::round_up;
+use crate::Result;
+
+/// One dense distance job: a padded source slab against a padded
+/// target slab.  `src_rows`/`trg_rows` are the *valid* (unpadded)
+/// counts; padding rows' outputs are discarded.
+#[derive(Debug, Clone)]
+pub struct TileJob {
+    /// Row-major `(src_rows_padded, d_padded)` source slab.
+    pub src: Vec<f32>,
+    pub src_rows: usize,
+    /// Row-major `(trg_rows_padded, d_padded)` target slab.
+    pub trg: Vec<f32>,
+    pub trg_rows: usize,
+    pub d: usize,
+    pub d_padded: usize,
+    pub metric: &'static str,
+}
+
+/// Dense distance block result (valid rows/cols only).
+#[derive(Debug, Clone)]
+pub struct TileResult {
+    /// Row-major `(src_rows, trg_rows)` distances.
+    pub dist: Vec<f32>,
+    pub src_rows: usize,
+    pub trg_rows: usize,
+}
+
+/// Counters the device accumulates over its lifetime.
+#[derive(Debug, Default, Clone)]
+pub struct DeviceStats {
+    pub jobs: u64,
+    pub tiles: u64,
+    /// Point-pair distances actually computed (incl. padding waste).
+    pub padded_pairs: u64,
+    /// Valid point-pair distances delivered.
+    pub valid_pairs: u64,
+    /// Wall-clock seconds spent inside PJRT execution.
+    pub wall_secs: f64,
+    /// Modeled FPGA seconds (cost model, Eq. 6 comp term).
+    pub modeled_secs: f64,
+    /// Host<->device traffic in bytes (modeled transfers).
+    pub bytes_moved: u64,
+}
+
+impl DeviceStats {
+    /// Padding efficiency: valid / computed pairs.
+    pub fn pad_efficiency(&self) -> f64 {
+        if self.padded_pairs == 0 {
+            1.0
+        } else {
+            self.valid_pairs as f64 / self.padded_pairs as f64
+        }
+    }
+}
+
+/// The simulated CPU-attached FPGA accelerator.
+pub struct FpgaDevice {
+    runtime: Arc<Runtime>,
+    cost: CostModel,
+    stats: std::sync::Mutex<DeviceStats>,
+}
+
+impl FpgaDevice {
+    pub fn new(runtime: Arc<Runtime>, hw: HwConfig) -> Self {
+        Self { runtime, cost: CostModel::new(hw), stats: std::sync::Mutex::new(DeviceStats::default()) }
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+
+    pub fn stats(&self) -> DeviceStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.lock().unwrap() = DeviceStats::default();
+    }
+
+    /// Pad a sub-slice of points (rows given by `ids` into `points`)
+    /// into an `(rows_padded x d_padded)` tile input buffer.
+    pub fn pad_rows(
+        points: &Matrix,
+        ids: &[u32],
+        rows_padded: usize,
+        d_padded: usize,
+    ) -> Vec<f32> {
+        let d = points.cols();
+        let mut out = vec![0.0f32; rows_padded * d_padded];
+        for (r, &pi) in ids.iter().enumerate() {
+            out[r * d_padded..r * d_padded + d].copy_from_slice(points.row(pi as usize));
+        }
+        out
+    }
+
+    /// Pad a contiguous row-major slab (already packed by the layout
+    /// optimizer) into a tile input buffer.
+    pub fn pad_slab(slab: &[f32], rows: usize, d: usize, rows_padded: usize, d_padded: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows_padded * d_padded];
+        for r in 0..rows {
+            out[r * d_padded..r * d_padded + d].copy_from_slice(&slab[r * d..(r + 1) * d]);
+        }
+        out
+    }
+
+    /// Execute one dense distance job over a greedy mix of tile-size
+    /// variants: large tiles cover the bulk (one PJRT dispatch carries
+    /// up to 512x512 pairs), base tiles cover the remainder so padding
+    /// waste stays at the base-tile grid.  Returns the valid
+    /// `(src_rows x trg_rows)` distance block.
+    pub fn distance_block(&self, job: &TileJob) -> Result<TileResult> {
+        let manifest = self.runtime.manifest().clone();
+        let t = &manifest.tile;
+        let sr_pad = round_up(job.src_rows.max(1), t.m);
+        let tr_pad = round_up(job.trg_rows.max(1), t.n);
+        debug_assert_eq!(job.src.len(), sr_pad * job.d_padded, "src slab not padded to tile grid");
+        debug_assert_eq!(job.trg.len(), tr_pad * job.d_padded);
+
+        // Large tiles on ONE axis only: the perf probe (EXPERIMENTS.md
+        // §Perf, ablation 3) shows single-large-axis tiles at 3.7-4.4
+        // GMAC/s while two-axis 512x512 drops to 3.5 (the 2-D Pallas
+        // grid lowers to a slower loop nest on the CPU backend).  The
+        // column axis wins end-to-end (scatter of a (64, tn) tile is
+        // one contiguous row copy per output row), so columns get the
+        // large variants whenever they can fill one; otherwise rows do.
+        // ACCD_FORCE_BASE_TILES=1 forces 64x64 everywhere (ablation 3).
+        let base_only = |rows: usize| -> Vec<(usize, usize)> {
+            let b = manifest.tile.m;
+            (0..crate::util::round_up(rows.max(1), b) / b).map(|i| (i * b, b)).collect()
+        };
+        let force_base = std::env::var_os("ACCD_FORCE_BASE_TILES").is_some();
+        let big = *manifest.tile.variants.last().unwrap_or(&manifest.tile.m);
+        let (row_segs, col_segs) = if force_base {
+            (base_only(job.src_rows), base_only(job.trg_rows))
+        } else if job.trg_rows >= big || job.trg_rows >= job.src_rows {
+            (base_only(job.src_rows), manifest.segments(job.trg_rows))
+        } else {
+            (manifest.segments(job.src_rows), base_only(job.trg_rows))
+        };
+        let mut dist = vec![0.0f32; job.src_rows * job.trg_rows];
+        let wall_start = std::time::Instant::now();
+        let mut tiles = 0u64;
+        let mut mac_tiles = 0.0f64;
+        // Scratch buffers for segments that overrun the padded slab.
+        let mut a_buf: Vec<f32> = Vec::new();
+        let mut b_buf: Vec<f32> = Vec::new();
+        for &(ro, tm) in &row_segs {
+            if ro >= job.src_rows {
+                break; // fully-padding segment
+            }
+            let valid_m = (job.src_rows - ro).min(tm);
+            let a: &[f32] = slab_segment(
+                &job.src, sr_pad, job.d_padded, ro, tm, &mut a_buf,
+            );
+            for &(co, tn) in &col_segs {
+                if co >= job.trg_rows {
+                    break;
+                }
+                let valid_n = (job.trg_rows - co).min(tn);
+                let b: &[f32] = slab_segment(
+                    &job.trg, tr_pad, job.d_padded, co, tn, &mut b_buf,
+                );
+                let tile =
+                    self.runtime.distance_tile_sized(job.metric, tm, tn, job.d_padded, a, b)?;
+                tiles += 1;
+                mac_tiles += (tm * tn) as f64;
+                for r in 0..valid_m {
+                    let out_off = (ro + r) * job.trg_rows + co;
+                    dist[out_off..out_off + valid_n]
+                        .copy_from_slice(&tile[r * tn..r * tn + valid_n]);
+                }
+            }
+        }
+        let wall = wall_start.elapsed().as_secs_f64();
+
+        let mut s = self.stats.lock().unwrap();
+        s.jobs += 1;
+        s.tiles += tiles;
+        s.padded_pairs += mac_tiles as u64;
+        s.valid_pairs += (job.src_rows * job.trg_rows) as u64;
+        s.wall_secs += wall;
+        s.modeled_secs += self.cost.tile_seconds(1, 1, 1, 1) * mac_tiles * job.d_padded as f64;
+        s.bytes_moved += ((sr_pad + tr_pad) * job.d_padded * 4
+            + job.src_rows * job.trg_rows * 4) as u64;
+        Ok(TileResult { dist, src_rows: job.src_rows, trg_rows: job.trg_rows })
+    }
+
+    /// Fused K-means assignment over all points of a padded slab,
+    /// segmented greedily over the tile variants (one PJRT dispatch per
+    /// up-to-512-row segment).  Returns (assigned center index,
+    /// squared distance) per valid row.
+    pub fn kmeans_assign_block(
+        &self,
+        points_slab: &[f32],
+        valid_rows: usize,
+        d_padded: usize,
+        centers_padded: &[f32],
+        k_padded: usize,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let manifest = self.runtime.manifest().clone();
+        let rows_pad = round_up(valid_rows.max(1), manifest.tile.m);
+        debug_assert_eq!(points_slab.len(), rows_pad * d_padded);
+        let mut idx = vec![0i32; valid_rows];
+        let mut dist = vec![0.0f32; valid_rows];
+        let wall_start = std::time::Instant::now();
+        let mut tiles = 0u64;
+        let mut mac_rows = 0u64;
+        let mut a_buf: Vec<f32> = Vec::new();
+        for (ro, tm) in manifest.segments(valid_rows) {
+            if ro >= valid_rows {
+                break;
+            }
+            let valid_m = (valid_rows - ro).min(tm);
+            let a = slab_segment(points_slab, rows_pad, d_padded, ro, tm, &mut a_buf);
+            let (ti, td) =
+                self.runtime.kmeans_assign_tile_sized(tm, k_padded, d_padded, a, centers_padded)?;
+            tiles += 1;
+            mac_rows += tm as u64;
+            idx[ro..ro + valid_m].copy_from_slice(&ti[..valid_m]);
+            dist[ro..ro + valid_m].copy_from_slice(&td[..valid_m]);
+        }
+        let wall = wall_start.elapsed().as_secs_f64();
+        let mut s = self.stats.lock().unwrap();
+        s.jobs += 1;
+        s.tiles += tiles;
+        s.padded_pairs += mac_rows * k_padded as u64;
+        s.valid_pairs += (valid_rows * k_padded) as u64;
+        s.wall_secs += wall;
+        s.modeled_secs +=
+            self.cost.tile_seconds(1, 1, 1, 1) * (mac_rows * k_padded as u64) as f64 * d_padded as f64;
+        s.bytes_moved +=
+            ((rows_pad + k_padded) * d_padded * 4 + valid_rows * 8) as u64;
+        Ok((idx, dist))
+    }
+
+    /// N-body acceleration of a padded source slab against a padded
+    /// target slab (masses zero on padding rows), segmented greedily
+    /// over the tile variants on both axes.  Adds into `acc`
+    /// (`valid_i x 3`, source-slab row order).
+    #[allow(clippy::too_many_arguments)]
+    pub fn nbody_accumulate(
+        &self,
+        pos_i: &[f32],
+        valid_i: usize,
+        pos_j: &[f32],
+        mass_j: &[f32],
+        eps2: f32,
+        rmax2: f32,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let manifest = self.runtime.manifest().clone();
+        let base = manifest.tile.nbody;
+        let rows_pad = round_up(valid_i.max(1), base);
+        debug_assert_eq!(pos_i.len(), rows_pad * 3);
+        debug_assert_eq!(pos_j.len() % (base * 3), 0);
+        let trg_rows = pos_j.len() / 3;
+        let wall_start = std::time::Instant::now();
+        let mut tiles = 0u64;
+        let mut mac_tiles = 0.0f64;
+        let mut i_buf: Vec<f32> = Vec::new();
+        let mut j_buf: Vec<f32> = Vec::new();
+        let mut m_buf: Vec<f32> = Vec::new();
+        for (ro, tm) in manifest.segments(valid_i) {
+            if ro >= valid_i {
+                break;
+            }
+            let valid_m = (valid_i - ro).min(tm);
+            let pi = slab_segment(pos_i, rows_pad, 3, ro, tm, &mut i_buf);
+            for (co, tn) in manifest.segments(trg_rows) {
+                if co >= trg_rows {
+                    break;
+                }
+                let pj = slab_segment(pos_j, trg_rows, 3, co, tn, &mut j_buf);
+                let mj = slab_segment(mass_j, trg_rows, 1, co, tn, &mut m_buf);
+                let a = self.runtime.nbody_accel_sized(tm, tn, pi, pj, mj, eps2, rmax2)?;
+                tiles += 1;
+                mac_tiles += (tm * tn) as f64;
+                for r in 0..valid_m {
+                    let i = ro + r;
+                    acc[i * 3] += a[r * 3];
+                    acc[i * 3 + 1] += a[r * 3 + 1];
+                    acc[i * 3 + 2] += a[r * 3 + 2];
+                }
+            }
+        }
+        let wall = wall_start.elapsed().as_secs_f64();
+        let mut s = self.stats.lock().unwrap();
+        s.jobs += 1;
+        s.tiles += tiles;
+        s.padded_pairs += mac_tiles as u64;
+        s.valid_pairs += (valid_i * trg_rows) as u64;
+        s.wall_secs += wall;
+        s.modeled_secs += self.cost.tile_seconds(1, 1, 1, 1) * mac_tiles * 4.0;
+        s.bytes_moved +=
+            ((rows_pad + trg_rows) * 3 * 4 + trg_rows * 4) as u64 + (valid_i * 3 * 4) as u64;
+        Ok(())
+    }
+}
+
+/// Borrow rows `[off, off+edge)` of a `(rows_padded x cols)` row-major
+/// slab, zero-padding through a scratch buffer when the segment
+/// overruns the slab (defensive; segments normally fit exactly).
+fn slab_segment<'a>(
+    slab: &'a [f32],
+    rows_padded: usize,
+    cols: usize,
+    off: usize,
+    edge: usize,
+    scratch: &'a mut Vec<f32>,
+) -> &'a [f32] {
+    if off + edge <= rows_padded {
+        &slab[off * cols..(off + edge) * cols]
+    } else {
+        scratch.clear();
+        scratch.resize(edge * cols, 0.0);
+        let avail = rows_padded.saturating_sub(off);
+        scratch[..avail * cols].copy_from_slice(&slab[off * cols..rows_padded * cols]);
+        &scratch[..]
+    }
+}

@@ -1,0 +1,26 @@
+//! The accelerator: functional execution + analytical DE10-Pro model.
+//!
+//! The paper's Intel Stratix-10 DE10-Pro is unavailable here, so the
+//! "FPGA" is split into two coupled halves (DESIGN.md §Substitutions):
+//!
+//! * [`device`] — **functional** half: executes the real AOT-compiled
+//!   distance kernels through PJRT, so every number the system produces
+//!   is computed by the actual accelerator code path.
+//! * [`cost`] — **analytical** half: the paper's performance model
+//!   (Eqs. 5-8) evaluated on the same tile stream, giving estimated
+//!   FPGA latency/bandwidth for the configured (blk, simd, unroll,
+//!   frequency) design point.
+//! * [`resource`] — the paper's Eq. 9 resource model with a
+//!   micro-benchmark calibration table for `Resource_single`.
+//! * [`power`] — runtime power model for the energy-efficiency figures
+//!   (Fig. 9), calibrated to the wattage ranges the paper reports.
+
+pub mod cost;
+pub mod device;
+pub mod power;
+pub mod resource;
+
+pub use cost::{CostModel, LatencyBreakdown};
+pub use device::{FpgaDevice, TileJob, TileResult};
+pub use power::{PowerModel, Platform};
+pub use resource::{ResourceEstimate, ResourceModel, StratixBudget};

@@ -1,0 +1,191 @@
+//! Resource model — paper §VI-B-c, Eq. 9.
+//!
+//! Estimates on-chip resource consumption of a kernel configuration by
+//! scaling a calibrated single-block cost table.  The paper calibrates
+//! `Resource_single` by micro-benchmarking synthesized kernels on the
+//! DE10-Pro; without a synthesis toolchain we ship a calibration table
+//! derived from the DE10-Pro datasheet arithmetic (documented per entry
+//! below and in DESIGN.md §Substitutions) — the *structure* of the
+//! model (Eq. 9 scaling + Eq. 10 validation) is exactly the paper's.
+
+use crate::config::HwConfig;
+
+/// Resource budget of the target board (paper §VII-A: DE10-Pro,
+/// Stratix 10 GX: 378k LEs / 128,160 ALMs / 512,640 ALM registers /
+/// 648 DSPs / 1,537 M20K blocks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StratixBudget {
+    pub alms: f64,
+    pub registers: f64,
+    pub dsps: f64,
+    pub m20k_blocks: f64,
+    /// Usable external bandwidth, bytes/sec.
+    pub bw_bytes: f64,
+}
+
+impl Default for StratixBudget {
+    fn default() -> Self {
+        Self {
+            alms: 128_160.0,
+            registers: 512_640.0,
+            dsps: 648.0,
+            m20k_blocks: 1_537.0,
+            bw_bytes: 17.0e9,
+        }
+    }
+}
+
+/// Estimated consumption of a full design (same units as the budget).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResourceEstimate {
+    pub alms: f64,
+    pub registers: f64,
+    pub dsps: f64,
+    pub m20k_blocks: f64,
+    pub bw_bytes: f64,
+}
+
+impl ResourceEstimate {
+    /// Eq. 10 constraint validation.
+    pub fn fits(&self, budget: &StratixBudget) -> bool {
+        self.alms <= budget.alms
+            && self.registers <= budget.registers
+            && self.dsps <= budget.dsps
+            && self.m20k_blocks <= budget.m20k_blocks
+            && self.bw_bytes <= budget.bw_bytes
+    }
+
+    /// Worst utilization fraction across resource classes (DSE uses
+    /// this as a soft penalty near the budget edge).
+    pub fn max_utilization(&self, budget: &StratixBudget) -> f64 {
+        [
+            self.alms / budget.alms,
+            self.registers / budget.registers,
+            self.dsps / budget.dsps,
+            self.m20k_blocks / budget.m20k_blocks,
+            self.bw_bytes / budget.bw_bytes,
+        ]
+        .into_iter()
+        .fold(0.0, f64::max)
+    }
+}
+
+/// Calibrated per-unit costs of one distance-computation block
+/// (`Resource_single` in Eq. 9).
+///
+/// Calibration provenance (datasheet arithmetic, not synthesis):
+/// * one f32 MAC lane = 1 DSP (Stratix-10 DSPs are native f32) plus
+///   ~45 ALMs of glue and ~180 registers of pipeline state;
+/// * per-block control adds ~220 ALMs / ~400 registers;
+/// * M20K = 20 kbit => one 64 x d x f32 tile buffer consumes
+///   `ceil(64*d*32 / 20480)` blocks, double-buffered x2, two operands.
+#[derive(Debug, Clone)]
+pub struct ResourceModel {
+    pub alms_per_lane: f64,
+    pub regs_per_lane: f64,
+    pub dsps_per_lane: f64,
+    pub alms_per_block: f64,
+    pub regs_per_block: f64,
+}
+
+impl Default for ResourceModel {
+    fn default() -> Self {
+        Self {
+            alms_per_lane: 45.0,
+            regs_per_lane: 180.0,
+            dsps_per_lane: 1.0,
+            alms_per_block: 220.0,
+            regs_per_block: 400.0,
+        }
+    }
+}
+
+impl ResourceModel {
+    /// `Resource_single`: one computation block of the configured shape.
+    pub fn single_block(&self, hw: &HwConfig, d: usize) -> ResourceEstimate {
+        let lanes = (hw.simd * hw.unroll) as f64;
+        // Two operand tile buffers (blk x d), double-buffered, plus the
+        // (blk x blk) output accumulator.
+        let bits_in = 2.0 * 2.0 * (hw.block * d * 32) as f64;
+        let bits_out = (hw.block * hw.block * 32) as f64;
+        let m20k = ((bits_in + bits_out) / 20_480.0).ceil();
+        ResourceEstimate {
+            alms: self.alms_per_block + lanes * self.alms_per_lane,
+            registers: self.regs_per_block + lanes * self.regs_per_lane,
+            dsps: lanes * self.dsps_per_lane,
+            m20k_blocks: m20k,
+            bw_bytes: 0.0,
+        }
+    }
+
+    /// Eq. 9: scale the single block over the `(src/blk) x (trg/blk)`
+    /// grid, capped at `max_parallel_blocks` physical block instances
+    /// (the grid beyond that is time-multiplexed, costing latency not
+    /// area — the cap is what couples this model to the cost model in
+    /// the DSE).
+    pub fn estimate(
+        &self,
+        hw: &HwConfig,
+        d: usize,
+        src_size: usize,
+        trg_size: usize,
+        max_parallel_blocks: usize,
+        bw_required: f64,
+    ) -> ResourceEstimate {
+        let single = self.single_block(hw, d);
+        let grid = (src_size as f64 / hw.block as f64).ceil()
+            * (trg_size as f64 / hw.block as f64).ceil();
+        let instances = grid.min(max_parallel_blocks as f64).max(1.0);
+        ResourceEstimate {
+            alms: single.alms * instances,
+            registers: single.registers * instances,
+            dsps: single.dsps * instances,
+            m20k_blocks: single.m20k_blocks * instances,
+            bw_bytes: bw_required,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_single_block_fits_budget() {
+        let m = ResourceModel::default();
+        let est = m.single_block(&HwConfig::default(), 64);
+        assert!(est.fits(&StratixBudget::default()), "{est:?}");
+    }
+
+    #[test]
+    fn absurd_config_fails_eq10() {
+        let m = ResourceModel::default();
+        let hw = HwConfig { simd: 64, unroll: 64, ..Default::default() }; // 4096 DSPs
+        let est = m.estimate(&hw, 64, 100_000, 100_000, 8, 1e9);
+        assert!(!est.fits(&StratixBudget::default()));
+    }
+
+    #[test]
+    fn estimate_scales_with_instances() {
+        let m = ResourceModel::default();
+        let hw = HwConfig::default();
+        let one = m.estimate(&hw, 32, 64, 64, 8, 0.0); // grid = 1
+        let many = m.estimate(&hw, 32, 6_400, 6_400, 8, 0.0); // capped at 8
+        assert!((many.dsps / one.dsps - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_reflects_tightest_resource() {
+        let budget = StratixBudget::default();
+        let est = ResourceEstimate { dsps: 648.0, ..Default::default() };
+        assert!((est.max_utilization(&budget) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bigger_tiles_need_more_m20k() {
+        let m = ResourceModel::default();
+        let small = m.single_block(&HwConfig { block: 32, ..Default::default() }, 32);
+        let large = m.single_block(&HwConfig { block: 128, ..Default::default() }, 32);
+        assert!(large.m20k_blocks > small.m20k_blocks);
+    }
+}

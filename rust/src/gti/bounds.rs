@@ -1,0 +1,179 @@
+//! The GTI bound algebra — paper §IV-B, Eqs. 1-3.
+//!
+//! All bounds here are *sound*: `lb <= d(a,b) <= ub` for every point
+//! pair they summarise (property-tested in this module and in
+//! `rust/tests/prop_coordinator.rs`).  Soundness is what lets the
+//! filter discard group pairs without ever being wrong, so these few
+//! lines carry the correctness of the whole optimization.
+
+use super::grouping::Grouping;
+use crate::data::Matrix;
+
+/// Lower/upper bound on the distance between any member of a source
+/// group and any member of a target group.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupPairBound {
+    pub lb: f32,
+    pub ub: f32,
+}
+
+impl GroupPairBound {
+    /// Group-level bound (Eq. 2): from the landmark-landmark distance
+    /// and both radii.
+    #[inline]
+    pub fn from_center_dist(center_dist: f32, r_src: f32, r_trg: f32) -> Self {
+        Self {
+            lb: (center_dist - r_src - r_trg).max(0.0),
+            ub: center_dist + r_src + r_trg,
+        }
+    }
+
+    /// Trace-based widening (Eq. 3 / Fig. 2d): both groups' contents
+    /// moved by at most `drift_src` / `drift_trg` since `self` was
+    /// computed, so the bound loosens additively.
+    #[inline]
+    pub fn widened(self, drift_src: f32, drift_trg: f32) -> Self {
+        let w = drift_src + drift_trg;
+        Self { lb: (self.lb - w).max(0.0), ub: self.ub + w }
+    }
+}
+
+/// Two-landmark point bound (Eq. 1): `d(a_ref,b_ref)` known, each point
+/// within `da`/`db` of its landmark.
+#[inline]
+pub fn two_landmark(d_ref: f32, da: f32, db: f32) -> GroupPairBound {
+    GroupPairBound { lb: (d_ref - da - db).max(0.0), ub: d_ref + da + db }
+}
+
+/// One-landmark point bound (Fig. 2a): `d(a, l)` and `d(l, b)` known.
+#[inline]
+pub fn one_landmark(d_al: f32, d_lb: f32) -> GroupPairBound {
+    GroupPairBound { lb: (d_al - d_lb).abs(), ub: d_al + d_lb }
+}
+
+/// Dense landmark-landmark distances + Eq. 2 bounds for every
+/// (source group, target group) pair.  This is the `z_src x z_trg`
+/// matrix whose small memory footprint the paper contrasts with
+/// point-level TI (§IV-B-c); it is also the only O(z^2 d) work in the
+/// filter, counted into `Latency_filt`.
+pub fn group_pair_bounds(src: &Grouping, trg: &Grouping) -> Vec<Vec<GroupPairBound>> {
+    group_pair_bounds_metric(src, trg, super::Metric::L2)
+}
+
+/// Metric-aware Eq. 2 bounds: requires groupings built with the same
+/// metric (radii must be in the same units as the center distances).
+pub fn group_pair_bounds_metric(
+    src: &Grouping,
+    trg: &Grouping,
+    metric: super::Metric,
+) -> Vec<Vec<GroupPairBound>> {
+    let zs = src.num_groups();
+    let zt = trg.num_groups();
+    let mut out = Vec::with_capacity(zs);
+    for a in 0..zs {
+        let mut row = Vec::with_capacity(zt);
+        for b in 0..zt {
+            let cd = metric.dist_rows(&src.centers, a, &trg.centers, b);
+            row.push(GroupPairBound::from_center_dist(cd, src.radii[a], trg.radii[b]));
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// Exact center-pair distance matrix (used by the N-body trace cache).
+pub fn center_distances(src: &Matrix, trg: &Matrix) -> Vec<f32> {
+    let (zs, zt) = (src.rows(), trg.rows());
+    let mut out = vec![0.0f32; zs * zt];
+    for a in 0..zs {
+        for b in 0..zt {
+            out[a * zt + b] = src.dist2(a, trg, b).sqrt();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::gti::grouping::Grouping;
+    use crate::util::prop;
+
+    #[test]
+    fn eq2_bounds_are_sound_on_real_grouping() {
+        let s = synthetic::clustered(200, 5, 6, 0.05, 1);
+        let t = synthetic::clustered(150, 5, 4, 0.05, 2);
+        let gs = Grouping::build(&s.points, 8, 2, 200, 3).unwrap();
+        let gt = Grouping::build(&t.points, 6, 2, 150, 4).unwrap();
+        let bounds = group_pair_bounds(&gs, &gt);
+        for (a, mem_a) in gs.members.iter().enumerate() {
+            for (b, mem_b) in gt.members.iter().enumerate() {
+                let bd = bounds[a][b];
+                for &i in mem_a.iter().take(5) {
+                    for &j in mem_b.iter().take(5) {
+                        let d = s.points.dist2(i as usize, &t.points, j as usize).sqrt();
+                        assert!(
+                            bd.lb <= d * 1.0001 + 1e-4 && d <= bd.ub * 1.0001 + 1e-4,
+                            "bound [{}, {}] violated by d={d} (groups {a},{b})",
+                            bd.lb,
+                            bd.ub
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn widened_never_tightens() {
+        let b = GroupPairBound { lb: 2.0, ub: 5.0 };
+        let w = b.widened(0.5, 0.25);
+        assert!(w.lb <= b.lb && w.ub >= b.ub);
+        assert_eq!(w.lb, 1.25);
+        assert_eq!(w.ub, 5.75);
+        // lb clamps at zero
+        assert_eq!(b.widened(10.0, 0.0).lb, 0.0);
+    }
+
+    #[test]
+    fn two_landmark_matches_eq1() {
+        let b = two_landmark(10.0, 2.0, 3.0);
+        assert_eq!(b.lb, 5.0);
+        assert_eq!(b.ub, 15.0);
+    }
+
+    #[test]
+    fn one_landmark_reverse_triangle() {
+        let b = one_landmark(7.0, 3.0);
+        assert_eq!(b.lb, 4.0);
+        assert_eq!(b.ub, 10.0);
+    }
+
+    #[test]
+    fn prop_two_landmark_soundness_in_euclidean_plane() {
+        // Random planar points: a, b with landmarks la, lb — Eq. 1 must
+        // bound the true distance.
+        prop::check(
+            &prop::Config { cases: 64, max_size: 100, ..Default::default() },
+            |rng, _| {
+                let p: Vec<f32> = (0..8).map(|_| rng.range_f32(-10.0, 10.0)).collect();
+                p
+            },
+            |p| {
+                let d = |i: usize, j: usize| {
+                    let (dx, dy) = (p[2 * i] - p[2 * j], p[2 * i + 1] - p[2 * j + 1]);
+                    (dx * dx + dy * dy).sqrt()
+                };
+                // points: 0=a, 1=b, 2=la, 3=lb
+                let bound = two_landmark(d(2, 3), d(0, 2), d(1, 3));
+                let dist = d(0, 1);
+                if bound.lb <= dist + 1e-4 && dist <= bound.ub + 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("bound [{},{}] misses d={dist}", bound.lb, bound.ub))
+                }
+            },
+        );
+    }
+}

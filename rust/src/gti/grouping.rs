@@ -1,0 +1,308 @@
+//! Data grouping: partition a point set into landmark-centered groups.
+//!
+//! Groups are the granularity of every GTI bound and of accelerator
+//! dispatch.  Construction is Lloyd-style refinement on a *sample* (the
+//! paper's `n_iteration` grouping iterations, §VI-A), followed by one
+//! full assignment pass and radius computation.  Cost is
+//! `O(sample * g * iters + n * g)` distance computations on the CPU —
+//! the `Latency_filt` term of the paper's Eq. 6.
+
+use crate::data::Matrix;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// A grouping of `n` points into `g` landmark-centered groups.
+#[derive(Debug, Clone)]
+pub struct Grouping {
+    /// Landmark (center) of each group, `(g, d)`.
+    pub centers: Matrix,
+    /// Radius of each group: max distance from a member to the landmark
+    /// (the `d_max(a, A_ref)` of Eq. 2).
+    pub radii: Vec<f32>,
+    /// Group id of every point.
+    pub assign: Vec<u32>,
+    /// Member point ids per group (ascending within each group).
+    pub members: Vec<Vec<u32>>,
+    /// Number of distance computations spent building the grouping
+    /// (reported as filter overhead in the benches).
+    pub build_dist_comps: u64,
+}
+
+impl Grouping {
+    /// Heuristic group count used when the config leaves it at 0:
+    /// `sqrt(n)/2` clamped to [1, 4096] — keeps the group-pair bound
+    /// matrix (z_src x z_trg) small per the paper's memory argument.
+    pub fn auto_groups(n: usize) -> usize {
+        (((n as f64).sqrt() / 2.0) as usize).clamp(1, 4096)
+    }
+
+    /// Build a grouping with `g` groups and `iters` refinement passes
+    /// under the Euclidean metric (the common case; see
+    /// [`Grouping::build_with_metric`] for L1).
+    pub fn build(
+        points: &Matrix,
+        g: usize,
+        iters: usize,
+        sample: usize,
+        seed: u64,
+    ) -> Result<Grouping> {
+        Self::build_with_metric(points, g, iters, sample, seed, super::Metric::L2)
+    }
+
+    /// Metric-aware build: radii are stored in *metric* units so the
+    /// Eq. 2 bounds remain sound for any triangle-inequality metric.
+    ///
+    /// `sample` caps how many points the refinement sees; the final
+    /// assignment pass always covers all points.
+    pub fn build_with_metric(
+        points: &Matrix,
+        g: usize,
+        iters: usize,
+        sample: usize,
+        seed: u64,
+        metric: super::Metric,
+    ) -> Result<Grouping> {
+        let n = points.rows();
+        let d = points.cols();
+        if n == 0 {
+            return Err(Error::Data("cannot group an empty point set".into()));
+        }
+        let g = g.min(n).max(1);
+        let mut rng = Rng::new(seed ^ 0x6701);
+        let mut dist_comps = 0u64;
+
+        // Seed centers from a random sample of distinct points.
+        let seed_idx = rng.sample_indices(n, g);
+        let mut centers = points.gather_rows(&seed_idx);
+
+        // Lloyd refinement on a sample.
+        let sample_n = sample.clamp(g, n);
+        let sample_idx =
+            if sample_n >= n { (0..n).collect::<Vec<_>>() } else { rng.sample_indices(n, sample_n) };
+        for _ in 0..iters {
+            let mut sums = vec![0.0f64; g * d];
+            let mut counts = vec![0u32; g];
+            for &pi in &sample_idx {
+                let (gi, _) = nearest_center(points, pi, &centers, metric);
+                dist_comps += g as u64;
+                counts[gi] += 1;
+                let row = points.row(pi);
+                for k in 0..d {
+                    sums[gi * d + k] += row[k] as f64;
+                }
+            }
+            for gi in 0..g {
+                if counts[gi] > 0 {
+                    let c = centers.row_mut(gi);
+                    for k in 0..d {
+                        c[k] = (sums[gi * d + k] / counts[gi] as f64) as f32;
+                    }
+                }
+                // Empty groups keep their seed position; the full
+                // assignment pass below may still populate them.
+            }
+        }
+
+        // Full assignment + radii (radii in metric units).
+        let mut assign = vec![0u32; n];
+        let mut radii = vec![0.0f32; g];
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); g];
+        for pi in 0..n {
+            let (gi, r) = nearest_center(points, pi, &centers, metric);
+            dist_comps += g as u64;
+            assign[pi] = gi as u32;
+            members[gi].push(pi as u32);
+            if r > radii[gi] {
+                radii[gi] = r;
+            }
+        }
+
+        Ok(Grouping { centers, radii, assign, members, build_dist_comps: dist_comps })
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn num_points(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Largest group size (determines tile batching shape).
+    pub fn max_group_size(&self) -> usize {
+        self.members.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Recompute the radius of every group from scratch (used after
+    /// N-body position updates when membership is kept fixed).
+    pub fn refresh_radii(&mut self, points: &Matrix) {
+        for (gi, mem) in self.members.iter().enumerate() {
+            let mut r = 0.0f32;
+            for &pi in mem {
+                let d2 = points.dist2(pi as usize, &self.centers, gi);
+                if d2 > r {
+                    r = d2;
+                }
+            }
+            self.radii[gi] = r.sqrt();
+        }
+    }
+
+    /// Move each group center to its members' centroid and return the
+    /// per-group drift (distance moved) — the trace-based landmark
+    /// update for N-body (Fig. 2d).
+    pub fn recenter(&mut self, points: &Matrix) -> Vec<f32> {
+        let d = points.cols();
+        let mut drifts = vec![0.0f32; self.num_groups()];
+        for (gi, mem) in self.members.iter().enumerate() {
+            if mem.is_empty() {
+                continue;
+            }
+            let mut centroid = vec![0.0f64; d];
+            for &pi in mem {
+                let row = points.row(pi as usize);
+                for k in 0..d {
+                    centroid[k] += row[k] as f64;
+                }
+            }
+            let inv = 1.0 / mem.len() as f64;
+            let mut drift2 = 0.0f32;
+            let c = self.centers.row_mut(gi);
+            for k in 0..d {
+                let nc = (centroid[k] * inv) as f32;
+                let delta = nc - c[k];
+                drift2 += delta * delta;
+                c[k] = nc;
+            }
+            drifts[gi] = drift2.sqrt();
+        }
+        self.refresh_radii(points);
+        drifts
+    }
+
+    /// Validate internal invariants (used by property tests).
+    pub fn check_invariants(&self, points: &Matrix) -> std::result::Result<(), String> {
+        let n = points.rows();
+        if self.assign.len() != n {
+            return Err(format!("assign len {} != n {n}", self.assign.len()));
+        }
+        let total: usize = self.members.iter().map(Vec::len).sum();
+        if total != n {
+            return Err(format!("members cover {total} points, want {n}"));
+        }
+        for (gi, mem) in self.members.iter().enumerate() {
+            for &pi in mem {
+                if self.assign[pi as usize] as usize != gi {
+                    return Err(format!("point {pi} in group {gi} but assigned elsewhere"));
+                }
+                let dist = points.dist2(pi as usize, &self.centers, gi).sqrt();
+                if dist > self.radii[gi] * (1.0 + 1e-4) + 1e-5 {
+                    return Err(format!(
+                        "point {pi} at {dist} outside group {gi} radius {}",
+                        self.radii[gi]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Nearest center under `metric`; returns (group, metric distance).
+/// The L2 path scans squared distances (cheaper) and converts once.
+#[inline]
+fn nearest_center(
+    points: &Matrix,
+    pi: usize,
+    centers: &Matrix,
+    metric: super::Metric,
+) -> (usize, f32) {
+    match metric {
+        super::Metric::L2 => {
+            let mut best = (0usize, f32::INFINITY);
+            for gi in 0..centers.rows() {
+                let d2 = points.dist2(pi, centers, gi);
+                if d2 < best.1 {
+                    best = (gi, d2);
+                }
+            }
+            (best.0, best.1.max(0.0).sqrt())
+        }
+        m => {
+            let mut best = (0usize, f32::INFINITY);
+            for gi in 0..centers.rows() {
+                let d = m.dist(points.row(pi), centers.row(gi));
+                if d < best.1 {
+                    best = (gi, d);
+                }
+            }
+            best
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::prop;
+
+    #[test]
+    fn grouping_covers_all_points() {
+        let ds = synthetic::clustered(500, 6, 8, 0.05, 1);
+        let g = Grouping::build(&ds.points, 16, 3, 256, 7).unwrap();
+        g.check_invariants(&ds.points).unwrap();
+        assert_eq!(g.num_groups(), 16);
+    }
+
+    #[test]
+    fn more_groups_shrink_radii() {
+        let ds = synthetic::uniform(800, 4, 2);
+        let g4 = Grouping::build(&ds.points, 4, 3, 800, 7).unwrap();
+        let g64 = Grouping::build(&ds.points, 64, 3, 800, 7).unwrap();
+        let mean = |g: &Grouping| g.radii.iter().sum::<f32>() / g.radii.len() as f32;
+        assert!(mean(&g64) < mean(&g4));
+    }
+
+    #[test]
+    fn single_group_radius_covers_extent() {
+        let ds = synthetic::uniform(100, 3, 3);
+        let g = Grouping::build(&ds.points, 1, 2, 100, 7).unwrap();
+        g.check_invariants(&ds.points).unwrap();
+        assert_eq!(g.members[0].len(), 100);
+    }
+
+    #[test]
+    fn recenter_reports_drift_and_keeps_invariants() {
+        let ds = synthetic::clustered(300, 3, 5, 0.02, 4);
+        let mut pts = ds.points.clone();
+        let mut g = Grouping::build(&pts, 8, 2, 300, 9).unwrap();
+        // Shift all points; recenter should follow and report drift.
+        for i in 0..pts.rows() {
+            for v in pts.row_mut(i) {
+                *v += 0.5;
+            }
+        }
+        let drifts = g.recenter(&pts);
+        assert!(drifts.iter().any(|&d| d > 0.4));
+        g.check_invariants(&pts).unwrap();
+    }
+
+    #[test]
+    fn prop_grouping_invariants_hold() {
+        prop::check(
+            &prop::Config { cases: 12, max_size: 300, ..Default::default() },
+            |rng, size| {
+                let n = size.max(4);
+                let d = 1 + rng.below(8);
+                let g = 1 + rng.below(n.min(20));
+                let pts = Matrix::from_vec(prop::gen_points(rng, n, d, 5.0), n, d).unwrap();
+                (pts, g)
+            },
+            |(pts, g)| {
+                let grouping = Grouping::build(pts, *g, 2, 128, 3).map_err(|e| e.to_string())?;
+                grouping.check_invariants(pts)
+            },
+        );
+    }
+}

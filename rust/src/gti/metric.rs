@@ -1,0 +1,138 @@
+//! Distance metrics (paper Table I: `mtr` field).
+//!
+//! GTI soundness only needs the triangle inequality, so the whole
+//! filter stack is metric-generic: groupings carry radii in *metric*
+//! units, bounds compare metric units, and only the device boundary
+//! translates to/from the accelerator's native value space (squared
+//! distances for L2 — cheaper on hardware — and plain sums for L1).
+
+use crate::data::Matrix;
+
+/// A distance metric satisfying the triangle inequality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Metric {
+    /// Euclidean. Device tiles compute the *square* (Eq. 4).
+    #[default]
+    L2,
+    /// Manhattan / city-block.
+    L1,
+}
+
+impl Metric {
+    /// Parse a DDSL metric string ("L1", "L2", "Unweighted L1", ...).
+    pub fn from_ddsl(norm: &str) -> Metric {
+        if norm.to_ascii_lowercase().contains("l1") {
+            Metric::L1
+        } else {
+            Metric::L2
+        }
+    }
+
+    /// True metric distance between two equal-length vectors.
+    #[inline]
+    pub fn dist(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Metric::L2 => {
+                let mut s = 0.0f32;
+                for k in 0..a.len() {
+                    let d = a[k] - b[k];
+                    s += d * d;
+                }
+                s.sqrt()
+            }
+            Metric::L1 => {
+                let mut s = 0.0f32;
+                for k in 0..a.len() {
+                    s += (a[k] - b[k]).abs();
+                }
+                s
+            }
+        }
+    }
+
+    /// Metric distance between matrix rows.
+    #[inline]
+    pub fn dist_rows(&self, a: &Matrix, i: usize, b: &Matrix, j: usize) -> f32 {
+        self.dist(a.row(i), b.row(j))
+    }
+
+    /// Name of the device kernel family for this metric.
+    pub fn device_name(&self) -> &'static str {
+        match self {
+            Metric::L2 => "l2sq",
+            Metric::L1 => "l1",
+        }
+    }
+
+    /// Convert a device-space value (what the tile outputs) to metric
+    /// units.  L2 tiles output squared distances.
+    #[inline]
+    pub fn from_device(&self, v: f32) -> f32 {
+        match self {
+            Metric::L2 => v.max(0.0).sqrt(),
+            Metric::L1 => v,
+        }
+    }
+
+    /// Convert a metric-space distance to device space (for comparing
+    /// against tile outputs without converting whole matrices).
+    #[inline]
+    pub fn to_device(&self, d: f32) -> f32 {
+        match self {
+            Metric::L2 => d * d,
+            Metric::L1 => d,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_matches_dist2_sqrt() {
+        let a = Matrix::from_vec(vec![0.0, 0.0, 3.0, 4.0], 2, 2).unwrap();
+        assert_eq!(Metric::L2.dist_rows(&a, 0, &a, 1), 5.0);
+        assert_eq!(Metric::L1.dist_rows(&a, 0, &a, 1), 7.0);
+    }
+
+    #[test]
+    fn device_roundtrip() {
+        for m in [Metric::L2, Metric::L1] {
+            let d = 3.5f32;
+            let back = m.from_device(m.to_device(d));
+            assert!((back - d).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn triangle_inequality_holds_for_both() {
+        let pts = Matrix::from_vec(
+            vec![0.1, 0.9, -0.5, 0.3, 0.7, -0.2, 0.0, 0.4, -0.9, 0.6, 0.2, 0.8],
+            4,
+            3,
+        )
+        .unwrap();
+        for m in [Metric::L2, Metric::L1] {
+            for i in 0..4 {
+                for j in 0..4 {
+                    for k in 0..4 {
+                        let dij = m.dist_rows(&pts, i, &pts, j);
+                        let dik = m.dist_rows(&pts, i, &pts, k);
+                        let dkj = m.dist_rows(&pts, k, &pts, j);
+                        assert!(dij <= dik + dkj + 1e-5, "{m:?} TI violated");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ddsl_parse() {
+        assert_eq!(Metric::from_ddsl("L1"), Metric::L1);
+        assert_eq!(Metric::from_ddsl("Unweighted L1"), Metric::L1);
+        assert_eq!(Metric::from_ddsl("L2"), Metric::L2);
+        assert_eq!(Metric::from_ddsl("Euclidean"), Metric::L2);
+    }
+}

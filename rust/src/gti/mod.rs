@@ -1,0 +1,28 @@
+//! Generalized Triangle Inequality (GTI) optimization — paper §IV.
+//!
+//! The three GTI ingredients map to submodules:
+//!
+//! * [`grouping`] — data grouping: points are partitioned into groups,
+//!   each with a landmark (center) and radius; groups are the unit of
+//!   bound computation and of accelerator dispatch (**Group-level
+//!   bound computation**, Fig. 2e/2f).
+//! * [`bounds`] — the bound algebra: one-landmark (Fig. 2a),
+//!   two-landmark (Fig. 2b, Eq. 1), group-level (Eq. 2) and
+//!   trace-based drift bounds (Fig. 2c/2d, Eq. 3).
+//! * [`filter`] — per-algorithm candidate filters built from those
+//!   bounds: which (source group x target group) pairs survive and
+//!   must go to the accelerator.
+//!
+//! Everything here runs on the **CPU** side of the heterogeneous
+//! design: complex, branchy, dependency-laden — exactly the work the
+//! paper assigns to the host (§V intro).
+
+pub mod bounds;
+pub mod filter;
+pub mod grouping;
+pub mod metric;
+
+pub use bounds::{group_pair_bounds, GroupPairBound};
+pub use filter::{FilterStats, KmeansFilter, KnnFilter, NbodyFilter};
+pub use grouping::Grouping;
+pub use metric::Metric;

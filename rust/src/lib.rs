@@ -1,0 +1,88 @@
+//! # AccD — Accelerating Distance-related algorithms by compiler-based co-Design
+//!
+//! A reproduction of *"AccD: A Compiler-based Framework for Accelerating
+//! Distance-related Algorithms on CPU-FPGA Platforms"* (Wang et al., 2019)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the CPU-side coordinator: the DDSL
+//!   compiler, GTI (Generalized Triangle Inequality) filtering engine,
+//!   data-layout optimizer, design-space explorer, and the heterogeneous
+//!   pipeline that streams surviving distance tiles to the accelerator.
+//! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
+//!   distance tiles, AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels implementing
+//!   the paper's Eq. 4 matrix-decomposed distance computation.
+//!
+//! The paper's Intel Stratix-10 FPGA is not available in this environment;
+//! it is substituted by [`fpga::FpgaDevice`], which couples *functional*
+//! execution of the real AOT kernels through PJRT with an *analytical*
+//! cycle/power model of the DE10-Pro (paper Eqs. 5-10).  See
+//! `DESIGN.md` §Substitutions.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use accd::prelude::*;
+//!
+//! let dataset = accd::data::synthetic::clustered(10_000, 16, 64, 0.05, 42);
+//! let cfg = accd::config::AccdConfig::default();
+//! let mut engine = accd::coordinator::Engine::new(cfg).unwrap();
+//! let result = engine.kmeans(&dataset, 64, 20).unwrap();
+//! println!("converged in {} iters", result.iterations);
+//! ```
+
+pub mod baselines;
+pub mod config;
+pub mod figures;
+pub mod coordinator;
+pub mod data;
+pub mod ddsl;
+pub mod dse;
+pub mod fpga;
+pub mod gti;
+pub mod layout;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+/// Commonly used types, re-exported for `use accd::prelude::*`.
+pub mod prelude {
+    pub use crate::config::AccdConfig;
+    pub use crate::coordinator::Engine;
+    pub use crate::data::{Dataset, Matrix};
+    pub use crate::ddsl::compile_program;
+    pub use crate::fpga::FpgaDevice;
+    pub use crate::gti::Grouping;
+    pub use crate::runtime::Runtime;
+}
+
+/// Crate-wide error type.
+#[derive(thiserror::Error, Debug)]
+pub enum Error {
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("ddsl error: {0}")]
+    Ddsl(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("shape error: {0}")]
+    Shape(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(String),
+    #[error("dse error: {0}")]
+    Dse(String),
+    #[error("data error: {0}")]
+    Data(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,282 @@
+//! `accd` — the AccD launcher.
+//!
+//! Subcommands:
+//!
+//! * `run <program.dd>` — compile a DDSL program, bind synthetic (or
+//!   CSV) datasets to its DSets, and execute the plan on the CPU-FPGA
+//!   engine.
+//! * `kmeans | knn | nbody` — run one algorithm directly with explicit
+//!   parameters, choosing the implementation with `--impl`.
+//! * `explore` — run the DSE explorer on a workload description and
+//!   print the chosen design point.
+//! * `info` — show the artifact manifest and platform.
+//!
+//! Run `accd <subcommand> --help` (or no args) for usage.
+
+use accd::baselines::{cblas, naive, top};
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::{loader, synthetic, Dataset};
+use accd::ddsl::{self, plan::PlanKind};
+use accd::dse::{explorer::Workload, Explorer};
+use accd::util::cli::Args;
+
+const USAGE: &str = "\
+accd — compiler-based acceleration of distance-related algorithms (AccD)
+
+USAGE:
+  accd run <program.dd> [--data file.csv] [--impl accd|naive|top|cblas] [--seed N]
+  accd kmeans  --n N --d D --k K [--iters I] [--impl ...] [--seed N] [--data file.csv]
+  accd knn     --n N --m M --d D --k K [--impl ...] [--seed N]
+  accd nbody   --n N --steps S --radius R [--dt T] [--impl ...] [--seed N]
+  accd explore --n N --m M --d D [--iters I] [--alpha A]
+  accd info
+
+COMMON OPTIONS:
+  --config path.json   load AccdConfig overrides
+  --artifacts dir      artifact directory (default: artifacts)
+  --no-fpga            run the AccD implementation CPU-only
+  --json               print the run report as JSON
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    match dispatch(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = argv[0].as_str();
+    let rest = &argv[1..];
+    let value_opts = [
+        "n", "m", "d", "k", "iters", "steps", "radius", "dt", "impl", "seed", "config",
+        "artifacts", "data", "alpha", "groups",
+    ];
+    let flags = ["no-fpga", "json", "verbose"];
+    let args = Args::parse(rest, &value_opts, &flags).map_err(anyhow::Error::msg)?;
+
+    match cmd {
+        "run" => cmd_run(&args),
+        "kmeans" => cmd_kmeans(&args),
+        "knn" => cmd_knn(&args),
+        "nbody" => cmd_nbody(&args),
+        "explore" => cmd_explore(&args),
+        "info" => cmd_info(&args),
+        other => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<AccdConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => AccdConfig::load(path)?,
+        None => AccdConfig::new(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifact_dir = dir.to_string();
+    }
+    if args.flag("no-fpga") {
+        cfg.use_fpga = false;
+    }
+    cfg.seed = args.get_u64("seed", cfg.seed).map_err(anyhow::Error::msg)?;
+    if let Some(g) = args.get("groups") {
+        let g: usize = g.parse().map_err(|_| anyhow::anyhow!("--groups expects an integer"))?;
+        cfg.gti.src_groups = g;
+        cfg.gti.trg_groups = g;
+    }
+    Ok(cfg)
+}
+
+fn print_report(report: &accd::metrics::RunReport, json: bool) {
+    if json {
+        println!("{}", report.to_json().to_string());
+    } else {
+        println!("{}", report.summary());
+    }
+}
+
+fn cmd_kmeans(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let n = args.get_usize("n", 20_000).map_err(anyhow::Error::msg)?;
+    let d = args.get_usize("d", 16).map_err(anyhow::Error::msg)?;
+    let k = args.get_usize("k", 64).map_err(anyhow::Error::msg)?;
+    let iters = args.get_usize("iters", 20).map_err(anyhow::Error::msg)?;
+    let ds = match args.get("data") {
+        Some(path) => loader::load_csv(path, &loader::CsvOptions::default())?,
+        None => synthetic::clustered(n, d, (n as f64).sqrt() as usize / 2, 0.03, cfg.seed),
+    };
+    let imp = args.get_or("impl", "accd");
+    let report = match imp {
+        "accd" => {
+            let mut eng = Engine::new(cfg)?;
+            eng.kmeans(&ds, k, iters)?.report
+        }
+        "naive" => naive::kmeans(&ds, k, iters, cfg.seed)?.report,
+        "top" => top::kmeans(&ds, k, iters, cfg.seed)?.report,
+        "cblas" => cblas::kmeans(&ds, k, iters, cfg.seed)?.report,
+        other => anyhow::bail!("unknown --impl {other:?}"),
+    };
+    print_report(&report, args.flag("json"));
+    Ok(())
+}
+
+fn cmd_knn(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let n = args.get_usize("n", 20_000).map_err(anyhow::Error::msg)?; // targets
+    let m = args.get_usize("m", 5_000).map_err(anyhow::Error::msg)?; // sources
+    let d = args.get_usize("d", 8).map_err(anyhow::Error::msg)?;
+    let k = args.get_usize("k", 100).map_err(anyhow::Error::msg)?;
+    let src = synthetic::clustered(m, d, (m as f64).sqrt() as usize / 2, 0.03, cfg.seed);
+    let trg = synthetic::clustered(n, d, (n as f64).sqrt() as usize / 2, 0.03, cfg.seed ^ 1);
+    let imp = args.get_or("impl", "accd");
+    let report = match imp {
+        "accd" => {
+            let mut eng = Engine::new(cfg)?;
+            eng.knn_join(&src, &trg, k)?.report
+        }
+        "naive" => naive::knn_join(&src, &trg, k)?.report,
+        "top" => top::knn_join(&src, &trg, k, cfg.seed)?.report,
+        "cblas" => cblas::knn_join(&src, &trg, k)?.report,
+        other => anyhow::bail!("unknown --impl {other:?}"),
+    };
+    print_report(&report, args.flag("json"));
+    Ok(())
+}
+
+fn cmd_nbody(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let n = args.get_usize("n", 16_384).map_err(anyhow::Error::msg)?;
+    let steps = args.get_usize("steps", 5).map_err(anyhow::Error::msg)?;
+    let radius = args.get_f64("radius", 0.1).map_err(anyhow::Error::msg)? as f32;
+    let dt = args.get_f64("dt", 1e-3).map_err(anyhow::Error::msg)? as f32;
+    let ds = synthetic::uniform(n, 3, cfg.seed);
+    let masses = synthetic::equal_masses(n, 1.0);
+    let imp = args.get_or("impl", "accd");
+    let report = match imp {
+        "accd" => {
+            let mut eng = Engine::new(cfg)?;
+            eng.nbody(&ds, &masses, steps, dt, radius)?.report
+        }
+        "naive" => naive::nbody(&ds, &masses, steps, dt, radius)?.report,
+        "top" => top::nbody(&ds, &masses, steps, dt, radius)?.report,
+        other => anyhow::bail!("unknown --impl {other:?} (nbody has no cblas variant)"),
+    };
+    print_report(&report, args.flag("json"));
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: accd run <program.dd>"))?;
+    let src = std::fs::read_to_string(path)?;
+    let plan = ddsl::compile_program(&src)?;
+    println!(
+        "compiled {path}: {:?} | GTI strategy: {} | metric {}{}",
+        kind_name(&plan.kind),
+        plan.strategy,
+        if plan.metric.weighted { "weighted " } else { "" },
+        plan.metric.norm,
+    );
+    let cfg = load_config(args)?;
+    let seed = cfg.seed;
+    let mut eng = Engine::new(cfg)?;
+
+    // Bind datasets: CSV if provided, synthetic otherwise (shapes from
+    // the program's DSet declarations).
+    let bind = |name: &str, size: usize, dim: usize, salt: u64| -> Dataset {
+        let mut ds = synthetic::clustered(
+            size,
+            dim,
+            (size as f64).sqrt() as usize / 2,
+            0.03,
+            seed ^ salt,
+        );
+        ds.name = name.to_string();
+        ds
+    };
+    let report = match &plan.kind {
+        PlanKind::KmeansLike { points, centers: _, k, max_iters } => {
+            let (pname, psize, pdim) = &plan.bindings[0];
+            let _ = points;
+            let ds = match args.get("data") {
+                Some(p) => loader::load_csv(p, &loader::CsvOptions::default())?,
+                None => bind(pname, *psize, *pdim, 0xA),
+            };
+            eng.kmeans(&ds, *k, *max_iters)?.report
+        }
+        PlanKind::KnnJoinLike { k, .. } => {
+            let (sname, ssize, sdim) = &plan.bindings[0];
+            let (tname, tsize, tdim) = &plan.bindings[1];
+            let src_ds = bind(sname, *ssize, *sdim, 0xB);
+            let trg_ds = bind(tname, *tsize, *tdim, 0xC);
+            anyhow::ensure!(sdim == tdim, "source/target dim mismatch");
+            let metric = accd::gti::Metric::from_ddsl(&plan.metric.norm);
+            eng.knn_join_metric(&src_ds, &trg_ds, *k, metric)?.report
+        }
+        PlanKind::NbodyLike { radius_expr, max_iters, .. } => {
+            let (pname, psize, _) = &plan.bindings[0];
+            let mut ds = synthetic::uniform(*psize, 3, seed ^ 0xD);
+            ds.name = pname.clone();
+            let masses = synthetic::equal_masses(*psize, 1.0);
+            // DDSL ranges are integers; interpret as percent of box edge.
+            let radius = (*radius_expr as f32) / 100.0;
+            eng.nbody(&ds, &masses, *max_iters, 1e-3, radius)?.report
+        }
+    };
+    print_report(&report, args.flag("json"));
+    Ok(())
+}
+
+fn kind_name(kind: &PlanKind) -> &'static str {
+    match kind {
+        PlanKind::KmeansLike { .. } => "K-means-like clustering",
+        PlanKind::KnnJoinLike { .. } => "KNN-join",
+        PlanKind::NbodyLike { .. } => "N-body-like self-join",
+    }
+}
+
+fn cmd_explore(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 70_187).map_err(anyhow::Error::msg)?;
+    let m = args.get_usize("m", 265).map_err(anyhow::Error::msg)?;
+    let d = args.get_usize("d", 60).map_err(anyhow::Error::msg)?;
+    let iters = args.get_usize("iters", 3).map_err(anyhow::Error::msg)?;
+    let alpha = args.get_f64("alpha", 10.0).map_err(anyhow::Error::msg)?;
+    let w = Workload { src_size: n, trg_size: m, d, n_iteration: iters, alpha };
+    let out = Explorer::default().explore(&w)?;
+    println!(
+        "explored {} configs ({} infeasible) over {} generations",
+        out.evaluated, out.infeasible, out.generations
+    );
+    println!(
+        "best design: src_groups={} trg_groups={} block={} simd={} unroll={}",
+        out.best.n_src_grp, out.best.n_trg_grp, out.best.block, out.best.simd, out.best.unroll
+    );
+    println!("modeled latency: {:.6} s", out.best_latency);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let rt = accd::runtime::Runtime::load(&cfg.artifact_dir)?;
+    println!("platform: {}", rt.platform());
+    let m = rt.manifest();
+    println!(
+        "tile: m={} n={} d_pad={:?} knn_k={} kmeans_k_pad={:?} nbody={}",
+        m.tile.m, m.tile.n, m.tile.d_pad, m.tile.knn_k, m.tile.kmeans_k_pad, m.tile.nbody
+    );
+    println!("artifacts ({}):", m.entries.len());
+    for e in &m.entries {
+        println!("  {} [{:?}] inputs {:?}", e.name, e.kind, e.inputs);
+    }
+    Ok(())
+}

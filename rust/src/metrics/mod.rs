@@ -1,0 +1,184 @@
+//! Execution metrics: the single report structure every algorithm run
+//! fills in, printed by the CLI and serialized into bench results.
+//!
+//! The same struct backs the paper-figure harnesses: Fig. 8 consumes
+//! `wall_secs` ratios, Fig. 9 `energy_j` ratios, Fig. 10 the breakdown
+//! fields, and the ablation benches the filter/layout sub-stats.
+
+use crate::fpga::device::DeviceStats;
+use crate::gti::FilterStats;
+use crate::layout::LayoutStats;
+use crate::util::json::{self, Value};
+
+/// Complete accounting of one algorithm execution.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub algorithm: String,
+    pub dataset: String,
+    pub implementation: String,
+    /// End-to-end wall time.
+    pub wall_secs: f64,
+    /// CPU-side filter/group time (the paper's Latency_filt share).
+    pub filter_secs: f64,
+    /// Accelerator wall time (PJRT execution, measured).
+    pub device_wall_secs: f64,
+    /// Accelerator modeled time (DE10-Pro cost model).
+    pub device_modeled_secs: f64,
+    /// Modeled energy (joules) for the run.
+    pub energy_j: f64,
+    /// Modeled average power (watts).
+    pub avg_watts: f64,
+    /// Iterations executed (iterative algorithms).
+    pub iterations: usize,
+    pub filter: FilterStats,
+    pub layout: LayoutStats,
+    pub device: DeviceStats,
+    /// Algorithm-specific headline quality number (e.g. K-means
+    /// objective, N-body total energy drift) for cross-impl checking.
+    pub quality: f64,
+}
+
+impl RunReport {
+    pub fn new(algorithm: &str, dataset: &str, implementation: &str) -> Self {
+        Self {
+            algorithm: algorithm.into(),
+            dataset: dataset.into(),
+            implementation: implementation.into(),
+            ..Default::default()
+        }
+    }
+
+    /// Speedup of this run relative to a baseline run.
+    pub fn speedup_vs(&self, baseline: &RunReport) -> f64 {
+        if self.wall_secs > 0.0 {
+            baseline.wall_secs / self.wall_secs
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// End-to-end time with the accelerator's *measured* (CPU-PJRT
+    /// testbed) execution replaced by the DE10-Pro cost model's time —
+    /// the projection used for the "modeled" columns of the figure
+    /// harnesses.  CPU-side phases stay measured.
+    pub fn modeled_wall_secs(&self) -> f64 {
+        (self.wall_secs - self.device_wall_secs + self.device_modeled_secs).max(1e-12)
+    }
+
+    /// Speedup using the modeled accelerator time (DE10-Pro projection).
+    pub fn modeled_speedup_vs(&self, baseline: &RunReport) -> f64 {
+        baseline.wall_secs / self.modeled_wall_secs()
+    }
+
+    /// Energy under the DE10-Pro projection: host share at measured
+    /// filter time, FPGA share busy for the modeled device time, over
+    /// the modeled wall time.
+    pub fn modeled_energy_j(&self) -> f64 {
+        crate::fpga::PowerModel::default().accd_joules(
+            self.modeled_wall_secs(),
+            self.filter_secs,
+            1.0,
+            self.device_modeled_secs,
+        )
+    }
+
+    /// Energy-efficiency ratio vs baseline using the modeled energy.
+    pub fn modeled_energy_eff_vs(&self, baseline: &RunReport) -> f64 {
+        baseline.energy_j / self.modeled_energy_j().max(1e-12)
+    }
+
+    /// Energy-efficiency ratio vs a baseline (higher = better).
+    pub fn energy_eff_vs(&self, baseline: &RunReport) -> f64 {
+        if self.energy_j > 0.0 {
+            baseline.energy_j / self.energy_j
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("algorithm", json::s(self.algorithm.clone())),
+            ("dataset", json::s(self.dataset.clone())),
+            ("implementation", json::s(self.implementation.clone())),
+            ("wall_secs", json::num(self.wall_secs)),
+            ("filter_secs", json::num(self.filter_secs)),
+            ("device_wall_secs", json::num(self.device_wall_secs)),
+            ("device_modeled_secs", json::num(self.device_modeled_secs)),
+            ("energy_j", json::num(self.energy_j)),
+            ("avg_watts", json::num(self.avg_watts)),
+            ("iterations", json::num(self.iterations as f64)),
+            ("quality", json::num(self.quality)),
+            ("filter_total_pairs", json::num(self.filter.total_pairs as f64)),
+            ("filter_surviving_pairs", json::num(self.filter.surviving_pairs as f64)),
+            ("filter_bound_comps", json::num(self.filter.bound_comps as f64)),
+            ("filter_saving_ratio", json::num(self.filter.saving_ratio())),
+            ("layout_reuse_ratio", json::num(self.layout.reuse_ratio())),
+            ("device_tiles", json::num(self.device.tiles as f64)),
+            ("device_pad_efficiency", json::num(self.device.pad_efficiency())),
+            ("device_bytes_moved", json::num(self.device.bytes_moved as f64)),
+        ])
+    }
+
+    /// Human-readable multi-line summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} / {} [{}]\n  wall {:.3}s (filter {:.3}s, device {:.3}s wall / {:.3}s modeled)\n  \
+             energy {:.1} J @ {:.1} W avg | iterations {} | quality {:.6}\n  \
+             filter: {:.1}% saved ({} of {} pairs survive, {} bound comps)\n  \
+             device: {} tiles, pad eff {:.1}%, {:.1} MB moved | layout reuse {:.1}%",
+            self.algorithm,
+            self.dataset,
+            self.implementation,
+            self.wall_secs,
+            self.filter_secs,
+            self.device_wall_secs,
+            self.device_modeled_secs,
+            self.energy_j,
+            self.avg_watts,
+            self.iterations,
+            self.quality,
+            100.0 * self.filter.saving_ratio(),
+            self.filter.surviving_pairs,
+            self.filter.total_pairs,
+            self.filter.bound_comps,
+            self.device.tiles,
+            100.0 * self.device.pad_efficiency(),
+            self.device.bytes_moved as f64 / 1e6,
+            100.0 * self.layout.reuse_ratio(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_and_energy_ratios() {
+        let mut base = RunReport::new("kmeans", "ds", "baseline");
+        base.wall_secs = 10.0;
+        base.energy_j = 250.0;
+        let mut fast = RunReport::new("kmeans", "ds", "accd");
+        fast.wall_secs = 0.5;
+        fast.energy_j = 5.0;
+        assert_eq!(fast.speedup_vs(&base), 20.0);
+        assert_eq!(fast.energy_eff_vs(&base), 50.0);
+    }
+
+    #[test]
+    fn json_has_headline_fields() {
+        let r = RunReport::new("knn", "ds", "accd");
+        let v = r.to_json();
+        assert_eq!(v.get("algorithm").as_str(), Some("knn"));
+        assert!(v.get("wall_secs").as_f64().is_some());
+        assert!(v.get("filter_saving_ratio").as_f64().is_some());
+    }
+
+    #[test]
+    fn summary_is_printable() {
+        let s = RunReport::new("nbody", "P-1", "accd").summary();
+        assert!(s.contains("nbody"));
+        assert!(s.contains("filter"));
+    }
+}

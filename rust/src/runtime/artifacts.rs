@@ -1,0 +1,308 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.  The manifest enumerates every HLO module, its
+//! input shapes and tile metadata; the runtime refuses to start on a
+//! missing or mismatched manifest rather than guessing shapes.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+use crate::{Error, Result};
+
+/// What a compiled artifact computes (mirrors `kind` in aot.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `(bm,d) x (bn,d) -> (bm,bn)` distance tile.
+    Distance,
+    /// `(bm,d) x (k,d) -> idx,(bm,) dist` fused K-means assignment.
+    KmeansAssign,
+    /// `(bm,d) x (bn,d) -> vals(bm,k), idx(bm,k)` fused KNN tile.
+    KnnTile,
+    /// `(bm,3) x (bn,3) x mass -> (bm,3)` N-body acceleration tile.
+    NbodyAccel,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "distance" => Self::Distance,
+            "kmeans_assign" => Self::KmeansAssign,
+            "knn_tile" => Self::KnnTile,
+            "nbody_accel" => Self::NbodyAccel,
+            other => return Err(Error::Artifact(format!("unknown kind {other:?}"))),
+        })
+    }
+}
+
+/// One entry of the manifest after validation.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    pub inputs: Vec<Vec<usize>>,
+    pub metric: Option<String>,
+    pub bm: usize,
+    pub bn: usize,
+    pub d: usize,
+    pub k: usize,
+}
+
+/// Global tiling parameters shared by all artifacts.
+#[derive(Debug, Clone)]
+pub struct TileInfo {
+    /// Base source-tile rows of the distance kernels (smallest variant).
+    pub m: usize,
+    /// Base target-tile rows of the distance kernels.
+    pub n: usize,
+    /// Available padded feature dimensions, ascending.
+    pub d_pad: Vec<usize>,
+    /// Per-tile Top-K width of the fused KNN tile.
+    pub knn_k: usize,
+    /// Available padded center counts for the fused K-means tile.
+    pub kmeans_k_pad: Vec<usize>,
+    /// N-body tile edge (particles per tile, both axes).
+    pub nbody: usize,
+    /// Available tile-edge variants, ascending (e.g. [64, 512]): the
+    /// device mixes large and base tiles greedily so one PJRT call
+    /// carries as much work as possible (perf pass, §Perf).
+    pub variants: Vec<usize>,
+}
+
+impl TileInfo {
+    /// Smallest padded feature dimension that fits `d`.
+    pub fn pad_d(&self, d: usize) -> Result<usize> {
+        self.d_pad
+            .iter()
+            .copied()
+            .find(|&p| p >= d)
+            .ok_or_else(|| Error::Shape(format!("d={d} exceeds max padded dim {:?}", self.d_pad)))
+    }
+
+    /// Smallest padded center count that fits `k`.
+    pub fn pad_kmeans_k(&self, k: usize) -> Result<usize> {
+        self.kmeans_k_pad
+            .iter()
+            .copied()
+            .find(|&p| p >= k)
+            .ok_or_else(|| {
+                Error::Shape(format!("k={k} exceeds max padded centers {:?}", self.kmeans_k_pad))
+            })
+    }
+}
+
+/// Parsed + validated `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tile: TileInfo,
+    pub entries: Vec<ArtifactEntry>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let raw = json::parse(&text)?;
+        let version = raw.req_usize("version")?;
+        if version != 1 {
+            return Err(Error::Artifact(format!(
+                "manifest version {version} unsupported (want 1)"
+            )));
+        }
+        let usize_arr = |v: &json::Value, key: &str| -> Result<Vec<usize>> {
+            v.req_arr(key)?
+                .iter()
+                .map(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| Error::Json(format!("bad integer in {key:?}")))
+                })
+                .collect()
+        };
+        let tile_v = raw.get("tile").clone();
+        let m = tile_v.req_usize("m")?;
+        let variants = match tile_v.get("variants") {
+            json::Value::Null => vec![m], // pre-variant manifests
+            _ => usize_arr(&tile_v, "variants")?,
+        };
+        let tile = TileInfo {
+            m,
+            n: tile_v.req_usize("n")?,
+            d_pad: usize_arr(&tile_v, "d_pad")?,
+            knn_k: tile_v.req_usize("knn_k")?,
+            kmeans_k_pad: usize_arr(&tile_v, "kmeans_k_pad")?,
+            nbody: tile_v.req_usize("nbody")?,
+            variants,
+        };
+        let raw_entries = raw.req_arr("artifacts")?;
+        let mut entries = Vec::with_capacity(raw_entries.len());
+        let mut by_name = HashMap::new();
+        for e in raw_entries {
+            let file = e.req_str("file")?;
+            let path = dir.join(file);
+            if !path.exists() {
+                return Err(Error::Artifact(format!("missing artifact file {}", path.display())));
+            }
+            let kind = ArtifactKind::parse(e.req_str("kind")?)?;
+            let inputs: Vec<Vec<usize>> = e
+                .req_arr("inputs")?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .ok_or_else(|| Error::Json("bad shape array".into()))?
+                        .iter()
+                        .map(|x| {
+                            x.as_usize().ok_or_else(|| Error::Json("bad shape dim".into()))
+                        })
+                        .collect()
+                })
+                .collect::<Result<_>>()?;
+            let meta = e.get("meta");
+            let entry = ArtifactEntry {
+                kind,
+                path,
+                metric: meta.get("metric").as_str().map(str::to_string),
+                bm: meta.get("bm").as_usize().unwrap_or(inputs[0][0]),
+                bn: meta
+                    .get("bn")
+                    .as_usize()
+                    .unwrap_or_else(|| inputs.get(1).map(|s| s[0]).unwrap_or(0)),
+                d: meta
+                    .get("d")
+                    .as_usize()
+                    .unwrap_or_else(|| inputs[0].get(1).copied().unwrap_or(0)),
+                k: meta.get("k").as_usize().unwrap_or(0),
+                name: e.req_str("name")?.to_string(),
+                inputs,
+            };
+            by_name.insert(entry.name.clone(), entries.len());
+            entries.push(entry);
+        }
+        Ok(Self { dir, tile, entries, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Name of the distance tile artifact for a metric, tile edges and
+    /// padded dim.
+    pub fn distance_name_sized(&self, metric: &str, tm: usize, tn: usize, d_padded: usize) -> String {
+        format!("distance_{metric}_m{tm}_n{tn}_d{d_padded}")
+    }
+
+    /// Base-tile distance artifact (back-compat convenience).
+    pub fn distance_name(&self, metric: &str, d_padded: usize) -> String {
+        self.distance_name_sized(metric, self.tile.m, self.tile.n, d_padded)
+    }
+
+    pub fn kmeans_name_sized(&self, tm: usize, k_padded: usize, d_padded: usize) -> String {
+        format!("kmeans_assign_m{tm}_k{k_padded}_d{d_padded}")
+    }
+
+    pub fn kmeans_name(&self, k_padded: usize, d_padded: usize) -> String {
+        self.kmeans_name_sized(self.tile.m, k_padded, d_padded)
+    }
+
+    pub fn knn_name(&self, d_padded: usize) -> String {
+        format!(
+            "knn_tile_m{}_n{}_d{d_padded}_k{}",
+            self.tile.m, self.tile.n, self.tile.knn_k
+        )
+    }
+
+    pub fn nbody_name_sized(&self, tm: usize, tn: usize) -> String {
+        format!("nbody_accel_m{tm}_n{tn}")
+    }
+
+    pub fn nbody_name(&self) -> String {
+        self.nbody_name_sized(self.tile.nbody, self.tile.nbody)
+    }
+
+    /// Greedy segmentation of `rows` into tile-variant segments:
+    /// largest variants first, base tiles for the remainder.  Returns
+    /// `(offset, edge)` pairs covering `round_up(rows, base)`.
+    pub fn segments(&self, rows: usize) -> Vec<(usize, usize)> {
+        let base = *self.tile.variants.first().unwrap_or(&self.tile.m);
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        let mut remaining = crate::util::round_up(rows.max(1), base);
+        for &v in self.tile.variants.iter().rev() {
+            while remaining >= v {
+                out.push((off, v));
+                off += v;
+                remaining -= v;
+            }
+        }
+        debug_assert_eq!(remaining, 0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_d_picks_smallest_fit() {
+        let t = TileInfo {
+            m: 64,
+            n: 64,
+            d_pad: vec![4, 8, 16, 32, 64, 128],
+            knn_k: 32,
+            kmeans_k_pad: vec![64, 128],
+            nbody: 64,
+            variants: vec![64, 512],
+        };
+        assert_eq!(t.pad_d(3).unwrap(), 4);
+        assert_eq!(t.pad_d(4).unwrap(), 4);
+        assert_eq!(t.pad_d(5).unwrap(), 8);
+        assert_eq!(t.pad_d(74).unwrap(), 128);
+        assert!(t.pad_d(200).is_err());
+    }
+
+    #[test]
+    fn kind_parse_rejects_unknown() {
+        assert!(ArtifactKind::parse("distance").is_ok());
+        assert!(ArtifactKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn segments_mix_variants_greedily() {
+        let m = Manifest {
+            dir: std::path::PathBuf::new(),
+            tile: TileInfo {
+                m: 64,
+                n: 64,
+                d_pad: vec![4],
+                knn_k: 32,
+                kmeans_k_pad: vec![64],
+                nbody: 64,
+                variants: vec![64, 512],
+            },
+            entries: vec![],
+            by_name: Default::default(),
+        };
+        // 1100 rows -> round_up 1152 = 2x512 + 2x64.
+        assert_eq!(m.segments(1100), vec![(0, 512), (512, 512), (1024, 64), (1088, 64)]);
+        // Small inputs use base tiles only.
+        assert_eq!(m.segments(1), vec![(0, 64)]);
+        assert_eq!(m.segments(130), vec![(0, 64), (64, 64), (128, 64)]);
+        // Exact large multiple.
+        assert_eq!(m.segments(512), vec![(0, 512)]);
+        // Segments always cover round_up(rows, base).
+        for rows in [1usize, 63, 64, 65, 500, 513, 7000] {
+            let segs = m.segments(rows);
+            let covered: usize = segs.iter().map(|&(_, e)| e).sum();
+            assert_eq!(covered, rows.div_ceil(64) * 64, "rows={rows}");
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Executable cache + typed tile execution.
+//!
+//! [`Runtime`] owns the PJRT CPU client and one compiled
+//! `PjRtLoadedExecutable` per manifest entry.  Compilation happens once
+//! at [`Runtime::load`]; the hot path is literal-in / literal-out.
+//!
+//! All tile entry points take *padded* buffers: callers go through
+//! [`crate::layout`] / the coordinator, which pad group batches to the
+//! manifest's tile multiples.  The padding conventions are:
+//!
+//! * feature axis: zero padding (distance-neutral for L2^2 and L1);
+//! * source/target rows: zero rows, results discarded by the caller;
+//! * K-means padded centers: `f32::MAX/4` sentinel coordinates so the
+//!   fused argmin never selects a padding slot.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::artifacts::{ArtifactKind, Manifest};
+use crate::{Error, Result};
+
+/// Output of one fused KNN tile: per-source-row top-k values + indices
+/// (indices are *tile-local* target rows; the coordinator remaps them).
+#[derive(Debug, Clone)]
+pub struct KnnTileOut {
+    pub vals: Vec<f32>,
+    pub idx: Vec<i32>,
+    pub rows: usize,
+    pub k: usize,
+}
+
+/// PJRT runtime: compiled-executable cache over the artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Lazily compiled executables, keyed by artifact name.  Lazy so a
+    /// process that only runs K-means never pays for the KNN modules
+    /// (compilation of all 40+ modules is noticeable on one core).
+    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Execution counters for the metrics endpoint.
+    pub stats: RuntimeStats,
+}
+
+/// Cheap atomic counters describing runtime activity.
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub tiles_executed: std::sync::atomic::AtomicU64,
+    pub bytes_h2d: std::sync::atomic::AtomicU64,
+    pub bytes_d2h: std::sync::atomic::AtomicU64,
+}
+
+impl RuntimeStats {
+    fn record(&self, h2d: usize, d2h: usize) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.tiles_executed.fetch_add(1, Relaxed);
+        self.bytes_h2d.fetch_add(h2d as u64, Relaxed);
+        self.bytes_d2h.fetch_add(d2h as u64, Relaxed);
+    }
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client and parse the manifest.  Executables
+    /// compile lazily on first use; call [`Runtime::warmup`] to force.
+    pub fn load(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, executables: Mutex::new(HashMap::new()), stats: RuntimeStats::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for a manifest entry.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact named {name:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(&entry.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.executables.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Force-compile a set of artifacts (e.g. everything a plan needs).
+    pub fn warmup(&self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.executables.lock().unwrap().len()
+    }
+
+    fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), rows * cols);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// Execute a raw artifact by name with 2-D f32 inputs, returning the
+    /// flattened tuple elements.  Generic fallback used by tests and the
+    /// DDSL interpreter; the typed wrappers below are the hot path.
+    pub fn execute_raw(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], usize, usize)],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(d, r, c)| Self::literal_2d(d, *r, *c))
+            .collect::<Result<_>>()?;
+        let out = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let tuple = out.to_tuple()?;
+        let h2d: usize = inputs.iter().map(|(d, _, _)| d.len() * 4).sum();
+        self.stats.record(h2d, 0);
+        Ok(tuple)
+    }
+
+    /// Distance tile of explicit edges: `a (tm x d_pad)`,
+    /// `b (tn x d_pad)` -> row-major `(tm x tn)` distances.
+    pub fn distance_tile_sized(
+        &self,
+        metric: &str,
+        tm: usize,
+        tn: usize,
+        d_padded: usize,
+        a: &[f32],
+        b: &[f32],
+    ) -> Result<Vec<f32>> {
+        let name = self.manifest.distance_name_sized(metric, tm, tn, d_padded);
+        let exe = self.executable(&name)?;
+        let la = Self::literal_2d(a, tm, d_padded)?;
+        let lb = Self::literal_2d(b, tn, d_padded)?;
+        let out = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        let dist = out.to_tuple1()?.to_vec::<f32>()?;
+        self.stats.record((a.len() + b.len()) * 4, dist.len() * 4);
+        Ok(dist)
+    }
+
+    /// Base-tile distance (`tile.m x tile.n`) — the pre-perf-pass entry
+    /// point, still used by tests and micro benches.
+    pub fn distance_tile(
+        &self,
+        metric: &str,
+        d_padded: usize,
+        a: &[f32],
+        b: &[f32],
+    ) -> Result<Vec<f32>> {
+        let t = self.manifest.tile.clone();
+        self.distance_tile_sized(metric, t.m, t.n, d_padded, a, b)
+    }
+
+    /// Fused K-means assignment tile of explicit row count `tm`.
+    pub fn kmeans_assign_tile_sized(
+        &self,
+        tm: usize,
+        k_padded: usize,
+        d_padded: usize,
+        points: &[f32],
+        centers: &[f32],
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let name = self.manifest.kmeans_name_sized(tm, k_padded, d_padded);
+        let exe = self.executable(&name)?;
+        let lp = Self::literal_2d(points, tm, d_padded)?;
+        let lc = Self::literal_2d(centers, k_padded, d_padded)?;
+        let out = exe.execute::<xla::Literal>(&[lp, lc])?[0][0].to_literal_sync()?;
+        let (idx_l, dist_l) = out.to_tuple2()?;
+        let idx = idx_l.to_vec::<i32>()?;
+        let dist = dist_l.to_vec::<f32>()?;
+        self.stats
+            .record((points.len() + centers.len()) * 4, idx.len() * 4 + dist.len() * 4);
+        Ok((idx, dist))
+    }
+
+    /// Base-tile fused K-means assignment.
+    pub fn kmeans_assign_tile(
+        &self,
+        k_padded: usize,
+        d_padded: usize,
+        points: &[f32],
+        centers: &[f32],
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let m = self.manifest.tile.m;
+        self.kmeans_assign_tile_sized(m, k_padded, d_padded, points, centers)
+    }
+
+    /// Fused KNN tile: per-source-row top-`tile.knn_k` (value, local idx).
+    pub fn knn_tile(&self, d_padded: usize, a: &[f32], b: &[f32]) -> Result<KnnTileOut> {
+        let t = &self.manifest.tile;
+        let name = self.manifest.knn_name(d_padded);
+        let exe = self.executable(&name)?;
+        let la = Self::literal_2d(a, t.m, d_padded)?;
+        let lb = Self::literal_2d(b, t.n, d_padded)?;
+        let out = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        let (vals_l, idx_l) = out.to_tuple2()?;
+        let vals = vals_l.to_vec::<f32>()?;
+        let idx = idx_l.to_vec::<i32>()?;
+        self.stats.record((a.len() + b.len()) * 4, vals.len() * 8);
+        Ok(KnnTileOut { vals, idx, rows: t.m, k: t.knn_k })
+    }
+
+    /// Radius-limited N-body acceleration tile of explicit edges:
+    /// `pos_i (tm x 3)`, `pos_j (tn x 3)`, `mass_j (tn)`, softening^2,
+    /// radius^2 -> `(tm x 3)` acceleration (only neighbors with
+    /// r^2 <= rmax2 contribute; padding rows carry mass 0).
+    pub fn nbody_accel_sized(
+        &self,
+        tm: usize,
+        tn: usize,
+        pos_i: &[f32],
+        pos_j: &[f32],
+        mass_j: &[f32],
+        eps2: f32,
+        rmax2: f32,
+    ) -> Result<Vec<f32>> {
+        let name = self.manifest.nbody_name_sized(tm, tn);
+        let exe = self.executable(&name)?;
+        let li = Self::literal_2d(pos_i, tm, 3)?;
+        let lj = Self::literal_2d(pos_j, tn, 3)?;
+        let lm = xla::Literal::vec1(mass_j);
+        let le = xla::Literal::vec1(&[eps2, rmax2]);
+        let out = exe.execute::<xla::Literal>(&[li, lj, lm, le])?[0][0].to_literal_sync()?;
+        let acc = out.to_tuple1()?.to_vec::<f32>()?;
+        self.stats
+            .record((pos_i.len() + pos_j.len() + mass_j.len() + 2) * 4, acc.len() * 4);
+        Ok(acc)
+    }
+
+    /// Base-tile N-body acceleration (back-compat entry point).
+    pub fn nbody_accel_tile_masked(
+        &self,
+        pos_i: &[f32],
+        pos_j: &[f32],
+        mass_j: &[f32],
+        eps2: f32,
+        rmax2: f32,
+    ) -> Result<Vec<f32>> {
+        let t = self.manifest.tile.nbody;
+        self.nbody_accel_sized(t, t, pos_i, pos_j, mass_j, eps2, rmax2)
+    }
+
+    /// Artifact names a given kind/d combination resolves to (for warmup).
+    pub fn names_for(&self, kind: ArtifactKind, d_padded: usize, k_padded: usize) -> Vec<String> {
+        match kind {
+            ArtifactKind::Distance => vec![
+                self.manifest.distance_name("l2sq", d_padded),
+                self.manifest.distance_name("l1", d_padded),
+            ],
+            ArtifactKind::KmeansAssign => vec![self.manifest.kmeans_name(k_padded, d_padded)],
+            ArtifactKind::KnnTile => vec![self.manifest.knn_name(d_padded)],
+            ArtifactKind::NbodyAccel => vec![self.manifest.nbody_name()],
+        }
+    }
+}

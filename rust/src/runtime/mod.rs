@@ -1,0 +1,15 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts and executes them.
+//!
+//! This is the boundary between the Rust coordinator and the accelerator
+//! kernels authored in JAX/Pallas.  At startup [`Runtime::load`] reads
+//! `artifacts/manifest.json`, compiles every HLO-text module on the PJRT
+//! CPU client, and caches the executables; the hot path then only calls
+//! [`Runtime::distance_tile`] & friends, which copy literals in/out.
+//!
+//! Python never runs here — the artifacts are self-contained HLO.
+
+mod artifacts;
+mod exec;
+
+pub use artifacts::{ArtifactEntry, ArtifactKind, Manifest, TileInfo};
+pub use exec::{KnnTileOut, Runtime};

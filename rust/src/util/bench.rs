@@ -1,0 +1,189 @@
+//! Minimal benchmarking harness (criterion substitute).
+//!
+//! Provides warmup + repeated timed runs with median/mean/stddev
+//! reporting and a tabular printer the `rust/benches/fig*` harnesses use
+//! to emit the paper's rows.  Benches are registered in `Cargo.toml`
+//! with `harness = false` and call [`Bencher::run`] directly.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over the measured iterations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    fn from_samples(mut samples: Vec<Duration>) -> Self {
+        samples.sort_unstable();
+        let n = samples.len();
+        let mean_ns = samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / n as f64;
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_nanos() as f64 - mean_ns;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        Self {
+            iters: n,
+            mean: Duration::from_nanos(mean_ns as u64),
+            median: samples[n / 2],
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Minimum wall time to spend measuring one benchmark.
+    pub measure_time: Duration,
+    /// Warmup wall time before measurement starts.
+    pub warmup_time: Duration,
+    /// Hard cap on measured iterations (long end-to-end runs).
+    pub max_iters: usize,
+    /// Minimum measured iterations, even if over time budget.
+    pub min_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            measure_time: Duration::from_secs(3),
+            warmup_time: Duration::from_millis(300),
+            max_iters: 50,
+            min_iters: 3,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end benches: one warmup run,
+    /// few measured runs.  Controlled by env `ACCD_BENCH_FAST=1`.
+    pub fn from_env() -> Self {
+        if std::env::var("ACCD_BENCH_FAST").as_deref() == Ok("1") {
+            Self {
+                measure_time: Duration::from_millis(500),
+                warmup_time: Duration::ZERO,
+                max_iters: 3,
+                min_iters: 1,
+            }
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f` and return stats.  The closure's return value is passed
+    /// through `std::hint::black_box` so work is not optimized away.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup.
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup_time {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let mstart = Instant::now();
+        loop {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed());
+            let enough_time = mstart.elapsed() >= self.measure_time;
+            if (enough_time && samples.len() >= self.min_iters) || samples.len() >= self.max_iters
+            {
+                break;
+            }
+        }
+        let stats = Stats::from_samples(samples);
+        eprintln!(
+            "bench {name:<48} median {:>12?} mean {:>12?} ±{:>10?} ({} iters)",
+            stats.median, stats.mean, stats.stddev, stats.iters
+        );
+        stats
+    }
+}
+
+/// Fixed-width table printer for the paper-figure harnesses.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {title} ==");
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format a speedup factor the way the paper reports them (e.g. "31.42x").
+pub fn fmt_x(factor: f64) -> String {
+    format!("{factor:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples(vec![Duration::from_millis(5); 7]);
+        assert_eq!(s.iters, 7);
+        assert_eq!(s.median, Duration::from_millis(5));
+        assert_eq!(s.stddev, Duration::ZERO);
+    }
+
+    #[test]
+    fn bencher_respects_max_iters() {
+        let b = Bencher {
+            measure_time: Duration::from_millis(1),
+            warmup_time: Duration::ZERO,
+            max_iters: 5,
+            min_iters: 1,
+        };
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.iters <= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

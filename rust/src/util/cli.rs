@@ -1,0 +1,134 @@
+//! Minimal CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands — enough for the `accd` launcher's surface.  Unknown
+//! flags are hard errors so typos never silently fall back to defaults.
+
+use std::collections::HashMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` given the set of value-taking options and boolean
+    /// flags this command accepts.
+    pub fn parse(
+        argv: &[String],
+        value_opts: &[&str],
+        bool_flags: &[&str],
+    ) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if bool_flags.contains(&key.as_str()) {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} does not take a value"));
+                    }
+                    out.flags.push(key);
+                } else if value_opts.contains(&key.as_str()) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    out.opts.insert(key, val);
+                } else {
+                    return Err(format!("unknown option --{key}"));
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = Args::parse(
+            &argv(&["run", "--size", "100", "--dim=8", "--verbose"]),
+            &["size", "dim"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get_usize("size", 0).unwrap(), 100);
+        assert_eq!(a.get_usize("dim", 0).unwrap(), 8);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(Args::parse(&argv(&["--nope"]), &[], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["--size"]), &["size"], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&[]), &["k"], &[]).unwrap();
+        assert_eq!(a.get_usize("k", 7).unwrap(), 7);
+        assert_eq!(a.get_or("k", "x"), "x");
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny property-testing runner (proptest substitute).
+//!
+//! Generates `cases` random inputs from a seeded [`Rng`], runs the
+//! property, and on failure retries with a halved "size" parameter to
+//! give a crude shrink before reporting the failing seed.  Used by the
+//! coordinator-invariant suites in `rust/tests/prop_coordinator.rs` and
+//! the in-module `#[cfg(test)]` property tests.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Upper bound passed to generators as the "size" hint.
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xACCD, max_size: 256 }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs.
+///
+/// `gen` receives (rng, size) and builds one case; `prop` returns
+/// `Err(msg)` to fail.  On failure the case is re-generated at smaller
+/// sizes to find a more minimal reproduction, then panics with the
+/// failing seed + size so the case can be replayed exactly.
+pub fn check<T: std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // Crude shrink: retry the same seed at halved sizes and report
+            // the smallest size that still fails.
+            let mut min_fail: (usize, String, String) = (size, msg, format!("{input:?}"));
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(case_seed);
+                let smaller = gen(&mut rng, s);
+                match prop(&smaller) {
+                    Err(m) => {
+                        min_fail = (s, m, format!("{smaller:?}"));
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            let (fs, fmsg, frepr) = min_fail;
+            let repr = if frepr.len() > 800 { format!("{}…", &frepr[..800]) } else { frepr };
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}, size {fs}): {fmsg}\ninput: {repr}"
+            );
+        }
+    }
+}
+
+/// Generate a random f32 point set of `n` rows x `d` cols in [-r, r].
+pub fn gen_points(rng: &mut Rng, n: usize, d: usize, r: f32) -> Vec<f32> {
+    (0..n * d).map(|_| rng.range_f32(-r, r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            &Config { cases: 10, ..Default::default() },
+            |rng, size| rng.below(size.max(1)),
+            |&x| {
+                if x < 256 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            &Config { cases: 8, ..Default::default() },
+            |rng, size| rng.below(size.max(1)),
+            |_| Err("always fails".into()),
+        );
+    }
+
+    #[test]
+    fn gen_points_shape_and_range() {
+        let mut rng = Rng::new(9);
+        let pts = gen_points(&mut rng, 10, 3, 2.0);
+        assert_eq!(pts.len(), 30);
+        assert!(pts.iter().all(|x| (-2.0..2.0).contains(x)));
+    }
+}

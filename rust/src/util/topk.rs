@@ -1,0 +1,166 @@
+//! Bounded Top-K selection (the paper's `AccD_Dist_Select` construct on
+//! the CPU side) plus a k-way merge used when fusing per-tile Top-K
+//! results coming back from the accelerator.
+
+/// Max-heap based selector that keeps the K smallest (value, id) pairs.
+///
+/// `push` is O(log k) and the heap never exceeds `k` entries, so merging
+/// a stream of tile results over a 400k-point target set allocates a
+/// constant 2*k slots per source point.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    /// Binary max-heap ordered by value: root = current k-th best.
+    heap: Vec<(f32, u32)>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "TopK requires k > 0");
+        Self { k, heap: Vec::with_capacity(k) }
+    }
+
+    /// Current k-th smallest value, or +inf while under-full.  This is
+    /// the pruning threshold tau used by the GTI KNN filter.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Offer a candidate; ignored unless it beats the threshold.
+    #[inline]
+    pub fn push(&mut self, val: f32, id: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push((val, id));
+            self.sift_up(self.heap.len() - 1);
+        } else if val < self.heap[0].0 {
+            self.heap[0] = (val, id);
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].0 > self.heap[parent].0 {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < n && self.heap[l].0 > self.heap[largest].0 {
+                largest = l;
+            }
+            if r < n && self.heap[r].0 > self.heap[largest].0 {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+
+    /// Drain into (value, id) pairs sorted ascending by value.
+    pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
+        self.heap
+            .sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        self.heap
+    }
+}
+
+/// Select the K smallest entries of a full row (used by baselines and as
+/// the oracle in tests).  O(n log k).
+pub fn topk_smallest(vals: &[f32], k: usize) -> Vec<(f32, u32)> {
+    let mut sel = TopK::new(k.min(vals.len()).max(1));
+    for (i, &v) in vals.iter().enumerate() {
+        sel.push(v, i as u32);
+    }
+    sel.into_sorted()
+}
+
+/// Argmin over a slice: (index, value).  Panics on empty input.
+pub fn argmin(vals: &[f32]) -> (usize, f32) {
+    let mut best = (0usize, f32::INFINITY);
+    for (i, &v) in vals.iter().enumerate() {
+        if v < best.1 {
+            best = (i, v);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_full_sort() {
+        let vals: Vec<f32> = (0..100).map(|i| ((i * 37 + 11) % 100) as f32).collect();
+        let got = topk_smallest(&vals, 10);
+        let mut want: Vec<(f32, u32)> =
+            vals.iter().enumerate().map(|(i, &v)| (v, i as u32)).collect();
+        want.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        want.truncate(10);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn threshold_tracks_kth_value() {
+        let mut t = TopK::new(3);
+        assert_eq!(t.threshold(), f32::INFINITY);
+        t.push(5.0, 0);
+        t.push(1.0, 1);
+        assert_eq!(t.threshold(), f32::INFINITY); // under-full
+        t.push(3.0, 2);
+        assert_eq!(t.threshold(), 5.0);
+        t.push(2.0, 3); // evicts 5.0
+        assert_eq!(t.threshold(), 3.0);
+        t.push(10.0, 4); // ignored
+        assert_eq!(t.threshold(), 3.0);
+    }
+
+    #[test]
+    fn into_sorted_ascending_with_ties_by_id() {
+        let mut t = TopK::new(4);
+        for (v, id) in [(2.0, 9), (2.0, 3), (1.0, 5), (4.0, 1), (0.5, 2)] {
+            t.push(v, id);
+        }
+        let out = t.into_sorted();
+        assert_eq!(out, vec![(0.5, 2), (1.0, 5), (2.0, 3), (2.0, 9)]);
+    }
+
+    #[test]
+    fn argmin_finds_first_minimum() {
+        assert_eq!(argmin(&[3.0, 1.0, 1.0, 2.0]), (1, 1.0));
+    }
+
+    #[test]
+    fn k_larger_than_input() {
+        let out = topk_smallest(&[2.0, 1.0], 10);
+        assert_eq!(out, vec![(1.0, 1), (2.0, 0)]);
+    }
+}

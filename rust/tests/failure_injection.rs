@@ -1,0 +1,126 @@
+//! Failure-injection tests: the runtime must fail loudly and
+//! informatively on corrupted deployments, never start on a broken
+//! artifact directory, and never panic on malformed inputs.
+
+use accd::runtime::Runtime;
+use std::io::Write;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!("accd_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn write(p: &std::path::Path, name: &str, content: &str) {
+    let mut f = std::fs::File::create(p.join(name)).unwrap();
+    f.write_all(content.as_bytes()).unwrap();
+}
+
+#[test]
+fn missing_artifact_dir_is_a_clear_error() {
+    let err = Runtime::load("/nonexistent/accd_artifacts").err().expect("expected an error");
+    let msg = err.to_string();
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_json_is_rejected() {
+    let dir = tmpdir("corrupt_json");
+    write(&dir, "manifest.json", "{ not json !!");
+    assert!(Runtime::load(&dir).is_err());
+}
+
+#[test]
+fn wrong_manifest_version_is_rejected() {
+    let dir = tmpdir("bad_version");
+    write(
+        &dir,
+        "manifest.json",
+        r#"{"version": 99, "tile": {"m": 64, "n": 64, "d_pad": [4], "knn_k": 32,
+            "kmeans_k_pad": [64], "nbody": 64, "variants": [64]}, "artifacts": []}"#,
+    );
+    let err = Runtime::load(&dir).err().expect("expected an error");
+    assert!(err.to_string().contains("version"), "{err}");
+}
+
+#[test]
+fn manifest_referencing_missing_file_is_rejected() {
+    let dir = tmpdir("missing_file");
+    write(
+        &dir,
+        "manifest.json",
+        r#"{"version": 1, "tile": {"m": 64, "n": 64, "d_pad": [4], "knn_k": 32,
+            "kmeans_k_pad": [64], "nbody": 64, "variants": [64]},
+            "artifacts": [{"name": "ghost", "file": "ghost.hlo.txt",
+            "kind": "distance", "inputs": [[64, 4], [64, 4]],
+            "meta": {"metric": "l2sq", "bm": 64, "bn": 64, "d": 4}}]}"#,
+    );
+    let err = Runtime::load(&dir).err().expect("expected an error");
+    assert!(err.to_string().contains("ghost.hlo.txt"), "{err}");
+}
+
+#[test]
+fn malformed_hlo_text_fails_at_compile_not_load() {
+    let dir = tmpdir("bad_hlo");
+    write(&dir, "garbage.hlo.txt", "this is not an HLO module");
+    write(
+        &dir,
+        "manifest.json",
+        r#"{"version": 1, "tile": {"m": 64, "n": 64, "d_pad": [4], "knn_k": 32,
+            "kmeans_k_pad": [64], "nbody": 64, "variants": [64]},
+            "artifacts": [{"name": "distance_l2sq_m64_n64_d4", "file": "garbage.hlo.txt",
+            "kind": "distance", "inputs": [[64, 4], [64, 4]],
+            "meta": {"metric": "l2sq", "bm": 64, "bn": 64, "d": 4}}]}"#,
+    );
+    // Load succeeds (lazy compilation)...
+    let rt = Runtime::load(&dir).unwrap();
+    // ...but the first execution surfaces the parse failure as an Err.
+    let a = vec![0.0f32; 64 * 4];
+    let b = vec![0.0f32; 64 * 4];
+    assert!(rt.distance_tile("l2sq", 4, &a, &b).is_err());
+}
+
+#[test]
+fn unknown_artifact_kind_is_rejected() {
+    let dir = tmpdir("bad_kind");
+    write(&dir, "x.hlo.txt", "HloModule x");
+    write(
+        &dir,
+        "manifest.json",
+        r#"{"version": 1, "tile": {"m": 64, "n": 64, "d_pad": [4], "knn_k": 32,
+            "kmeans_k_pad": [64], "nbody": 64, "variants": [64]},
+            "artifacts": [{"name": "x", "file": "x.hlo.txt",
+            "kind": "quantum", "inputs": [[64, 4]], "meta": {}}]}"#,
+    );
+    let err = Runtime::load(&dir).err().expect("expected an error");
+    assert!(err.to_string().contains("quantum"), "{err}");
+}
+
+#[test]
+fn requesting_nonexistent_tile_shape_errors_cleanly() {
+    let Ok(rt) = Runtime::load("artifacts") else {
+        eprintln!("skipping (no artifacts)");
+        return;
+    };
+    // d=7 is not a padded dim; no artifact exists.
+    let a = vec![0.0f32; 64 * 7];
+    let b = vec![0.0f32; 64 * 7];
+    let err = rt.distance_tile("l2sq", 7, &a, &b).err().expect("expected an error");
+    assert!(err.to_string().contains("no artifact"), "{err}");
+    // Unknown metric name likewise.
+    let a = vec![0.0f32; 64 * 4];
+    let b = vec![0.0f32; 64 * 4];
+    assert!(rt.distance_tile("linf", 4, &a, &b).is_err());
+}
+
+#[test]
+fn config_loader_rejects_broken_files() {
+    use accd::config::AccdConfig;
+    let dir = tmpdir("config");
+    write(&dir, "bad.json", "{");
+    assert!(AccdConfig::load(dir.join("bad.json").to_str().unwrap()).is_err());
+    assert!(AccdConfig::load("/nonexistent/accd.json").is_err());
+    write(&dir, "invalid.json", r#"{"hw": {"block": 3}}"#); // not a power of two
+    assert!(AccdConfig::load(dir.join("invalid.json").to_str().unwrap()).is_err());
+}

@@ -1,0 +1,250 @@
+//! Cross-implementation agreement tests: the AccD coordinator (GTI
+//! filter + accelerator tiles) must produce the same answers as the
+//! naive CPU baseline on every algorithm — GTI prunes *computations*,
+//! never *results*.
+//!
+//! Skips gracefully when artifacts are missing (run `make artifacts`).
+
+use accd::baselines::{naive, top};
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::synthetic;
+
+fn engine() -> Option<Engine> {
+    let mut cfg = AccdConfig::new();
+    cfg.seed = 42;
+    match Engine::new(cfg) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping integration tests (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KNN-join: exact agreement (deterministic, no iteration)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn knn_join_matches_naive_on_clustered_data() {
+    let Some(mut eng) = engine() else { return };
+    // Enough groups that radii are tight relative to cluster spacing —
+    // at bench scale the auto heuristic (~sqrt(n)/2) provides this.
+    eng.config.gti.src_groups = 32;
+    eng.config.gti.trg_groups = 48;
+    let src = synthetic::clustered(400, 6, 12, 0.01, 1);
+    let trg = synthetic::clustered(700, 6, 12, 0.01, 2);
+    let k = 10;
+    let accd = eng.knn_join(&src, &trg, k).unwrap();
+    let base = naive::knn_join(&src, &trg, k).unwrap();
+    for i in 0..src.n() {
+        assert_eq!(accd.neighbors[i].len(), k, "point {i}: wrong k");
+        for r in 0..k {
+            let (da, _) = accd.neighbors[i][r];
+            let (db, _) = base.neighbors[i][r];
+            assert!(
+                (da - db).abs() <= 1e-3 * (1.0 + db.abs()),
+                "point {i} rank {r}: accd {da} vs naive {db}"
+            );
+        }
+    }
+    // The filter must have pruned something on clustered data.
+    assert!(
+        accd.report.filter.saving_ratio() > 0.1,
+        "no pruning happened: {:?}",
+        accd.report.filter
+    );
+}
+
+#[test]
+fn knn_join_matches_naive_on_uniform_data() {
+    // Uniform data = worst case for TI; correctness must still hold.
+    let Some(mut eng) = engine() else { return };
+    let src = synthetic::uniform(300, 4, 3);
+    let trg = synthetic::uniform(500, 4, 4);
+    let k = 7;
+    let accd = eng.knn_join(&src, &trg, k).unwrap();
+    let base = naive::knn_join(&src, &trg, k).unwrap();
+    for i in 0..src.n() {
+        for r in 0..k {
+            let (da, _) = accd.neighbors[i][r];
+            let (db, _) = base.neighbors[i][r];
+            assert!((da - db).abs() <= 1e-3 * (1.0 + db.abs()), "point {i} rank {r}");
+        }
+    }
+}
+
+#[test]
+fn knn_join_k_larger_than_groups() {
+    let Some(mut eng) = engine() else { return };
+    let src = synthetic::clustered(150, 3, 4, 0.05, 5);
+    let trg = synthetic::clustered(200, 3, 4, 0.05, 6);
+    let k = 150; // bigger than any single group
+    let accd = eng.knn_join(&src, &trg, k).unwrap();
+    let base = naive::knn_join(&src, &trg, k).unwrap();
+    for i in (0..src.n()).step_by(17) {
+        for r in (0..k).step_by(13) {
+            let (da, _) = accd.neighbors[i][r];
+            let (db, _) = base.neighbors[i][r];
+            assert!((da - db).abs() <= 1e-3 * (1.0 + db.abs()), "point {i} rank {r}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// K-means: same trajectory as naive Lloyd from the same seed
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kmeans_reaches_naive_sse() {
+    let Some(mut eng) = engine() else { return };
+    let ds = synthetic::clustered(600, 8, 10, 0.03, 7);
+    let k = 16;
+    let iters = 15;
+    let accd = eng.kmeans(&ds, k, iters).unwrap();
+    let base = naive::kmeans(&ds, k, iters, eng.config.seed).unwrap();
+    // Same seed => same initial centers => identical Lloyd trajectory
+    // (GTI only skips provably-unchanged work).
+    let rel = (accd.sse - base.sse).abs() / (1.0 + base.sse);
+    assert!(rel <= 1e-3, "SSE diverged: accd {} vs naive {}", accd.sse, base.sse);
+    // Assignment agreement (allow tie-break slack).
+    let mut diff = 0usize;
+    for i in 0..ds.n() {
+        if accd.assign[i] != base.assign[i] {
+            diff += 1;
+        }
+    }
+    assert!(diff <= ds.n() / 100, "assignments diverged on {diff}/{} points", ds.n());
+}
+
+#[test]
+fn kmeans_with_tiny_k_and_k_above_pad_boundary() {
+    let Some(mut eng) = engine() else { return };
+    let ds = synthetic::clustered(400, 5, 6, 0.04, 8);
+    for k in [2usize, 65] {
+        // 2 << first pad (64); 65 crosses into the 128 pad
+        let accd = eng.kmeans(&ds, k, 8).unwrap();
+        let base = naive::kmeans(&ds, k, 8, eng.config.seed).unwrap();
+        let rel = (accd.sse - base.sse).abs() / (1.0 + base.sse);
+        assert!(rel <= 1e-3, "k={k}: accd {} vs naive {}", accd.sse, base.sse);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// N-body: trajectories match the naive integrator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nbody_positions_track_naive() {
+    let Some(mut eng) = engine() else { return };
+    // Uniform box + small interaction radius: the regime where the
+    // radius filter has real work to do (a condensed Plummer core with
+    // a large radius degenerates to all-pairs, tested separately).
+    eng.config.gti.src_groups = 64;
+    let ds = synthetic::uniform(500, 3, 9);
+    let masses = synthetic::equal_masses(500, 1.0);
+    let (steps, dt, r) = (5usize, 1e-3f32, 0.1f32);
+    let accd = eng.nbody(&ds, &masses, steps, dt, r).unwrap();
+    let base = naive::nbody(&ds, &masses, steps, dt, r).unwrap();
+    let mut max_err = 0.0f32;
+    for i in 0..ds.n() {
+        for c in 0..3 {
+            let (xa, xb) = (accd.positions.row(i)[c], base.positions.row(i)[c]);
+            max_err = max_err.max((xa - xb).abs());
+        }
+    }
+    assert!(max_err <= 2e-3, "trajectory divergence {max_err}");
+    assert!(
+        accd.report.filter.saving_ratio() > 0.1,
+        "radius filter pruned nothing: {:?}",
+        accd.report.filter
+    );
+}
+
+#[test]
+fn nbody_huge_radius_consistency() {
+    // Huge radius: every pair interacts; AccD must not drop any.
+    let Some(mut eng) = engine() else { return };
+    let ds = synthetic::plummer(150, 1.0, 10);
+    let masses = synthetic::equal_masses(150, 1.0);
+    let accd = eng.nbody(&ds, &masses, 2, 1e-3, 50.0).unwrap();
+    let base = naive::nbody(&ds, &masses, 2, 1e-3, 50.0).unwrap();
+    for i in (0..ds.n()).step_by(7) {
+        for c in 0..3 {
+            let (xa, xb) = (accd.positions.row(i)[c], base.positions.row(i)[c]);
+            assert!((xa - xb).abs() <= 1e-3 * (1.0 + xb.abs()), "particle {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TOP hybrid (Fig. 10 path) stays correct too
+// ---------------------------------------------------------------------------
+
+#[test]
+fn top_fpga_kmeans_matches_naive() {
+    let Some(mut eng) = engine() else { return };
+    let ds = synthetic::clustered(350, 5, 6, 0.04, 11);
+    let k = 12;
+    let seed = eng.config.seed;
+    let hybrid = top::kmeans_fpga(&mut eng, &ds, k, 10, seed).unwrap();
+    let base = naive::kmeans(&ds, k, 10, eng.config.seed).unwrap();
+    let rel = (hybrid.sse - base.sse).abs() / (1.0 + base.sse);
+    assert!(rel <= 1e-3, "hybrid {} vs naive {}", hybrid.sse, base.sse);
+}
+
+// ---------------------------------------------------------------------------
+// Error paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn invalid_arguments_are_rejected() {
+    let Some(mut eng) = engine() else { return };
+    let ds = synthetic::uniform(50, 4, 12);
+    assert!(eng.kmeans(&ds, 0, 5).is_err());
+    assert!(eng.kmeans(&ds, 51, 5).is_err());
+    let trg = synthetic::uniform(50, 5, 13); // dim mismatch
+    assert!(eng.knn_join(&ds, &trg, 5).is_err());
+    let masses = vec![1.0f32; 50];
+    assert!(eng.nbody(&ds, &masses, 1, 1e-3, 0.5).is_err()); // d != 3
+}
+
+// ---------------------------------------------------------------------------
+// Metric generality: L1 KNN-join (the DDSL's "Unweighted L1" metric)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn knn_join_l1_matches_scalar_reference() {
+    let Some(mut eng) = engine() else { return };
+    let src = synthetic::clustered(250, 5, 8, 0.03, 21);
+    let trg = synthetic::clustered(400, 5, 8, 0.03, 22);
+    let k = 8;
+    let accd = eng
+        .knn_join_metric(&src, &trg, k, accd::gti::Metric::L1)
+        .unwrap();
+    // Scalar L1 reference.
+    for i in (0..src.n()).step_by(11) {
+        let mut all: Vec<(f32, u32)> = (0..trg.n())
+            .map(|j| {
+                let d: f32 = src
+                    .points
+                    .row(i)
+                    .iter()
+                    .zip(trg.points.row(j))
+                    .map(|(x, y)| (x - y).abs())
+                    .sum();
+                (d, j as u32)
+            })
+            .collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        for r in 0..k {
+            let (da, _) = accd.neighbors[i][r];
+            assert!(
+                (da - all[r].0).abs() <= 1e-3 * (1.0 + all[r].0),
+                "L1 point {i} rank {r}: accd {da} vs ref {}",
+                all[r].0
+            );
+        }
+    }
+}

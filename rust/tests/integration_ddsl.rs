@@ -1,0 +1,115 @@
+//! DDSL-to-execution integration: compile the shipped example programs
+//! and run the resulting plans end-to-end through the engine.
+
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::synthetic;
+use accd::ddsl::{self, plan::PlanKind};
+
+fn engine() -> Option<Engine> {
+    match Engine::new(AccdConfig::new()) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping ddsl integration (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn read(path: &str) -> String {
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("cannot read {path}: {e}"))
+}
+
+#[test]
+fn example_programs_compile_with_expected_strategies() {
+    let km = ddsl::compile_program(&read("examples/ddsl/kmeans.dd")).unwrap();
+    assert!(matches!(km.kind, PlanKind::KmeansLike { .. }));
+    assert!(km.strategy.trace_based && km.strategy.group_level && !km.strategy.two_landmark);
+
+    let knn = ddsl::compile_program(&read("examples/ddsl/knn_join.dd")).unwrap();
+    assert!(matches!(knn.kind, PlanKind::KnnJoinLike { k: 50, .. }));
+    assert!(knn.strategy.two_landmark && !knn.strategy.trace_based);
+
+    let nb = ddsl::compile_program(&read("examples/ddsl/nbody.dd")).unwrap();
+    assert!(matches!(nb.kind, PlanKind::NbodyLike { .. }));
+    assert!(nb.strategy.two_landmark && nb.strategy.trace_based && nb.strategy.group_level);
+}
+
+#[test]
+fn compiled_kmeans_plan_executes() {
+    let Some(mut eng) = engine() else { return };
+    // Shrunk copy of the paper's program (small sizes for CI).
+    let src = r#"
+        DVar K int 12;
+        DVar D int 6;
+        DVar psize int 900;
+        DVar csize int 12;
+        DSet pSet float psize D;
+        DSet cSet float csize D;
+        DSet distMat float psize csize;
+        DSet idMat int psize csize;
+        DSet pkMat int psize K;
+        DVar S int;
+        AccD_Iter(6) {
+            S = false;
+            AccD_Comp_Dist(pSet, cSet, distMat, idMat, D, "L2", 0);
+            AccD_Dist_Select(distMat, idMat, K, "smallest", pkMat);
+            AccD_Update(cSet, pSet, pkMat, S)
+        }
+    "#;
+    let plan = ddsl::compile_program(src).unwrap();
+    let PlanKind::KmeansLike { k, max_iters, .. } = plan.kind else {
+        panic!("wrong plan kind")
+    };
+    let (_, psize, pdim) = plan.bindings[0];
+    let ds = synthetic::clustered(psize, pdim, 12, 0.03, 5);
+    let out = eng.kmeans(&ds, k, max_iters).unwrap();
+    assert_eq!(out.assign.len(), psize);
+    assert!(out.sse.is_finite() && out.sse > 0.0);
+    assert!(out.iterations <= max_iters);
+}
+
+#[test]
+fn compiled_knn_plan_executes() {
+    let Some(mut eng) = engine() else { return };
+    let src = r#"
+        DVar K int 9;
+        DVar D int 4;
+        DSet qSet float 300 D;
+        DSet tSet float 800 D;
+        DSet distMat float 300 800;
+        DSet idMat int 300 800;
+        DSet knnMat int 300 K;
+        AccD_Comp_Dist(qSet, tSet, distMat, idMat, D, "L2", 0);
+        AccD_Dist_Select(distMat, idMat, K, "smallest", knnMat);
+    "#;
+    let plan = ddsl::compile_program(src).unwrap();
+    let PlanKind::KnnJoinLike { k, .. } = plan.kind else { panic!("wrong kind") };
+    let (_, ssize, sdim) = plan.bindings[0];
+    let (_, tsize, tdim) = plan.bindings[1];
+    assert_eq!(sdim, tdim);
+    let q = synthetic::clustered(ssize, sdim, 8, 0.04, 6);
+    let t = synthetic::clustered(tsize, tdim, 8, 0.04, 7);
+    let out = eng.knn_join(&q, &t, k).unwrap();
+    assert_eq!(out.neighbors.len(), ssize);
+    assert!(out.neighbors.iter().all(|nb| nb.len() == k));
+    // Results sorted ascending.
+    for nb in &out.neighbors {
+        for w in nb.windows(2) {
+            assert!(w[0].0 <= w[1].0 + 1e-6);
+        }
+    }
+}
+
+#[test]
+fn malformed_programs_fail_with_diagnostics() {
+    // Lexer error.
+    assert!(ddsl::compile_program("DVar $ int;").is_err());
+    // Parser error.
+    assert!(ddsl::compile_program("DVar x int").is_err());
+    // Type error.
+    assert!(ddsl::compile_program("DSet a float 0 2;").is_err());
+    // Planner error (no distance computation).
+    let err = ddsl::compile_program("DVar x int 1; x = 2;").unwrap_err();
+    assert!(err.to_string().contains("AccD_Comp_Dist"));
+}

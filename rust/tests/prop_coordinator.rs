@@ -1,0 +1,298 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! state), using the in-tree `util::prop` runner.
+//!
+//! These are the safety arguments of the system as executable checks:
+//! GTI candidate sets must always contain every group the exact answer
+//! needs, layout schedules must be permutations, padding must be
+//! value-neutral, and the pipeline must conserve jobs in FIFO order.
+
+use accd::data::{synthetic, Matrix};
+use accd::gti::{bounds, Grouping, KnnFilter, NbodyFilter};
+use accd::layout::{self, PackedSet};
+use accd::util::prop::{self, Config};
+use accd::util::rng::Rng;
+use accd::util::topk::topk_smallest;
+
+fn rand_points(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+    Matrix::from_vec(prop::gen_points(rng, n, d, 3.0), n, d).unwrap()
+}
+
+/// KNN filter safety: for every source point, its true K nearest target
+/// points all live inside the candidate target groups of its source
+/// group — pruning never removes a true neighbor.
+#[test]
+fn prop_knn_filter_never_prunes_true_neighbors() {
+    prop::check(
+        &Config { cases: 16, max_size: 220, seed: 0x4B, ..Default::default() },
+        |rng, size| {
+            let n_src = 20 + size / 2;
+            let n_trg = 40 + size;
+            let d = 1 + rng.below(6);
+            let k = 1 + rng.below(12);
+            let zs = 2 + rng.below(8);
+            let zt = 2 + rng.below(10);
+            (rand_points(rng, n_src, d), rand_points(rng, n_trg, d), k, zs, zt)
+        },
+        |(src, trg, k, zs, zt)| {
+            let gs = Grouping::build(src, *zs, 2, 4096, 1).map_err(|e| e.to_string())?;
+            let gt = Grouping::build(trg, *zt, 2, 4096, 2).map_err(|e| e.to_string())?;
+            let mut filter = KnnFilter::new();
+            let (cands, _) = filter.candidates(&gs, &gt, *k);
+            for i in 0..src.rows() {
+                let sg = gs.assign[i] as usize;
+                let cand_set: std::collections::HashSet<u32> =
+                    cands[sg].iter().copied().collect();
+                // True top-k by exhaustive scan.
+                let dists: Vec<f32> =
+                    (0..trg.rows()).map(|j| src.dist2(i, trg, j)).collect();
+                for (dist, j) in topk_smallest(&dists, *k) {
+                    let tg = gt.assign[j as usize];
+                    if !cand_set.contains(&tg) {
+                        return Err(format!(
+                            "point {i}: true neighbor {j} (d2={dist}) in pruned group {tg}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// N-body filter safety: every pair of points within radius r lives in
+/// a surviving (group, group) pair — even after drift widening.
+#[test]
+fn prop_nbody_filter_covers_all_interactions() {
+    prop::check(
+        &Config { cases: 12, max_size: 150, seed: 0xB0D1, ..Default::default() },
+        |rng, size| {
+            let n = 30 + size;
+            let z = 2 + rng.below(12);
+            let r = 0.3 + rng.f32() * 0.8;
+            (rand_points(rng, n, 3), z, r)
+        },
+        |(pts, z, r)| {
+            let mut grouping = Grouping::build(pts, *z, 2, 4096, 3).map_err(|e| e.to_string())?;
+            let mut filter = NbodyFilter::new(&grouping, 0.25);
+            // Perturb positions (simulating a step) and re-derive drift.
+            let mut moved = pts.clone();
+            let mut rng = Rng::new(99);
+            for i in 0..moved.rows() {
+                for v in moved.row_mut(i) {
+                    *v += rng.range_f32(-0.05, 0.05);
+                }
+            }
+            let drifts = grouping.recenter(&moved);
+            filter.step(&grouping, &drifts, *r);
+            let cands = filter.candidates(&grouping, *r);
+            for i in 0..moved.rows() {
+                for j in 0..moved.rows() {
+                    if moved.dist2(i, &moved, j).sqrt() <= *r {
+                        let (ga, gb) =
+                            (grouping.assign[i] as usize, grouping.assign[j] as u32);
+                        if !cands[ga].contains(&gb) {
+                            return Err(format!(
+                                "interacting pair ({i},{j}) lost: groups ({ga},{gb})"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Eq. 2 + widening soundness on arbitrary geometry: group-pair bounds
+/// always contain the true min/max member distances.
+#[test]
+fn prop_group_bounds_contain_extremes() {
+    prop::check(
+        &Config { cases: 24, max_size: 120, seed: 0xE92, ..Default::default() },
+        |rng, size| {
+            let n = 20 + size;
+            let d = 1 + rng.below(5);
+            let z = 2 + rng.below(6);
+            (rand_points(rng, n, d), z)
+        },
+        |(pts, z)| {
+            let g = Grouping::build(pts, *z, 2, 4096, 5).map_err(|e| e.to_string())?;
+            let bnds = bounds::group_pair_bounds(&g, &g);
+            for (a, ma) in g.members.iter().enumerate() {
+                for (b, mb) in g.members.iter().enumerate() {
+                    for &i in ma.iter().take(4) {
+                        for &j in mb.iter().take(4) {
+                            let d = pts.dist2(i as usize, pts, j as usize).sqrt();
+                            let bd = bnds[a][b];
+                            if d < bd.lb - 1e-3 || d > bd.ub + 1e-3 {
+                                return Err(format!(
+                                    "pair ({i},{j}) d={d} outside [{}, {}]",
+                                    bd.lb, bd.ub
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Packing state: PackedSet is a value-preserving permutation with
+/// contiguous group ranges, for any grouping.
+#[test]
+fn prop_packing_is_value_preserving_permutation() {
+    prop::check(
+        &Config { cases: 24, max_size: 200, seed: 0xFACC, ..Default::default() },
+        |rng, size| {
+            let n = 10 + size;
+            let d = 1 + rng.below(8);
+            let z = 1 + rng.below(16);
+            (rand_points(rng, n, d), z)
+        },
+        |(pts, z)| {
+            let g = Grouping::build(pts, *z, 2, 4096, 7).map_err(|e| e.to_string())?;
+            let packed = PackedSet::pack(pts, &g, 4);
+            let n = pts.rows();
+            // Permutation.
+            let mut seen = vec![false; n];
+            for &old in &packed.new2old {
+                if seen[old as usize] {
+                    return Err(format!("point {old} packed twice"));
+                }
+                seen[old as usize] = true;
+            }
+            // Value preservation + inverse consistency.
+            for old in 0..n {
+                let new = packed.old2new[old] as usize;
+                if packed.points.row(new) != pts.row(old) {
+                    return Err(format!("row {old} corrupted by packing"));
+                }
+            }
+            // Contiguous coverage.
+            let covered: u32 = packed.group_range.iter().map(|&(_, l)| l).sum();
+            if covered as usize != n {
+                return Err("group ranges do not cover all points".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Batching state: feature-axis zero padding never changes distances
+/// (checked against scalar math for random shapes).
+#[test]
+fn prop_zero_padding_distance_neutral() {
+    prop::check(
+        &Config { cases: 24, max_size: 60, seed: 0x9AD, ..Default::default() },
+        |rng, size| {
+            let n = 2 + size / 4;
+            let d = 1 + rng.below(9);
+            let d_pad = d + rng.below(8);
+            (rand_points(rng, n, d), d_pad.max(d))
+        },
+        |(pts, d_pad)| {
+            let n = pts.rows();
+            let padded = pts.padded(n, *d_pad).map_err(|e| e.to_string())?;
+            let pm = Matrix::from_vec(padded, n, *d_pad).map_err(|e| e.to_string())?;
+            for i in 0..n.min(8) {
+                for j in 0..n.min(8) {
+                    let d0 = pts.dist2(i, pts, j);
+                    let d1 = pm.dist2(i, &pm, j);
+                    if (d0 - d1).abs() > 1e-4 * (1.0 + d0) {
+                        return Err(format!("padding changed d2({i},{j}): {d0} -> {d1}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Routing: layout schedule is always a permutation, and grouping
+/// identical candidate sets never decreases measured reuse.
+#[test]
+fn prop_layout_schedule_routing() {
+    prop::check(
+        &Config { cases: 32, max_size: 60, seed: 0x105, ..Default::default() },
+        |rng, size| {
+            let zs = 2 + size;
+            let zt = 12usize;
+            // Draw from a few "templates" so duplicates actually occur.
+            let templates: Vec<Vec<u32>> = (0..4)
+                .map(|_| {
+                    let mut t: Vec<u32> =
+                        (0..zt as u32).filter(|_| rng.f32() < 0.4).collect();
+                    t.sort_unstable();
+                    t
+                })
+                .collect();
+            (0..zs)
+                .map(|_| templates[rng.below(templates.len())].clone())
+                .collect::<Vec<_>>()
+        },
+        |cands| {
+            let order = layout::schedule_source_groups(cands);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            if sorted != (0..cands.len() as u32).collect::<Vec<_>>() {
+                return Err("schedule is not a permutation".into());
+            }
+            let natural: Vec<u32> = (0..cands.len() as u32).collect();
+            let nat = layout::measure_reuse(&natural, cands);
+            let sch = layout::measure_reuse(&order, cands);
+            if sch.reused < nat.reused {
+                return Err(format!(
+                    "template-duplicated sets: scheduled reuse {} < natural {}",
+                    sch.reused, nat.reused
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Grouping state invariants under random recentering cycles (the
+/// N-body steady state): membership fixed, radii stay covering.
+#[test]
+fn prop_grouping_survives_recentering_cycles() {
+    prop::check(
+        &Config { cases: 10, max_size: 120, seed: 0x6E6, ..Default::default() },
+        |rng, size| {
+            let n = 30 + size;
+            let z = 2 + rng.below(8);
+            (rand_points(rng, n, 3), z)
+        },
+        |(pts, z)| {
+            let mut moved = pts.clone();
+            let mut g = Grouping::build(pts, *z, 2, 4096, 11).map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(13);
+            for _cycle in 0..4 {
+                for i in 0..moved.rows() {
+                    for v in moved.row_mut(i) {
+                        *v += rng.range_f32(-0.1, 0.1);
+                    }
+                }
+                let drifts = g.recenter(&moved);
+                if drifts.iter().any(|d| !d.is_finite()) {
+                    return Err("non-finite drift".into());
+                }
+                g.check_invariants(&moved)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Dataset generators produce what the Table V specs promise.
+#[test]
+fn prop_tablev_specs_generate_exact_shapes() {
+    for spec in accd::data::kmeans_datasets().iter().take(2) {
+        let small = spec.scaled(0.01);
+        let ds = small.generate();
+        assert_eq!(ds.n(), small.size);
+        assert_eq!(ds.d(), small.dim);
+    }
+    let _ = synthetic::uniform(10, 2, 1); // module reachable
+}

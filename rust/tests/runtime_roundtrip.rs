@@ -1,0 +1,261 @@
+//! Integration tests for the AOT bridge: python-lowered HLO artifacts
+//! loaded and executed through the rust PJRT runtime, checked against
+//! rust-side scalar reference computations.
+//!
+//! Requires `make artifacts` to have run (the whole test binary skips
+//! gracefully when the manifest is absent so `cargo test` stays usable
+//! mid-bootstrap).
+
+use accd::data::Matrix;
+use accd::runtime::Runtime;
+use accd::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping runtime tests (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    let data: Vec<f32> = (0..rows * cols).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+    Matrix::from_vec(data, rows, cols).unwrap()
+}
+
+/// Scalar reference for the squared-L2 distance tile.
+fn ref_l2sq(a: &Matrix, b: &Matrix) -> Vec<f32> {
+    let mut out = vec![0.0f32; a.rows() * b.rows()];
+    for i in 0..a.rows() {
+        for j in 0..b.rows() {
+            out[i * b.rows() + j] = a.dist2(i, b, j);
+        }
+    }
+    out
+}
+
+fn ref_l1(a: &Matrix, b: &Matrix) -> Vec<f32> {
+    let mut out = vec![0.0f32; a.rows() * b.rows()];
+    for i in 0..a.rows() {
+        for j in 0..b.rows() {
+            out[i * b.rows() + j] =
+                a.row(i).iter().zip(b.row(j)).map(|(x, y)| (x - y).abs()).sum();
+        }
+    }
+    out
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let scale = 1.0 + w.abs();
+        assert!(
+            (g - w).abs() <= tol * scale,
+            "{what}: idx {i}: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn distance_tile_l2sq_matches_scalar_reference() {
+    let Some(rt) = runtime() else { return };
+    let t = rt.manifest().tile.clone();
+    let mut rng = Rng::new(1);
+    for &d in &[4usize, 16, 64] {
+        let a = rand_mat(&mut rng, t.m, d);
+        let b = rand_mat(&mut rng, t.n, d);
+        let got = rt.distance_tile("l2sq", d, a.as_slice(), b.as_slice()).unwrap();
+        assert_close(&got, &ref_l2sq(&a, &b), 1e-4, &format!("l2sq d={d}"));
+    }
+}
+
+#[test]
+fn distance_tile_l1_matches_scalar_reference() {
+    let Some(rt) = runtime() else { return };
+    let t = rt.manifest().tile.clone();
+    let mut rng = Rng::new(2);
+    let d = 8;
+    let a = rand_mat(&mut rng, t.m, d);
+    let b = rand_mat(&mut rng, t.n, d);
+    let got = rt.distance_tile("l1", d, a.as_slice(), b.as_slice()).unwrap();
+    assert_close(&got, &ref_l1(&a, &b), 1e-4, "l1");
+}
+
+#[test]
+fn zero_padding_on_feature_axis_is_distance_neutral() {
+    let Some(rt) = runtime() else { return };
+    let t = rt.manifest().tile.clone();
+    let mut rng = Rng::new(3);
+    let d = 5; // pads to 8
+    let d_pad = t.pad_d(d).unwrap();
+    assert_eq!(d_pad, 8);
+    let a = rand_mat(&mut rng, t.m, d);
+    let b = rand_mat(&mut rng, t.n, d);
+    let ap = a.padded(t.m, d_pad).unwrap();
+    let bp = b.padded(t.n, d_pad).unwrap();
+    let got = rt.distance_tile("l2sq", d_pad, &ap, &bp).unwrap();
+    assert_close(&got, &ref_l2sq(&a, &b), 1e-4, "padded l2sq");
+}
+
+#[test]
+fn kmeans_assign_tile_matches_scalar_argmin() {
+    let Some(rt) = runtime() else { return };
+    let t = rt.manifest().tile.clone();
+    let mut rng = Rng::new(4);
+    let d = 16;
+    let k_pad = t.kmeans_k_pad[0];
+    let k = k_pad - 7; // real centers fewer than the padded slot count
+    let pts = rand_mat(&mut rng, t.m, d);
+    let mut centers_slab = vec![0.0f32; k_pad * d];
+    for c in 0..k {
+        for x in 0..d {
+            centers_slab[c * d + x] = rng.range_f32(-2.0, 2.0);
+        }
+    }
+    for c in k..k_pad {
+        centers_slab[c * d] = 1.0e15; // sentinel
+    }
+    let (idx, dist) = rt.kmeans_assign_tile(k_pad, d, pts.as_slice(), &centers_slab).unwrap();
+    let centers = Matrix::from_vec(centers_slab[..k * d].to_vec(), k, d).unwrap();
+    for i in 0..t.m {
+        let mut best = (0usize, f32::INFINITY);
+        for c in 0..k {
+            let d2 = pts.dist2(i, &centers, c);
+            if d2 < best.1 {
+                best = (c, d2);
+            }
+        }
+        assert!((idx[i] as usize) < k, "row {i} assigned to padded slot {}", idx[i]);
+        let scale = 1.0 + best.1.abs();
+        assert!(
+            (dist[i] - best.1).abs() <= 1e-4 * scale,
+            "row {i}: dist {} vs ref {}",
+            dist[i],
+            best.1
+        );
+        // Index must achieve (near-)minimal distance even under ties.
+        let d_at_idx = pts.dist2(i, &centers, idx[i] as usize);
+        assert!((d_at_idx - best.1).abs() <= 1e-4 * scale);
+    }
+}
+
+#[test]
+fn knn_tile_returns_sorted_topk_consistent_with_distances() {
+    let Some(rt) = runtime() else { return };
+    let t = rt.manifest().tile.clone();
+    let mut rng = Rng::new(5);
+    let d = 16;
+    let a = rand_mat(&mut rng, t.m, d);
+    let b = rand_mat(&mut rng, t.n, d);
+    let out = rt.knn_tile(d, a.as_slice(), b.as_slice()).unwrap();
+    assert_eq!(out.rows, t.m);
+    assert_eq!(out.k, t.knn_k);
+    let full = ref_l2sq(&a, &b);
+    for r in 0..out.rows {
+        let mut row: Vec<f32> = full[r * t.n..(r + 1) * t.n].to_vec();
+        row.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for j in 0..out.k {
+            let got = out.vals[r * out.k + j];
+            let want = row[j];
+            assert!(
+                (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "row {r} rank {j}: got {got}, want {want}"
+            );
+            // Index consistency: vals[j] equals the distance at idx[j].
+            let at = full[r * t.n + out.idx[r * out.k + j] as usize];
+            assert!((got - at).abs() <= 1e-4 * (1.0 + at.abs()));
+        }
+    }
+}
+
+#[test]
+fn nbody_tile_matches_scalar_force_and_respects_radius() {
+    let Some(rt) = runtime() else { return };
+    let t = rt.manifest().tile.clone();
+    let bt = t.nbody;
+    let mut rng = Rng::new(6);
+    let pos_i: Vec<f32> = (0..bt * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let pos_j: Vec<f32> = (0..bt * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mass: Vec<f32> = (0..bt).map(|_| rng.range_f32(0.1, 1.0)).collect();
+    let (eps2, rmax2) = (1e-4f32, 0.8f32);
+    let got = rt.nbody_accel_tile_masked(&pos_i, &pos_j, &mass, eps2, rmax2).unwrap();
+    for i in 0..bt {
+        let mut want = [0.0f64; 3];
+        for j in 0..bt {
+            let dx = (pos_i[i * 3] - pos_j[j * 3]) as f64;
+            let dy = (pos_i[i * 3 + 1] - pos_j[j * 3 + 1]) as f64;
+            let dz = (pos_i[i * 3 + 2] - pos_j[j * 3 + 2]) as f64;
+            let r2 = dx * dx + dy * dy + dz * dz;
+            if r2 > rmax2 as f64 {
+                continue; // outside interaction radius
+            }
+            let r2s = r2 + eps2 as f64;
+            let inv_r3 = 1.0 / (r2s.sqrt() * r2s);
+            let w = mass[j] as f64 * inv_r3;
+            want[0] -= dx * w;
+            want[1] -= dy * w;
+            want[2] -= dz * w;
+        }
+        for c in 0..3 {
+            let g = got[i * 3 + c] as f64;
+            assert!(
+                (g - want[c]).abs() <= 1e-3 * (1.0 + want[c].abs()),
+                "particle {i} comp {c}: got {g}, want {}",
+                want[c]
+            );
+        }
+    }
+}
+
+#[test]
+fn zero_mass_padding_contributes_nothing() {
+    let Some(rt) = runtime() else { return };
+    let t = rt.manifest().tile.clone();
+    let bt = t.nbody;
+    let mut rng = Rng::new(7);
+    let pos_i: Vec<f32> = (0..bt * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mut pos_j: Vec<f32> = (0..bt * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mut mass: Vec<f32> = (0..bt).map(|_| rng.range_f32(0.1, 1.0)).collect();
+    // Zero the second half's masses and scramble their positions: the
+    // result must not change (padding-row correctness).
+    for j in bt / 2..bt {
+        mass[j] = 0.0;
+    }
+    let a1 = rt.nbody_accel_tile_masked(&pos_i, &pos_j, &mass, 1e-4, 10.0).unwrap();
+    for j in bt / 2..bt {
+        pos_j[j * 3] += 5.0;
+    }
+    let a2 = rt.nbody_accel_tile_masked(&pos_i, &pos_j, &mass, 1e-4, 10.0).unwrap();
+    for (x, y) in a1.iter().zip(&a2) {
+        assert!((x - y).abs() <= 1e-5 * (1.0 + x.abs()));
+    }
+}
+
+#[test]
+fn manifest_covers_all_padded_dims() {
+    let Some(rt) = runtime() else { return };
+    let t = rt.manifest().tile.clone();
+    for &d in &t.d_pad {
+        let name = rt.manifest().distance_name("l2sq", d);
+        assert!(rt.manifest().get(&name).is_some(), "missing artifact {name}");
+    }
+    for &kp in &t.kmeans_k_pad {
+        let name = rt.manifest().kmeans_name(kp, t.d_pad[0]);
+        assert!(rt.manifest().get(&name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn executables_are_cached_not_recompiled() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(8);
+    let t = rt.manifest().tile.clone();
+    let a = rand_mat(&mut rng, t.m, 4);
+    let b = rand_mat(&mut rng, t.n, 4);
+    let _ = rt.distance_tile("l2sq", 4, a.as_slice(), b.as_slice()).unwrap();
+    let after_first = rt.compiled_count();
+    let _ = rt.distance_tile("l2sq", 4, a.as_slice(), b.as_slice()).unwrap();
+    assert_eq!(rt.compiled_count(), after_first, "second call recompiled");
+}
