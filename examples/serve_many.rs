@@ -1,0 +1,70 @@
+//! Batched multi-query serving: the `accd::serve` tour.
+//!
+//! Simulates a serving deployment: many users issue KNN / K-means /
+//! N-body queries against a handful of hot datasets.  The batcher
+//! coalesces compatible queries into cohorts (shared groupings, shared
+//! target slabs, one tagged device pipeline), deduplicates identical
+//! requests, and reports what it amortized — while returning results
+//! identical to solo `Engine` calls (see rust/tests/serve_parity.rs).
+//!
+//! Run with:  cargo run --release --example serve_many
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::synthetic;
+use accd::serve::{QueryBatcher, ServeRequest, ServeResponse};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = AccdConfig::new();
+    let engine = Engine::new(cfg.clone())?;
+    let mut batcher = QueryBatcher::new(engine, cfg.serve.clone());
+
+    // Two hot datasets every user queries against.
+    let catalog = Arc::new(synthetic::clustered(8_000, 8, 40, 0.02, 7));
+    let particles = Arc::new(synthetic::uniform(400, 3, 8));
+    let masses = Arc::new(synthetic::equal_masses(400, 1.0));
+
+    // A burst of traffic: 10 users, some asking the same thing.
+    for user in 0..8u64 {
+        // 4 unique query vectors, each asked twice.
+        let src = Arc::new(synthetic::clustered(300, 8, 6, 0.03, 50 + user % 4));
+        batcher.submit(ServeRequest::knn(src, catalog.clone(), 10));
+    }
+    batcher.submit(ServeRequest::kmeans(catalog.clone(), 32, 8));
+    batcher.submit(ServeRequest::nbody(particles, masses, 3, 1e-3, 0.12));
+    println!("submitted {} queries; flushing...", batcher.pending_len());
+
+    let t = Instant::now();
+    let responses = batcher.flush()?;
+    let secs = t.elapsed().as_secs_f64();
+
+    for (id, resp) in &responses {
+        match resp {
+            ServeResponse::Knn(r) => println!(
+                "  query {id}: knn k={} -> {} result rows (mean k-th d^2 {:.4})",
+                r.k,
+                r.neighbors.len(),
+                r.report.quality
+            ),
+            ServeResponse::Kmeans(r) => println!(
+                "  query {id}: kmeans -> sse {:.3} in {} iters",
+                r.sse, r.iterations
+            ),
+            ServeResponse::Nbody(r) => println!(
+                "  query {id}: nbody -> {} steps, kinetic energy {:.6}",
+                r.steps, r.report.quality
+            ),
+        }
+    }
+
+    println!("\nflush took {secs:.3}s\n");
+    println!("{}", batcher.stats().summary());
+    anyhow::ensure!(
+        batcher.stats().tiles_shared > 0,
+        "coalescible burst shared no tiles"
+    );
+    Ok(())
+}

@@ -89,7 +89,7 @@ fn tile_mixing() {
         TileJob {
             src: accd::fpga::FpgaDevice::pad_rows(&src.points, &ids, rows_pad, d_pad),
             src_rows: ids.len(),
-            trg: src_trg_slab(&trg.points, cols, d, d_pad),
+            trg: std::sync::Arc::new(src_trg_slab(&trg.points, cols, d, d_pad)),
             trg_rows: cols,
             d,
             d_padded: d_pad,

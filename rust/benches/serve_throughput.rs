@@ -1,0 +1,120 @@
+//! Serving-throughput bench: N coalescible queries through
+//! `serve::QueryBatcher` vs the same N queries as independent `Engine`
+//! calls.
+//!
+//! The batched path amortizes exactly what a serving deployment
+//! amortizes: the target grouping is built once per cohort instead of
+//! once per query, packed target slabs are shared across queries with
+//! identical candidate sets, and duplicated queries are answered from
+//! one execution.  `ServeStats` reports the tiles-shared ratio that
+//! proves the coalescing happened.
+//!
+//! Scale down with ACCD_BENCH_FAST=1 (CI).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::{synthetic, Dataset};
+use accd::serve::{QueryBatcher, ServeRequest};
+use accd::util::bench::{fmt_x, Table};
+
+fn main() {
+    let fast = std::env::var("ACCD_BENCH_FAST").as_deref() == Ok("1");
+    let (n_trg, n_src) = if fast { (4_000, 300) } else { (20_000, 1_500) };
+    let k = 10;
+
+    // One hot target dataset, 6 distinct user queries, each submitted
+    // twice (live traffic repeats itself) -> 12 coalescible queries.
+    let trg = Arc::new(synthetic::clustered(n_trg, 8, 50, 0.02, 1));
+    let srcs: Vec<Arc<Dataset>> = (0..6)
+        .map(|i| Arc::new(synthetic::clustered(n_src, 8, 10, 0.03, 100 + i as u64)))
+        .collect();
+    let queries: Vec<Arc<Dataset>> = (0..12).map(|i| srcs[i % 6].clone()).collect();
+    eprintln!(
+        "serve_throughput: {} KNN queries (6 unique) x k={k} against one {}-point target",
+        queries.len(),
+        n_trg
+    );
+
+    let cfg = AccdConfig::new();
+
+    // --- Sequential: one Engine call per query --------------------------
+    let mut engine = Engine::new(cfg.clone()).expect("engine");
+    let t = Instant::now();
+    let mut seq_results = Vec::new();
+    for src in &queries {
+        seq_results.push(engine.knn_join(src, &trg, k).expect("solo knn"));
+    }
+    let seq_secs = t.elapsed().as_secs_f64();
+
+    // --- Batched: one flush through the serving runtime ------------------
+    let mut batcher =
+        QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), cfg.serve.clone());
+    for src in &queries {
+        batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), k));
+    }
+    let t = Instant::now();
+    let batched = batcher.flush().expect("flush");
+    let bat_secs = t.elapsed().as_secs_f64();
+
+    // --- Batched again (warm grouping cache: steady-state serving) -------
+    for src in &queries {
+        batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), k));
+    }
+    let t = Instant::now();
+    let _ = batcher.flush().expect("warm flush");
+    let warm_secs = t.elapsed().as_secs_f64();
+
+    // Parity spot-check: the bench never reports a win on wrong answers.
+    for (i, (_, resp)) in batched.iter().enumerate() {
+        let got = resp.as_knn().expect("knn response");
+        assert_eq!(
+            got.neighbors, seq_results[i].neighbors,
+            "batched result diverged from sequential on query {i}"
+        );
+    }
+
+    let stats = batcher.stats();
+    let mut table = Table::new(&["path", "wall (s)", "q/s", "speedup"]);
+    let q = queries.len() as f64;
+    table.row(vec![
+        "sequential Engine calls".into(),
+        format!("{seq_secs:.3}"),
+        format!("{:.1}", q / seq_secs),
+        fmt_x(1.0),
+    ]);
+    table.row(vec![
+        "serve (cold cache)".into(),
+        format!("{bat_secs:.3}"),
+        format!("{:.1}", q / bat_secs),
+        fmt_x(seq_secs / bat_secs),
+    ]);
+    table.row(vec![
+        "serve (warm cache)".into(),
+        format!("{warm_secs:.3}"),
+        format!("{:.1}", q / warm_secs),
+        fmt_x(seq_secs / warm_secs),
+    ]);
+    table.print("Batched serving vs sequential engine calls");
+    println!("\n{}", stats.summary());
+
+    if stats.tiles_shared == 0 {
+        eprintln!("FAIL: coalescible queries shared no tiles — coalescing regressed");
+        std::process::exit(1);
+    }
+    if bat_secs >= seq_secs {
+        eprintln!(
+            "WARN: batched ({bat_secs:.3}s) did not beat sequential ({seq_secs:.3}s) \
+             on this machine/scale"
+        );
+    }
+    println!(
+        "\ntiles shared: {}/{} ({:.1}%) | grouping cache hit rate {:.1}%",
+        stats.tiles_shared,
+        stats.tiles_total,
+        100.0 * stats.tiles_shared_ratio(),
+        100.0 * stats.cache_hit_rate(),
+    );
+}

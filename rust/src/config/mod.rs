@@ -48,11 +48,35 @@ impl Default for HwConfig {
     }
 }
 
+/// Serving-runtime parameters (`accd::serve`) — the batched multi-query
+/// layer on top of the engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Maximum queries coalesced per flush (0 = unbounded).  A flush
+    /// processes at most this many pending queries; the rest stay
+    /// queued for the next flush.
+    pub max_batch: usize,
+    /// LRU capacity (entries) of the grouping cache.
+    pub grouping_cache_cap: usize,
+    /// Bounded-queue depth of the merged device pipeline.
+    pub pipeline_depth: usize,
+    /// Deduplicate identical in-flight queries within a flush.
+    pub dedup: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, grouping_cache_cap: 32, pipeline_depth: 8, dedup: true }
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct AccdConfig {
     pub gti: GtiConfig,
     pub hw: HwConfig,
+    /// Serving-runtime knobs (`accd::serve`).
+    pub serve: ServeConfig,
     /// Artifact directory (default "artifacts").
     pub artifact_dir: String,
     /// Use the accelerator (false = CPU-only AccD, Fig. 10's third bar).
@@ -66,6 +90,7 @@ impl AccdConfig {
         Self {
             gti: GtiConfig::default(),
             hw: HwConfig::default(),
+            serve: ServeConfig::default(),
             artifact_dir: "artifacts".to_string(),
             use_fpga: true,
             seed: 42,
@@ -90,6 +115,19 @@ impl AccdConfig {
             cfg.hw.simd = h.get("simd").as_usize().unwrap_or(cfg.hw.simd);
             cfg.hw.unroll = h.get("unroll").as_usize().unwrap_or(cfg.hw.unroll);
             cfg.hw.freq_mhz = h.get("freq_mhz").as_f64().unwrap_or(cfg.hw.freq_mhz);
+        }
+        let s = v.get("serve");
+        if !matches!(s, Value::Null) {
+            cfg.serve.max_batch = s.get("max_batch").as_usize().unwrap_or(cfg.serve.max_batch);
+            cfg.serve.grouping_cache_cap = s
+                .get("grouping_cache_cap")
+                .as_usize()
+                .unwrap_or(cfg.serve.grouping_cache_cap);
+            cfg.serve.pipeline_depth =
+                s.get("pipeline_depth").as_usize().unwrap_or(cfg.serve.pipeline_depth);
+            if let Some(b) = s.get("dedup").as_bool() {
+                cfg.serve.dedup = b;
+            }
         }
         if let Some(s) = v.get("artifact_dir").as_str() {
             cfg.artifact_dir = s.to_string();
@@ -123,6 +161,12 @@ impl AccdConfig {
         if self.hw.freq_mhz <= 0.0 {
             return Err(Error::Config("hw.freq_mhz must be positive".into()));
         }
+        if self.serve.pipeline_depth == 0 {
+            return Err(Error::Config("serve.pipeline_depth must be positive".into()));
+        }
+        if self.serve.grouping_cache_cap == 0 {
+            return Err(Error::Config("serve.grouping_cache_cap must be positive".into()));
+        }
         Ok(())
     }
 
@@ -147,6 +191,15 @@ impl AccdConfig {
                     ("freq_mhz", json::num(self.hw.freq_mhz)),
                 ]),
             ),
+            (
+                "serve",
+                json::obj(vec![
+                    ("max_batch", json::num(self.serve.max_batch as f64)),
+                    ("grouping_cache_cap", json::num(self.serve.grouping_cache_cap as f64)),
+                    ("pipeline_depth", json::num(self.serve.pipeline_depth as f64)),
+                    ("dedup", Value::Bool(self.serve.dedup)),
+                ]),
+            ),
             ("artifact_dir", json::s(self.artifact_dir.clone())),
             ("use_fpga", Value::Bool(self.use_fpga)),
             ("seed", json::num(self.seed as f64)),
@@ -169,8 +222,25 @@ mod tests {
         cfg.hw.block = 32;
         cfg.gti.src_groups = 99;
         cfg.use_fpga = false;
+        cfg.serve.max_batch = 7;
+        cfg.serve.grouping_cache_cap = 3;
+        cfg.serve.pipeline_depth = 2;
+        cfg.serve.dedup = false;
         let re = AccdConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, re);
+    }
+
+    #[test]
+    fn serve_knobs_validated() {
+        let v = json::parse(r#"{"serve": {"pipeline_depth": 0}}"#).unwrap();
+        assert!(AccdConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"serve": {"grouping_cache_cap": 0}}"#).unwrap();
+        assert!(AccdConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"serve": {"max_batch": 5, "dedup": false}}"#).unwrap();
+        let cfg = AccdConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.serve.max_batch, 5);
+        assert!(!cfg.serve.dedup);
+        assert_eq!(cfg.serve.pipeline_depth, ServeConfig::default().pipeline_depth);
     }
 
     #[test]

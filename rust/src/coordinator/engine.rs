@@ -26,7 +26,15 @@ pub struct Engine {
 impl Engine {
     pub fn new(config: AccdConfig) -> Result<Self> {
         config.validate()?;
-        let runtime = Arc::new(Runtime::load(&config.artifact_dir)?);
+        let runtime = Arc::new(Runtime::load_or_builtin(&config.artifact_dir)?);
+        Self::with_runtime(config, runtime)
+    }
+
+    /// Build an engine over an existing runtime (shared across engines
+    /// by the serving layer so the kernel cache is paid for once).
+    /// Enforces the same config validation as [`Engine::new`].
+    pub fn with_runtime(config: AccdConfig, runtime: Arc<Runtime>) -> Result<Self> {
+        config.validate()?;
         let device = FpgaDevice::new(runtime.clone(), config.hw.clone());
         Ok(Self { config, runtime, device, power: PowerModel::default() })
     }

@@ -22,7 +22,7 @@
 use crate::data::{Dataset, Matrix};
 use crate::fpga::FpgaDevice;
 use crate::gti::{bounds, Grouping};
-use crate::layout::PackedSet;
+use crate::layout::{PackedGrouping, PackedSet};
 use crate::metrics::RunReport;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
@@ -50,9 +50,32 @@ pub(super) fn run(
     k: usize,
     max_iters: usize,
 ) -> Result<KmeansResult> {
+    run_shared(engine, ds, k, max_iters, None)
+}
+
+/// Validate a K-means request (shared by the solo path and the serving
+/// layer's admission check, so the two can never silently diverge).
+pub(crate) fn validate(ds: &Dataset, k: usize) -> Result<()> {
     if k == 0 || k > ds.n() {
         return Err(Error::Data(format!("kmeans: k={k} out of range for n={}", ds.n())));
     }
+    Ok(())
+}
+
+/// K-means with an optionally pre-built (cached) source grouping.
+///
+/// `shared` must be exactly what [`PackedGrouping::build`] would
+/// produce for this dataset and the engine's config — the serving
+/// layer's cache guarantees this by keying on the dataset fingerprint
+/// and the build parameters, so injecting it cannot change any result.
+pub(crate) fn run_shared(
+    engine: &mut Engine,
+    ds: &Dataset,
+    k: usize,
+    max_iters: usize,
+    shared: Option<&PackedGrouping>,
+) -> Result<KmeansResult> {
+    validate(ds, k)?;
     let t0 = std::time::Instant::now();
     engine.device.reset_stats();
     let mut report = RunReport::new("kmeans", &ds.name, "accd");
@@ -64,14 +87,24 @@ pub(super) fn run(
     // --- CPU side: grouping + packing (filter stage) -------------------
     let filt0 = std::time::Instant::now();
     let z_src = engine.src_groups(ds.n());
-    let grouping = Grouping::build(
-        &ds.points,
-        z_src,
-        cfg.gti.grouping_iters,
-        cfg.gti.grouping_sample,
-        cfg.seed,
-    )?;
-    let packed = PackedSet::pack(&ds.points, &grouping, 8);
+    let pg_owned;
+    let pg: &PackedGrouping = match shared {
+        Some(pg) => pg,
+        None => {
+            pg_owned = PackedGrouping::build(
+                &ds.points,
+                z_src,
+                cfg.gti.grouping_iters,
+                cfg.gti.grouping_sample,
+                cfg.seed,
+                crate::gti::Metric::L2,
+                8,
+            )?;
+            &pg_owned
+        }
+    };
+    let grouping = &pg.grouping;
+    let packed = &pg.packed;
 
     // Initial centers: k distinct random points.
     let mut rng = Rng::new(cfg.seed ^ 0x6B6D_6561_6E73); // "kmeans" salt
@@ -88,7 +121,7 @@ pub(super) fn run(
     let centers_slab = pad_centers(&centers, k_pad, d_pad);
     let mut assign = vec![0u32; ds.n()]; // packed-row order
     let mut ub = vec![0.0f32; ds.n()]; // upper bound on dist to assigned
-    assign_full(&engine.device, &packed, &centers_slab, k, k_pad, d_pad, &mut assign, &mut ub)?;
+    assign_full(&engine.device, packed, &centers_slab, k, k_pad, d_pad, &mut assign, &mut ub)?;
 
     // --- Iterations -----------------------------------------------------
     let mut iterations = 0usize;
@@ -97,7 +130,7 @@ pub(super) fn run(
         iterations += 1;
         // Center update (CPU): means over packed points.
         let filt = std::time::Instant::now();
-        let moved = update_centers(&packed, &assign, &mut centers, k);
+        let moved = update_centers(packed, &assign, &mut centers, k);
         drift.copy_from_slice(&moved);
         let max_drift = moved.iter().cloned().fold(0.0f32, f32::max);
         // Trace-based: widen ubs by assigned center drift.
@@ -108,7 +141,7 @@ pub(super) fn run(
         let cg_drift = recenter_center_groups(&mut center_grouping, &centers);
         let _ = cg_drift;
         // Group-level bounds: Eq. 2 on (source group, center group).
-        let pair_bounds = bounds::group_pair_bounds(&grouping, &center_grouping);
+        let pair_bounds = bounds::group_pair_bounds(grouping, &center_grouping);
         report.filter.bound_comps += (grouping.num_groups() * z_trg) as u64;
         // Per source group: ub = max member ub.
         let mut grp_ub = vec![0.0f32; grouping.num_groups()];
@@ -218,7 +251,7 @@ pub(super) fn run(
     let mut final_dist = vec![0.0f32; ds.n()];
     assign_full(
         &engine.device,
-        &packed,
+        packed,
         &centers_slab,
         k,
         k_pad,

@@ -11,12 +11,30 @@
 //! The inter-group layout schedule (Fig. 4b) orders source groups by
 //! candidate-set similarity so consecutive dispatches reuse target
 //! slabs; the measured reuse ratio lands in the run report.
+//!
+//! Execution is split into three stages so the batched serving runtime
+//! ([`crate::serve`]) can drive them across *many* queries at once:
+//!
+//! 1. [`plan_metric`] — CPU filter stage: groupings in, a [`KnnPlan`]
+//!    of merged dispatch batches out.  Packed target slabs are obtained
+//!    through a [`TrgSlabCache`], so queries in one serving cohort
+//!    share slabs for identical candidate sets.
+//! 2. job building + device execution — [`build_job`] per batch,
+//!    streamed through the bounded [`super::pipeline`] (solo runs use
+//!    their own queue; the serving layer streams all queries' batches
+//!    through one tagged queue).
+//! 3. [`merge_results`] — per-point bounded-heap merge, identical
+//!    regardless of which pipeline carried the tiles.
+
+use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::data::Dataset;
 use crate::fpga::TileJob;
-use crate::gti::{Grouping, KnnFilter};
-use crate::layout::{self, PackedSet};
+use crate::gti::{FilterStats, KnnFilter, Metric};
+use crate::layout::{self, LayoutStats, PackedGrouping};
 use crate::metrics::RunReport;
+use crate::runtime::TileInfo;
 use crate::util::topk::TopK;
 use crate::{Error, Result};
 
@@ -33,8 +51,66 @@ pub struct KnnResult {
     pub report: RunReport,
 }
 
+/// A packed, padded target slab shared by every dispatch batch (of any
+/// query in a serving cohort) with the same candidate target-group set.
+#[derive(Debug, Clone)]
+pub(crate) struct SharedSlab {
+    /// Row-major `(round_up(rows, tile.n), d_pad)` padded slab.
+    pub slab: Arc<Vec<f32>>,
+    /// Original target ids of the slab's valid rows.
+    pub col_ids: Arc<Vec<u32>>,
+    /// Valid (unpadded) row count.
+    pub rows: usize,
+}
+
+/// Cohort-level memo of packed target slabs, keyed by the candidate
+/// target-group set.  Within one query candidate sets are unique (the
+/// Fig. 4b schedule merges duplicates), so every cache *hit* is
+/// cross-query sharing.
+pub(crate) type TrgSlabCache = HashMap<Vec<u32>, SharedSlab>;
+
+/// One merged dispatch batch: a run of source groups sharing one
+/// candidate target set.
+#[derive(Debug, Clone)]
+pub(crate) struct KnnBatch {
+    /// Source groups concatenated into the rectangle's rows.
+    pub groups: Vec<usize>,
+    /// Original source ids of the rectangle's rows.
+    pub row_ids: Vec<u32>,
+    /// The (possibly shared) packed target slab.
+    pub trg: SharedSlab,
+    /// True when `trg` was served from the cohort cache, i.e. an
+    /// earlier query already built (and dispatched against) this slab.
+    pub shared: bool,
+}
+
+/// The CPU filter stage's output: everything needed to execute and
+/// merge one KNN query, in deterministic dispatch order.
+#[derive(Debug, Clone)]
+pub(crate) struct KnnPlan {
+    pub k: usize,
+    pub n_src: usize,
+    pub d: usize,
+    pub d_pad: usize,
+    pub metric: Metric,
+    pub batches: Vec<KnnBatch>,
+    pub filter_stats: FilterStats,
+    pub layout_stats: LayoutStats,
+}
+
 pub(super) fn run(engine: &mut Engine, src: &Dataset, trg: &Dataset, k: usize) -> Result<KnnResult> {
-    run_metric(engine, src, trg, k, crate::gti::Metric::L2)
+    run_metric(engine, src, trg, k, Metric::L2)
+}
+
+/// Validate a KNN-join request (shared by solo and batched paths).
+pub(crate) fn validate(src: &Dataset, trg: &Dataset, k: usize) -> Result<()> {
+    if k == 0 || k > trg.n() {
+        return Err(Error::Data(format!("knn: k={k} out of range for target n={}", trg.n())));
+    }
+    if src.d() != trg.d() {
+        return Err(Error::Shape(format!("knn: dim mismatch {} vs {}", src.d(), trg.d())));
+    }
+    Ok(())
 }
 
 /// Metric-aware KNN-join (paper Table I `mtr`): neighbor values are in
@@ -45,51 +121,125 @@ pub(super) fn run_metric(
     src: &Dataset,
     trg: &Dataset,
     k: usize,
-    metric: crate::gti::Metric,
+    metric: Metric,
 ) -> Result<KnnResult> {
-    if k == 0 || k > trg.n() {
-        return Err(Error::Data(format!("knn: k={k} out of range for target n={}", trg.n())));
-    }
-    if src.d() != trg.d() {
-        return Err(Error::Shape(format!("knn: dim mismatch {} vs {}", src.d(), trg.d())));
-    }
+    validate(src, trg, k)?;
     let t0 = std::time::Instant::now();
     engine.device.reset_stats();
     let mut report = RunReport::new("knn_join", &src.name, "accd");
     let cfg = engine.config.clone();
     let tile = engine.runtime.manifest().tile.clone();
-    let d = src.d();
-    let d_pad = tile.pad_d(d)?;
 
     // --- Filter stage (CPU) ---------------------------------------------
     let filt0 = std::time::Instant::now();
-    let src_grouping = Grouping::build_with_metric(
+    let src_pg = PackedGrouping::build(
         &src.points,
         engine.src_groups(src.n()),
         cfg.gti.grouping_iters,
         cfg.gti.grouping_sample,
         cfg.seed,
         metric,
+        8,
     )?;
-    let trg_grouping = Grouping::build_with_metric(
+    let trg_pg = PackedGrouping::build(
         &trg.points,
         engine.trg_groups(trg.n()),
         cfg.gti.grouping_iters,
         cfg.gti.grouping_sample,
         cfg.seed ^ 0x7267, // "tg"
         metric,
+        8,
     )?;
-    let src_packed = PackedSet::pack(&src.points, &src_grouping, 8);
-    let trg_packed = PackedSet::pack(&trg.points, &trg_grouping, 8);
+    let mut slab_cache = TrgSlabCache::new();
+    let plan = plan_metric(&tile, src, k, metric, &src_pg, &trg_pg, &mut slab_cache)?;
+    report.filter.merge(&plan.filter_stats);
+    report.layout = plan.layout_stats.clone();
+    report.filter_secs += filt0.elapsed().as_secs_f64();
 
+    // --- Device stage -----------------------------------------------------
+    let device = &engine.device;
+    let mut job_err: Option<Error> = None;
+    let mut results: Vec<(usize, crate::fpga::TileResult)> = Vec::new();
+    {
+        let plan_ref = &plan;
+        let src_pg_ref = &src_pg;
+        pipeline::run(
+            4,
+            |i| -> Option<(usize, TileJob)> {
+                let bi = i as usize;
+                let batch = plan_ref.batches.get(bi)?;
+                Some((bi, build_job(batch, src_pg_ref, plan_ref, &tile)))
+            },
+            |(bi, job): (usize, TileJob)| {
+                if job_err.is_some() {
+                    return;
+                }
+                if job.src_rows == 0 || job.trg_rows == 0 {
+                    return;
+                }
+                match device.distance_block(&job) {
+                    Ok(res) => results.push((bi, res)),
+                    Err(e) => job_err = Some(e),
+                }
+            },
+        );
+    }
+    if let Some(e) = job_err {
+        return Err(e);
+    }
+
+    // --- Merge stage (CPU) -------------------------------------------------
+    let neighbors = merge_results(&plan, results.into_iter());
+
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    report.device = engine.device.stats();
+    report.device_wall_secs = report.device.wall_secs;
+    report.device_modeled_secs = report.device.modeled_secs;
+    report.iterations = 1;
+    report.quality = quality_of(&neighbors);
+    report.energy_j = engine.power.accd_joules(
+        report.wall_secs,
+        report.filter_secs,
+        1.0,
+        report.device.wall_secs,
+    );
+    report.avg_watts = report.energy_j / report.wall_secs.max(1e-9);
+
+    Ok(KnnResult { neighbors, k, report })
+}
+
+/// CPU filter stage: GTI candidate selection + Fig. 4b schedule +
+/// dispatch merging, with target slabs resolved through the (possibly
+/// cohort-shared) cache.  Deterministic in all inputs.
+///
+/// Memory note: target slabs are materialized eagerly here (one per
+/// *distinct* candidate set, shared by every batch and cohort query
+/// that needs it) and live until the query's merge completes.  The
+/// pre-serving code built a fresh slab per batch inside the pipeline
+/// producer — lower peak memory for a solo query with many distinct
+/// candidate sets, but no sharing.  Under batching, deduplication
+/// makes the eager scheme strictly cheaper in total bytes built; if a
+/// solo query over a huge target ever becomes memory-bound, drop each
+/// batch's slab after its last consumer (tracked in ROADMAP "Slab
+/// cache persistence").
+pub(crate) fn plan_metric(
+    tile: &TileInfo,
+    src: &Dataset,
+    k: usize,
+    metric: Metric,
+    src_pg: &PackedGrouping,
+    trg_pg: &PackedGrouping,
+    slab_cache: &mut TrgSlabCache,
+) -> Result<KnnPlan> {
+    let d = src.d();
+    let d_pad = tile.pad_d(d)?;
     let mut filter = KnnFilter::new();
     let (candidates, _bounds) =
-        filter.candidates_metric(&src_grouping, &trg_grouping, k, metric);
-    report.filter.merge(&filter.stats);
+        filter.candidates_metric(&src_pg.grouping, &trg_pg.grouping, k, metric);
 
     // Inter-group schedule (Fig. 4b) + reuse measurement.
     let order = layout::schedule_source_groups(&candidates);
-    report.layout = layout::measure_reuse(&order, &candidates);
+    let layout_stats = layout::measure_reuse(&order, &candidates);
     // Dispatch batching (perf pass §Perf): adjacent source groups in
     // the schedule with *identical* candidate sets share one device
     // job, so their rows fill large source tiles instead of one
@@ -102,144 +252,87 @@ pub(super) fn run_metric(
             _ => merged.push((vec![g], candidates[g].clone())),
         }
     }
-    report.filter_secs += filt0.elapsed().as_secs_f64();
 
-    // --- Device stage -----------------------------------------------------
-    // Per merged batch: dense rectangle (concatenated source groups x
-    // concatenated candidate target slabs); CPU merges rows into
-    // per-point bounded heaps.
-    let mut heaps: Vec<TopK> = (0..src.n()).map(|_| TopK::new(k)).collect();
-    let device = &engine.device;
-    let mut job_err: Option<Error> = None;
-    struct BatchJob {
-        job: TileJob,
-        /// Original source ids of the rectangle's rows.
-        row_ids: Vec<u32>,
-        /// Original target ids of the rectangle's columns.
-        col_ids: Vec<u32>,
-    }
-    let merged_ref = &merged;
-    let mut results: Vec<(Vec<u32>, Vec<u32>, crate::fpga::TileResult)> = Vec::new();
-    {
-        pipeline::run(
-            4,
-            |i| -> Option<BatchJob> {
-                let (groups, cand) = merged_ref.get(i as usize)?;
-                let row_ids: Vec<u32> = groups
-                    .iter()
-                    .flat_map(|&g| {
-                        let (s, l) = (src_packed.group_start(g), src_packed.group_len(g));
-                        src_packed.new2old[s..s + l].iter().copied()
-                    })
-                    .collect();
-                Some(BatchJob {
-                    job: build_job(&src_packed, groups, &trg_packed, cand, d, d_pad, &tile, metric),
-                    row_ids,
-                    col_ids: cand
-                        .iter()
-                        .flat_map(|&b| {
-                            let (s, l) = (
-                                trg_packed.group_start(b as usize),
-                                trg_packed.group_len(b as usize),
-                            );
-                            trg_packed.new2old[s..s + l].iter().copied()
-                        })
-                        .collect(),
-                })
-            },
-            |bj: BatchJob| {
-                if job_err.is_some() {
-                    return;
-                }
-                if bj.job.src_rows == 0 || bj.job.trg_rows == 0 {
-                    return;
-                }
-                match device.distance_block(&bj.job) {
-                    Ok(res) => results.push((bj.row_ids, bj.col_ids, res)),
-                    Err(e) => job_err = Some(e),
-                }
-            },
-        );
-    }
-    if let Some(e) = job_err {
-        return Err(e);
-    }
-
-    // --- Merge stage (CPU) -------------------------------------------------
-    for (row_ids, col_ids, res) in results {
-        for (r, &orig_src) in row_ids.iter().enumerate() {
-            let heap = &mut heaps[orig_src as usize];
-            let row = &res.dist[r * res.trg_rows..(r + 1) * res.trg_rows];
-            for (c, &dist) in row.iter().enumerate() {
-                heap.push(dist, col_ids[c]);
+    let mut batches = Vec::with_capacity(merged.len());
+    for (groups, cand) in merged {
+        let row_ids: Vec<u32> = groups
+            .iter()
+            .flat_map(|&g| {
+                let (s, l) = (src_pg.packed.group_start(g), src_pg.packed.group_len(g));
+                src_pg.packed.new2old[s..s + l].iter().copied()
+            })
+            .collect();
+        let (trg, shared) = match slab_cache.get(&cand) {
+            Some(slab) => (slab.clone(), true),
+            None => {
+                let slab = build_trg_slab(trg_pg, &cand, d, d_pad, tile.n);
+                slab_cache.insert(cand.clone(), slab.clone());
+                (slab, false)
             }
-        }
+        };
+        batches.push(KnnBatch { groups, row_ids, trg, shared });
     }
 
-    let neighbors: Vec<Vec<(f32, u32)>> =
-        heaps.into_iter().map(|h| h.into_sorted()).collect();
-
-    report.wall_secs = t0.elapsed().as_secs_f64();
-    report.device = engine.device.stats();
-    report.device_wall_secs = report.device.wall_secs;
-    report.device_modeled_secs = report.device.modeled_secs;
-    report.iterations = 1;
-    // Quality: mean K-th neighbor distance (stable across impls).
-    report.quality = neighbors
-        .iter()
-        .filter_map(|nb| nb.last().map(|&(d2, _)| d2 as f64))
-        .sum::<f64>()
-        / neighbors.len().max(1) as f64;
-    report.energy_j = engine.power.accd_joules(
-        report.wall_secs,
-        report.filter_secs,
-        1.0,
-        report.device.wall_secs,
-    );
-    report.avg_watts = report.energy_j / report.wall_secs.max(1e-9);
-
-    Ok(KnnResult { neighbors, k, report })
+    Ok(KnnPlan {
+        k,
+        n_src: src.n(),
+        d,
+        d_pad,
+        metric,
+        batches,
+        filter_stats: filter.stats,
+        layout_stats,
+    })
 }
 
-/// Build the dense rectangle job for a batch of source groups sharing
-/// one candidate target set.
-#[allow(clippy::too_many_arguments)]
-fn build_job(
-    src_packed: &PackedSet,
-    groups: &[usize],
-    trg_packed: &PackedSet,
+/// Pack the candidate target groups into one padded slab.
+fn build_trg_slab(
+    trg_pg: &PackedGrouping,
     cand: &[u32],
     d: usize,
     d_pad: usize,
-    tile: &crate::runtime::TileInfo,
-    metric: crate::gti::Metric,
-) -> TileJob {
+    tile_n: usize,
+) -> SharedSlab {
     use crate::util::round_up;
-    // Concatenate the source groups' packed slabs.
-    let len: usize = groups.iter().map(|&g| src_packed.group_len(g)).sum();
-    let rows_pad = round_up(len.max(1), tile.m);
-    let mut src_slab = vec![0.0f32; rows_pad * d_pad];
-    let mut row = 0usize;
-    for &g in groups {
-        let rows = src_packed.group_len(g);
-        let slab = src_packed.group_rows(g);
-        for r in 0..rows {
-            src_slab[(row + r) * d_pad..(row + r) * d_pad + d]
-                .copy_from_slice(&slab[r * d..(r + 1) * d]);
-        }
-        row += rows;
-    }
-    // Concatenate candidate target groups (already contiguous each).
-    let total: usize = cand.iter().map(|&b| trg_packed.group_len(b as usize)).sum();
-    let cols_pad = round_up(total.max(1), tile.n);
-    let mut trg_slab = vec![0.0f32; cols_pad * d_pad];
+    let total: usize = cand.iter().map(|&b| trg_pg.packed.group_len(b as usize)).sum();
+    let cols_pad = round_up(total.max(1), tile_n);
+    let mut slab = vec![0.0f32; cols_pad * d_pad];
+    let mut col_ids = Vec::with_capacity(total);
     let mut row = 0usize;
     for &b in cand {
         let b = b as usize;
-        let rows = trg_packed.group_len(b);
-        let slab = trg_packed.group_rows(b);
+        let rows = trg_pg.packed.group_len(b);
+        let packed_rows = trg_pg.packed.group_rows(b);
         for r in 0..rows {
-            trg_slab[(row + r) * d_pad..(row + r) * d_pad + d]
+            slab[(row + r) * d_pad..(row + r) * d_pad + d]
+                .copy_from_slice(&packed_rows[r * d..(r + 1) * d]);
+        }
+        let (s, l) = (trg_pg.packed.group_start(b), trg_pg.packed.group_len(b));
+        col_ids.extend_from_slice(&trg_pg.packed.new2old[s..s + l]);
+        row += rows;
+    }
+    SharedSlab { slab: Arc::new(slab), col_ids: Arc::new(col_ids), rows: total }
+}
+
+/// Build the dense rectangle job for one dispatch batch (source slab
+/// copied fresh, target slab shared).
+pub(crate) fn build_job(
+    batch: &KnnBatch,
+    src_pg: &PackedGrouping,
+    plan: &KnnPlan,
+    tile: &TileInfo,
+) -> TileJob {
+    use crate::util::round_up;
+    let (d, d_pad) = (plan.d, plan.d_pad);
+    let len: usize = batch.groups.iter().map(|&g| src_pg.packed.group_len(g)).sum();
+    let rows_pad = round_up(len.max(1), tile.m);
+    let mut src_slab = vec![0.0f32; rows_pad * d_pad];
+    let mut row = 0usize;
+    for &g in &batch.groups {
+        let rows = src_pg.packed.group_len(g);
+        let slab = src_pg.packed.group_rows(g);
+        for r in 0..rows {
+            src_slab[(row + r) * d_pad..(row + r) * d_pad + d]
                 .copy_from_slice(&slab[r * d..(r + 1) * d]);
         }
         row += rows;
@@ -247,10 +340,43 @@ fn build_job(
     TileJob {
         src: src_slab,
         src_rows: len,
-        trg: trg_slab,
-        trg_rows: total,
+        trg: batch.trg.slab.clone(),
+        trg_rows: batch.trg.rows,
         d,
         d_padded: d_pad,
-        metric: metric.device_name(),
+        metric: plan.metric.device_name(),
     }
+}
+
+/// Merge device results into per-point Top-K heaps.  `results` must
+/// arrive in production (batch) order per query — both the solo
+/// pipeline and the serving layer's tagged pipeline guarantee this —
+/// so the merge is bit-identical no matter which queue carried the
+/// tiles.
+pub(crate) fn merge_results(
+    plan: &KnnPlan,
+    results: impl Iterator<Item = (usize, crate::fpga::TileResult)>,
+) -> Vec<Vec<(f32, u32)>> {
+    let mut heaps: Vec<TopK> = (0..plan.n_src).map(|_| TopK::new(plan.k)).collect();
+    for (bi, res) in results {
+        let batch = &plan.batches[bi];
+        for (r, &orig_src) in batch.row_ids.iter().enumerate() {
+            let heap = &mut heaps[orig_src as usize];
+            let row = &res.dist[r * res.trg_rows..(r + 1) * res.trg_rows];
+            for (c, &dist) in row.iter().enumerate() {
+                heap.push(dist, batch.trg.col_ids[c]);
+            }
+        }
+    }
+    heaps.into_iter().map(|h| h.into_sorted()).collect()
+}
+
+/// Headline quality number: mean K-th neighbor distance (stable across
+/// implementations).
+pub(crate) fn quality_of(neighbors: &[Vec<(f32, u32)>]) -> f64 {
+    neighbors
+        .iter()
+        .filter_map(|nb| nb.last().map(|&(d2, _)| d2 as f64))
+        .sum::<f64>()
+        / neighbors.len().max(1) as f64
 }

@@ -9,8 +9,8 @@
 //! integrate with leapfrog on the CPU.
 
 use crate::data::{Dataset, Matrix};
-use crate::gti::{Grouping, NbodyFilter};
-use crate::layout::PackedSet;
+use crate::gti::NbodyFilter;
+use crate::layout::PackedGrouping;
 use crate::metrics::RunReport;
 use crate::util::round_up;
 use crate::{Error, Result};
@@ -41,12 +41,34 @@ pub(super) fn run(
     dt: f32,
     radius: f32,
 ) -> Result<NbodyResult> {
+    run_shared(engine, ds, masses, steps, dt, radius, None)
+}
+
+/// Validate an N-body request (shared by the solo path and the serving
+/// layer's admission check, so the two can never silently diverge).
+pub(crate) fn validate(ds: &Dataset, masses: &[f32]) -> Result<()> {
     if ds.d() != 3 {
         return Err(Error::Shape(format!("nbody requires 3-D positions, got d={}", ds.d())));
     }
     if masses.len() != ds.n() {
         return Err(Error::Data("masses length != particle count".into()));
     }
+    Ok(())
+}
+
+/// N-body with an optionally pre-built (cached) grouping.  The grouping
+/// is *cloned* before use — the integrator recenters it every step —
+/// so a cached instance stays pristine for the next query.
+pub(crate) fn run_shared(
+    engine: &mut Engine,
+    ds: &Dataset,
+    masses: &[f32],
+    steps: usize,
+    dt: f32,
+    radius: f32,
+    shared: Option<&PackedGrouping>,
+) -> Result<NbodyResult> {
+    validate(ds, masses)?;
     let t0 = std::time::Instant::now();
     engine.device.reset_stats();
     let mut report = RunReport::new("nbody", &ds.name, "accd");
@@ -56,20 +78,43 @@ pub(super) fn run(
     // --- Grouping (once) ---------------------------------------------------
     let filt0 = std::time::Instant::now();
     let z = engine.src_groups(ds.n());
-    let mut grouping = Grouping::build(
-        &ds.points,
-        z,
-        cfg.gti.grouping_iters,
-        cfg.gti.grouping_sample,
-        cfg.seed,
-    )?;
-    let packed = PackedSet::pack(&ds.points, &grouping, 8);
+    let pg_owned;
+    let pg: &PackedGrouping = match shared {
+        Some(pg) => pg,
+        None => {
+            pg_owned = PackedGrouping::build(
+                &ds.points,
+                z,
+                cfg.gti.grouping_iters,
+                cfg.gti.grouping_sample,
+                cfg.seed,
+                crate::gti::Metric::L2,
+                8,
+            )?;
+            &pg_owned
+        }
+    };
+    let mut grouping = pg.grouping.clone();
+    let packed = &pg.packed;
     // Positions/velocities live in packed order for slab locality.
     let mut pos = packed.points.clone();
     let mut vel = Matrix::zeros(ds.n(), 3);
     let mass_packed: Vec<f32> =
         packed.new2old.iter().map(|&old| masses[old as usize]).collect();
-    // Re-index grouping members to packed rows (contiguous ranges).
+    // Re-index grouping members/assignment to packed rows: positions
+    // live in packed order from here on, and `recenter` indexes the
+    // position matrix through `members`.  Packing lays group g's
+    // members out contiguously at rows start..start+len in member
+    // order, so the remap is exactly that range.
+    for g in 0..grouping.num_groups() {
+        let start = packed.group_start(g) as u32;
+        for (r, m) in grouping.members[g].iter_mut().enumerate() {
+            *m = start + r as u32;
+        }
+    }
+    let assign_packed: Vec<u32> =
+        packed.new2old.iter().map(|&old| grouping.assign[old as usize]).collect();
+    grouping.assign = assign_packed;
     let mut filter = NbodyFilter::new(&grouping, 0.25);
     report.filter_secs += filt0.elapsed().as_secs_f64();
 

@@ -77,6 +77,36 @@ pub fn run<J>(
     stats
 }
 
+/// Statistics of one tagged pipeline run: the base queue stats plus
+/// per-tag job counts (one tag per client query in the serving layer).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TaggedStats {
+    pub inner: PipelineStats,
+    /// Jobs consumed per tag, in tag order.
+    pub per_tag: std::collections::BTreeMap<u64, u64>,
+}
+
+/// Run a two-stage pipeline over *tagged* jobs.
+///
+/// Identical scheduling to [`run`], but every job carries a `u64` tag
+/// that is handed back to the consumer for demultiplexing — this is how
+/// the serving layer streams many queries' tile jobs through ONE
+/// bounded queue and routes each result to its query.  FIFO order is
+/// global, so jobs of one tag are consumed in production order (the
+/// per-query determinism the batched-equals-sequential contract needs).
+pub fn run_tagged<J>(
+    capacity: usize,
+    mut producer: impl FnMut(u64) -> Option<(u64, J)>,
+    mut consumer: impl FnMut(u64, J),
+) -> TaggedStats {
+    let mut per_tag = std::collections::BTreeMap::new();
+    let inner = run(capacity, &mut producer, |(tag, job): (u64, J)| {
+        *per_tag.entry(tag).or_insert(0u64) += 1;
+        consumer(tag, job);
+    });
+    TaggedStats { inner, per_tag }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,6 +151,28 @@ mod tests {
             );
             assert!(stats.mean_depth() <= cap as f64);
         }
+    }
+
+    #[test]
+    fn tagged_run_demuxes_in_fifo_order() {
+        // Three interleaved "queries" of different lengths.
+        let jobs: Vec<(u64, u32)> =
+            vec![(0, 0), (1, 0), (0, 1), (2, 0), (1, 1), (0, 2), (2, 1)];
+        let mut per_tag: std::collections::BTreeMap<u64, Vec<u32>> = Default::default();
+        let stats = run_tagged(
+            2,
+            |i| jobs.get(i as usize).copied(),
+            |tag, j| per_tag.entry(tag).or_default().push(j),
+        );
+        assert_eq!(stats.inner.produced, 7);
+        assert_eq!(stats.inner.consumed, 7);
+        assert_eq!(stats.per_tag.get(&0), Some(&3));
+        assert_eq!(stats.per_tag.get(&1), Some(&2));
+        assert_eq!(stats.per_tag.get(&2), Some(&2));
+        // Per-tag order preserved despite interleaving.
+        assert_eq!(per_tag[&0], vec![0, 1, 2]);
+        assert_eq!(per_tag[&1], vec![0, 1]);
+        assert_eq!(per_tag[&2], vec![0, 1]);
     }
 
     #[test]

@@ -18,13 +18,20 @@ use crate::Result;
 /// One dense distance job: a padded source slab against a padded
 /// target slab.  `src_rows`/`trg_rows` are the *valid* (unpadded)
 /// counts; padding rows' outputs are discarded.
+///
+/// The target slab is reference-counted: the serving layer coalesces
+/// queries whose jobs hit the same candidate target set, so one packed
+/// slab is built once per cohort and shared by every job (and query)
+/// that streams it — the cross-query analogue of the Fig. 4b slab
+/// reuse.
 #[derive(Debug, Clone)]
 pub struct TileJob {
     /// Row-major `(src_rows_padded, d_padded)` source slab.
     pub src: Vec<f32>,
     pub src_rows: usize,
-    /// Row-major `(trg_rows_padded, d_padded)` target slab.
-    pub trg: Vec<f32>,
+    /// Row-major `(trg_rows_padded, d_padded)` target slab, shared
+    /// between jobs with identical candidate target sets.
+    pub trg: std::sync::Arc<Vec<f32>>,
     pub trg_rows: usize,
     pub d: usize,
     pub d_padded: usize,

@@ -208,6 +208,47 @@ impl Grouping {
     }
 }
 
+/// Content fingerprint of a point set: FNV-1a over the shape and every
+/// f32 bit pattern.  Two matrices fingerprint equal iff they are
+/// bit-identical, which is what lets the serving layer's
+/// [`crate::serve::GroupingCache`] key groupings by *data* rather than
+/// by pointer: a grouping built for one fingerprint is byte-for-byte
+/// the grouping that `build_with_metric` would produce again for the
+/// same parameters (the build is deterministic), so cache reuse can
+/// never change results.
+pub fn fingerprint(points: &Matrix) -> u64 {
+    fingerprint_pair(points).0
+}
+
+/// Primary fingerprint plus an independent secondary probe, computed in
+/// ONE pass over the data (hashing is the per-lookup cost of the
+/// serving cache's hot path, so the two walks are fused).  The primary
+/// is FNV-1a; the probe is FNV-1 (multiply-before-xor) from a different
+/// offset basis with the shape folded in rotated, so a simultaneous
+/// collision of both 64-bit values requires ~2^128 luck.
+pub fn fingerprint_pair(points: &Matrix) -> (u64, u64) {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    fn eat(a: &mut u64, b: &mut u64, word: u64, bytes: u32) {
+        let mut w = word;
+        for _ in 0..bytes {
+            let byte = w & 0xFF;
+            *a = (*a ^ byte).wrapping_mul(PRIME); // FNV-1a
+            *b = b.wrapping_mul(PRIME) ^ byte; // FNV-1
+            w >>= 8;
+        }
+    }
+    let mut a: u64 = 0xCBF2_9CE4_8422_2325;
+    let mut b: u64 = 0x6C62_272E_07BB_0142
+        ^ (points.rows() as u64).rotate_left(17)
+        ^ (points.cols() as u64).rotate_left(43);
+    eat(&mut a, &mut b, points.rows() as u64, 8);
+    eat(&mut a, &mut b, points.cols() as u64, 8);
+    for &v in points.as_slice() {
+        eat(&mut a, &mut b, v.to_bits() as u64, 4);
+    }
+    (a, b)
+}
+
 /// Nearest center under `metric`; returns (group, metric distance).
 /// The L2 path scans squared distances (cheaper) and converts once.
 #[inline]
@@ -286,6 +327,22 @@ mod tests {
         let drifts = g.recenter(&pts);
         assert!(drifts.iter().any(|&d| d > 0.4));
         g.check_invariants(&pts).unwrap();
+    }
+
+    #[test]
+    fn fingerprint_is_content_addressed() {
+        let a = synthetic::clustered(200, 5, 4, 0.05, 9);
+        let b = synthetic::clustered(200, 5, 4, 0.05, 9);
+        let c = synthetic::clustered(200, 5, 4, 0.05, 10);
+        assert_eq!(super::fingerprint(&a.points), super::fingerprint(&b.points));
+        assert_ne!(super::fingerprint(&a.points), super::fingerprint(&c.points));
+        // Shape participates: same bits, different shape must differ.
+        let flat = Matrix::from_vec(a.points.as_slice().to_vec(), 1000, 1).unwrap();
+        assert_ne!(super::fingerprint(&a.points), super::fingerprint(&flat));
+        // A single-value change shows up in the fingerprint.
+        let mut d = a.points.clone();
+        d.row_mut(57)[2] += 0.25;
+        assert_ne!(super::fingerprint(&a.points), super::fingerprint(&d));
     }
 
     #[test]

@@ -9,7 +9,7 @@
 use crate::data::Matrix;
 
 /// A distance metric satisfying the triangle inequality.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Metric {
     /// Euclidean. Device tiles compute the *square* (Eq. 4).
     #[default]

@@ -24,5 +24,5 @@ pub mod metric;
 
 pub use bounds::{group_pair_bounds, GroupPairBound};
 pub use filter::{FilterStats, KmeansFilter, KnnFilter, NbodyFilter};
-pub use grouping::Grouping;
+pub use grouping::{fingerprint, fingerprint_pair, Grouping};
 pub use metric::Metric;

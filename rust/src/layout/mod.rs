@@ -69,6 +69,36 @@ impl PackedSet {
     }
 }
 
+/// A grouping bundled with its packed point set — the unit the
+/// coordinator algorithms consume and the unit the serving layer's
+/// grouping cache stores.  Building one is the dominant CPU cost of a
+/// query's filter stage (`Latency_filt`), which is exactly why
+/// [`crate::serve`] memoizes them across queries.
+#[derive(Debug, Clone)]
+pub struct PackedGrouping {
+    pub grouping: Grouping,
+    pub packed: PackedSet,
+}
+
+impl PackedGrouping {
+    /// Group `points` and pack them contiguously.  Deterministic in all
+    /// arguments: two calls with identical inputs produce bit-identical
+    /// results (the property the serving cache's correctness rests on).
+    pub fn build(
+        points: &Matrix,
+        g: usize,
+        iters: usize,
+        sample: usize,
+        seed: u64,
+        metric: crate::gti::Metric,
+        n_banks: usize,
+    ) -> crate::Result<Self> {
+        let grouping = Grouping::build_with_metric(points, g, iters, sample, seed, metric)?;
+        let packed = PackedSet::pack(points, &grouping, n_banks);
+        Ok(Self { grouping, packed })
+    }
+}
+
 /// Reuse statistics of a dispatch schedule.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct LayoutStats {

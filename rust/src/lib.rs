@@ -6,8 +6,10 @@
 //!
 //! * **Layer 3 (this crate)** — the CPU-side coordinator: the DDSL
 //!   compiler, GTI (Generalized Triangle Inequality) filtering engine,
-//!   data-layout optimizer, design-space explorer, and the heterogeneous
-//!   pipeline that streams surviving distance tiles to the accelerator.
+//!   data-layout optimizer, design-space explorer, the heterogeneous
+//!   pipeline that streams surviving distance tiles to the accelerator,
+//!   and the [`serve`] batched multi-query serving runtime layered on
+//!   top of it all.
 //! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
 //!   distance tiles, AOT-lowered to HLO text at build time.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels implementing
@@ -15,9 +17,14 @@
 //!
 //! The paper's Intel Stratix-10 FPGA is not available in this environment;
 //! it is substituted by [`fpga::FpgaDevice`], which couples *functional*
-//! execution of the real AOT kernels through PJRT with an *analytical*
-//! cycle/power model of the DE10-Pro (paper Eqs. 5-10).  See
-//! `DESIGN.md` §Substitutions.
+//! execution of the tile kernels with an *analytical* cycle/power model
+//! of the DE10-Pro (paper Eqs. 5-10).  Functional execution uses the
+//! in-tree reference backend ([`runtime`]): the offline registry carries
+//! no PJRT/XLA native libraries, so the runtime validates tile requests
+//! against the artifact manifest (or a built-in manifest mirroring the
+//! shipped kernel catalogue) and computes them with bit-deterministic
+//! scalar kernels whose semantics are pinned by
+//! `rust/tests/runtime_roundtrip.rs`.  See `DESIGN.md` §Substitutions.
 //!
 //! ## Quickstart
 //!
@@ -29,6 +36,48 @@
 //! let mut engine = accd::coordinator::Engine::new(cfg).unwrap();
 //! let result = engine.kmeans(&dataset, 64, 20).unwrap();
 //! println!("converged in {} iters", result.iterations);
+//! ```
+//!
+//! ## Batched serving (`accd::serve`)
+//!
+//! One [`coordinator::Engine`] call amortizes GTI grouping *within* a
+//! query; [`serve::QueryBatcher`] amortizes it *across* queries, which
+//! is the seam every scaling feature (sharding, async admission,
+//! multi-backend dispatch) builds on:
+//!
+//! * compatible KNN queries (same target set + metric) are coalesced
+//!   into one cohort sharing a target grouping and packed target slabs,
+//!   and their surviving tiles stream through a single tagged
+//!   [`coordinator::pipeline`] run with per-query demux;
+//! * groupings are memoized in a [`serve::GroupingCache`] keyed by
+//!   dataset fingerprint + grouping parameters (LRU-bounded);
+//! * identical in-flight queries are deduplicated;
+//! * a [`metrics::ServeStats`] report exposes queries/sec, the
+//!   tiles-shared ratio and the cache hit rate.
+//!
+//! The contract is strict: batched results are **identical** to running
+//! each query alone through [`coordinator::Engine`] (enforced by
+//! `rust/tests/serve_parity.rs`).
+//!
+//! ```no_run
+//! use accd::prelude::*;
+//! use std::sync::Arc;
+//!
+//! let cfg = accd::config::AccdConfig::default();
+//! let engine = Engine::new(cfg.clone()).unwrap();
+//! let mut batcher = accd::serve::QueryBatcher::new(engine, cfg.serve.clone());
+//! let trg = Arc::new(accd::data::synthetic::clustered(50_000, 8, 64, 0.03, 1));
+//! for user in 0..100u64 {
+//!     let src = Arc::new(accd::data::synthetic::clustered(500, 8, 8, 0.03, user));
+//!     batcher.submit(accd::serve::ServeRequest::knn(src, trg.clone(), 10));
+//! }
+//! // One flush serves at most `serve.max_batch` queries; drain the queue.
+//! let mut responses = Vec::new();
+//! while batcher.pending_len() > 0 {
+//!     responses.extend(batcher.flush().unwrap());
+//! }
+//! println!("{}", batcher.stats().summary());
+//! # let _ = responses;
 //! ```
 
 pub mod baselines;
@@ -43,6 +92,7 @@ pub mod gti;
 pub mod layout;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Commonly used types, re-exported for `use accd::prelude::*`.
@@ -54,35 +104,72 @@ pub mod prelude {
     pub use crate::fpga::FpgaDevice;
     pub use crate::gti::Grouping;
     pub use crate::runtime::Runtime;
+    pub use crate::serve::{QueryBatcher, ServeRequest, ServeResponse};
 }
 
 /// Crate-wide error type.
-#[derive(thiserror::Error, Debug)]
+///
+/// Hand-implemented `Display`/`Error` (the offline vendored registry
+/// carries neither `thiserror` nor its proc-macro closure).
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla/pjrt error: {0}")]
     Xla(String),
-    #[error("artifact error: {0}")]
     Artifact(String),
-    #[error("ddsl error: {0}")]
     Ddsl(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("shape error: {0}")]
     Shape(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json error: {0}")]
+    Io(std::io::Error),
     Json(String),
-    #[error("dse error: {0}")]
     Dse(String),
-    #[error("data error: {0}")]
     Data(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla/pjrt error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Ddsl(m) => write!(f, "ddsl error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Dse(m) => write!(f, "dse error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::Error;
+
+    #[test]
+    fn error_messages_keep_their_prefixes() {
+        assert_eq!(
+            Error::Artifact("missing manifest".into()).to_string(),
+            "artifact error: missing manifest"
+        );
+        assert_eq!(Error::Ddsl("bad token".into()).to_string(), "ddsl error: bad token");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("gone"));
+        assert!(std::error::Error::source(&io).is_some());
+    }
+}

@@ -267,7 +267,7 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
-    let rt = accd::runtime::Runtime::load(&cfg.artifact_dir)?;
+    let rt = accd::runtime::Runtime::load_or_builtin(&cfg.artifact_dir)?;
     println!("platform: {}", rt.platform());
     let m = rt.manifest();
     println!(

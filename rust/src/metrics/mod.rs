@@ -150,9 +150,135 @@ impl RunReport {
     }
 }
 
+/// Accounting of the batched serving runtime (`accd::serve`): one
+/// instance accumulates over a [`crate::serve::QueryBatcher`]'s
+/// lifetime, across flushes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeStats {
+    /// Queries answered (including deduplicated ones).
+    pub queries: u64,
+    /// Flushes executed.
+    pub flushes: u64,
+    pub knn_queries: u64,
+    pub kmeans_queries: u64,
+    pub nbody_queries: u64,
+    /// Queries answered from an identical in-flight query's result.
+    pub dedup_hits: u64,
+    /// Grouping-cache hits / misses (a hit skips a whole
+    /// `Latency_filt` grouping build).
+    pub grouping_cache_hits: u64,
+    pub grouping_cache_misses: u64,
+    /// Dispatch batches whose packed target slab was shared from an
+    /// earlier query in the same cohort.
+    pub slabs_shared: u64,
+    /// Device tiles dispatched across all flushes...
+    pub tiles_total: u64,
+    /// ...of which this many served more than one query: tiles of
+    /// shared-slab batches plus tiles re-served to deduplicated
+    /// queries.
+    pub tiles_shared: u64,
+    /// Wall-clock seconds spent inside `flush`.
+    pub wall_secs: f64,
+}
+
+impl ServeStats {
+    /// Sustained throughput over all flushes so far.
+    pub fn queries_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.queries as f64 / self.wall_secs
+        }
+    }
+
+    /// Fraction of dispatched tiles that served more than one query.
+    pub fn tiles_shared_ratio(&self) -> f64 {
+        if self.tiles_total == 0 {
+            0.0
+        } else {
+            self.tiles_shared as f64 / self.tiles_total as f64
+        }
+    }
+
+    /// Grouping-cache hit rate.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.grouping_cache_hits + self.grouping_cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.grouping_cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("queries", json::num(self.queries as f64)),
+            ("flushes", json::num(self.flushes as f64)),
+            ("knn_queries", json::num(self.knn_queries as f64)),
+            ("kmeans_queries", json::num(self.kmeans_queries as f64)),
+            ("nbody_queries", json::num(self.nbody_queries as f64)),
+            ("dedup_hits", json::num(self.dedup_hits as f64)),
+            ("grouping_cache_hits", json::num(self.grouping_cache_hits as f64)),
+            ("grouping_cache_misses", json::num(self.grouping_cache_misses as f64)),
+            ("cache_hit_rate", json::num(self.cache_hit_rate())),
+            ("slabs_shared", json::num(self.slabs_shared as f64)),
+            ("tiles_total", json::num(self.tiles_total as f64)),
+            ("tiles_shared", json::num(self.tiles_shared as f64)),
+            ("tiles_shared_ratio", json::num(self.tiles_shared_ratio())),
+            ("wall_secs", json::num(self.wall_secs)),
+            ("queries_per_sec", json::num(self.queries_per_sec())),
+        ])
+    }
+
+    /// Human-readable summary for CLIs and benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "serve: {} queries in {} flushes ({:.1} q/s)\n  \
+             mix: {} knn / {} kmeans / {} nbody | dedup {}\n  \
+             grouping cache: {} hits / {} misses ({:.1}% hit rate)\n  \
+             tiles: {} shared of {} total ({:.1}%) | shared slabs {}",
+            self.queries,
+            self.flushes,
+            self.queries_per_sec(),
+            self.knn_queries,
+            self.kmeans_queries,
+            self.nbody_queries,
+            self.dedup_hits,
+            self.grouping_cache_hits,
+            self.grouping_cache_misses,
+            100.0 * self.cache_hit_rate(),
+            self.tiles_shared,
+            self.tiles_total,
+            100.0 * self.tiles_shared_ratio(),
+            self.slabs_shared,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serve_stats_ratios_and_json() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.queries_per_sec(), 0.0);
+        assert_eq!(s.tiles_shared_ratio(), 0.0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        s.queries = 10;
+        s.wall_secs = 2.0;
+        s.tiles_total = 100;
+        s.tiles_shared = 25;
+        s.grouping_cache_hits = 3;
+        s.grouping_cache_misses = 1;
+        assert_eq!(s.queries_per_sec(), 5.0);
+        assert_eq!(s.tiles_shared_ratio(), 0.25);
+        assert_eq!(s.cache_hit_rate(), 0.75);
+        let v = s.to_json();
+        assert_eq!(v.get("queries").as_usize(), Some(10));
+        assert_eq!(v.get("tiles_shared_ratio").as_f64(), Some(0.25));
+        assert!(s.summary().contains("10 queries"));
+    }
 
     #[test]
     fn speedup_and_energy_ratios() {

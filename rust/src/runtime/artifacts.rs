@@ -70,6 +70,21 @@ pub struct TileInfo {
 }
 
 impl TileInfo {
+    /// The shipped kernel catalogue's tiling parameters — the geometry
+    /// `python/compile/aot.py` emits.  Used as the built-in manifest
+    /// when no artifact directory is deployed (reference backend).
+    pub fn builtin() -> Self {
+        Self {
+            m: 64,
+            n: 64,
+            d_pad: vec![4, 8, 16, 32, 64, 128],
+            knn_k: 32,
+            kmeans_k_pad: vec![64, 128, 256, 512, 1024],
+            nbody: 64,
+            variants: vec![64, 512],
+        }
+    }
+
     /// Smallest padded feature dimension that fits `d`.
     pub fn pad_d(&self, d: usize) -> Result<usize> {
         self.d_pad
@@ -101,6 +116,19 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Synthesize the built-in manifest (no artifact files on disk):
+    /// the standard tile geometry with an empty entry table.  The
+    /// runtime's reference backend resolves kernels from tile names
+    /// against `tile` instead of the entry table.
+    pub fn builtin() -> Self {
+        Self {
+            dir: PathBuf::from("<builtin>"),
+            tile: TileInfo::builtin(),
+            entries: Vec::new(),
+            by_name: HashMap::new(),
+        }
+    }
+
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");

@@ -1,8 +1,16 @@
-//! Executable cache + typed tile execution.
+//! Kernel cache + typed tile execution (reference backend).
 //!
-//! [`Runtime`] owns the PJRT CPU client and one compiled
-//! `PjRtLoadedExecutable` per manifest entry.  Compilation happens once
-//! at [`Runtime::load`]; the hot path is literal-in / literal-out.
+//! The original deployment compiled AOT-lowered HLO artifacts on a PJRT
+//! CPU client.  The offline vendored registry carries no PJRT/XLA
+//! native closure, so [`Runtime`] now executes tiles with in-tree
+//! reference kernels that are *bit-deterministic* and semantically
+//! pinned by `rust/tests/runtime_roundtrip.rs` (the same scalar oracles
+//! the HLO modules were validated against).  The artifact manifest is
+//! still honoured: with a deployed `artifacts/` directory the runtime
+//! resolves kernels through the manifest (validating files and shapes,
+//! failing lazily at first use exactly like PJRT compilation did);
+//! without one, [`Runtime::load_or_builtin`] falls back to the built-in
+//! tile catalogue so the engine works out of the box.
 //!
 //! All tile entry points take *padded* buffers: callers go through
 //! [`crate::layout`] / the coordinator, which pad group batches to the
@@ -10,8 +18,9 @@
 //!
 //! * feature axis: zero padding (distance-neutral for L2^2 and L1);
 //! * source/target rows: zero rows, results discarded by the caller;
-//! * K-means padded centers: `f32::MAX/4` sentinel coordinates so the
-//!   fused argmin never selects a padding slot.
+//! * K-means padded centers: large sentinel coordinates so the fused
+//!   argmin never selects a padding slot;
+//! * N-body padding rows: zero mass, so they contribute no force.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -29,14 +38,48 @@ pub struct KnnTileOut {
     pub k: usize,
 }
 
-/// PJRT runtime: compiled-executable cache over the artifact manifest.
+/// Distance metric a device kernel computes (device value space).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RefMetric {
+    /// Squared Euclidean (the paper's Eq. 4 decomposition target).
+    L2Sq,
+    /// Manhattan sum.
+    L1,
+}
+
+impl RefMetric {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "l2sq" => Some(Self::L2Sq),
+            "l1" => Some(Self::L1),
+            _ => None,
+        }
+    }
+}
+
+/// A resolved ("compiled") kernel: shape-validated semantics for one
+/// artifact name.  Mirrors what a PJRT executable was for the HLO path.
+#[derive(Debug, Clone, PartialEq)]
+enum KernelSpec {
+    Distance { metric: RefMetric, m: usize, n: usize, d: usize },
+    KmeansAssign { m: usize, k: usize, d: usize },
+    KnnTile { m: usize, n: usize, d: usize, k: usize },
+    NbodyAccel { m: usize, n: usize },
+}
+
+/// Tile runtime: kernel cache over the artifact manifest (or the
+/// built-in catalogue).
 pub struct Runtime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    /// Lazily compiled executables, keyed by artifact name.  Lazy so a
-    /// process that only runs K-means never pays for the KNN modules
-    /// (compilation of all 40+ modules is noticeable on one core).
-    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// True when running from the built-in catalogue (no artifact dir):
+    /// kernel names resolve against the tile geometry instead of the
+    /// manifest entry table.
+    builtin: bool,
+    /// Lazily resolved kernels, keyed by artifact name.  Lazy so a
+    /// process that only runs K-means never validates the KNN modules,
+    /// and so malformed artifact files fail at first *use* (the PJRT
+    /// compile-time contract `failure_injection.rs` pins).
+    kernels: Mutex<HashMap<String, KernelSpec>>,
     /// Execution counters for the metrics endpoint.
     pub stats: RuntimeStats,
 }
@@ -59,12 +102,41 @@ impl RuntimeStats {
 }
 
 impl Runtime {
-    /// Create the PJRT CPU client and parse the manifest.  Executables
-    /// compile lazily on first use; call [`Runtime::warmup`] to force.
+    /// Parse the manifest of a deployed artifact directory.  Kernels
+    /// resolve lazily on first use; call [`Runtime::warmup`] to force.
+    ///
+    /// Errors when the directory carries no (or a broken) manifest —
+    /// use [`Runtime::load_or_builtin`] for the graceful fallback.
     pub fn load(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, manifest, executables: Mutex::new(HashMap::new()), stats: RuntimeStats::default() })
+        Ok(Self {
+            manifest,
+            builtin: false,
+            kernels: Mutex::new(HashMap::new()),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    /// Like [`Runtime::load`], but when `artifact_dir` has no
+    /// `manifest.json` at all, fall back to the built-in tile catalogue
+    /// (reference backend).  A *present but invalid* manifest is still
+    /// a hard error — a corrupted deployment must fail loudly.
+    pub fn load_or_builtin(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        if artifact_dir.as_ref().join("manifest.json").exists() {
+            Self::load(artifact_dir)
+        } else {
+            Ok(Self::builtin())
+        }
+    }
+
+    /// Runtime over the built-in kernel catalogue (no artifact files).
+    pub fn builtin() -> Self {
+        Self {
+            manifest: Manifest::builtin(),
+            builtin: true,
+            kernels: Mutex::new(HashMap::new()),
+            stats: RuntimeStats::default(),
+        }
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -72,61 +144,110 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        if self.builtin {
+            "reference-cpu (builtin catalogue)".to_string()
+        } else {
+            "reference-cpu (artifact manifest)".to_string()
+        }
     }
 
-    /// Compile (or fetch cached) executable for a manifest entry.
-    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.executables.lock().unwrap().get(name) {
-            return Ok(exe.clone());
+    /// Resolve (or fetch cached) kernel for an artifact name.
+    fn kernel(&self, name: &str) -> Result<KernelSpec> {
+        if let Some(spec) = self.kernels.lock().unwrap().get(name) {
+            return Ok(spec.clone());
         }
+        let spec = if self.builtin {
+            self.resolve_builtin(name)?
+        } else {
+            self.resolve_entry(name)?
+        };
+        self.kernels.lock().unwrap().insert(name.to_string(), spec.clone());
+        Ok(spec)
+    }
+
+    /// Resolve a kernel through the manifest entry table (deployed
+    /// artifact directory): the HLO text file must exist and look like
+    /// an HLO module, and the entry metadata fixes the shapes.
+    fn resolve_entry(&self, name: &str) -> Result<KernelSpec> {
         let entry = self
             .manifest
             .get(name)
             .ok_or_else(|| Error::Artifact(format!("no artifact named {name:?}")))?;
-        let proto = xla::HloModuleProto::from_text_file(&entry.path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
-        self.executables.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
+        let text = std::fs::read_to_string(&entry.path).map_err(|e| {
+            Error::Artifact(format!("cannot read {}: {e}", entry.path.display()))
+        })?;
+        if !text.trim_start().starts_with("HloModule") {
+            return Err(Error::Artifact(format!(
+                "cannot parse {} as HLO text (missing HloModule header)",
+                entry.path.display()
+            )));
+        }
+        Ok(match entry.kind {
+            ArtifactKind::Distance => {
+                let metric_str = entry.metric.as_deref().unwrap_or("l2sq");
+                let metric = RefMetric::parse(metric_str).ok_or_else(|| {
+                    Error::Artifact(format!("unsupported metric {metric_str:?} in {name:?}"))
+                })?;
+                KernelSpec::Distance { metric, m: entry.bm, n: entry.bn, d: entry.d }
+            }
+            ArtifactKind::KmeansAssign => {
+                KernelSpec::KmeansAssign { m: entry.bm, k: entry.k.max(entry.bn), d: entry.d }
+            }
+            ArtifactKind::KnnTile => KernelSpec::KnnTile {
+                m: entry.bm,
+                n: entry.bn,
+                d: entry.d,
+                k: if entry.k > 0 { entry.k } else { self.manifest.tile.knn_k },
+            },
+            ArtifactKind::NbodyAccel => KernelSpec::NbodyAccel { m: entry.bm, n: entry.bn },
+        })
     }
 
-    /// Force-compile a set of artifacts (e.g. everything a plan needs).
+    /// Resolve a kernel from its name against the built-in catalogue.
+    /// Shapes outside the catalogue fail exactly like a missing
+    /// artifact would.
+    fn resolve_builtin(&self, name: &str) -> Result<KernelSpec> {
+        let missing = || Error::Artifact(format!("no artifact named {name:?}"));
+        let t = &self.manifest.tile;
+        let spec = parse_kernel_name(name).ok_or_else(&missing)?;
+        let in_variants = |x: usize| t.variants.contains(&x) || x == t.m;
+        let valid = match &spec {
+            KernelSpec::Distance { m, n, d, .. } => {
+                in_variants(*m) && in_variants(*n) && t.d_pad.contains(d)
+            }
+            KernelSpec::KmeansAssign { m, k, d } => {
+                in_variants(*m) && t.kmeans_k_pad.contains(k) && t.d_pad.contains(d)
+            }
+            KernelSpec::KnnTile { m, n, d, k } => {
+                *m == t.m && *n == t.n && t.d_pad.contains(d) && *k == t.knn_k
+            }
+            KernelSpec::NbodyAccel { m, n } => in_variants(*m) && in_variants(*n),
+        };
+        if valid {
+            Ok(spec)
+        } else {
+            Err(missing())
+        }
+    }
+
+    /// Force-resolve a set of artifacts (e.g. everything a plan needs).
     pub fn warmup(&self, names: &[String]) -> Result<()> {
         for n in names {
-            self.executable(n)?;
+            self.kernel(n)?;
         }
         Ok(())
     }
 
-    /// Number of executables compiled so far.
+    /// Number of kernels resolved so far.
     pub fn compiled_count(&self) -> usize {
-        self.executables.lock().unwrap().len()
+        self.kernels.lock().unwrap().len()
     }
 
-    fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-        debug_assert_eq!(data.len(), rows * cols);
-        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
-    }
-
-    /// Execute a raw artifact by name with 2-D f32 inputs, returning the
-    /// flattened tuple elements.  Generic fallback used by tests and the
-    /// DDSL interpreter; the typed wrappers below are the hot path.
-    pub fn execute_raw(
-        &self,
-        name: &str,
-        inputs: &[(&[f32], usize, usize)],
-    ) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(name)?;
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(d, r, c)| Self::literal_2d(d, *r, *c))
-            .collect::<Result<_>>()?;
-        let out = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let tuple = out.to_tuple()?;
-        let h2d: usize = inputs.iter().map(|(d, _, _)| d.len() * 4).sum();
-        self.stats.record(h2d, 0);
-        Ok(tuple)
+    fn check_len(what: &str, got: usize, want: usize) -> Result<()> {
+        if got != want {
+            return Err(Error::Shape(format!("{what}: buffer len {got}, expected {want}")));
+        }
+        Ok(())
     }
 
     /// Distance tile of explicit edges: `a (tm x d_pad)`,
@@ -141,11 +262,35 @@ impl Runtime {
         b: &[f32],
     ) -> Result<Vec<f32>> {
         let name = self.manifest.distance_name_sized(metric, tm, tn, d_padded);
-        let exe = self.executable(&name)?;
-        let la = Self::literal_2d(a, tm, d_padded)?;
-        let lb = Self::literal_2d(b, tn, d_padded)?;
-        let out = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
-        let dist = out.to_tuple1()?.to_vec::<f32>()?;
+        let spec = self.kernel(&name)?;
+        let KernelSpec::Distance { metric, m, n, d } = spec else {
+            return Err(Error::Artifact(format!("{name:?} is not a distance kernel")));
+        };
+        Self::check_len("distance src", a.len(), m * d)?;
+        Self::check_len("distance trg", b.len(), n * d)?;
+        let mut dist = vec![0.0f32; m * n];
+        for i in 0..m {
+            let ra = &a[i * d..(i + 1) * d];
+            let out = &mut dist[i * n..(i + 1) * n];
+            for (j, o) in out.iter_mut().enumerate() {
+                let rb = &b[j * d..(j + 1) * d];
+                let mut s = 0.0f32;
+                match metric {
+                    RefMetric::L2Sq => {
+                        for k in 0..d {
+                            let diff = ra[k] - rb[k];
+                            s += diff * diff;
+                        }
+                    }
+                    RefMetric::L1 => {
+                        for k in 0..d {
+                            s += (ra[k] - rb[k]).abs();
+                        }
+                    }
+                }
+                *o = s;
+            }
+        }
         self.stats.record((a.len() + b.len()) * 4, dist.len() * 4);
         Ok(dist)
     }
@@ -163,7 +308,8 @@ impl Runtime {
         self.distance_tile_sized(metric, t.m, t.n, d_padded, a, b)
     }
 
-    /// Fused K-means assignment tile of explicit row count `tm`.
+    /// Fused K-means assignment tile of explicit row count `tm`:
+    /// per-row argmin over `k_padded` centers (first minimum wins).
     pub fn kmeans_assign_tile_sized(
         &self,
         tm: usize,
@@ -173,13 +319,33 @@ impl Runtime {
         centers: &[f32],
     ) -> Result<(Vec<i32>, Vec<f32>)> {
         let name = self.manifest.kmeans_name_sized(tm, k_padded, d_padded);
-        let exe = self.executable(&name)?;
-        let lp = Self::literal_2d(points, tm, d_padded)?;
-        let lc = Self::literal_2d(centers, k_padded, d_padded)?;
-        let out = exe.execute::<xla::Literal>(&[lp, lc])?[0][0].to_literal_sync()?;
-        let (idx_l, dist_l) = out.to_tuple2()?;
-        let idx = idx_l.to_vec::<i32>()?;
-        let dist = dist_l.to_vec::<f32>()?;
+        let spec = self.kernel(&name)?;
+        let KernelSpec::KmeansAssign { m, k, d } = spec else {
+            return Err(Error::Artifact(format!("{name:?} is not a kmeans kernel")));
+        };
+        Self::check_len("kmeans points", points.len(), m * d)?;
+        Self::check_len("kmeans centers", centers.len(), k * d)?;
+        let mut idx = vec![0i32; m];
+        let mut dist = vec![0.0f32; m];
+        for i in 0..m {
+            let row = &points[i * d..(i + 1) * d];
+            let mut best_c = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..k {
+                let cr = &centers[c * d..(c + 1) * d];
+                let mut s = 0.0f32;
+                for x in 0..d {
+                    let diff = row[x] - cr[x];
+                    s += diff * diff;
+                }
+                if s < best_d {
+                    best_d = s;
+                    best_c = c;
+                }
+            }
+            idx[i] = best_c as i32;
+            dist[i] = best_d;
+        }
         self.stats
             .record((points.len() + centers.len()) * 4, idx.len() * 4 + dist.len() * 4);
         Ok((idx, dist))
@@ -197,25 +363,49 @@ impl Runtime {
         self.kmeans_assign_tile_sized(m, k_padded, d_padded, points, centers)
     }
 
-    /// Fused KNN tile: per-source-row top-`tile.knn_k` (value, local idx).
+    /// Fused KNN tile: per-source-row top-`tile.knn_k` (value, local
+    /// idx), ascending by value with ties broken by lower index.
     pub fn knn_tile(&self, d_padded: usize, a: &[f32], b: &[f32]) -> Result<KnnTileOut> {
-        let t = &self.manifest.tile;
         let name = self.manifest.knn_name(d_padded);
-        let exe = self.executable(&name)?;
-        let la = Self::literal_2d(a, t.m, d_padded)?;
-        let lb = Self::literal_2d(b, t.n, d_padded)?;
-        let out = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
-        let (vals_l, idx_l) = out.to_tuple2()?;
-        let vals = vals_l.to_vec::<f32>()?;
-        let idx = idx_l.to_vec::<i32>()?;
+        let spec = self.kernel(&name)?;
+        let KernelSpec::KnnTile { m, n, d, k } = spec else {
+            return Err(Error::Artifact(format!("{name:?} is not a knn kernel")));
+        };
+        Self::check_len("knn src", a.len(), m * d)?;
+        Self::check_len("knn trg", b.len(), n * d)?;
+        let mut vals = vec![0.0f32; m * k];
+        let mut idx = vec![0i32; m * k];
+        let mut row_d: Vec<(f32, i32)> = Vec::with_capacity(n);
+        for i in 0..m {
+            let ra = &a[i * d..(i + 1) * d];
+            row_d.clear();
+            for j in 0..n {
+                let rb = &b[j * d..(j + 1) * d];
+                let mut s = 0.0f32;
+                for x in 0..d {
+                    let diff = ra[x] - rb[x];
+                    s += diff * diff;
+                }
+                row_d.push((s, j as i32));
+            }
+            // total_cmp: NaN distances (NaN input data) sort last
+            // instead of panicking, matching the XLA sort semantics
+            // this kernel replaces.
+            row_d.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+            for (r, &(v, j)) in row_d.iter().take(k).enumerate() {
+                vals[i * k + r] = v;
+                idx[i * k + r] = j;
+            }
+        }
         self.stats.record((a.len() + b.len()) * 4, vals.len() * 8);
-        Ok(KnnTileOut { vals, idx, rows: t.m, k: t.knn_k })
+        Ok(KnnTileOut { vals, idx, rows: m, k })
     }
 
     /// Radius-limited N-body acceleration tile of explicit edges:
     /// `pos_i (tm x 3)`, `pos_j (tn x 3)`, `mass_j (tn)`, softening^2,
     /// radius^2 -> `(tm x 3)` acceleration (only neighbors with
     /// r^2 <= rmax2 contribute; padding rows carry mass 0).
+    #[allow(clippy::too_many_arguments)]
     pub fn nbody_accel_sized(
         &self,
         tm: usize,
@@ -227,13 +417,36 @@ impl Runtime {
         rmax2: f32,
     ) -> Result<Vec<f32>> {
         let name = self.manifest.nbody_name_sized(tm, tn);
-        let exe = self.executable(&name)?;
-        let li = Self::literal_2d(pos_i, tm, 3)?;
-        let lj = Self::literal_2d(pos_j, tn, 3)?;
-        let lm = xla::Literal::vec1(mass_j);
-        let le = xla::Literal::vec1(&[eps2, rmax2]);
-        let out = exe.execute::<xla::Literal>(&[li, lj, lm, le])?[0][0].to_literal_sync()?;
-        let acc = out.to_tuple1()?.to_vec::<f32>()?;
+        let spec = self.kernel(&name)?;
+        let KernelSpec::NbodyAccel { m, n } = spec else {
+            return Err(Error::Artifact(format!("{name:?} is not an nbody kernel")));
+        };
+        Self::check_len("nbody pos_i", pos_i.len(), m * 3)?;
+        Self::check_len("nbody pos_j", pos_j.len(), n * 3)?;
+        Self::check_len("nbody mass_j", mass_j.len(), n)?;
+        let mut acc = vec![0.0f32; m * 3];
+        for i in 0..m {
+            let (xi, yi, zi) = (pos_i[i * 3], pos_i[i * 3 + 1], pos_i[i * 3 + 2]);
+            let (mut ax, mut ay, mut az) = (0.0f32, 0.0f32, 0.0f32);
+            for j in 0..n {
+                let dx = xi - pos_j[j * 3];
+                let dy = yi - pos_j[j * 3 + 1];
+                let dz = zi - pos_j[j * 3 + 2];
+                let r2 = dx * dx + dy * dy + dz * dz;
+                if r2 > rmax2 {
+                    continue;
+                }
+                let r2s = r2 + eps2;
+                let inv_r3 = 1.0 / (r2s.sqrt() * r2s);
+                let w = mass_j[j] * inv_r3;
+                ax -= dx * w;
+                ay -= dy * w;
+                az -= dz * w;
+            }
+            acc[i * 3] = ax;
+            acc[i * 3 + 1] = ay;
+            acc[i * 3 + 2] = az;
+        }
         self.stats
             .record((pos_i.len() + pos_j.len() + mass_j.len() + 2) * 4, acc.len() * 4);
         Ok(acc)
@@ -263,5 +476,103 @@ impl Runtime {
             ArtifactKind::KnnTile => vec![self.manifest.knn_name(d_padded)],
             ArtifactKind::NbodyAccel => vec![self.manifest.nbody_name()],
         }
+    }
+}
+
+/// Parse a kernel name of the shipped naming scheme into a spec.
+fn parse_kernel_name(name: &str) -> Option<KernelSpec> {
+    fn params<'a>(rest: &'a str, keys: &[&str]) -> Option<Vec<usize>> {
+        let parts: Vec<&'a str> = rest.split('_').collect();
+        if parts.len() != keys.len() {
+            return None;
+        }
+        let mut out = Vec::with_capacity(keys.len());
+        for (p, key) in parts.iter().zip(keys) {
+            let v = p.strip_prefix(key)?;
+            out.push(v.parse::<usize>().ok()?);
+        }
+        Some(out)
+    }
+    if let Some(rest) = name.strip_prefix("distance_") {
+        let (metric_str, shape) = rest.split_once('_')?;
+        let metric = RefMetric::parse(metric_str)?;
+        let p = params(shape, &["m", "n", "d"])?;
+        Some(KernelSpec::Distance { metric, m: p[0], n: p[1], d: p[2] })
+    } else if let Some(rest) = name.strip_prefix("kmeans_assign_") {
+        let p = params(rest, &["m", "k", "d"])?;
+        Some(KernelSpec::KmeansAssign { m: p[0], k: p[1], d: p[2] })
+    } else if let Some(rest) = name.strip_prefix("knn_tile_") {
+        let p = params(rest, &["m", "n", "d", "k"])?;
+        Some(KernelSpec::KnnTile { m: p[0], n: p[1], d: p[2], k: p[3] })
+    } else if let Some(rest) = name.strip_prefix("nbody_accel_") {
+        let p = params(rest, &["m", "n"])?;
+        Some(KernelSpec::NbodyAccel { m: p[0], n: p[1] })
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_names_parse_and_validate() {
+        let rt = Runtime::builtin();
+        assert!(rt.kernel("distance_l2sq_m64_n64_d4").is_ok());
+        assert!(rt.kernel("distance_l2sq_m64_n512_d16").is_ok());
+        assert!(rt.kernel("distance_l1_m512_n64_d128").is_ok());
+        assert!(rt.kernel("kmeans_assign_m64_k64_d8").is_ok());
+        assert!(rt.kernel("kmeans_assign_m512_k128_d16").is_ok());
+        assert!(rt.kernel("knn_tile_m64_n64_d16_k32").is_ok());
+        assert!(rt.kernel("nbody_accel_m64_n512").is_ok());
+        // Shapes outside the catalogue behave like missing artifacts.
+        for bad in [
+            "distance_l2sq_m64_n64_d7",
+            "distance_linf_m64_n64_d4",
+            "kmeans_assign_m64_k100_d8",
+            "knn_tile_m64_n64_d16_k5",
+            "nbody_accel_m64_n100",
+            "totally_unknown",
+        ] {
+            let err = rt.kernel(bad).unwrap_err();
+            assert!(err.to_string().contains("no artifact"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn builtin_distance_matches_scalar_math() {
+        let rt = Runtime::builtin();
+        let d = 4usize;
+        let a = vec![0.5f32; 64 * d];
+        let mut b = vec![0.0f32; 64 * d];
+        b[0] = 1.0; // first target row differs in one coordinate
+        let l2 = rt.distance_tile("l2sq", d, &a, &b).unwrap();
+        // row 0 vs col 0: (0.5-1)^2 + 3*(0.5)^2 = 0.25 + 0.75 = 1.0
+        assert!((l2[0] - 1.0).abs() < 1e-6);
+        // every other column: 4 * 0.25 = 1.0 ... col 1 uses zeros only.
+        assert!((l2[1] - 1.0).abs() < 1e-6);
+        let l1 = rt.distance_tile("l1", d, &a, &b).unwrap();
+        assert!((l1[0] - 2.0).abs() < 1e-6); // 0.5 + 3*0.5
+    }
+
+    #[test]
+    fn builtin_counts_resolved_kernels_once() {
+        let rt = Runtime::builtin();
+        let d = 4usize;
+        let a = vec![0.0f32; 64 * d];
+        let b = vec![0.0f32; 64 * d];
+        let _ = rt.distance_tile("l2sq", d, &a, &b).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+        let _ = rt.distance_tile("l2sq", d, &a, &b).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let rt = Runtime::builtin();
+        let a = vec![0.0f32; 64 * 4];
+        let short = vec![0.0f32; 63 * 4];
+        assert!(rt.distance_tile("l2sq", 4, &a, &short).is_err());
     }
 }

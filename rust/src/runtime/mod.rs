@@ -1,12 +1,19 @@
-//! PJRT runtime: loads AOT-compiled HLO artifacts and executes them.
+//! Tile runtime: loads AOT artifact manifests and executes tile kernels.
 //!
-//! This is the boundary between the Rust coordinator and the accelerator
-//! kernels authored in JAX/Pallas.  At startup [`Runtime::load`] reads
-//! `artifacts/manifest.json`, compiles every HLO-text module on the PJRT
-//! CPU client, and caches the executables; the hot path then only calls
-//! [`Runtime::distance_tile`] & friends, which copy literals in/out.
+//! This is the boundary between the Rust coordinator and the
+//! accelerator kernels authored in JAX/Pallas.  [`Runtime::load`] reads
+//! `artifacts/manifest.json` and resolves every module lazily at first
+//! use; [`Runtime::load_or_builtin`] additionally falls back to the
+//! built-in tile catalogue when no artifact directory is deployed, so
+//! the engine (and the serving runtime on top of it) work out of the
+//! box.  The hot path then only calls [`Runtime::distance_tile`] &
+//! friends.
 //!
-//! Python never runs here — the artifacts are self-contained HLO.
+//! Execution is the in-tree **reference backend**: the offline vendored
+//! registry carries no PJRT/XLA native closure, so tiles are computed
+//! by bit-deterministic scalar kernels with the exact semantics the HLO
+//! modules were validated against (`rust/tests/runtime_roundtrip.rs`).
+//! Python never runs here.
 
 mod artifacts;
 mod exec;

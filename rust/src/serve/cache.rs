@@ -1,0 +1,220 @@
+//! LRU cache of built groupings, keyed by dataset fingerprint +
+//! grouping parameters.
+//!
+//! Building a grouping is the dominant CPU cost of a query's filter
+//! stage (the paper's `Latency_filt`).  Under serving traffic the same
+//! datasets are queried over and over, so the batcher memoizes the
+//! [`PackedGrouping`] per (data, parameters) pair.  Correctness: the
+//! grouping build is deterministic, so a cached instance is
+//! byte-identical to what a fresh solo run would build — reuse can
+//! never change results.  Fingerprint collisions are guarded by a
+//! second, independent content probe stored per entry (two
+//! simultaneous 64-bit collisions would be required to mis-serve);
+//! entries hold only the grouping, never the dataset, so caching a
+//! grouping does not pin gigabytes of points in memory.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::gti::Metric;
+use crate::layout::PackedGrouping;
+use crate::Result;
+
+/// Cache key: everything [`PackedGrouping::build`] is deterministic in.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GroupingKey {
+    /// Content fingerprint of the point set — the `.0` of
+    /// [`crate::gti::fingerprint_pair`].
+    pub fingerprint: u64,
+    pub groups: usize,
+    pub iters: usize,
+    pub sample: usize,
+    pub seed: u64,
+    pub metric: Metric,
+}
+
+struct Entry {
+    pg: Arc<PackedGrouping>,
+    /// Secondary content probe — the `.1` of
+    /// [`crate::gti::fingerprint_pair`] for the points the grouping was
+    /// built from.  Key fingerprint and entry probe colliding
+    /// *simultaneously* for different content is ~2^-128.
+    probe: u64,
+    last_used: u64,
+}
+
+/// LRU-bounded grouping cache.
+pub struct GroupingCache {
+    cap: usize,
+    map: HashMap<GroupingKey, Entry>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl GroupingCache {
+    /// `cap` is the maximum number of cached groupings (>= 1).
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), map: HashMap::new(), tick: 0, hits: 0, misses: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fetch the grouping for `key` (whose fingerprint and `probe` come
+    /// from one [`crate::gti::fingerprint_pair`] pass over the points),
+    /// building it on a miss.
+    pub fn get_or_build(
+        &mut self,
+        key: GroupingKey,
+        probe: u64,
+        build: impl FnOnce() -> Result<PackedGrouping>,
+    ) -> Result<Arc<PackedGrouping>> {
+        self.tick += 1;
+        if let Some(entry) = self.map.get_mut(&key) {
+            // Guard against fingerprint collisions: the cached entry
+            // must have been built from identical content.
+            if entry.probe == probe {
+                entry.last_used = self.tick;
+                self.hits += 1;
+                return Ok(entry.pg.clone());
+            }
+            // Collision: do not serve, do not overwrite (the colliding
+            // pair would thrash); build uncached.
+            self.misses += 1;
+            return Ok(Arc::new(build()?));
+        }
+        self.misses += 1;
+        let pg = Arc::new(build()?);
+        if self.map.len() >= self.cap {
+            // Evict the least-recently-used entry.
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&victim);
+            }
+        }
+        self.map.insert(key, Entry { pg: pg.clone(), probe, last_used: self.tick });
+        Ok(pg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, Dataset};
+    use crate::gti;
+
+    fn key_for(ds: &Dataset, groups: usize, seed: u64) -> (GroupingKey, u64) {
+        let (fingerprint, probe) = gti::fingerprint_pair(&ds.points);
+        let key = GroupingKey {
+            fingerprint,
+            groups,
+            iters: 2,
+            sample: 256,
+            seed,
+            metric: Metric::L2,
+        };
+        (key, probe)
+    }
+
+    fn build_for(ds: &Dataset, groups: usize, seed: u64) -> Result<PackedGrouping> {
+        PackedGrouping::build(&ds.points, groups, 2, 256, seed, Metric::L2, 8)
+    }
+
+    fn fetch(
+        cache: &mut GroupingCache,
+        ds: &Dataset,
+        groups: usize,
+        seed: u64,
+    ) -> Arc<PackedGrouping> {
+        let (key, probe) = key_for(ds, groups, seed);
+        cache.get_or_build(key, probe, || build_for(ds, groups, seed)).unwrap()
+    }
+
+    #[test]
+    fn hit_returns_the_same_grouping_instance() {
+        let ds = synthetic::clustered(300, 4, 6, 0.05, 1);
+        let mut cache = GroupingCache::new(4);
+        let a = fetch(&mut cache, &ds, 8, 7);
+        let b = fetch(&mut cache, &ds, 8, 7);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn different_params_are_different_entries() {
+        let ds = synthetic::clustered(300, 4, 6, 0.05, 1);
+        let mut cache = GroupingCache::new(4);
+        let a = fetch(&mut cache, &ds, 8, 7);
+        let b = fetch(&mut cache, &ds, 16, 7);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.misses, 2);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_entry() {
+        let mut cache = GroupingCache::new(2);
+        let mk = |seed: u64| synthetic::clustered(120, 3, 4, 0.05, seed);
+        let (d1, d2, d3) = (mk(1), mk(2), mk(3));
+        fetch(&mut cache, &d1, 4, 1);
+        fetch(&mut cache, &d2, 4, 1);
+        // Touch d1 so d2 becomes the LRU victim.
+        fetch(&mut cache, &d1, 4, 1);
+        fetch(&mut cache, &d3, 4, 1);
+        assert_eq!(cache.len(), 2);
+        // d1 must still be cached (hit), d2 must rebuild (miss).
+        let hits_before = cache.hits;
+        fetch(&mut cache, &d1, 4, 1);
+        assert_eq!(cache.hits, hits_before + 1);
+        let misses_before = cache.misses;
+        fetch(&mut cache, &d2, 4, 1);
+        assert_eq!(cache.misses, misses_before + 1);
+    }
+
+    #[test]
+    fn colliding_key_with_different_content_is_not_served() {
+        let d1 = synthetic::clustered(100, 3, 4, 0.05, 1);
+        let d2 = synthetic::clustered(100, 3, 4, 0.05, 2);
+        let mut cache = GroupingCache::new(4);
+        // Force a "collision" by reusing d1's key with d2's probe.
+        let (forged, _) = key_for(&d1, 4, 1);
+        let (_, probe1) = key_for(&d1, 4, 1);
+        let (_, probe2) = key_for(&d2, 4, 1);
+        cache.get_or_build(forged.clone(), probe1, || build_for(&d1, 4, 1)).unwrap();
+        let g2 = cache.get_or_build(forged, probe2, || build_for(&d2, 4, 1)).unwrap();
+        // The cached (d1-built) grouping must NOT be returned for d2.
+        assert_eq!(g2.grouping.num_points(), 100);
+        let g1_again = fetch(&mut cache, &d1, 4, 1);
+        assert_ne!(
+            g1_again.grouping.centers.as_slice(),
+            g2.grouping.centers.as_slice(),
+            "collision guard failed: d2 was served d1's grouping"
+        );
+    }
+
+    #[test]
+    fn probe_is_independent_of_the_primary_fingerprint() {
+        // Same shape, single value changed: both hashes must move.
+        let a = synthetic::uniform(64, 4, 9);
+        let mut b = a.clone();
+        b.points.row_mut(10)[2] += 0.5;
+        let (fa, pa) = gti::fingerprint_pair(&a.points);
+        let (fb, pb) = gti::fingerprint_pair(&b.points);
+        assert_ne!(fa, fb);
+        assert_ne!(pa, pb);
+        // And the probe differs from the fingerprint itself (different
+        // algorithm, not an alias).
+        assert_ne!(fa, pa);
+    }
+}

@@ -1,0 +1,120 @@
+//! Golden-file tests for the DDSL front end.
+//!
+//! Each `rust/tests/ddsl_golden/<name>.dd` program is compiled through
+//! the full pipeline (lexer → parser → typecheck → planner) and the
+//! resulting `ExecutionPlan` is rendered to a stable textual snapshot,
+//! compared byte-for-byte against `<name>.golden`.  Any parser,
+//! typechecker or planner refactor that silently changes program
+//! semantics fails here with a readable diff.
+//!
+//! Regenerate snapshots after an *intentional* semantic change with:
+//! `ACCD_UPDATE_GOLDEN=1 cargo test --test ddsl_golden`
+
+use accd::ddsl::{self, plan::PlanKind, ExecutionPlan};
+use std::path::{Path, PathBuf};
+
+/// Stable, human-auditable rendering of a plan.  Deliberately not
+/// `{:#?}` so incidental `derive(Debug)` layout changes don't churn
+/// every snapshot — only semantic fields appear.
+fn render(plan: &ExecutionPlan) -> String {
+    let kind = match &plan.kind {
+        PlanKind::KmeansLike { points, centers, k, max_iters } => {
+            format!("KmeansLike {{ points: {points}, centers: {centers}, k: {k}, max_iters: {max_iters} }}")
+        }
+        PlanKind::KnnJoinLike { src, trg, k } => {
+            format!("KnnJoinLike {{ src: {src}, trg: {trg}, k: {k} }}")
+        }
+        PlanKind::NbodyLike { particles, radius_expr, max_iters } => {
+            format!("NbodyLike {{ particles: {particles}, radius: {radius_expr}, max_iters: {max_iters} }}")
+        }
+    };
+    let mut out = String::new();
+    out.push_str(&format!("kind: {kind}\n"));
+    out.push_str(&format!("strategy: {}\n", plan.strategy));
+    out.push_str(&format!(
+        "metric: {} {}\n",
+        if plan.metric.weighted { "weighted" } else { "unweighted" },
+        plan.metric.norm
+    ));
+    for (name, size, dim) in &plan.bindings {
+        out.push_str(&format!("bind: {name} {size}x{dim}\n"));
+    }
+    out
+}
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/ddsl_golden")
+}
+
+#[test]
+fn golden_corpus_matches_snapshots() {
+    let dir = golden_dir();
+    let mut programs: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", dir.display()))
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "dd"))
+        .collect();
+    programs.sort();
+    assert!(
+        programs.len() >= 4,
+        "golden corpus unexpectedly small: {} programs in {}",
+        programs.len(),
+        dir.display()
+    );
+
+    let update = std::env::var_os("ACCD_UPDATE_GOLDEN").is_some();
+    let mut failures = Vec::new();
+    for program in &programs {
+        let name = program.file_stem().unwrap().to_string_lossy().to_string();
+        let src = std::fs::read_to_string(program).expect("read .dd");
+        let plan = ddsl::compile_program(&src)
+            .unwrap_or_else(|e| panic!("{name}.dd failed to compile: {e}"));
+        let got = render(&plan);
+        let golden_path = dir.join(format!("{name}.golden"));
+        if update {
+            std::fs::write(&golden_path, &got).expect("write golden");
+            continue;
+        }
+        let want = std::fs::read_to_string(&golden_path).unwrap_or_else(|e| {
+            panic!(
+                "{}: missing snapshot ({e}); run with ACCD_UPDATE_GOLDEN=1 to create",
+                golden_path.display()
+            )
+        });
+        if got.trim_end() != want.trim_end() {
+            failures.push(format!(
+                "== {name} ==\n--- expected ---\n{want}\n--- got ---\n{got}"
+            ));
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "DDSL golden snapshots diverged (semantic change?):\n{}",
+        failures.join("\n")
+    );
+}
+
+/// The goldens themselves are also sanity-locked in code for the three
+/// strategy families, so a wholesale regeneration of wrong snapshots
+/// (e.g. blindly re-blessing after a planner bug) still gets caught.
+#[test]
+fn golden_corpus_covers_all_three_strategy_families() {
+    let dir = golden_dir();
+    let mut kinds = std::collections::BTreeSet::new();
+    for entry in std::fs::read_dir(&dir).expect("read golden dir") {
+        let p = entry.expect("dir entry").path();
+        if p.extension().is_some_and(|x| x == "dd") {
+            let plan = ddsl::compile_program(&std::fs::read_to_string(&p).unwrap()).unwrap();
+            kinds.insert(match plan.kind {
+                PlanKind::KmeansLike { .. } => "kmeans",
+                PlanKind::KnnJoinLike { .. } => "knn",
+                PlanKind::NbodyLike { .. } => "nbody",
+            });
+        }
+    }
+    assert_eq!(
+        kinds.into_iter().collect::<Vec<_>>(),
+        vec!["kmeans", "knn", "nbody"],
+        "corpus must exercise every planner family"
+    );
+}

@@ -1,0 +1,223 @@
+//! Property tests for the GTI bound algebra (`gti::bounds`): the
+//! soundness arguments the whole optimization rests on, as executable
+//! checks over random geometry.
+//!
+//! The invariant in every test: a bound may be loose, but it must NEVER
+//! exclude the true answer — no true nearest neighbor may live in a
+//! pruned target group, and no true closest center may live in a pruned
+//! center group, under either supported metric and after trace-based
+//! drift widening.
+
+use accd::data::Matrix;
+use accd::gti::{bounds, Grouping, KnnFilter, Metric};
+use accd::util::prop::{self, Config};
+use accd::util::rng::Rng;
+
+fn rand_points(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+    Matrix::from_vec(prop::gen_points(rng, n, d, 4.0), n, d).unwrap()
+}
+
+/// Eq. 2 group-pair bounds contain every member-pair distance, for both
+/// triangle-inequality metrics (groupings and bounds share the metric).
+#[test]
+fn prop_group_pair_bounds_contain_all_pair_distances() {
+    prop::check(
+        &Config { cases: 20, max_size: 160, seed: 0xB0021, ..Default::default() },
+        |rng, size| {
+            let n_src = 15 + size / 2;
+            let n_trg = 20 + size / 2;
+            let d = 1 + rng.below(6);
+            let zs = 2 + rng.below(6);
+            let zt = 2 + rng.below(6);
+            let metric = if rng.below(2) == 0 { Metric::L2 } else { Metric::L1 };
+            (rand_points(rng, n_src, d), rand_points(rng, n_trg, d), zs, zt, metric)
+        },
+        |(src, trg, zs, zt, metric)| {
+            let gs = Grouping::build_with_metric(src, *zs, 2, 4096, 1, *metric)
+                .map_err(|e| e.to_string())?;
+            let gt = Grouping::build_with_metric(trg, *zt, 2, 4096, 2, *metric)
+                .map_err(|e| e.to_string())?;
+            let bnds = bounds::group_pair_bounds_metric(&gs, &gt, *metric);
+            for i in 0..src.rows() {
+                for j in 0..trg.rows() {
+                    let d_true = metric.dist_rows(src, i, trg, j);
+                    let b = bnds[gs.assign[i] as usize][gt.assign[j] as usize];
+                    if d_true < b.lb - 1e-3 || d_true > b.ub + 1e-3 {
+                        return Err(format!(
+                            "{metric:?}: pair ({i},{j}) d={d_true} escapes [{}, {}]",
+                            b.lb, b.ub
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// KNN soundness: for every source point, ALL of its true K nearest
+/// targets live inside the candidate groups of its source group — the
+/// filter may keep too much, never too little.  Metric-generic.
+#[test]
+fn prop_knn_filter_never_excludes_true_neighbors_any_metric() {
+    prop::check(
+        &Config { cases: 16, max_size: 150, seed: 0xB0022, ..Default::default() },
+        |rng, size| {
+            let n_src = 10 + size / 2;
+            let n_trg = 30 + size;
+            let d = 1 + rng.below(5);
+            let k = 1 + rng.below(8);
+            let zs = 2 + rng.below(6);
+            let zt = 2 + rng.below(8);
+            let metric = if rng.below(2) == 0 { Metric::L2 } else { Metric::L1 };
+            (rand_points(rng, n_src, d), rand_points(rng, n_trg, d), k, zs, zt, metric)
+        },
+        |(src, trg, k, zs, zt, metric)| {
+            let gs = Grouping::build_with_metric(src, *zs, 2, 4096, 3, *metric)
+                .map_err(|e| e.to_string())?;
+            let gt = Grouping::build_with_metric(trg, *zt, 2, 4096, 4, *metric)
+                .map_err(|e| e.to_string())?;
+            let mut filter = KnnFilter::new();
+            let (cands, _) = filter.candidates_metric(&gs, &gt, *k, *metric);
+            for i in 0..src.rows() {
+                let cand = &cands[gs.assign[i] as usize];
+                // True top-k by exhaustive metric scan.
+                let mut dists: Vec<(f32, usize)> =
+                    (0..trg.rows()).map(|j| (metric.dist_rows(src, i, trg, j), j)).collect();
+                dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+                for &(d_true, j) in dists.iter().take(*k) {
+                    let tg = gt.assign[j];
+                    if !cand.contains(&tg) {
+                        return Err(format!(
+                            "{metric:?}: point {i}: true neighbor {j} (d={d_true}) \
+                             lives in pruned group {tg}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// K-means prune-rule soundness: with per-group upper bounds derived
+/// from exact assigned distances (the engine's invariant), the rule
+/// `lb[group][center_group] <= max member ub` never prunes the center
+/// group holding a point's true closest center.
+#[test]
+fn prop_kmeans_rule_never_excludes_true_closest_center() {
+    prop::check(
+        &Config { cases: 16, max_size: 150, seed: 0xB0023, ..Default::default() },
+        |rng, size| {
+            let n = 20 + size;
+            let d = 1 + rng.below(5);
+            let k = 2 + rng.below(20);
+            let zs = 2 + rng.below(6);
+            let zt = 1 + rng.below(4);
+            (rand_points(rng, n, d), rand_points(rng, k, d), zs, zt)
+        },
+        |(points, centers, zs, zt)| {
+            let gs =
+                Grouping::build(points, *zs, 2, 4096, 5).map_err(|e| e.to_string())?;
+            let gc =
+                Grouping::build(centers, (*zt).min(centers.rows()), 2, 4096, 6)
+                    .map_err(|e| e.to_string())?;
+            let pair = bounds::group_pair_bounds(&gs, &gc);
+
+            // Exact nearest center per point (the engine's ub source).
+            let nearest: Vec<(usize, f32)> = (0..points.rows())
+                .map(|i| {
+                    let mut best = (0usize, f32::INFINITY);
+                    for c in 0..centers.rows() {
+                        let d2 = points.dist2(i, centers, c);
+                        if d2 < best.1 {
+                            best = (c, d2);
+                        }
+                    }
+                    (best.0, best.1.max(0.0).sqrt())
+                })
+                .collect();
+
+            // Per source group: ub = max member distance-to-assigned.
+            let mut grp_ub = vec![0.0f32; gs.num_groups()];
+            for (i, &(_, d)) in nearest.iter().enumerate() {
+                let g = gs.assign[i] as usize;
+                if d > grp_ub[g] {
+                    grp_ub[g] = d;
+                }
+            }
+
+            for (i, &(c_true, _)) in nearest.iter().enumerate() {
+                let g = gs.assign[i] as usize;
+                let b = gc.assign[c_true] as usize;
+                // The engine prunes (g, b) iff lb > grp_ub[g]; that must
+                // never happen for the group holding the true closest
+                // center (allow float-noise slack).
+                if pair[g][b].lb > grp_ub[g] + 1e-4 {
+                    return Err(format!(
+                        "point {i}: closest center {c_true} in pruned center-group {b} \
+                         (lb {} > group ub {})",
+                        pair[g][b].lb, grp_ub[g]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Trace-based widening stays sound: bounds computed from *stale*
+/// center distances, widened by the per-group drifts that recentering
+/// reports, still contain every true pair distance of the *moved*
+/// points (the N-body filter's reuse invariant).
+#[test]
+fn prop_drift_widened_bounds_stay_sound() {
+    prop::check(
+        &Config { cases: 14, max_size: 120, seed: 0xB0024, ..Default::default() },
+        |rng, size| {
+            let n = 20 + size;
+            let z = 2 + rng.below(6);
+            let step = 0.02 + rng.f32() * 0.15;
+            (rand_points(rng, n, 3), z, step)
+        },
+        |(points, z, step)| {
+            let mut grouping =
+                Grouping::build(points, *z, 2, 4096, 7).map_err(|e| e.to_string())?;
+            // Stale center distances, captured before any motion.
+            let stale = bounds::center_distances(&grouping.centers, &grouping.centers);
+            let zg = grouping.num_groups();
+
+            // Move the points, then recenter (drift per group, fresh radii).
+            let mut moved = points.clone();
+            let mut rng = Rng::new(0xD01F7);
+            for i in 0..moved.rows() {
+                for v in moved.row_mut(i) {
+                    *v += rng.range_f32(-*step, *step);
+                }
+            }
+            let drifts = grouping.recenter(&moved);
+
+            for i in 0..moved.rows() {
+                for j in 0..moved.rows() {
+                    let (a, b) =
+                        (grouping.assign[i] as usize, grouping.assign[j] as usize);
+                    let bound = bounds::GroupPairBound::from_center_dist(
+                        stale[a * zg + b],
+                        grouping.radii[a],
+                        grouping.radii[b],
+                    )
+                    .widened(drifts[a], drifts[b]);
+                    let d_true = moved.dist2(i, &moved, j).sqrt();
+                    if d_true < bound.lb - 1e-3 {
+                        return Err(format!(
+                            "pair ({i},{j}): d={d_true} below widened lb {} \
+                             (groups {a},{b}, drifts {}/{})",
+                            bound.lb, drifts[a], drifts[b]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,179 @@
+//! The serving runtime's correctness contract, end to end: a batch of
+//! mixed queries through `serve::QueryBatcher` must produce results
+//! **identical** to running each query alone through `Engine` — not
+//! merely close: grouping reuse, slab sharing, deduplication and the
+//! shared tagged pipeline are all engineered to be bit-transparent, so
+//! every comparison below is exact (`assert_eq!` on floats).
+
+use std::sync::Arc;
+
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::{synthetic, Dataset};
+use accd::gti::Metric;
+use accd::serve::{QueryBatcher, ServeRequest, ServeResponse};
+
+fn fresh_engine() -> Engine {
+    Engine::new(AccdConfig::new()).expect("engine")
+}
+
+fn fresh_batcher() -> QueryBatcher {
+    let cfg = AccdConfig::new();
+    QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), cfg.serve.clone())
+}
+
+fn assert_knn_identical(got: &ServeResponse, want: &accd::coordinator::KnnResult, what: &str) {
+    let got = got.as_knn().unwrap_or_else(|| panic!("{what}: wrong response kind"));
+    assert_eq!(got.k, want.k, "{what}: k");
+    assert_eq!(got.neighbors.len(), want.neighbors.len(), "{what}: result size");
+    for (i, (g, w)) in got.neighbors.iter().zip(&want.neighbors).enumerate() {
+        assert_eq!(g, w, "{what}: neighbors of source point {i} differ");
+    }
+}
+
+#[test]
+fn batched_knn_cohort_is_identical_to_sequential() {
+    // 8 coalescible queries: one hot target dataset, several distinct
+    // sources, duplicated queries, and two different k values.
+    let trg = Arc::new(synthetic::clustered(900, 6, 10, 0.03, 100));
+    let srcs: Vec<Arc<Dataset>> = (0..4)
+        .map(|i| Arc::new(synthetic::clustered(120 + 30 * i, 6, 5, 0.04, 200 + i as u64)))
+        .collect();
+    let queries: Vec<(Arc<Dataset>, usize)> = vec![
+        (srcs[0].clone(), 5),
+        (srcs[1].clone(), 5),
+        (srcs[0].clone(), 5), // duplicate of query 0 (dedup path)
+        (srcs[2].clone(), 9),
+        (srcs[1].clone(), 9), // same source, different k (no dedup)
+        (srcs[3].clone(), 5),
+        (srcs[2].clone(), 9), // duplicate of query 3
+        (srcs[3].clone(), 17),
+    ];
+
+    let mut batcher = fresh_batcher();
+    for (src, k) in &queries {
+        batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), *k));
+    }
+    let batched = batcher.flush().expect("flush");
+    assert_eq!(batched.len(), queries.len());
+
+    let mut solo = fresh_engine();
+    for (i, (src, k)) in queries.iter().enumerate() {
+        let want = solo.knn_join(src, &trg, *k).expect("solo knn");
+        assert_knn_identical(&batched[i].1, &want, &format!("query {i}"));
+    }
+
+    // The coalescing actually happened: shared tiles were reported.
+    let stats = batcher.stats();
+    assert_eq!(stats.queries, 8);
+    assert!(stats.tiles_total > 0);
+    assert!(
+        stats.tiles_shared > 0,
+        "8 coalescible queries must share tiles: {stats:?}"
+    );
+    assert!(stats.dedup_hits >= 2, "{stats:?}");
+}
+
+#[test]
+fn batched_mixed_workload_is_identical_to_sequential() {
+    let trg = Arc::new(synthetic::clustered(600, 5, 8, 0.03, 1));
+    let knn_src = Arc::new(synthetic::clustered(150, 5, 5, 0.04, 2));
+    let l1_src = Arc::new(synthetic::clustered(100, 5, 5, 0.04, 3));
+    let km_ds = Arc::new(synthetic::clustered(500, 6, 8, 0.03, 4));
+    let nb_ds = Arc::new(synthetic::uniform(220, 3, 5));
+    let masses = Arc::new(synthetic::equal_masses(220, 1.0));
+
+    let mut batcher = fresh_batcher();
+    batcher.submit(ServeRequest::knn(knn_src.clone(), trg.clone(), 7));
+    batcher.submit(ServeRequest::kmeans(km_ds.clone(), 12, 6));
+    batcher.submit(ServeRequest::knn_metric(l1_src.clone(), trg.clone(), 4, Metric::L1));
+    batcher.submit(ServeRequest::nbody(nb_ds.clone(), masses.clone(), 3, 1e-3, 0.15));
+    batcher.submit(ServeRequest::kmeans(km_ds.clone(), 12, 6)); // duplicate
+    let batched = batcher.flush().expect("flush");
+    assert_eq!(batched.len(), 5);
+
+    let mut solo = fresh_engine();
+
+    let want_knn = solo.knn_join(&knn_src, &trg, 7).unwrap();
+    assert_knn_identical(&batched[0].1, &want_knn, "L2 knn");
+
+    let want_km = solo.kmeans(&km_ds, 12, 6).unwrap();
+    for idx in [1usize, 4] {
+        let got = batched[idx].1.as_kmeans().expect("kmeans response");
+        assert_eq!(got.assign, want_km.assign, "kmeans assignment");
+        assert_eq!(got.sse, want_km.sse, "kmeans sse (exact)");
+        assert_eq!(got.iterations, want_km.iterations);
+        assert_eq!(got.centers.as_slice(), want_km.centers.as_slice(), "kmeans centers");
+    }
+
+    let want_l1 = solo.knn_join_metric(&l1_src, &trg, 4, Metric::L1).unwrap();
+    assert_knn_identical(&batched[2].1, &want_l1, "L1 knn");
+
+    let want_nb = solo.nbody(&nb_ds, &masses, 3, 1e-3, 0.15).unwrap();
+    let got_nb = batched[3].1.as_nbody().expect("nbody response");
+    assert_eq!(got_nb.steps, want_nb.steps);
+    assert_eq!(
+        got_nb.positions.as_slice(),
+        want_nb.positions.as_slice(),
+        "nbody positions (exact)"
+    );
+    assert_eq!(
+        got_nb.velocities.as_slice(),
+        want_nb.velocities.as_slice(),
+        "nbody velocities (exact)"
+    );
+}
+
+#[test]
+fn parity_survives_a_warm_cache_and_multiple_flushes() {
+    let trg = Arc::new(synthetic::clustered(500, 4, 6, 0.03, 11));
+    let src_a = Arc::new(synthetic::clustered(90, 4, 4, 0.04, 12));
+    let src_b = Arc::new(synthetic::clustered(110, 4, 4, 0.04, 13));
+
+    let mut batcher = fresh_batcher();
+    // Flush 1 warms the grouping cache.
+    batcher.submit(ServeRequest::knn(src_a.clone(), trg.clone(), 6));
+    let first = batcher.flush().expect("flush 1");
+    // Flush 2 reuses the cached target grouping for a different source
+    // and re-runs the same query (full cache hits).
+    batcher.submit(ServeRequest::knn(src_b.clone(), trg.clone(), 6));
+    batcher.submit(ServeRequest::knn(src_a.clone(), trg.clone(), 6));
+    let second = batcher.flush().expect("flush 2");
+
+    let mut solo = fresh_engine();
+    let want_a = solo.knn_join(&src_a, &trg, 6).unwrap();
+    let want_b = solo.knn_join(&src_b, &trg, 6).unwrap();
+    assert_knn_identical(&first[0].1, &want_a, "flush1/src_a");
+    assert_knn_identical(&second[0].1, &want_b, "flush2/src_b");
+    assert_knn_identical(&second[1].1, &want_a, "flush2/src_a (warm)");
+
+    let stats = batcher.stats();
+    assert!(
+        stats.grouping_cache_hits >= 2,
+        "warm flush must hit the grouping cache: {stats:?}"
+    );
+    assert_eq!(stats.flushes, 2);
+}
+
+#[test]
+fn parity_holds_with_dedup_disabled() {
+    let trg = Arc::new(synthetic::clustered(400, 4, 6, 0.03, 21));
+    let src = Arc::new(synthetic::clustered(80, 4, 4, 0.04, 22));
+
+    let cfg = AccdConfig::new();
+    let mut serve_cfg = cfg.serve.clone();
+    serve_cfg.dedup = false;
+    let mut batcher = QueryBatcher::new(Engine::new(cfg).unwrap(), serve_cfg);
+    batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), 5));
+    batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), 5));
+    let out = batcher.flush().expect("flush");
+
+    let mut solo = fresh_engine();
+    let want = solo.knn_join(&src, &trg, 5).unwrap();
+    assert_knn_identical(&out[0].1, &want, "copy 1");
+    assert_knn_identical(&out[1].1, &want, "copy 2");
+    assert_eq!(batcher.stats().dedup_hits, 0);
+    // Without dedup the second copy re-dispatches against fully shared
+    // slabs, so sharing is still visible.
+    assert!(batcher.stats().tiles_shared > 0, "{:?}", batcher.stats());
+}

@@ -1,0 +1,92 @@
+//! Minimal in-tree substitute for the `anyhow` crate.
+//!
+//! The offline vendored registry does not carry `anyhow`, so this path
+//! dependency provides the tiny surface the launcher and the examples
+//! actually use: [`Error`], [`Result`], [`anyhow!`], [`bail!`] and
+//! [`ensure!`].  Semantics match upstream for that surface: any
+//! `std::error::Error + Send + Sync + 'static` converts into [`Error`]
+//! via `?`, and `fn main() -> anyhow::Result<()>` prints the message on
+//! failure.
+
+/// A type-erased error: the formatted message of whatever was thrown.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: std::fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `fn main() -> Result<(), E>` prints `E` via Debug; format it like
+// Display so CLI failures stay readable (upstream anyhow does the same).
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with the erased error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_and_conversions() {
+        fn fails() -> crate::Result<()> {
+            crate::ensure!(1 + 1 == 3, "math broke: {}", 42);
+            Ok(())
+        }
+        let err = fails().unwrap_err();
+        assert_eq!(err.to_string(), "math broke: 42");
+
+        fn io_bubbles() -> crate::Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io_bubbles().is_err());
+
+        let e: crate::Error = crate::anyhow!("plain {}", "msg");
+        assert_eq!(format!("{e:?}"), "plain msg");
+    }
+}
