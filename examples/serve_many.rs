@@ -3,14 +3,17 @@
 //! Simulates a serving deployment: many users issue KNN / K-means /
 //! N-body queries against a handful of hot datasets.  The batcher
 //! coalesces compatible queries into cohorts (shared groupings, shared
-//! target slabs, one tagged device pipeline), deduplicates identical
-//! requests, and reports what it amortized — while returning results
-//! identical to solo `Engine` calls (see rust/tests/serve_parity.rs).
+//! target slabs, one tagged device pipeline per cohort), deduplicates
+//! identical requests, spreads cohorts across its engine shards, and
+//! honours per-query deadlines: `poll()` flushes only what is due, so
+//! a latency-sensitive query never waits for patient ones — while
+//! returning results identical to solo `Engine` calls (see
+//! rust/tests/serve_parity.rs).
 //!
 //! Run with:  cargo run --release --example serve_many
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use accd::config::AccdConfig;
 use accd::coordinator::Engine;
@@ -21,27 +24,45 @@ fn main() -> anyhow::Result<()> {
     let cfg = AccdConfig::new();
     let engine = Engine::new(cfg.clone())?;
     let mut batcher = QueryBatcher::new(engine, cfg.serve.clone());
+    println!("serving on {} engine shard(s)\n", batcher.shard_count());
 
     // Two hot datasets every user queries against.
     let catalog = Arc::new(synthetic::clustered(8_000, 8, 40, 0.02, 7));
     let particles = Arc::new(synthetic::uniform(400, 3, 8));
     let masses = Arc::new(synthetic::equal_masses(400, 1.0));
 
-    // A burst of traffic: 10 users, some asking the same thing.
+    // A latency-sensitive query, already due: the next poll() serves
+    // it alone instead of waiting for the rest of the burst.
+    let urgent_src = Arc::new(synthetic::clustered(200, 8, 4, 0.03, 99));
+    let urgent_req = ServeRequest::knn(urgent_src, catalog.clone(), 5);
+    let urgent = batcher.submit_with_deadline(urgent_req, Duration::ZERO);
+
+    // A burst of patient traffic: 8 users, some asking the same thing.
     for user in 0..8u64 {
         // 4 unique query vectors, each asked twice.
         let src = Arc::new(synthetic::clustered(300, 8, 6, 0.03, 50 + user % 4));
-        batcher.submit(ServeRequest::knn(src, catalog.clone(), 10));
+        batcher.submit_with_deadline(
+            ServeRequest::knn(src, catalog.clone(), 10),
+            Duration::from_secs(3600),
+        );
     }
     batcher.submit(ServeRequest::kmeans(catalog.clone(), 32, 8));
     batcher.submit(ServeRequest::nbody(particles, masses, 3, 1e-3, 0.12));
-    println!("submitted {} queries; flushing...", batcher.pending_len());
+    println!("submitted {} queries; polling...", batcher.pending_len());
+
+    let polled = batcher.poll()?;
+    println!(
+        "poll served {} due query(ies) (urgent id {urgent}), {} still pending\n",
+        polled.len(),
+        batcher.pending_len()
+    );
+    anyhow::ensure!(polled.iter().any(|(id, _)| *id == urgent), "urgent query must be served");
 
     let t = Instant::now();
     let responses = batcher.flush()?;
     let secs = t.elapsed().as_secs_f64();
 
-    for (id, resp) in &responses {
+    for (id, resp) in polled.iter().chain(responses.iter()) {
         match resp {
             ServeResponse::Knn(r) => println!(
                 "  query {id}: knn k={} -> {} result rows (mean k-th d^2 {:.4})",
@@ -60,11 +81,23 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    println!("\nflush took {secs:.3}s\n");
+    println!("\nburst flush took {secs:.3}s\n");
     println!("{}", batcher.stats().summary());
+    println!();
+    for (i, shard) in batcher.shard_stats().iter().enumerate() {
+        println!(
+            "  shard {i}: {} queries in {} flushes | {} tiles | slab cache {} hits / {} misses",
+            shard.queries,
+            shard.flushes,
+            shard.tiles_total,
+            shard.slab_cache_hits,
+            shard.slab_cache_misses,
+        );
+    }
     anyhow::ensure!(
         batcher.stats().tiles_shared > 0,
         "coalescible burst shared no tiles"
     );
+    anyhow::ensure!(batcher.stats().deadline_flushes == 1, "poll must have served the deadline");
     Ok(())
 }

@@ -1,13 +1,16 @@
 //! Serving-throughput bench: N coalescible queries through
 //! `serve::QueryBatcher` vs the same N queries as independent `Engine`
-//! calls.
+//! calls — swept across engine-shard counts (1/2/4), plus a
+//! repeated-flush scenario that shows the persistent per-shard slab
+//! cache converting packing work into cache hits.
 //!
 //! The batched path amortizes exactly what a serving deployment
 //! amortizes: the target grouping is built once per cohort instead of
 //! once per query, packed target slabs are shared across queries with
-//! identical candidate sets, and duplicated queries are answered from
-//! one execution.  `ServeStats` reports the tiles-shared ratio that
-//! proves the coalescing happened.
+//! identical candidate sets (and across flushes, until LRU-evicted
+//! over the byte budget), duplicated queries are answered from one
+//! execution, and independent cohorts run concurrently on the engine
+//! pool.  `ServeStats` reports the sharing that proves it happened.
 //!
 //! Scale down with ACCD_BENCH_FAST=1 (CI).
 
@@ -25,96 +28,123 @@ fn main() {
     let (n_trg, n_src) = if fast { (4_000, 300) } else { (20_000, 1_500) };
     let k = 10;
 
-    // One hot target dataset, 6 distinct user queries, each submitted
-    // twice (live traffic repeats itself) -> 12 coalescible queries.
-    let trg = Arc::new(synthetic::clustered(n_trg, 8, 50, 0.02, 1));
+    // Two hot target datasets, 6 distinct user queries, each submitted
+    // twice (live traffic repeats itself) -> 12 coalescible queries in
+    // two independent cohorts (so a second shard has work to steal).
+    let trg_a = Arc::new(synthetic::clustered(n_trg, 8, 50, 0.02, 1));
+    let trg_b = Arc::new(synthetic::clustered(n_trg / 2, 8, 30, 0.02, 2));
     let srcs: Vec<Arc<Dataset>> = (0..6)
         .map(|i| Arc::new(synthetic::clustered(n_src, 8, 10, 0.03, 100 + i as u64)))
         .collect();
-    let queries: Vec<Arc<Dataset>> = (0..12).map(|i| srcs[i % 6].clone()).collect();
+    let queries: Vec<(Arc<Dataset>, Arc<Dataset>)> = (0..12)
+        .map(|i| (srcs[i % 6].clone(), if i % 2 == 0 { trg_a.clone() } else { trg_b.clone() }))
+        .collect();
     eprintln!(
-        "serve_throughput: {} KNN queries (6 unique) x k={k} against one {}-point target",
+        "serve_throughput: {} KNN queries (6 unique sources, 2 cohorts) x k={k} \
+         against {}/{}-point targets",
         queries.len(),
-        n_trg
+        n_trg,
+        n_trg / 2
     );
 
     let cfg = AccdConfig::new();
+    let q = queries.len() as f64;
 
     // --- Sequential: one Engine call per query --------------------------
     let mut engine = Engine::new(cfg.clone()).expect("engine");
     let t = Instant::now();
     let mut seq_results = Vec::new();
-    for src in &queries {
-        seq_results.push(engine.knn_join(src, &trg, k).expect("solo knn"));
+    for (src, trg) in &queries {
+        seq_results.push(engine.knn_join(src, trg, k).expect("solo knn"));
     }
     let seq_secs = t.elapsed().as_secs_f64();
 
-    // --- Batched: one flush through the serving runtime ------------------
-    let mut batcher =
-        QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), cfg.serve.clone());
-    for src in &queries {
-        batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), k));
-    }
-    let t = Instant::now();
-    let batched = batcher.flush().expect("flush");
-    let bat_secs = t.elapsed().as_secs_f64();
-
-    // --- Batched again (warm grouping cache: steady-state serving) -------
-    for src in &queries {
-        batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), k));
-    }
-    let t = Instant::now();
-    let _ = batcher.flush().expect("warm flush");
-    let warm_secs = t.elapsed().as_secs_f64();
-
-    // Parity spot-check: the bench never reports a win on wrong answers.
-    for (i, (_, resp)) in batched.iter().enumerate() {
-        let got = resp.as_knn().expect("knn response");
-        assert_eq!(
-            got.neighbors, seq_results[i].neighbors,
-            "batched result diverged from sequential on query {i}"
-        );
-    }
-
-    let stats = batcher.stats();
+    // --- Shard sweep: one flush through 1/2/4-shard pools ----------------
     let mut table = Table::new(&["path", "wall (s)", "q/s", "speedup"]);
-    let q = queries.len() as f64;
     table.row(vec![
         "sequential Engine calls".into(),
         format!("{seq_secs:.3}"),
         format!("{:.1}", q / seq_secs),
         fmt_x(1.0),
     ]);
-    table.row(vec![
-        "serve (cold cache)".into(),
-        format!("{bat_secs:.3}"),
-        format!("{:.1}", q / bat_secs),
-        fmt_x(seq_secs / bat_secs),
-    ]);
-    table.row(vec![
-        "serve (warm cache)".into(),
-        format!("{warm_secs:.3}"),
-        format!("{:.1}", q / warm_secs),
-        fmt_x(seq_secs / warm_secs),
-    ]);
-    table.print("Batched serving vs sequential engine calls");
+    let mut any_shared = false;
+    for shards in [1usize, 2, 4] {
+        let mut serve_cfg = cfg.serve.clone();
+        serve_cfg.shards = shards;
+        let mut batcher =
+            QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), serve_cfg);
+        for (src, trg) in &queries {
+            batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), k));
+        }
+        let t = Instant::now();
+        let batched = batcher.flush().expect("flush");
+        let secs = t.elapsed().as_secs_f64();
+
+        // Parity spot-check: never report a win on wrong answers.
+        for (i, (_, resp)) in batched.iter().enumerate() {
+            let got = resp.as_knn().expect("knn response");
+            assert_eq!(
+                got.neighbors, seq_results[i].neighbors,
+                "batched result diverged from sequential on query {i} ({shards} shards)"
+            );
+        }
+        any_shared |= batcher.stats().tiles_shared > 0;
+        table.row(vec![
+            format!("serve, {shards} shard(s), cold"),
+            format!("{secs:.3}"),
+            format!("{:.1}", q / secs),
+            fmt_x(seq_secs / secs),
+        ]);
+    }
+    table.print("Batched serving vs sequential engine calls (shard sweep)");
+
+    // --- Repeated flushes: the persistent slab cache at work -------------
+    let rounds = if fast { 3 } else { 5 };
+    let mut serve_cfg = cfg.serve.clone();
+    serve_cfg.shards = 2;
+    let mut batcher = QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), serve_cfg);
+    let mut round_rows = Table::new(&["flush", "wall (s)", "q/s", "slab hit rate"]);
+    for round in 0..rounds {
+        for (src, trg) in &queries {
+            batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), k));
+        }
+        let hits0 = batcher.stats().slab_cache_hits;
+        let misses0 = batcher.stats().slab_cache_misses;
+        let t = Instant::now();
+        batcher.flush().expect("repeated flush");
+        let secs = t.elapsed().as_secs_f64();
+        let (hits, misses) = (
+            batcher.stats().slab_cache_hits - hits0,
+            batcher.stats().slab_cache_misses - misses0,
+        );
+        let rate = if hits + misses == 0 { 0.0 } else { hits as f64 / (hits + misses) as f64 };
+        round_rows.row(vec![
+            format!("{}", round + 1),
+            format!("{secs:.3}"),
+            format!("{:.1}", q / secs),
+            format!("{:.1}%", 100.0 * rate),
+        ]);
+    }
+    round_rows.print("Repeated flushes (2 shards): persistent slab cache");
+    let stats = batcher.stats();
     println!("\n{}", stats.summary());
 
-    if stats.tiles_shared == 0 {
+    if !any_shared || stats.tiles_shared == 0 {
         eprintln!("FAIL: coalescible queries shared no tiles — coalescing regressed");
         std::process::exit(1);
     }
-    if bat_secs >= seq_secs {
-        eprintln!(
-            "WARN: batched ({bat_secs:.3}s) did not beat sequential ({seq_secs:.3}s) \
-             on this machine/scale"
-        );
+    if stats.slab_cache_hits == 0 {
+        eprintln!("FAIL: repeated flushes hit no cached slabs — persistence regressed");
+        std::process::exit(1);
     }
     println!(
-        "\ntiles shared: {}/{} ({:.1}%) | grouping cache hit rate {:.1}%",
+        "\ntiles shared: {}/{} ({:.1}%) | grouping cache hit rate {:.1}% | \
+         slab cache hit rate {:.1}% ({} evictions)",
         stats.tiles_shared,
         stats.tiles_total,
         100.0 * stats.tiles_shared_ratio(),
         100.0 * stats.cache_hit_rate(),
+        100.0 * stats.slab_hit_rate(),
+        stats.slab_cache_evictions,
     );
 }

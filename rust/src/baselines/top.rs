@@ -405,7 +405,8 @@ pub fn kmeans_fpga(
     report.device_modeled_secs = report.device.modeled_secs;
     report.quality = sse;
     let pm = PowerModel::default();
-    report.energy_j = pm.accd_joules(report.wall_secs, report.wall_secs * 0.4, 1.0, report.device.wall_secs);
+    report.energy_j =
+        pm.accd_joules(report.wall_secs, report.wall_secs * 0.4, 1.0, report.device.wall_secs);
     report.avg_watts = report.energy_j / report.wall_secs.max(1e-9);
     let _ = Platform::AccdFpga; // platform handled inside accd_joules
     Ok(KmeansOut { centers, assign, sse, iterations, report })

@@ -56,17 +56,38 @@ pub struct ServeConfig {
     /// processes at most this many pending queries; the rest stay
     /// queued for the next flush.
     pub max_batch: usize,
-    /// LRU capacity (entries) of the grouping cache.
+    /// LRU capacity (entries) of each shard's grouping cache.
     pub grouping_cache_cap: usize,
     /// Bounded-queue depth of the merged device pipeline.
     pub pipeline_depth: usize,
     /// Deduplicate identical in-flight queries within a flush.
     pub dedup: bool,
+    /// Engine shards in the execution pool.  Cohorts are partitioned
+    /// across shards by cost estimate and run concurrently; results
+    /// are bit-identical for any shard count (serve parity contract).
+    pub shards: usize,
+    /// Default admission deadline in milliseconds applied by
+    /// `QueryBatcher::submit` (0 = none: such queries flush only via
+    /// an explicit `flush()` or the max_batch size trigger).
+    /// `submit_with_deadline` overrides this per query.
+    pub deadline_ms: u64,
+    /// Byte budget of each shard's cross-flush packed-slab cache
+    /// (0 = unbounded).  Hot cohorts' target slabs stay resident
+    /// across flushes until LRU-evicted over this budget.
+    pub slab_cache_bytes: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { max_batch: 64, grouping_cache_cap: 32, pipeline_depth: 8, dedup: true }
+        Self {
+            max_batch: 64,
+            grouping_cache_cap: 32,
+            pipeline_depth: 8,
+            dedup: true,
+            shards: 2,
+            deadline_ms: 0,
+            slab_cache_bytes: 64 << 20,
+        }
     }
 }
 
@@ -128,6 +149,11 @@ impl AccdConfig {
             if let Some(b) = s.get("dedup").as_bool() {
                 cfg.serve.dedup = b;
             }
+            cfg.serve.shards = s.get("shards").as_usize().unwrap_or(cfg.serve.shards);
+            cfg.serve.deadline_ms =
+                s.get("deadline_ms").as_usize().map(|v| v as u64).unwrap_or(cfg.serve.deadline_ms);
+            cfg.serve.slab_cache_bytes =
+                s.get("slab_cache_bytes").as_usize().unwrap_or(cfg.serve.slab_cache_bytes);
         }
         if let Some(s) = v.get("artifact_dir").as_str() {
             cfg.artifact_dir = s.to_string();
@@ -167,6 +193,9 @@ impl AccdConfig {
         if self.serve.grouping_cache_cap == 0 {
             return Err(Error::Config("serve.grouping_cache_cap must be positive".into()));
         }
+        if self.serve.shards == 0 {
+            return Err(Error::Config("serve.shards must be positive".into()));
+        }
         Ok(())
     }
 
@@ -198,6 +227,9 @@ impl AccdConfig {
                     ("grouping_cache_cap", json::num(self.serve.grouping_cache_cap as f64)),
                     ("pipeline_depth", json::num(self.serve.pipeline_depth as f64)),
                     ("dedup", Value::Bool(self.serve.dedup)),
+                    ("shards", json::num(self.serve.shards as f64)),
+                    ("deadline_ms", json::num(self.serve.deadline_ms as f64)),
+                    ("slab_cache_bytes", json::num(self.serve.slab_cache_bytes as f64)),
                 ]),
             ),
             ("artifact_dir", json::s(self.artifact_dir.clone())),
@@ -226,6 +258,9 @@ mod tests {
         cfg.serve.grouping_cache_cap = 3;
         cfg.serve.pipeline_depth = 2;
         cfg.serve.dedup = false;
+        cfg.serve.shards = 4;
+        cfg.serve.deadline_ms = 15;
+        cfg.serve.slab_cache_bytes = 1 << 20;
         let re = AccdConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, re);
     }
@@ -236,11 +271,16 @@ mod tests {
         assert!(AccdConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"serve": {"grouping_cache_cap": 0}}"#).unwrap();
         assert!(AccdConfig::from_json(&v).is_err());
-        let v = json::parse(r#"{"serve": {"max_batch": 5, "dedup": false}}"#).unwrap();
+        let v = json::parse(r#"{"serve": {"shards": 0}}"#).unwrap();
+        assert!(AccdConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"serve": {"max_batch": 5, "dedup": false, "shards": 3}}"#).unwrap();
         let cfg = AccdConfig::from_json(&v).unwrap();
         assert_eq!(cfg.serve.max_batch, 5);
         assert!(!cfg.serve.dedup);
+        assert_eq!(cfg.serve.shards, 3);
         assert_eq!(cfg.serve.pipeline_depth, ServeConfig::default().pipeline_depth);
+        assert_eq!(cfg.serve.deadline_ms, ServeConfig::default().deadline_ms);
+        assert_eq!(cfg.serve.slab_cache_bytes, ServeConfig::default().slab_cache_bytes);
     }
 
     #[test]

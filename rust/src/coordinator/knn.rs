@@ -17,8 +17,9 @@
 //!
 //! 1. [`plan_metric`] — CPU filter stage: groupings in, a [`KnnPlan`]
 //!    of merged dispatch batches out.  Packed target slabs are obtained
-//!    through a [`TrgSlabCache`], so queries in one serving cohort
-//!    share slabs for identical candidate sets.
+//!    through a [`SlabCache`], so queries in one serving cohort (and,
+//!    with the serving layer's persistent per-shard caches, across
+//!    flushes) share slabs for identical candidate sets.
 //! 2. job building + device execution — [`build_job`] per batch,
 //!    streamed through the bounded [`super::pipeline`] (solo runs use
 //!    their own queue; the serving layer streams all queries' batches
@@ -63,11 +64,171 @@ pub(crate) struct SharedSlab {
     pub rows: usize,
 }
 
-/// Cohort-level memo of packed target slabs, keyed by the candidate
-/// target-group set.  Within one query candidate sets are unique (the
-/// Fig. 4b schedule merges duplicates), so every cache *hit* is
-/// cross-query sharing.
-pub(crate) type TrgSlabCache = HashMap<Vec<u32>, SharedSlab>;
+/// Everything a packed target slab's bytes are determined by, besides
+/// the candidate group set: the target grouping's identity (content
+/// fingerprint pair + build parameters — the same 128-bit guarantee
+/// [`crate::serve::GroupingCache`] relies on) and the tile geometry the
+/// slab was padded for.  Two equal scopes imply bit-identical
+/// groupings, so a slab cached under one scope can be served to any
+/// later query in the same scope without perturbing results.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SlabScope {
+    pub(crate) fingerprint: u64,
+    pub(crate) probe: u64,
+    pub(crate) groups: usize,
+    pub(crate) iters: usize,
+    pub(crate) sample: usize,
+    pub(crate) seed: u64,
+    pub(crate) metric: Metric,
+    pub(crate) d_pad: usize,
+    pub(crate) tile_n: usize,
+}
+
+impl SlabScope {
+    /// Scope for a throwaway per-run cache (the solo engine path): the
+    /// cache never outlives one target grouping, so its identity
+    /// fields are irrelevant — only key consistency within the run
+    /// matters.
+    pub(crate) fn transient(metric: Metric) -> Self {
+        Self {
+            fingerprint: 0,
+            probe: 0,
+            groups: 0,
+            iters: 0,
+            sample: 0,
+            seed: 0,
+            metric,
+            d_pad: 0,
+            tile_n: 0,
+        }
+    }
+}
+
+struct SlabEntry {
+    slab: SharedSlab,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// Byte-budgeted LRU cache of packed target slabs, keyed by
+/// ([`SlabScope`], candidate target-group set).
+///
+/// Grown out of the per-flush cohort memo (`TrgSlabCache`): within one
+/// query candidate sets are unique (the Fig. 4b schedule merges
+/// duplicates), so every *hit* is cross-query — or, now that the
+/// serving layer keeps one instance per engine shard across flushes,
+/// cross-*flush* — sharing.  Hot cohorts' slabs stay resident until
+/// LRU-evicted over the byte budget, trading memory for the repeated
+/// packing cost (the ROADMAP "slab cache persistence" follow-up).
+pub struct SlabCache {
+    /// Max resident bytes (0 = unbounded).
+    budget: usize,
+    /// Nested so the hot hit path borrows `cand` (`Vec<u32>: Borrow<[u32]>`)
+    /// instead of allocating an owned key per lookup.
+    map: HashMap<SlabScope, HashMap<Vec<u32>, SlabEntry>>,
+    bytes: usize,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl SlabCache {
+    /// Unbounded cache — the per-run scratch the solo path uses.
+    pub fn unbounded() -> Self {
+        Self::with_budget(0)
+    }
+
+    /// Cache bounded to `budget` resident bytes (0 = unbounded).
+    pub fn with_budget(budget: usize) -> Self {
+        Self {
+            budget,
+            map: HashMap::new(),
+            bytes: 0,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Resident slab count (across all scopes).
+    pub fn len(&self) -> usize {
+        self.map.values().map(|inner| inner.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Bytes currently resident (slab payloads + column-id tables).
+    pub fn resident_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Fetch the slab for `(scope, cand)`, building it on a miss.
+    /// Returns the slab and whether it was served from cache.  A hit
+    /// allocates nothing; keys are cloned only on insert.
+    pub(crate) fn get_or_build(
+        &mut self,
+        scope: &SlabScope,
+        cand: &[u32],
+        build: impl FnOnce() -> SharedSlab,
+    ) -> (SharedSlab, bool) {
+        self.tick += 1;
+        if let Some(entry) = self.map.get_mut(scope).and_then(|inner| inner.get_mut(cand)) {
+            entry.last_used = self.tick;
+            self.hits += 1;
+            return (entry.slab.clone(), true);
+        }
+        self.misses += 1;
+        let slab = build();
+        let bytes = slab.slab.len() * 4 + slab.col_ids.len() * 4;
+        self.map
+            .entry(scope.clone())
+            .or_default()
+            .insert(cand.to_vec(), SlabEntry { slab: slab.clone(), bytes, last_used: self.tick });
+        self.bytes += bytes;
+        self.evict_to_budget();
+        (slab, false)
+    }
+
+    /// Evict least-recently-used entries until under budget, in one
+    /// pass: collect every resident entry's age, sort oldest-first,
+    /// and remove until the budget holds — O(resident log resident)
+    /// per eviction *event*, not per evicted entry.  Evicting never
+    /// invalidates outstanding slabs (they are `Arc`-shared); it only
+    /// forgets them for future reuse.
+    fn evict_to_budget(&mut self) {
+        if self.budget == 0 || self.bytes <= self.budget {
+            return;
+        }
+        let mut ages: Vec<(u64, usize, SlabScope, Vec<u32>)> = self
+            .map
+            .iter()
+            .flat_map(|(scope, inner)| {
+                inner
+                    .iter()
+                    .map(move |(cand, e)| (e.last_used, e.bytes, scope.clone(), cand.clone()))
+            })
+            .collect();
+        ages.sort_unstable_by_key(|&(last_used, ..)| last_used);
+        for (_, bytes, scope, cand) in ages {
+            if self.bytes <= self.budget {
+                break;
+            }
+            if let Some(inner) = self.map.get_mut(&scope) {
+                if inner.remove(&cand).is_some() {
+                    self.bytes -= bytes;
+                    self.evictions += 1;
+                }
+                if inner.is_empty() {
+                    self.map.remove(&scope);
+                }
+            }
+        }
+    }
+}
 
 /// One merged dispatch batch: a run of source groups sharing one
 /// candidate target set.
@@ -79,8 +240,9 @@ pub(crate) struct KnnBatch {
     pub row_ids: Vec<u32>,
     /// The (possibly shared) packed target slab.
     pub trg: SharedSlab,
-    /// True when `trg` was served from the cohort cache, i.e. an
-    /// earlier query already built (and dispatched against) this slab.
+    /// True when `trg` was served from the slab cache, i.e. an earlier
+    /// query (or, under the serving layer's persistent cache, an
+    /// earlier flush) already built this slab.
     pub shared: bool,
 }
 
@@ -98,7 +260,12 @@ pub(crate) struct KnnPlan {
     pub layout_stats: LayoutStats,
 }
 
-pub(super) fn run(engine: &mut Engine, src: &Dataset, trg: &Dataset, k: usize) -> Result<KnnResult> {
+pub(super) fn run(
+    engine: &mut Engine,
+    src: &Dataset,
+    trg: &Dataset,
+    k: usize,
+) -> Result<KnnResult> {
     run_metric(engine, src, trg, k, Metric::L2)
 }
 
@@ -150,8 +317,9 @@ pub(super) fn run_metric(
         metric,
         8,
     )?;
-    let mut slab_cache = TrgSlabCache::new();
-    let plan = plan_metric(&tile, src, k, metric, &src_pg, &trg_pg, &mut slab_cache)?;
+    let mut slab_cache = SlabCache::unbounded();
+    let scope = SlabScope::transient(metric);
+    let plan = plan_metric(&tile, src, k, metric, &src_pg, &trg_pg, &scope, &mut slab_cache)?;
     report.filter.merge(&plan.filter_stats);
     report.layout = plan.layout_stats.clone();
     report.filter_secs += filt0.elapsed().as_secs_f64();
@@ -210,18 +378,17 @@ pub(super) fn run_metric(
 
 /// CPU filter stage: GTI candidate selection + Fig. 4b schedule +
 /// dispatch merging, with target slabs resolved through the (possibly
-/// cohort-shared) cache.  Deterministic in all inputs.
+/// cohort-shared, possibly flush-persistent) [`SlabCache`] under the
+/// caller's [`SlabScope`].  Deterministic in all inputs: a cached slab
+/// is bit-identical to the one `build_trg_slab` would produce, so
+/// reuse can never change results.
 ///
 /// Memory note: target slabs are materialized eagerly here (one per
 /// *distinct* candidate set, shared by every batch and cohort query
-/// that needs it) and live until the query's merge completes.  The
-/// pre-serving code built a fresh slab per batch inside the pipeline
-/// producer — lower peak memory for a solo query with many distinct
-/// candidate sets, but no sharing.  Under batching, deduplication
-/// makes the eager scheme strictly cheaper in total bytes built; if a
-/// solo query over a huge target ever becomes memory-bound, drop each
-/// batch's slab after its last consumer (tracked in ROADMAP "Slab
-/// cache persistence").
+/// that needs it) and live at least until the query's merge completes
+/// — longer when the serving layer's persistent cache keeps them
+/// resident for future flushes, bounded by its byte budget.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn plan_metric(
     tile: &TileInfo,
     src: &Dataset,
@@ -229,7 +396,8 @@ pub(crate) fn plan_metric(
     metric: Metric,
     src_pg: &PackedGrouping,
     trg_pg: &PackedGrouping,
-    slab_cache: &mut TrgSlabCache,
+    scope: &SlabScope,
+    slab_cache: &mut SlabCache,
 ) -> Result<KnnPlan> {
     let d = src.d();
     let d_pad = tile.pad_d(d)?;
@@ -262,14 +430,8 @@ pub(crate) fn plan_metric(
                 src_pg.packed.new2old[s..s + l].iter().copied()
             })
             .collect();
-        let (trg, shared) = match slab_cache.get(&cand) {
-            Some(slab) => (slab.clone(), true),
-            None => {
-                let slab = build_trg_slab(trg_pg, &cand, d, d_pad, tile.n);
-                slab_cache.insert(cand.clone(), slab.clone());
-                (slab, false)
-            }
-        };
+        let (trg, shared) = slab_cache
+            .get_or_build(scope, &cand, || build_trg_slab(trg_pg, &cand, d, d_pad, tile.n));
         batches.push(KnnBatch { groups, row_ids, trg, shared });
     }
 
@@ -379,4 +541,77 @@ pub(crate) fn quality_of(neighbors: &[Vec<(f32, u32)>]) -> f64 {
         .filter_map(|nb| nb.last().map(|&(d2, _)| d2 as f64))
         .sum::<f64>()
         / neighbors.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slab(rows: usize) -> SharedSlab {
+        SharedSlab {
+            slab: Arc::new(vec![0.0; rows * 8]),
+            col_ids: Arc::new((0..rows as u32).collect()),
+            rows,
+        }
+    }
+
+    fn scope_with_seed(seed: u64) -> SlabScope {
+        SlabScope { seed, ..SlabScope::transient(Metric::L2) }
+    }
+
+    #[test]
+    fn slab_cache_hits_same_scope_and_cand() {
+        let mut cache = SlabCache::unbounded();
+        let scope = scope_with_seed(1);
+        let (a, hit_a) = cache.get_or_build(&scope, &[1, 2], || slab(4));
+        let (b, hit_b) = cache.get_or_build(&scope, &[1, 2], || slab(4));
+        assert!(!hit_a);
+        assert!(hit_b);
+        assert!(Arc::ptr_eq(&a.slab, &b.slab));
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.resident_bytes(), 4 * 8 * 4 + 4 * 4);
+    }
+
+    #[test]
+    fn slab_cache_scopes_do_not_alias() {
+        // Same candidate set under different scopes (e.g. two target
+        // datasets, or two seeds) must not share slabs.
+        let mut cache = SlabCache::unbounded();
+        let (_, _) = cache.get_or_build(&scope_with_seed(1), &[1, 2], || slab(4));
+        let (_, hit) = cache.get_or_build(&scope_with_seed(2), &[1, 2], || slab(4));
+        assert!(!hit);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn slab_cache_evicts_lru_over_byte_budget() {
+        // Each slab: 4 rows * 8 f32 * 4B + 4 ids * 4B = 144 bytes.
+        let mut cache = SlabCache::with_budget(300);
+        let scope = scope_with_seed(1);
+        cache.get_or_build(&scope, &[1], || slab(4));
+        cache.get_or_build(&scope, &[2], || slab(4));
+        // Touch [1] so [2] becomes the LRU victim.
+        cache.get_or_build(&scope, &[1], || slab(4));
+        cache.get_or_build(&scope, &[3], || slab(4));
+        assert_eq!(cache.evictions, 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.resident_bytes() <= 300);
+        let (_, hit1) = cache.get_or_build(&scope, &[1], || slab(4));
+        assert!(hit1, "recently-used entry must survive eviction");
+        // [2] was evicted: rebuilding it is a miss.
+        let misses = cache.misses;
+        cache.get_or_build(&scope, &[2], || slab(4));
+        assert_eq!(cache.misses, misses + 1);
+    }
+
+    #[test]
+    fn slab_cache_zero_budget_is_unbounded() {
+        let mut cache = SlabCache::with_budget(0);
+        for i in 0..16u32 {
+            cache.get_or_build(&scope_with_seed(1), &[i], || slab(64));
+        }
+        assert_eq!(cache.len(), 16);
+        assert_eq!(cache.evictions, 0);
+    }
 }

@@ -22,5 +22,5 @@ pub mod pipeline;
 
 pub use engine::Engine;
 pub use kmeans::KmeansResult;
-pub use knn::KnnResult;
+pub use knn::{KnnResult, SlabCache, SlabScope};
 pub use nbody::NbodyResult;

@@ -84,7 +84,11 @@ pub struct FpgaDevice {
 
 impl FpgaDevice {
     pub fn new(runtime: Arc<Runtime>, hw: HwConfig) -> Self {
-        Self { runtime, cost: CostModel::new(hw), stats: std::sync::Mutex::new(DeviceStats::default()) }
+        Self {
+            runtime,
+            cost: CostModel::new(hw),
+            stats: std::sync::Mutex::new(DeviceStats::default()),
+        }
     }
 
     pub fn runtime(&self) -> &Arc<Runtime> {
@@ -121,7 +125,13 @@ impl FpgaDevice {
 
     /// Pad a contiguous row-major slab (already packed by the layout
     /// optimizer) into a tile input buffer.
-    pub fn pad_slab(slab: &[f32], rows: usize, d: usize, rows_padded: usize, d_padded: usize) -> Vec<f32> {
+    pub fn pad_slab(
+        slab: &[f32],
+        rows: usize,
+        d: usize,
+        rows_padded: usize,
+        d_padded: usize,
+    ) -> Vec<f32> {
         let mut out = vec![0.0f32; rows_padded * d_padded];
         for r in 0..rows {
             out[r * d_padded..r * d_padded + d].copy_from_slice(&slab[r * d..(r + 1) * d]);
@@ -252,8 +262,9 @@ impl FpgaDevice {
         s.padded_pairs += mac_rows * k_padded as u64;
         s.valid_pairs += (valid_rows * k_padded) as u64;
         s.wall_secs += wall;
-        s.modeled_secs +=
-            self.cost.tile_seconds(1, 1, 1, 1) * (mac_rows * k_padded as u64) as f64 * d_padded as f64;
+        s.modeled_secs += self.cost.tile_seconds(1, 1, 1, 1)
+            * (mac_rows * k_padded as u64) as f64
+            * d_padded as f64;
         s.bytes_moved +=
             ((rows_pad + k_padded) * d_padded * 4 + valid_rows * 8) as u64;
         Ok((idx, dist))

@@ -77,8 +77,11 @@ impl Grouping {
 
         // Lloyd refinement on a sample.
         let sample_n = sample.clamp(g, n);
-        let sample_idx =
-            if sample_n >= n { (0..n).collect::<Vec<_>>() } else { rng.sample_indices(n, sample_n) };
+        let sample_idx = if sample_n >= n {
+            (0..n).collect::<Vec<_>>()
+        } else {
+            rng.sample_indices(n, sample_n)
+        };
         for _ in 0..iters {
             let mut sums = vec![0.0f64; g * d];
             let mut counts = vec![0u32; g];

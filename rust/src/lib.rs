@@ -38,26 +38,37 @@
 //! println!("converged in {} iters", result.iterations);
 //! ```
 //!
-//! ## Batched serving (`accd::serve`)
+//! ## Sharded batched serving (`accd::serve`)
 //!
 //! One [`coordinator::Engine`] call amortizes GTI grouping *within* a
-//! query; [`serve::QueryBatcher`] amortizes it *across* queries, which
-//! is the seam every scaling feature (sharding, async admission,
-//! multi-backend dispatch) builds on:
+//! query; [`serve::QueryBatcher`] amortizes it *across* queries and
+//! engine shards.  The runtime is layered — `serve::admission` (queue,
+//! dedup, deadline/size-triggered flush decisions via a
+//! [`serve::FlushPolicy`]), `serve::placement` (a
+//! [`serve::ShardPlanner`] balancing cohorts across an
+//! [`serve::EnginePool`] by cost estimate) and `serve::exec`
+//! (per-shard execution on scoped threads, with per-shard grouping and
+//! packed-slab caches that persist across flushes):
 //!
-//! * compatible KNN queries (same target set + metric) are coalesced
-//!   into one cohort sharing a target grouping and packed target slabs,
-//!   and their surviving tiles stream through a single tagged
-//!   [`coordinator::pipeline`] run with per-query demux;
-//! * groupings are memoized in a [`serve::GroupingCache`] keyed by
-//!   dataset fingerprint + grouping parameters (LRU-bounded);
-//! * identical in-flight queries are deduplicated;
+//! * compatible KNN queries (same target content + metric) are
+//!   coalesced into one cohort sharing a target grouping and packed
+//!   target slabs, and their surviving tiles stream through a single
+//!   tagged [`coordinator::pipeline`] run with per-query demux;
+//! * groupings are memoized in a per-shard [`serve::GroupingCache`]
+//!   and target slabs in a per-shard byte-budgeted
+//!   [`coordinator::SlabCache`], both keyed by 128-bit dataset
+//!   fingerprints and both surviving across flushes;
+//! * identical in-flight queries are deduplicated (and inherit the
+//!   earliest deadline of their identity class) without ever
+//!   re-scanning points;
+//! * `submit_with_deadline` + `poll` flush only what is due, so
+//!   latency-sensitive queries stop waiting for stragglers;
 //! * a [`metrics::ServeStats`] report exposes queries/sec, the
-//!   tiles-shared ratio and the cache hit rate.
+//!   tiles-shared ratio and cache hit rates, merged and per shard.
 //!
 //! The contract is strict: batched results are **identical** to running
-//! each query alone through [`coordinator::Engine`] (enforced by
-//! `rust/tests/serve_parity.rs`).
+//! each query alone through [`coordinator::Engine`], for any shard
+//! count and flush order (enforced by `rust/tests/serve_parity.rs`).
 //!
 //! ```no_run
 //! use accd::prelude::*;

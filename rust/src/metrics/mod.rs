@@ -150,15 +150,21 @@ impl RunReport {
     }
 }
 
-/// Accounting of the batched serving runtime (`accd::serve`): one
-/// instance accumulates over a [`crate::serve::QueryBatcher`]'s
-/// lifetime, across flushes.
+/// Accounting of the batched serving runtime (`accd::serve`).
+///
+/// Two views exist: each engine shard accumulates one instance over
+/// its own executions ([`crate::serve::QueryBatcher::shard_stats`]),
+/// and the batcher maintains the merged lifetime view
+/// ([`crate::serve::QueryBatcher::stats`]).  Per-flush deltas are
+/// folded in with [`ServeStats::absorb_exec`].
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServeStats {
     /// Queries answered (including deduplicated ones).
     pub queries: u64,
-    /// Flushes executed.
+    /// Flushes executed (merged view) / participated in (shard view).
     pub flushes: u64,
+    /// Flushes triggered by an expired admission deadline (`poll`).
+    pub deadline_flushes: u64,
     pub knn_queries: u64,
     pub kmeans_queries: u64,
     pub nbody_queries: u64,
@@ -168,16 +174,30 @@ pub struct ServeStats {
     /// `Latency_filt` grouping build).
     pub grouping_cache_hits: u64,
     pub grouping_cache_misses: u64,
-    /// Dispatch batches whose packed target slab was shared from an
-    /// earlier query in the same cohort.
+    /// Grouping-cache probe collisions: a fingerprint matched but the
+    /// secondary content probe did not, forcing an uncached rebuild.
+    pub grouping_probe_collisions: u64,
+    /// Dispatch batches whose packed target slab was served from the
+    /// slab cache (built by an earlier query or an earlier flush).
     pub slabs_shared: u64,
+    /// Cross-flush slab-cache hits / misses / LRU evictions.
+    pub slab_cache_hits: u64,
+    pub slab_cache_misses: u64,
+    pub slab_cache_evictions: u64,
+    /// Bytes currently resident in the slab cache(s).
+    pub slab_cache_bytes: u64,
+    /// Full O(n) content comparisons performed where the fingerprint
+    /// fast path did not apply (today: only N-body mass vectors —
+    /// dataset identity always resolves via pointer or fingerprint).
+    pub content_full_scans: u64,
     /// Device tiles dispatched across all flushes...
     pub tiles_total: u64,
     /// ...of which this many served more than one query: tiles of
     /// shared-slab batches plus tiles re-served to deduplicated
     /// queries.
     pub tiles_shared: u64,
-    /// Wall-clock seconds spent inside `flush`.
+    /// Wall-clock seconds spent inside `flush` (merged view) /
+    /// executing assigned cohorts (shard view).
     pub wall_secs: f64,
 }
 
@@ -210,18 +230,58 @@ impl ServeStats {
         }
     }
 
+    /// Cross-flush slab-cache hit rate.
+    pub fn slab_hit_rate(&self) -> f64 {
+        let total = self.slab_cache_hits + self.slab_cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.slab_cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Fold one flush's execution counters into this accumulator.
+    ///
+    /// Sums what a shard's execution produces per flush (queries,
+    /// per-kind counts, dedup hits, shared slabs/tiles).  Deliberately
+    /// NOT summed: `flushes` / `deadline_flushes` / `content_full_scans`
+    /// (batcher-level events), `wall_secs` (a shard's wall overlaps
+    /// other shards', so the batcher adds its own flush wall to the
+    /// merged view instead), and every cache gauge (`grouping_cache_*`,
+    /// `grouping_probe_collisions`, `slab_cache_*`) — those are
+    /// re-published as absolute values read from the caches after each
+    /// successful flush, so they can never drift from cache reality.
+    pub fn absorb_exec(&mut self, d: &ServeStats) {
+        self.queries += d.queries;
+        self.knn_queries += d.knn_queries;
+        self.kmeans_queries += d.kmeans_queries;
+        self.nbody_queries += d.nbody_queries;
+        self.dedup_hits += d.dedup_hits;
+        self.slabs_shared += d.slabs_shared;
+        self.tiles_total += d.tiles_total;
+        self.tiles_shared += d.tiles_shared;
+    }
+
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("queries", json::num(self.queries as f64)),
             ("flushes", json::num(self.flushes as f64)),
+            ("deadline_flushes", json::num(self.deadline_flushes as f64)),
             ("knn_queries", json::num(self.knn_queries as f64)),
             ("kmeans_queries", json::num(self.kmeans_queries as f64)),
             ("nbody_queries", json::num(self.nbody_queries as f64)),
             ("dedup_hits", json::num(self.dedup_hits as f64)),
             ("grouping_cache_hits", json::num(self.grouping_cache_hits as f64)),
             ("grouping_cache_misses", json::num(self.grouping_cache_misses as f64)),
+            ("grouping_probe_collisions", json::num(self.grouping_probe_collisions as f64)),
             ("cache_hit_rate", json::num(self.cache_hit_rate())),
             ("slabs_shared", json::num(self.slabs_shared as f64)),
+            ("slab_cache_hits", json::num(self.slab_cache_hits as f64)),
+            ("slab_cache_misses", json::num(self.slab_cache_misses as f64)),
+            ("slab_cache_evictions", json::num(self.slab_cache_evictions as f64)),
+            ("slab_cache_bytes", json::num(self.slab_cache_bytes as f64)),
+            ("slab_hit_rate", json::num(self.slab_hit_rate())),
+            ("content_full_scans", json::num(self.content_full_scans as f64)),
             ("tiles_total", json::num(self.tiles_total as f64)),
             ("tiles_shared", json::num(self.tiles_shared as f64)),
             ("tiles_shared_ratio", json::num(self.tiles_shared_ratio())),
@@ -233,20 +293,29 @@ impl ServeStats {
     /// Human-readable summary for CLIs and benches.
     pub fn summary(&self) -> String {
         format!(
-            "serve: {} queries in {} flushes ({:.1} q/s)\n  \
-             mix: {} knn / {} kmeans / {} nbody | dedup {}\n  \
-             grouping cache: {} hits / {} misses ({:.1}% hit rate)\n  \
+            "serve: {} queries in {} flushes ({:.1} q/s, {} deadline-driven)\n  \
+             mix: {} knn / {} kmeans / {} nbody | dedup {} ({} full scans)\n  \
+             grouping cache: {} hits / {} misses ({:.1}% hit rate, {} probe collisions)\n  \
+             slab cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, {:.1} MB resident\n  \
              tiles: {} shared of {} total ({:.1}%) | shared slabs {}",
             self.queries,
             self.flushes,
             self.queries_per_sec(),
+            self.deadline_flushes,
             self.knn_queries,
             self.kmeans_queries,
             self.nbody_queries,
             self.dedup_hits,
+            self.content_full_scans,
             self.grouping_cache_hits,
             self.grouping_cache_misses,
             100.0 * self.cache_hit_rate(),
+            self.grouping_probe_collisions,
+            self.slab_cache_hits,
+            self.slab_cache_misses,
+            100.0 * self.slab_hit_rate(),
+            self.slab_cache_evictions,
+            self.slab_cache_bytes as f64 / 1e6,
             self.tiles_shared,
             self.tiles_total,
             100.0 * self.tiles_shared_ratio(),
@@ -271,13 +340,57 @@ mod tests {
         s.tiles_shared = 25;
         s.grouping_cache_hits = 3;
         s.grouping_cache_misses = 1;
+        s.slab_cache_hits = 6;
+        s.slab_cache_misses = 2;
         assert_eq!(s.queries_per_sec(), 5.0);
         assert_eq!(s.tiles_shared_ratio(), 0.25);
         assert_eq!(s.cache_hit_rate(), 0.75);
+        assert_eq!(s.slab_hit_rate(), 0.75);
         let v = s.to_json();
         assert_eq!(v.get("queries").as_usize(), Some(10));
         assert_eq!(v.get("tiles_shared_ratio").as_f64(), Some(0.25));
+        assert_eq!(v.get("slab_cache_hits").as_usize(), Some(6));
+        assert!(v.get("grouping_probe_collisions").as_f64().is_some());
         assert!(s.summary().contains("10 queries"));
+        assert!(s.summary().contains("slab cache"));
+    }
+
+    #[test]
+    fn absorb_exec_sums_counters_but_not_batcher_fields() {
+        let mut total = ServeStats { flushes: 2, wall_secs: 1.5, ..Default::default() };
+        let delta = ServeStats {
+            queries: 4,
+            knn_queries: 3,
+            kmeans_queries: 1,
+            dedup_hits: 1,
+            grouping_cache_hits: 2,
+            grouping_cache_misses: 2,
+            grouping_probe_collisions: 1,
+            slabs_shared: 5,
+            slab_cache_hits: 5,
+            slab_cache_misses: 3,
+            slab_cache_evictions: 1,
+            slab_cache_bytes: 999,
+            tiles_total: 40,
+            tiles_shared: 10,
+            flushes: 7,
+            wall_secs: 9.0,
+            ..Default::default()
+        };
+        total.absorb_exec(&delta);
+        assert_eq!(total.queries, 4);
+        assert_eq!(total.knn_queries, 3);
+        assert_eq!(total.dedup_hits, 1);
+        assert_eq!(total.slabs_shared, 5);
+        assert_eq!(total.tiles_total, 40);
+        // Batcher-level fields and cache gauges untouched (gauges are
+        // re-published absolutely from the caches, not delta-summed).
+        assert_eq!(total.flushes, 2);
+        assert_eq!(total.wall_secs, 1.5);
+        assert_eq!(total.grouping_probe_collisions, 0);
+        assert_eq!(total.slab_cache_hits, 0);
+        assert_eq!(total.slab_cache_evictions, 0);
+        assert_eq!(total.slab_cache_bytes, 0);
     }
 
     #[test]

@@ -223,7 +223,13 @@ impl Manifest {
 
     /// Name of the distance tile artifact for a metric, tile edges and
     /// padded dim.
-    pub fn distance_name_sized(&self, metric: &str, tm: usize, tn: usize, d_padded: usize) -> String {
+    pub fn distance_name_sized(
+        &self,
+        metric: &str,
+        tm: usize,
+        tn: usize,
+        d_padded: usize,
+    ) -> String {
         format!("distance_{metric}_m{tm}_n{tn}_d{d_padded}")
     }
 

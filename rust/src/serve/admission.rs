@@ -1,0 +1,825 @@
+//! Admission layer of the serving runtime: the client-facing queue.
+//!
+//! Owns everything that happens *before* work is placed on an engine
+//! shard: request/response types, the pending queue, deadline
+//! bookkeeping, the [`FlushPolicy`] that decides *when* queries become
+//! due, and the partition step that coalesces a drained batch into
+//! [`WorkUnit`]s (KNN cohorts sharing a target grouping; deduplicated
+//! K-means / N-body jobs).
+//!
+//! Identity is fingerprint-based: dataset equality resolves through a
+//! per-flush [`FingerprintMemo`] — `Arc` pointer equality first, then
+//! the 128-bit [`crate::gti::fingerprint_pair`] (computed once per
+//! distinct `Arc`, and reused downstream for grouping-cache keys and
+//! slab-cache scopes) — so deserialized-identical datasets never cost
+//! a full O(n·d) point comparison.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::coordinator::{kmeans, knn, nbody};
+use crate::coordinator::{KmeansResult, KnnResult, NbodyResult};
+use crate::data::Dataset;
+use crate::gti::{self, Metric};
+use crate::runtime::TileInfo;
+use crate::Result;
+
+/// Ticket handed back by `QueryBatcher::submit`.
+pub type QueryId = u64;
+
+/// One client request against a registered (reference-counted) dataset.
+#[derive(Debug, Clone)]
+pub enum ServeRequest {
+    /// K nearest targets for every source point.
+    Knn { src: Arc<Dataset>, trg: Arc<Dataset>, k: usize, metric: Metric },
+    /// Lloyd clustering of `ds` into `k` clusters.
+    Kmeans { ds: Arc<Dataset>, k: usize, max_iters: usize },
+    /// Radius-limited gravitational integration.
+    Nbody {
+        ds: Arc<Dataset>,
+        masses: Arc<Vec<f32>>,
+        steps: usize,
+        dt: f32,
+        radius: f32,
+    },
+}
+
+impl ServeRequest {
+    /// Euclidean KNN-join request.
+    pub fn knn(src: Arc<Dataset>, trg: Arc<Dataset>, k: usize) -> Self {
+        Self::knn_metric(src, trg, k, Metric::L2)
+    }
+
+    pub fn knn_metric(src: Arc<Dataset>, trg: Arc<Dataset>, k: usize, metric: Metric) -> Self {
+        Self::Knn { src, trg, k, metric }
+    }
+
+    pub fn kmeans(ds: Arc<Dataset>, k: usize, max_iters: usize) -> Self {
+        Self::Kmeans { ds, k, max_iters }
+    }
+
+    pub fn nbody(
+        ds: Arc<Dataset>,
+        masses: Arc<Vec<f32>>,
+        steps: usize,
+        dt: f32,
+        radius: f32,
+    ) -> Self {
+        Self::Nbody { ds, masses, steps, dt, radius }
+    }
+}
+
+/// The answer to one [`ServeRequest`], in the exact shape the solo
+/// engine entry points return.
+#[derive(Debug, Clone)]
+pub enum ServeResponse {
+    Knn(KnnResult),
+    Kmeans(KmeansResult),
+    Nbody(NbodyResult),
+}
+
+impl ServeResponse {
+    pub fn as_knn(&self) -> Option<&KnnResult> {
+        match self {
+            Self::Knn(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn as_kmeans(&self) -> Option<&KmeansResult> {
+        match self {
+            Self::Kmeans(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn as_nbody(&self) -> Option<&NbodyResult> {
+        match self {
+            Self::Nbody(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+// --- content identity ------------------------------------------------------
+
+/// Memo of dataset fingerprints, keyed by `Arc` address (the memo
+/// holds a clone of every `Arc` it has hashed, so addresses stay
+/// unique for its lifetime).  Content identity of two datasets then
+/// costs pointer equality in the common case, one `fingerprint_pair`
+/// pass per *distinct* `Arc` otherwise — never a repeated full point
+/// scan, even for deserialized-identical duplicates.  Equal 128-bit
+/// pairs imply equal content under the same ~2^-128 collision
+/// assumption the grouping cache already relies on.
+///
+/// The batcher keeps one memo for its lifetime and [`prunes`] it to
+/// the still-pending datasets after every flush attempt: repeated
+/// `poll`s over a deep patient queue never re-hash an unchanged
+/// dataset, and the memo never pins point data beyond its stay in the
+/// queue.
+///
+/// [`prunes`]: FingerprintMemo::prune
+#[derive(Default)]
+pub struct FingerprintMemo {
+    map: HashMap<usize, (Arc<Dataset>, (u64, u64))>,
+    /// Full element-wise comparisons performed where no fingerprint
+    /// fast path exists (today: only N-body mass vectors), over the
+    /// memo's lifetime.
+    pub full_scans: u64,
+}
+
+impl FingerprintMemo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The 128-bit content fingerprint of `ds`, computed at most once
+    /// per distinct `Arc`.
+    pub fn fingerprint(&mut self, ds: &Arc<Dataset>) -> (u64, u64) {
+        let key = Arc::as_ptr(ds) as usize;
+        if let Some((_, fp)) = self.map.get(&key) {
+            return *fp;
+        }
+        let fp = gti::fingerprint_pair(&ds.points);
+        self.map.insert(key, (ds.clone(), fp));
+        fp
+    }
+
+    /// Content equality of two datasets (names NOT compared).
+    pub fn same_dataset(&mut self, a: &Arc<Dataset>, b: &Arc<Dataset>) -> bool {
+        if Arc::ptr_eq(a, b) {
+            return true;
+        }
+        if a.points.rows() != b.points.rows() || a.points.cols() != b.points.cols() {
+            return false;
+        }
+        self.fingerprint(a) == self.fingerprint(b)
+    }
+
+    /// Drop memoized fingerprints whose dataset no longer appears in
+    /// any pending request, so the memo never pins `Arc`s (and their
+    /// point data) beyond their stay in the queue.  Fingerprints of
+    /// still-pending datasets survive — repeated polls never re-hash
+    /// them.
+    pub(crate) fn prune(&mut self, queue: &AdmissionQueue) {
+        if self.map.is_empty() {
+            return;
+        }
+        let mut live = std::collections::HashSet::new();
+        for p in &queue.pending {
+            match &p.req {
+                ServeRequest::Knn { src, trg, .. } => {
+                    live.insert(Arc::as_ptr(src) as usize);
+                    live.insert(Arc::as_ptr(trg) as usize);
+                }
+                ServeRequest::Kmeans { ds, .. } | ServeRequest::Nbody { ds, .. } => {
+                    live.insert(Arc::as_ptr(ds) as usize);
+                }
+            }
+        }
+        self.map.retain(|ptr, _| live.contains(ptr));
+    }
+
+    /// Content equality of two mass vectors.  No fingerprint is kept
+    /// for these (they are O(n), not O(n·d)); the fallback full scan
+    /// is counted so it stays observable in `ServeStats`.
+    pub fn same_masses(&mut self, a: &Arc<Vec<f32>>, b: &Arc<Vec<f32>>) -> bool {
+        if Arc::ptr_eq(a, b) {
+            return true;
+        }
+        if a.len() != b.len() {
+            return false;
+        }
+        self.full_scans += 1;
+        a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Dedup identity of two requests: same kind, same parameters,
+    /// same dataset *name* (responses carry it in `report.dataset`, so
+    /// a deduplicated answer must equal the solo answer exactly) and
+    /// same dataset content.  This is exactly the identity the
+    /// execution layer deduplicates under, which is what lets the
+    /// admission layer give duplicates a shared (earliest) deadline.
+    pub fn same_request(&mut self, a: &ServeRequest, b: &ServeRequest) -> bool {
+        match (a, b) {
+            (
+                ServeRequest::Knn { src: sa, trg: ta, k: ka, metric: ma },
+                ServeRequest::Knn { src: sb, trg: tb, k: kb, metric: mb },
+            ) => {
+                ka == kb
+                    && ma == mb
+                    && sa.name == sb.name
+                    && self.same_dataset(sa, sb)
+                    && self.same_dataset(ta, tb)
+            }
+            (
+                ServeRequest::Kmeans { ds: da, k: ka, max_iters: ia },
+                ServeRequest::Kmeans { ds: db, k: kb, max_iters: ib },
+            ) => ka == kb && ia == ib && da.name == db.name && self.same_dataset(da, db),
+            (
+                ServeRequest::Nbody { ds: da, masses: xa, steps: pa, dt: ta, radius: ra },
+                ServeRequest::Nbody { ds: db, masses: xb, steps: pb, dt: tb, radius: rb },
+            ) => {
+                pa == pb
+                    && ta.to_bits() == tb.to_bits()
+                    && ra.to_bits() == rb.to_bits()
+                    && da.name == db.name
+                    && self.same_masses(xa, xb)
+                    && self.same_dataset(da, db)
+            }
+            _ => false,
+        }
+    }
+}
+
+// --- pending queue ---------------------------------------------------------
+
+/// One admitted, not-yet-executed query.
+#[derive(Debug, Clone)]
+pub(crate) struct Pending {
+    pub id: QueryId,
+    pub req: ServeRequest,
+    /// Absolute due time; `None` waits for an explicit flush or the
+    /// size trigger.
+    pub deadline: Option<Instant>,
+}
+
+/// FIFO queue of admitted queries.  Storage only — *when* entries
+/// leave is the [`FlushPolicy`]'s decision.
+#[derive(Default)]
+pub(crate) struct AdmissionQueue {
+    pending: Vec<Pending>,
+    next_id: QueryId,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, req: ServeRequest, deadline: Option<Instant>) -> QueryId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending.push(Pending { id, req, deadline });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn get(&self, i: usize) -> &Pending {
+        &self.pending[i]
+    }
+
+    /// Earliest pending deadline, if any — lets a serving loop sleep
+    /// until the next `poll` could have work.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending.iter().filter_map(|p| p.deadline).min()
+    }
+
+    /// Remove the entries at `sel` (ascending indices), preserving the
+    /// relative order of both the removed and the remaining entries.
+    pub fn remove_selected(&mut self, sel: &[usize]) -> Vec<Pending> {
+        let mut take = vec![false; self.pending.len()];
+        for &i in sel {
+            take[i] = true;
+        }
+        let mut out = Vec::with_capacity(sel.len());
+        let mut kept = Vec::with_capacity(self.pending.len().saturating_sub(sel.len()));
+        for (i, p) in self.pending.drain(..).enumerate() {
+            if take[i] {
+                out.push(p);
+            } else {
+                kept.push(p);
+            }
+        }
+        self.pending = kept;
+        out
+    }
+
+    /// Put a drained batch back at the front (failed flush recovery),
+    /// preserving its relative order.
+    pub fn requeue_front(&mut self, batch: Vec<Pending>) {
+        self.pending.splice(0..0, batch);
+    }
+}
+
+// --- flush policy ----------------------------------------------------------
+
+/// Decides when pending queries become due.
+///
+/// * `flush()` — explicit: the first `max_batch` pending queries
+///   (all of them when `max_batch == 0`).
+/// * `poll()` — deadline/size-triggered: if `max_batch` queries are
+///   already pending, a full batch is due (size trigger); otherwise
+///   exactly the queries whose deadline has expired — plus their
+///   dedup-identical duplicates, which inherit the class's earliest
+///   deadline — are due, so latency-sensitive queries stop waiting
+///   for stragglers while under-deadline queries keep coalescing.
+#[derive(Debug, Clone)]
+pub struct FlushPolicy {
+    /// Maximum queries per flush (0 = unbounded) and the size trigger.
+    pub max_batch: usize,
+    /// Deadline applied by `submit` when the caller gives none.
+    pub default_deadline: Option<Duration>,
+}
+
+impl FlushPolicy {
+    pub fn from_config(cfg: &ServeConfig) -> Self {
+        let default_deadline =
+            (cfg.deadline_ms > 0).then(|| Duration::from_millis(cfg.deadline_ms));
+        Self { max_batch: cfg.max_batch, default_deadline }
+    }
+
+    /// Absolute deadline `submit` stamps on a new query.
+    pub fn admission_deadline(&self, now: Instant) -> Option<Instant> {
+        self.default_deadline.map(|d| now + d)
+    }
+
+    /// Selection for an explicit flush: the queue's front.
+    pub(crate) fn select_flush(&self, queue: &AdmissionQueue) -> Vec<usize> {
+        let take =
+            if self.max_batch == 0 { queue.len() } else { self.max_batch.min(queue.len()) };
+        (0..take).collect()
+    }
+
+    /// Selection for `poll` at time `now`: indices (ascending) of the
+    /// due queries (empty when nothing is due), plus whether the
+    /// selection was triggered by an expired deadline — `false` for
+    /// a pure size-triggered batch, so `ServeStats::deadline_flushes`
+    /// counts only genuinely deadline-driven flushes.
+    ///
+    /// Due queries are selected first, regardless of queue position:
+    /// an urgent query never waits behind a full batch of patient
+    /// ones.  When `max_batch` queries are pending, the selection is
+    /// then topped up from the queue's front to a full batch.
+    pub(crate) fn select_due(
+        &self,
+        queue: &AdmissionQueue,
+        now: Instant,
+        dedup: bool,
+        memo: &mut FingerprintMemo,
+    ) -> (Vec<usize>, bool) {
+        let n = queue.len();
+        let mut due: Vec<bool> =
+            (0..n).map(|i| queue.get(i).deadline.is_some_and(|d| d <= now)).collect();
+        if dedup {
+            // Duplicates inherit the earliest deadline of their
+            // identity class: one pass suffices because identity is
+            // transitive (anything identical to a newly-marked entry
+            // is identical to the expired entry that marked it).
+            for i in 0..n {
+                if !due[i] {
+                    continue;
+                }
+                for j in 0..n {
+                    if !due[j] && memo.same_request(&queue.get(i).req, &queue.get(j).req) {
+                        due[j] = true;
+                    }
+                }
+            }
+        }
+        let mut sel: Vec<usize> = (0..n).filter(|&i| due[i]).collect();
+        let deadline_triggered = !sel.is_empty();
+        if self.max_batch > 0 {
+            if sel.len() > self.max_batch {
+                // Even the due set overflows a batch: serve the most
+                // overdue first (inherited duplicates without their
+                // own deadline rank as just-due).
+                sel.sort_by_key(|&i| (queue.get(i).deadline.unwrap_or(now), i));
+                sel.truncate(self.max_batch);
+                sel.sort_unstable();
+            } else if n >= self.max_batch {
+                // Size trigger: top up with the queue's front.
+                for i in 0..n {
+                    if sel.len() >= self.max_batch {
+                        break;
+                    }
+                    if !due[i] {
+                        due[i] = true;
+                        sel.push(i);
+                    }
+                }
+                sel.sort_unstable();
+            }
+        }
+        (sel, deadline_triggered)
+    }
+}
+
+// --- admission-time validation ---------------------------------------------
+
+/// The same argument checks the solo engine entry points perform
+/// (shared helpers, so the two paths cannot diverge) plus the
+/// tile-catalogue limits the planner would otherwise only hit
+/// mid-flush — applied to every selected query *before* a flush
+/// consumes anything.
+pub(crate) fn validate_request(req: &ServeRequest, tile: &TileInfo) -> Result<()> {
+    match req {
+        ServeRequest::Knn { src, trg, k, .. } => {
+            knn::validate(src, trg, *k)?;
+            tile.pad_d(src.d())?;
+            Ok(())
+        }
+        ServeRequest::Kmeans { ds, k, .. } => {
+            kmeans::validate(ds, *k)?;
+            tile.pad_d(ds.d())?;
+            tile.pad_kmeans_k(*k)?;
+            Ok(())
+        }
+        ServeRequest::Nbody { ds, masses, .. } => nbody::validate(ds, masses),
+    }
+}
+
+// --- partition: batch -> work units ----------------------------------------
+
+/// One KNN query inside a cohort.
+pub(crate) struct KnnQ {
+    /// Index into the drained batch (response slot).
+    pub pos: usize,
+    pub src: Arc<Dataset>,
+    pub src_fp: (u64, u64),
+    pub k: usize,
+}
+
+impl KnnQ {
+    /// Dedup identity of two queries *within one cohort* (the cohort
+    /// already fixes target content and metric): parameters + source
+    /// name + source content, by pointer or admission-computed
+    /// fingerprint — the within-cohort half of
+    /// [`FingerprintMemo::same_request`]'s KNN identity, shared by the
+    /// execution layer's dedup and the planner's cost estimate so the
+    /// two can never drift.
+    pub fn same_query(&self, other: &KnnQ) -> bool {
+        self.k == other.k
+            && self.src.name == other.src.name
+            && (Arc::ptr_eq(&self.src, &other.src) || self.src_fp == other.src_fp)
+    }
+}
+
+/// Coalesced KNN queries sharing one target set + metric (and so one
+/// target grouping and one packed-slab scope).
+pub(crate) struct KnnCohort {
+    pub trg: Arc<Dataset>,
+    pub trg_fp: (u64, u64),
+    pub metric: Metric,
+    pub queries: Vec<KnnQ>,
+}
+
+pub(crate) struct KmeansJob {
+    pub pos: usize,
+    pub ds: Arc<Dataset>,
+    pub ds_fp: (u64, u64),
+    pub k: usize,
+    pub max_iters: usize,
+    /// Response slots of deduplicated identical queries.
+    pub dups: Vec<usize>,
+}
+
+pub(crate) struct NbodyJob {
+    pub pos: usize,
+    pub ds: Arc<Dataset>,
+    pub ds_fp: (u64, u64),
+    pub masses: Arc<Vec<f32>>,
+    pub steps: usize,
+    pub dt: f32,
+    pub radius: f32,
+    pub dups: Vec<usize>,
+}
+
+/// The unit of placement: one independent piece of work an engine
+/// shard executes in isolation.  The cohort is the natural unit —
+/// everything inside it shares artifacts; nothing across units does
+/// (persistent caches excepted, and those are per shard).
+pub(crate) enum WorkUnit {
+    Knn(KnnCohort),
+    Kmeans(KmeansJob),
+    Nbody(NbodyJob),
+}
+
+impl WorkUnit {
+    /// Relative cost estimate for load balancing: the dominant
+    /// distance-pair count of the unit.  Only ratios matter.  With
+    /// `dedup` on, KNN queries the execution layer will collapse into
+    /// one run (same k, name, content) are counted once — a dup-heavy
+    /// cohort must not look expensive to the planner (K-means / N-body
+    /// jobs already collapsed their duplicates at partition time).
+    pub fn cost_estimate(&self, dedup: bool) -> u64 {
+        match self {
+            WorkUnit::Knn(c) => {
+                let trg = c.trg.n() as u64;
+                let mut seen: Vec<&KnnQ> = Vec::new();
+                let src_total: u64 = c
+                    .queries
+                    .iter()
+                    .filter(|q| {
+                        if !dedup {
+                            return true;
+                        }
+                        if seen.iter().any(|s| s.same_query(q)) {
+                            false
+                        } else {
+                            seen.push(q);
+                            true
+                        }
+                    })
+                    .map(|q| q.src.n() as u64)
+                    .sum();
+                trg + src_total * trg
+            }
+            WorkUnit::Kmeans(j) => j.ds.n() as u64 * j.k as u64 * (j.max_iters as u64 + 1),
+            WorkUnit::Nbody(j) => {
+                let n = j.ds.n() as u64;
+                n * n * j.steps as u64
+            }
+        }
+    }
+}
+
+/// Partition a drained batch into work units: coalesce KNN queries
+/// into cohorts by (target content, metric); deduplicate identical
+/// K-means / N-body queries (KNN dedup happens inside cohort
+/// execution, where the per-query plans are built).  Deterministic in
+/// the batch order.
+pub(crate) fn partition(
+    batch: &[Pending],
+    dedup: bool,
+    memo: &mut FingerprintMemo,
+) -> Vec<WorkUnit> {
+    let mut cohorts: Vec<KnnCohort> = Vec::new();
+    let mut kmeans_jobs: Vec<KmeansJob> = Vec::new();
+    let mut nbody_jobs: Vec<NbodyJob> = Vec::new();
+    for (pos, p) in batch.iter().enumerate() {
+        match &p.req {
+            ServeRequest::Knn { src, trg, k, metric } => {
+                let found = cohorts
+                    .iter()
+                    .position(|c| c.metric == *metric && memo.same_dataset(&c.trg, trg));
+                let q = KnnQ { pos, src: src.clone(), src_fp: memo.fingerprint(src), k: *k };
+                match found {
+                    Some(ci) => cohorts[ci].queries.push(q),
+                    None => cohorts.push(KnnCohort {
+                        trg: trg.clone(),
+                        trg_fp: memo.fingerprint(trg),
+                        metric: *metric,
+                        queries: vec![q],
+                    }),
+                }
+            }
+            ServeRequest::Kmeans { ds, k, max_iters } => {
+                // Dedup under the ONE request identity (same_request),
+                // so admission's deadline inheritance and this
+                // partition can never disagree.
+                let dup = if dedup {
+                    kmeans_jobs
+                        .iter()
+                        .position(|j| memo.same_request(&batch[j.pos].req, &p.req))
+                } else {
+                    None
+                };
+                match dup {
+                    Some(ji) => kmeans_jobs[ji].dups.push(pos),
+                    None => kmeans_jobs.push(KmeansJob {
+                        pos,
+                        ds: ds.clone(),
+                        ds_fp: memo.fingerprint(ds),
+                        k: *k,
+                        max_iters: *max_iters,
+                        dups: Vec::new(),
+                    }),
+                }
+            }
+            ServeRequest::Nbody { ds, masses, steps, dt, radius } => {
+                let dup = if dedup {
+                    nbody_jobs
+                        .iter()
+                        .position(|j| memo.same_request(&batch[j.pos].req, &p.req))
+                } else {
+                    None
+                };
+                match dup {
+                    Some(ji) => nbody_jobs[ji].dups.push(pos),
+                    None => nbody_jobs.push(NbodyJob {
+                        pos,
+                        ds: ds.clone(),
+                        ds_fp: memo.fingerprint(ds),
+                        masses: masses.clone(),
+                        steps: *steps,
+                        dt: *dt,
+                        radius: *radius,
+                        dups: Vec::new(),
+                    }),
+                }
+            }
+        }
+    }
+    cohorts
+        .into_iter()
+        .map(WorkUnit::Knn)
+        .chain(kmeans_jobs.into_iter().map(WorkUnit::Kmeans))
+        .chain(nbody_jobs.into_iter().map(WorkUnit::Nbody))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn ds(seed: u64) -> Arc<Dataset> {
+        Arc::new(synthetic::clustered(60, 4, 4, 0.05, seed))
+    }
+
+    /// A bitwise copy behind a fresh `Arc` with a fresh name
+    /// allocation — what deserializing the same dataset twice yields.
+    fn deserialized_copy(d: &Arc<Dataset>) -> Arc<Dataset> {
+        Arc::new((**d).clone())
+    }
+
+    #[test]
+    fn memo_identity_never_full_scans_datasets() {
+        let mut memo = FingerprintMemo::new();
+        let a = ds(1);
+        let b = deserialized_copy(&a);
+        let c = ds(2);
+        assert!(memo.same_dataset(&a, &a), "pointer fast path");
+        assert!(memo.same_dataset(&a, &b), "fingerprint path");
+        assert!(!memo.same_dataset(&a, &c));
+        assert_eq!(memo.full_scans, 0);
+        // Fingerprints were computed once per distinct Arc, then
+        // memoized: repeating the comparison stays cheap.
+        assert!(memo.same_dataset(&a, &b));
+        assert_eq!(memo.full_scans, 0);
+    }
+
+    #[test]
+    fn memo_counts_mass_full_scans() {
+        let mut memo = FingerprintMemo::new();
+        let m1 = Arc::new(vec![1.0f32; 16]);
+        let m2 = Arc::new(vec![1.0f32; 16]);
+        assert!(memo.same_masses(&m1, &m1));
+        assert_eq!(memo.full_scans, 0);
+        assert!(memo.same_masses(&m1, &m2));
+        assert_eq!(memo.full_scans, 1);
+    }
+
+    #[test]
+    fn queue_remove_selected_preserves_order() {
+        let mut q = AdmissionQueue::new();
+        let trg = ds(10);
+        for s in 0..5u64 {
+            q.push(ServeRequest::knn(ds(s), trg.clone(), 3), None);
+        }
+        let taken = q.remove_selected(&[1, 3]);
+        assert_eq!(taken.iter().map(|p| p.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(q.len(), 3);
+        assert_eq!((q.get(0).id, q.get(1).id, q.get(2).id), (0, 2, 4));
+        q.requeue_front(taken);
+        assert_eq!((q.get(0).id, q.get(1).id), (1, 3));
+    }
+
+    #[test]
+    fn policy_selects_expired_and_their_duplicates_only() {
+        let policy = FlushPolicy { max_batch: 64, default_deadline: None };
+        let mut q = AdmissionQueue::new();
+        let trg = ds(10);
+        let src = ds(1);
+        let now = Instant::now();
+        let later = now + Duration::from_secs(600);
+        // 0: expired; 1: far future, NOT identical; 2: far future,
+        // identical to 0 (deserialized copy) -> inherits 0's deadline;
+        // 3: no deadline.
+        q.push(ServeRequest::knn(src.clone(), trg.clone(), 3), Some(now));
+        q.push(ServeRequest::knn(ds(2), trg.clone(), 3), Some(later));
+        q.push(
+            ServeRequest::knn(deserialized_copy(&src), deserialized_copy(&trg), 3),
+            Some(later),
+        );
+        q.push(ServeRequest::knn(ds(3), trg.clone(), 3), None);
+        let mut memo = FingerprintMemo::new();
+        let (sel, by_deadline) = policy.select_due(&q, Instant::now(), true, &mut memo);
+        assert_eq!(sel, vec![0, 2]);
+        assert!(by_deadline);
+        assert_eq!(memo.full_scans, 0, "identity resolved without point scans");
+        // Without dedup, only the expired entry itself is due.
+        let mut memo = FingerprintMemo::new();
+        let (sel, _) = policy.select_due(&q, Instant::now(), false, &mut memo);
+        assert_eq!(sel, vec![0]);
+    }
+
+    #[test]
+    fn policy_size_trigger_takes_a_full_batch() {
+        let policy = FlushPolicy { max_batch: 2, default_deadline: None };
+        let mut q = AdmissionQueue::new();
+        let trg = ds(10);
+        for s in 0..3u64 {
+            q.push(ServeRequest::knn(ds(s), trg.clone(), 3), None);
+        }
+        let mut memo = FingerprintMemo::new();
+        let (sel, by_deadline) = policy.select_due(&q, Instant::now(), true, &mut memo);
+        assert_eq!(sel, vec![0, 1]);
+        assert!(!by_deadline, "size trigger is not a deadline flush");
+        assert_eq!(policy.select_flush(&q), vec![0, 1]);
+    }
+
+    #[test]
+    fn policy_due_queries_preempt_the_size_trigger_prefix() {
+        // An urgent query behind a full batch of patient ones must be
+        // selected ahead of the FIFO prefix, not wait a whole flush.
+        let policy = FlushPolicy { max_batch: 2, default_deadline: None };
+        let mut q = AdmissionQueue::new();
+        let trg = ds(10);
+        q.push(ServeRequest::knn(ds(1), trg.clone(), 3), None);
+        q.push(ServeRequest::knn(ds(2), trg.clone(), 3), None);
+        q.push(ServeRequest::knn(ds(3), trg.clone(), 3), Some(Instant::now()));
+        let mut memo = FingerprintMemo::new();
+        let (sel, by_deadline) = policy.select_due(&q, Instant::now(), true, &mut memo);
+        assert_eq!(sel, vec![0, 2], "due query included, batch topped up from the front");
+        assert!(by_deadline);
+    }
+
+    #[test]
+    fn policy_truncation_serves_most_overdue_first() {
+        let policy = FlushPolicy { max_batch: 1, default_deadline: None };
+        let mut q = AdmissionQueue::new();
+        let trg = ds(10);
+        let early = Instant::now();
+        let later = early + Duration::from_millis(1);
+        q.push(ServeRequest::knn(ds(1), trg.clone(), 3), Some(later));
+        q.push(ServeRequest::knn(ds(2), trg, 3), Some(early));
+        let mut memo = FingerprintMemo::new();
+        let now = later + Duration::from_millis(1); // both expired
+        let (sel, by_deadline) = policy.select_due(&q, now, true, &mut memo);
+        assert_eq!(sel, vec![1], "the longer-overdue query wins the only slot");
+        assert!(by_deadline);
+    }
+
+    #[test]
+    fn memo_prune_keeps_only_pending_datasets() {
+        let mut memo = FingerprintMemo::new();
+        let mut q = AdmissionQueue::new();
+        let trg = ds(10);
+        let kept = ds(1);
+        let dropped = ds(2);
+        memo.fingerprint(&kept);
+        memo.fingerprint(&dropped);
+        memo.fingerprint(&trg);
+        q.push(ServeRequest::knn(kept.clone(), trg.clone(), 3), None);
+        memo.prune(&q);
+        assert_eq!(memo.map.len(), 2, "kept src + trg survive, flushed dataset dropped");
+        assert!(memo.map.contains_key(&(Arc::as_ptr(&kept) as usize)));
+        assert!(memo.map.contains_key(&(Arc::as_ptr(&trg) as usize)));
+        assert!(!memo.map.contains_key(&(Arc::as_ptr(&dropped) as usize)));
+    }
+
+    #[test]
+    fn partition_coalesces_arc_distinct_identical_targets() {
+        let trg = ds(10);
+        let trg_copy = deserialized_copy(&trg);
+        let batch = vec![
+            Pending { id: 0, req: ServeRequest::knn(ds(1), trg.clone(), 3), deadline: None },
+            Pending { id: 1, req: ServeRequest::knn(ds(2), trg_copy, 3), deadline: None },
+            Pending { id: 2, req: ServeRequest::kmeans(ds(3), 4, 2), deadline: None },
+        ];
+        let mut memo = FingerprintMemo::new();
+        let units = partition(&batch, true, &mut memo);
+        assert_eq!(units.len(), 2, "one cohort + one kmeans job");
+        match &units[0] {
+            WorkUnit::Knn(c) => assert_eq!(c.queries.len(), 2),
+            _ => panic!("first unit must be the cohort"),
+        }
+        assert_eq!(memo.full_scans, 0);
+        assert!(units[0].cost_estimate(true) > 0);
+    }
+
+    #[test]
+    fn cost_estimate_counts_deduplicable_knn_queries_once() {
+        let trg = ds(10);
+        let src = ds(1);
+        let other = ds(2);
+        let batch = vec![
+            Pending { id: 0, req: ServeRequest::knn(src.clone(), trg.clone(), 3), deadline: None },
+            Pending { id: 1, req: ServeRequest::knn(src.clone(), trg.clone(), 3), deadline: None },
+            Pending { id: 2, req: ServeRequest::knn(src, trg.clone(), 3), deadline: None },
+        ];
+        let mut memo = FingerprintMemo::new();
+        let units = partition(&batch, true, &mut memo);
+        assert_eq!(units.len(), 1);
+        let single = {
+            let batch = vec![Pending {
+                id: 0,
+                req: ServeRequest::knn(other, trg, 3),
+                deadline: None,
+            }];
+            let mut memo = FingerprintMemo::new();
+            partition(&batch, true, &mut memo).remove(0)
+        };
+        // Three identical queries cost the same as one (they execute
+        // once); without dedup they cost three times as much.
+        assert_eq!(units[0].cost_estimate(true), single.cost_estimate(true));
+        assert!(units[0].cost_estimate(false) > 2 * single.cost_estimate(true));
+    }
+}

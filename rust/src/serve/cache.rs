@@ -50,12 +50,24 @@ pub struct GroupingCache {
     tick: u64,
     pub hits: u64,
     pub misses: u64,
+    /// Probe collisions: the key's fingerprint matched a cached entry
+    /// but the secondary content probe did not, so the grouping was
+    /// rebuilt uncached.  Recorded (rather than silently folded into
+    /// `misses`) so cache efficacy stays observable in `ServeStats`.
+    pub probe_collisions: u64,
 }
 
 impl GroupingCache {
     /// `cap` is the maximum number of cached groupings (>= 1).
     pub fn new(cap: usize) -> Self {
-        Self { cap: cap.max(1), map: HashMap::new(), tick: 0, hits: 0, misses: 0 }
+        Self {
+            cap: cap.max(1),
+            map: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            probe_collisions: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -85,8 +97,9 @@ impl GroupingCache {
                 return Ok(entry.pg.clone());
             }
             // Collision: do not serve, do not overwrite (the colliding
-            // pair would thrash); build uncached.
+            // pair would thrash); build uncached and record the event.
             self.misses += 1;
+            self.probe_collisions += 1;
             return Ok(Arc::new(build()?));
         }
         self.misses += 1;
@@ -193,8 +206,11 @@ mod tests {
         let (_, probe2) = key_for(&d2, 4, 1);
         cache.get_or_build(forged.clone(), probe1, || build_for(&d1, 4, 1)).unwrap();
         let g2 = cache.get_or_build(forged, probe2, || build_for(&d2, 4, 1)).unwrap();
-        // The cached (d1-built) grouping must NOT be returned for d2.
+        // The cached (d1-built) grouping must NOT be returned for d2,
+        // and the fallback must be recorded, not silent.
         assert_eq!(g2.grouping.num_points(), 100);
+        assert_eq!(cache.probe_collisions, 1);
+        assert_eq!(cache.misses, 2);
         let g1_again = fetch(&mut cache, &d1, 4, 1);
         assert_ne!(
             g1_again.grouping.centers.as_slice(),

@@ -1,0 +1,473 @@
+//! Execution layer of the serving runtime: cohorts on engine shards.
+//!
+//! Each shard owns a [`ShardState`] — its grouping cache, its
+//! persistent cross-flush [`SlabCache`] and its lifetime
+//! [`ServeStats`] — and executes the work units the placement layer
+//! assigned to it: KNN cohorts stream every member query's surviving
+//! tiles through ONE tagged [`pipeline`] run with per-query demux;
+//! K-means / N-body jobs run through the engine's shared-grouping
+//! entry points.  [`execute_plan`] fans the shards out on scoped OS
+//! threads (independent cohorts execute concurrently; everything a
+//! thread touches is its own shard's state) and joins them in shard
+//! order, so result assembly and stats accounting stay deterministic.
+//!
+//! Failure is all-or-nothing per flush: a shard error aborts the whole
+//! flush; per-shard deltas are only applied by the facade on full
+//! success, so no partial accounting can leak.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::ServeConfig;
+use crate::coordinator::{kmeans, knn, nbody, pipeline};
+use crate::coordinator::{Engine, SlabCache, SlabScope};
+use crate::data::Dataset;
+use crate::fpga::TileResult;
+use crate::gti::Metric;
+use crate::layout::PackedGrouping;
+use crate::metrics::{RunReport, ServeStats};
+use crate::{Error, Result};
+
+use super::admission::{KmeansJob, KnnCohort, KnnQ, NbodyJob, ServeResponse, WorkUnit};
+use super::cache::{GroupingCache, GroupingKey};
+use super::placement::EnginePool;
+
+/// Per-shard serving state: caches survive across flushes (that is
+/// the point), stats accumulate over the shard's lifetime.
+pub(crate) struct ShardState {
+    pub grouping_cache: GroupingCache,
+    pub slab_cache: SlabCache,
+    pub stats: ServeStats,
+}
+
+impl ShardState {
+    pub fn new(cfg: &ServeConfig) -> Self {
+        Self {
+            grouping_cache: GroupingCache::new(cfg.grouping_cache_cap),
+            slab_cache: SlabCache::with_budget(cfg.slab_cache_bytes),
+            stats: ServeStats::default(),
+        }
+    }
+}
+
+/// What one shard produced for one flush: response fan-out slots and
+/// the execution-counter delta (cache counters as before/after
+/// differences, so a failed flush drops them with the delta).
+#[derive(Default)]
+pub(crate) struct ShardDelta {
+    pub stats: ServeStats,
+    pub responses: Vec<(usize, ServeResponse)>,
+}
+
+/// Execute one flush's placed units across the pool, concurrently when
+/// more than one shard has work.  Returns the filled response slots
+/// and one delta per shard (empty for idle shards); `Err` aborts the
+/// whole flush (first erroring shard in shard order).
+pub(crate) fn execute_plan(
+    pool: &mut EnginePool,
+    states: &mut [ShardState],
+    units: Vec<WorkUnit>,
+    assignments: &[Vec<usize>],
+    n_slots: usize,
+    cfg: &ServeConfig,
+) -> Result<(Vec<Option<ServeResponse>>, Vec<ShardDelta>)> {
+    debug_assert_eq!(pool.shard_count(), assignments.len());
+    let mut slots: Vec<Option<WorkUnit>> = units.into_iter().map(Some).collect();
+    let shard_units: Vec<Vec<WorkUnit>> = assignments
+        .iter()
+        .map(|idxs| {
+            idxs.iter().map(|&i| slots[i].take().expect("unit assigned exactly once")).collect()
+        })
+        .collect();
+
+    let active = shard_units.iter().filter(|u| !u.is_empty()).count();
+    let engines = pool.engines_mut();
+    let mut outcomes: Vec<Result<ShardDelta>> = Vec::with_capacity(engines.len());
+    if active <= 1 {
+        // Inline fast path: nothing to overlap, so skip thread spawn.
+        for ((engine, state), units) in
+            engines.iter_mut().zip(states.iter_mut()).zip(shard_units.into_iter())
+        {
+            outcomes.push(if units.is_empty() {
+                Ok(ShardDelta::default())
+            } else {
+                run_shard(engine, state, units, cfg)
+            });
+        }
+    } else {
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(engines.len());
+            for ((engine, state), units) in
+                engines.iter_mut().zip(states.iter_mut()).zip(shard_units.into_iter())
+            {
+                handles.push(if units.is_empty() {
+                    None
+                } else {
+                    Some(scope.spawn(move || run_shard(engine, state, units, cfg)))
+                });
+            }
+            for handle in handles {
+                outcomes.push(match handle {
+                    Some(h) => match h.join() {
+                        Ok(outcome) => outcome,
+                        Err(panic) => std::panic::resume_unwind(panic),
+                    },
+                    None => Ok(ShardDelta::default()),
+                });
+            }
+        });
+    }
+
+    let mut deltas = Vec::with_capacity(outcomes.len());
+    for outcome in outcomes {
+        deltas.push(outcome?);
+    }
+    let mut responses: Vec<Option<ServeResponse>> = (0..n_slots).map(|_| None).collect();
+    for delta in &mut deltas {
+        for (pos, resp) in delta.responses.drain(..) {
+            responses[pos] = Some(resp);
+        }
+    }
+    Ok((responses, deltas))
+}
+
+/// Commit one successful flush's deltas: fold execution counters into
+/// each shard's lifetime stats and the merged view, then re-publish
+/// the cache gauges (hit/miss/collision/eviction counters and resident
+/// bytes) as *absolute* values read from the caches themselves — so
+/// the stats can never drift from cache reality, even across a failed
+/// flush whose cache warm-up had no committable delta.
+pub(crate) fn commit_deltas(
+    states: &mut [ShardState],
+    deltas: &[ShardDelta],
+    merged: &mut ServeStats,
+) {
+    let mut gauges = ServeStats::default();
+    for (state, delta) in states.iter_mut().zip(deltas) {
+        merged.absorb_exec(&delta.stats);
+        state.stats.absorb_exec(&delta.stats);
+        if delta.stats.queries > 0 {
+            state.stats.flushes += 1;
+            state.stats.wall_secs += delta.stats.wall_secs;
+        }
+        let s = &mut state.stats;
+        s.grouping_cache_hits = state.grouping_cache.hits;
+        s.grouping_cache_misses = state.grouping_cache.misses;
+        s.grouping_probe_collisions = state.grouping_cache.probe_collisions;
+        s.slab_cache_hits = state.slab_cache.hits;
+        s.slab_cache_misses = state.slab_cache.misses;
+        s.slab_cache_evictions = state.slab_cache.evictions;
+        s.slab_cache_bytes = state.slab_cache.resident_bytes() as u64;
+        gauges.grouping_cache_hits += s.grouping_cache_hits;
+        gauges.grouping_cache_misses += s.grouping_cache_misses;
+        gauges.grouping_probe_collisions += s.grouping_probe_collisions;
+        gauges.slab_cache_hits += s.slab_cache_hits;
+        gauges.slab_cache_misses += s.slab_cache_misses;
+        gauges.slab_cache_evictions += s.slab_cache_evictions;
+        gauges.slab_cache_bytes += s.slab_cache_bytes;
+    }
+    merged.grouping_cache_hits = gauges.grouping_cache_hits;
+    merged.grouping_cache_misses = gauges.grouping_cache_misses;
+    merged.grouping_probe_collisions = gauges.grouping_probe_collisions;
+    merged.slab_cache_hits = gauges.slab_cache_hits;
+    merged.slab_cache_misses = gauges.slab_cache_misses;
+    merged.slab_cache_evictions = gauges.slab_cache_evictions;
+    merged.slab_cache_bytes = gauges.slab_cache_bytes;
+}
+
+/// Run one shard's units serially on its engine, collecting the delta.
+fn run_shard(
+    engine: &mut Engine,
+    state: &mut ShardState,
+    units: Vec<WorkUnit>,
+    cfg: &ServeConfig,
+) -> Result<ShardDelta> {
+    let t0 = Instant::now();
+    let mut delta = ShardDelta::default();
+    for unit in units {
+        match unit {
+            WorkUnit::Knn(cohort) => run_knn_cohort(engine, state, cohort, cfg, &mut delta)?,
+            WorkUnit::Kmeans(job) => run_kmeans_job(engine, state, job, &mut delta)?,
+            WorkUnit::Nbody(job) => run_nbody_job(engine, state, job, &mut delta)?,
+        }
+    }
+    delta.stats.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(delta)
+}
+
+/// Grouping-cache lookup with the engine's config baked into the key.
+/// The fingerprint pair was computed once at admission; no hashing
+/// happens here.
+fn cached_grouping(
+    engine: &Engine,
+    cache: &mut GroupingCache,
+    ds: &Dataset,
+    fp: (u64, u64),
+    groups: usize,
+    seed: u64,
+    metric: Metric,
+) -> Result<Arc<PackedGrouping>> {
+    let iters = engine.config.gti.grouping_iters;
+    let sample = engine.config.gti.grouping_sample;
+    let key = GroupingKey { fingerprint: fp.0, groups, iters, sample, seed, metric };
+    let points = &ds.points;
+    cache.get_or_build(key, fp.1, || {
+        PackedGrouping::build(points, groups, iters, sample, seed, metric, 8)
+    })
+}
+
+/// Execute one KNN cohort: shared target grouping + slabs (served
+/// through the shard's persistent cache), one tagged pipeline over
+/// every unique query's dispatch batches, per-query demux and merge.
+fn run_knn_cohort(
+    engine: &mut Engine,
+    state: &mut ShardState,
+    cohort: KnnCohort,
+    cfg: &ServeConfig,
+    delta: &mut ShardDelta,
+) -> Result<()> {
+    let cohort_t0 = Instant::now();
+    let KnnCohort { trg, trg_fp, metric, queries } = cohort;
+    let seed = engine.config.seed;
+    let (iters, sample) = (engine.config.gti.grouping_iters, engine.config.gti.grouping_sample);
+    let tile = engine.runtime.manifest().tile.clone();
+
+    let trg_groups = engine.trg_groups(trg.n());
+    let trg_seed = seed ^ 0x7267;
+    let trg_pg = cached_grouping(
+        engine,
+        &mut state.grouping_cache,
+        &trg,
+        trg_fp,
+        trg_groups,
+        trg_seed,
+        metric,
+    )?;
+    // Slab scope: the target grouping's full identity + tile geometry,
+    // so the persistent cache can never serve a slab across distinct
+    // targets, parameters or paddings.
+    let d_pad = tile.pad_d(trg.d())?;
+    let slab_scope = SlabScope {
+        fingerprint: trg_fp.0,
+        probe: trg_fp.1,
+        groups: trg_groups,
+        iters,
+        sample,
+        seed: trg_seed,
+        metric,
+        d_pad,
+        tile_n: tile.n,
+    };
+
+    // Plan every unique query, sharing packed target slabs.
+    struct Unique {
+        q: KnnQ,
+        src_pg: Arc<PackedGrouping>,
+        plan: knn::KnnPlan,
+        dups: Vec<usize>,
+    }
+    let mut uniques: Vec<Unique> = Vec::new();
+    for q in queries {
+        if cfg.dedup {
+            // The ONE within-cohort identity (KnnQ::same_query):
+            // parameters + dataset name (report.dataset carries it) +
+            // content via the admission-computed fingerprints — never
+            // a point scan.
+            if let Some(ui) = uniques.iter().position(|u| u.q.same_query(&q)) {
+                uniques[ui].dups.push(q.pos);
+                continue;
+            }
+        }
+        let src_groups = engine.src_groups(q.src.n());
+        let src_pg = cached_grouping(
+            engine,
+            &mut state.grouping_cache,
+            &q.src,
+            q.src_fp,
+            src_groups,
+            seed,
+            metric,
+        )?;
+        let plan = knn::plan_metric(
+            &tile,
+            &q.src,
+            q.k,
+            metric,
+            &src_pg,
+            &trg_pg,
+            &slab_scope,
+            &mut state.slab_cache,
+        )?;
+        delta.stats.slabs_shared += plan.batches.iter().filter(|b| b.shared).count() as u64;
+        uniques.push(Unique { q, src_pg, plan, dups: Vec::new() });
+    }
+
+    // Stream every unique query's batches through one tagged bounded
+    // pipeline (query-major order: per-tag FIFO makes each query's
+    // merge identical to its solo run).
+    engine.device.reset_stats();
+    let device = &engine.device;
+    let depth = cfg.pipeline_depth;
+    let flat: Vec<(usize, usize)> = uniques
+        .iter()
+        .enumerate()
+        .flat_map(|(qi, u)| (0..u.plan.batches.len()).map(move |bi| (qi, bi)))
+        .collect();
+    let mut results: Vec<Vec<(usize, TileResult)>> =
+        uniques.iter().map(|_| Vec::new()).collect();
+    let mut tiles_by_query = vec![0u64; uniques.len()];
+    let mut shared_tiles_by_query = vec![0u64; uniques.len()];
+    let mut job_err: Option<Error> = None;
+    {
+        let uniques_ref = &uniques;
+        pipeline::run_tagged(
+            depth,
+            |i| {
+                let &(qi, bi) = flat.get(i as usize)?;
+                let u = &uniques_ref[qi];
+                Some((
+                    qi as u64,
+                    (bi, knn::build_job(&u.plan.batches[bi], &u.src_pg, &u.plan, &tile)),
+                ))
+            },
+            |tag, (bi, job)| {
+                if job_err.is_some() {
+                    return;
+                }
+                if job.src_rows == 0 || job.trg_rows == 0 {
+                    return;
+                }
+                let qi = tag as usize;
+                let before = device.stats().tiles;
+                match device.distance_block(&job) {
+                    Ok(res) => {
+                        let tiles = device.stats().tiles - before;
+                        tiles_by_query[qi] += tiles;
+                        if uniques_ref[qi].plan.batches[bi].shared {
+                            shared_tiles_by_query[qi] += tiles;
+                        }
+                        results[qi].push((bi, res));
+                    }
+                    Err(e) => job_err = Some(e),
+                }
+            },
+        );
+    }
+    if let Some(e) = job_err {
+        return Err(e);
+    }
+    let cohort_device = engine.device.stats();
+    let cohort_secs = cohort_t0.elapsed().as_secs_f64();
+
+    // Per-query merge + response fan-out.
+    for (qi, u) in uniques.into_iter().enumerate() {
+        let batch_results = std::mem::take(&mut results[qi]);
+        let neighbors = knn::merge_results(&u.plan, batch_results.into_iter());
+        let mut report = RunReport::new("knn_join", &u.q.src.name, "accd-serve");
+        report.filter.merge(&u.plan.filter_stats);
+        report.layout = u.plan.layout_stats.clone();
+        // Device/wall accounting is cohort-scoped: tile execution is
+        // deliberately shared, so per-query attribution would lie.
+        report.device = cohort_device.clone();
+        report.device_wall_secs = cohort_device.wall_secs;
+        report.device_modeled_secs = cohort_device.modeled_secs;
+        report.wall_secs = cohort_secs;
+        report.iterations = 1;
+        report.quality = knn::quality_of(&neighbors);
+        let result = knn::KnnResult { neighbors, k: u.q.k, report };
+
+        let has_dups = !u.dups.is_empty();
+        delta.stats.tiles_total += tiles_by_query[qi];
+        delta.stats.tiles_shared += if has_dups {
+            tiles_by_query[qi]
+        } else {
+            shared_tiles_by_query[qi]
+        };
+        delta.stats.knn_queries += 1 + u.dups.len() as u64;
+        delta.stats.queries += 1 + u.dups.len() as u64;
+        delta.stats.dedup_hits += u.dups.len() as u64;
+        for &pos in &u.dups {
+            delta.responses.push((pos, ServeResponse::Knn(result.clone())));
+        }
+        delta.responses.push((u.q.pos, ServeResponse::Knn(result)));
+    }
+    Ok(())
+}
+
+fn run_kmeans_job(
+    engine: &mut Engine,
+    state: &mut ShardState,
+    job: KmeansJob,
+    delta: &mut ShardDelta,
+) -> Result<()> {
+    let seed = engine.config.seed;
+    let groups = engine.src_groups(job.ds.n());
+    let pg = cached_grouping(
+        engine,
+        &mut state.grouping_cache,
+        &job.ds,
+        job.ds_fp,
+        groups,
+        seed,
+        Metric::L2,
+    )?;
+    let result = kmeans::run_shared(engine, &job.ds, job.k, job.max_iters, Some(&pg))?;
+    // `run_shared` resets device stats on entry, so this is the
+    // query's own tile count.
+    let tiles = engine.device.stats().tiles;
+    let has_dups = !job.dups.is_empty();
+    delta.stats.tiles_total += tiles;
+    if has_dups {
+        delta.stats.tiles_shared += tiles;
+    }
+    delta.stats.kmeans_queries += 1 + job.dups.len() as u64;
+    delta.stats.queries += 1 + job.dups.len() as u64;
+    delta.stats.dedup_hits += job.dups.len() as u64;
+    for &pos in &job.dups {
+        delta.responses.push((pos, ServeResponse::Kmeans(result.clone())));
+    }
+    delta.responses.push((job.pos, ServeResponse::Kmeans(result)));
+    Ok(())
+}
+
+fn run_nbody_job(
+    engine: &mut Engine,
+    state: &mut ShardState,
+    job: NbodyJob,
+    delta: &mut ShardDelta,
+) -> Result<()> {
+    let seed = engine.config.seed;
+    let groups = engine.src_groups(job.ds.n());
+    let pg = cached_grouping(
+        engine,
+        &mut state.grouping_cache,
+        &job.ds,
+        job.ds_fp,
+        groups,
+        seed,
+        Metric::L2,
+    )?;
+    let result = nbody::run_shared(
+        engine,
+        &job.ds,
+        &job.masses,
+        job.steps,
+        job.dt,
+        job.radius,
+        Some(&pg),
+    )?;
+    let tiles = engine.device.stats().tiles;
+    let has_dups = !job.dups.is_empty();
+    delta.stats.tiles_total += tiles;
+    if has_dups {
+        delta.stats.tiles_shared += tiles;
+    }
+    delta.stats.nbody_queries += 1 + job.dups.len() as u64;
+    delta.stats.queries += 1 + job.dups.len() as u64;
+    delta.stats.dedup_hits += job.dups.len() as u64;
+    for &pos in &job.dups {
+        delta.responses.push((pos, ServeResponse::Nbody(result.clone())));
+    }
+    delta.responses.push((job.pos, ServeResponse::Nbody(result)));
+    Ok(())
+}

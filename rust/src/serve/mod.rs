@@ -3,201 +3,160 @@
 //! AccD's whole premise is amortization: the GTI filter prunes work on
 //! the CPU so the accelerator only sees surviving tiles.  A solo
 //! [`Engine`] call amortizes *within* one query; this module amortizes
-//! *across* queries, which is what a serving deployment (many users
-//! querying a handful of hot datasets) actually needs:
+//! *across* queries — and, since the sharded core, across *engines*.
+//! It is layered, one module per concern, talking only through their
+//! public types:
 //!
-//! * [`QueryBatcher`] accepts concurrent KNN / K-means / N-body
-//!   requests ([`ServeRequest`]) against reference-counted datasets,
-//!   coalesces compatible KNN queries (same target set + metric) into
-//!   **cohorts** that share one target grouping and packed target
-//!   slabs, and streams every cohort's surviving tiles through ONE
-//!   tagged [`pipeline`] run with per-query demultiplexing.
-//! * [`GroupingCache`] memoizes grouping builds (the `Latency_filt`
-//!   term) across queries *and* flushes, keyed by dataset fingerprint +
-//!   build parameters, LRU-bounded.
-//! * Identical in-flight queries are deduplicated: one execution, every
-//!   requester answered.
-//! * [`ServeStats`] (in [`crate::metrics`]) reports queries/sec, the
-//!   tiles-shared ratio and the grouping-cache hit rate.
+//! ```text
+//!      submit / submit_with_deadline          poll / flush
+//!           |                                     |
+//!           v                                     v
+//!   +-- admission -------------------------------------------+
+//!   | AdmissionQueue + FlushPolicy: deadline- and size-      |
+//!   | triggered selection (dup queries inherit the earliest  |
+//!   | deadline); partition -> WorkUnits: KNN cohort          |
+//!   | coalescing + dedup via 128-bit fingerprint identity    |
+//!   +-----------------------+--------------------------------+
+//!                           v
+//!   +-- placement -----------------------------------------+
+//!   | ShardPlanner: LPT partition by cohort cost estimate  |
+//!   | EnginePool: N engine shards over one shared Runtime  |
+//!   +------+------------------------+----------------------+
+//!          v                        v
+//!   +-- exec: shard 0 ----+  +-- exec: shard N-1 --+  scoped
+//!   | GroupingCache (LRU) |  |        ...          |  threads,
+//!   | SlabCache (byte-    |  |                     |  one per
+//!   |   budget LRU, lives |  |                     |  busy shard
+//!   |   across flushes)   |  |                     |
+//!   | tagged pipeline,    |  |                     |
+//!   |   per-query demux   |  |                     |
+//!   +------+--------------+  +---------+-----------+
+//!          v                           v
+//!     responses in submission order + per-shard ServeStats
+//! ```
+//!
+//! * [`QueryBatcher`] is the facade over the three layers: `submit`
+//!   many, then `flush` (everything due now) or `poll` (only what the
+//!   [`FlushPolicy`] says is due — expired deadlines flush alone, so
+//!   latency-sensitive queries stop waiting for stragglers, while
+//!   under-deadline queries keep coalescing).
+//! * Compatible KNN queries (same target content + metric) form
+//!   **cohorts** sharing one target grouping and packed target slabs;
+//!   each cohort streams through ONE tagged [`coordinator::pipeline`]
+//!   run with per-query demux.  Cohorts are the unit of placement.
+//! * [`GroupingCache`] (groupings, per shard) and the coordinator's
+//!   [`crate::coordinator::SlabCache`] (packed target slabs, per
+//!   shard, byte-budgeted) persist across flushes, keyed by 128-bit
+//!   content fingerprints; identical in-flight queries are
+//!   deduplicated without ever re-scanning points.
+//! * [`crate::metrics::ServeStats`] reports the merged view
+//!   ([`QueryBatcher::stats`]) and per-shard views
+//!   ([`QueryBatcher::shard_stats`]).
 //!
 //! **Correctness contract:** batched results are identical to running
-//! each query alone through [`Engine`] with the same config.  Every
-//! shared artifact is bit-identical to what the solo path would build
-//! (deterministic grouping builds, byte-equal target slabs, per-tag
-//! FIFO tile order), so no sharing can perturb a result.  The contract
-//! is enforced end-to-end by `rust/tests/serve_parity.rs`.
+//! each query alone through [`Engine`] with the same config — for any
+//! shard count and any flush order.  Every shared artifact is
+//! bit-identical to what the solo path would build (deterministic
+//! grouping builds, byte-equal target slabs, per-tag FIFO tile order),
+//! and every work unit is self-contained, so neither sharing nor
+//! placement can perturb a result.  Enforced end-to-end by
+//! `rust/tests/serve_parity.rs`.
+//!
+//! [`coordinator::pipeline`]: crate::coordinator::pipeline
 
+mod admission;
 mod cache;
+mod exec;
+mod placement;
 
+pub use admission::{FlushPolicy, QueryId, ServeRequest, ServeResponse};
 pub use cache::{GroupingCache, GroupingKey};
+pub use placement::{EnginePool, ShardPlanner};
 
-use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use admission::{AdmissionQueue, FingerprintMemo};
+use exec::ShardState;
 
 use crate::config::ServeConfig;
-use crate::coordinator::{kmeans, knn, nbody, pipeline};
-use crate::coordinator::{Engine, KmeansResult, KnnResult, NbodyResult};
-use crate::data::Dataset;
-use crate::fpga::TileResult;
-use crate::gti::{self, Metric};
-use crate::layout::PackedGrouping;
-use crate::metrics::{RunReport, ServeStats};
-use crate::{Error, Result};
+use crate::coordinator::Engine;
+use crate::metrics::ServeStats;
+use crate::Result;
 
-/// Ticket handed back by [`QueryBatcher::submit`].
-pub type QueryId = u64;
-
-/// One client request against a registered (reference-counted) dataset.
-#[derive(Debug, Clone)]
-pub enum ServeRequest {
-    /// K nearest targets for every source point.
-    Knn { src: Arc<Dataset>, trg: Arc<Dataset>, k: usize, metric: Metric },
-    /// Lloyd clustering of `ds` into `k` clusters.
-    Kmeans { ds: Arc<Dataset>, k: usize, max_iters: usize },
-    /// Radius-limited gravitational integration.
-    Nbody {
-        ds: Arc<Dataset>,
-        masses: Arc<Vec<f32>>,
-        steps: usize,
-        dt: f32,
-        radius: f32,
-    },
-}
-
-impl ServeRequest {
-    /// Euclidean KNN-join request.
-    pub fn knn(src: Arc<Dataset>, trg: Arc<Dataset>, k: usize) -> Self {
-        Self::knn_metric(src, trg, k, Metric::L2)
-    }
-
-    pub fn knn_metric(src: Arc<Dataset>, trg: Arc<Dataset>, k: usize, metric: Metric) -> Self {
-        Self::Knn { src, trg, k, metric }
-    }
-
-    pub fn kmeans(ds: Arc<Dataset>, k: usize, max_iters: usize) -> Self {
-        Self::Kmeans { ds, k, max_iters }
-    }
-
-    pub fn nbody(
-        ds: Arc<Dataset>,
-        masses: Arc<Vec<f32>>,
-        steps: usize,
-        dt: f32,
-        radius: f32,
-    ) -> Self {
-        Self::Nbody { ds, masses, steps, dt, radius }
-    }
-}
-
-/// The answer to one [`ServeRequest`], in the exact shape the solo
-/// engine entry points return.
-#[derive(Debug, Clone)]
-pub enum ServeResponse {
-    Knn(KnnResult),
-    Kmeans(KmeansResult),
-    Nbody(NbodyResult),
-}
-
-impl ServeResponse {
-    pub fn as_knn(&self) -> Option<&KnnResult> {
-        match self {
-            Self::Knn(r) => Some(r),
-            _ => None,
-        }
-    }
-
-    pub fn as_kmeans(&self) -> Option<&KmeansResult> {
-        match self {
-            Self::Kmeans(r) => Some(r),
-            _ => None,
-        }
-    }
-
-    pub fn as_nbody(&self) -> Option<&NbodyResult> {
-        match self {
-            Self::Nbody(r) => Some(r),
-            _ => None,
-        }
-    }
-}
-
-/// Content identity of two datasets: cheap pointer equality first (the
-/// common case under serving traffic is a shared `Arc`), exact
-/// bit-for-bit point comparison otherwise.  Shape mismatch makes the
-/// content compare trivially cheap, so this never false-positives and
-/// rarely pays the full scan.
-fn same_points(a: &Arc<Dataset>, b: &Arc<Dataset>) -> bool {
-    Arc::ptr_eq(a, b) || a.points == b.points
-}
-
-// --- internal partition records --------------------------------------------
-
-struct KnnQ {
-    pos: usize,
-    src: Arc<Dataset>,
-    k: usize,
-}
-
-struct KnnCohort {
-    trg: Arc<Dataset>,
-    metric: Metric,
-    queries: Vec<KnnQ>,
-}
-
-struct KmeansJob {
-    pos: usize,
-    ds: Arc<Dataset>,
-    k: usize,
-    max_iters: usize,
-    dups: Vec<usize>,
-}
-
-struct NbodyJob {
-    pos: usize,
-    ds: Arc<Dataset>,
-    masses: Arc<Vec<f32>>,
-    steps: usize,
-    dt: f32,
-    radius: f32,
-    dups: Vec<usize>,
-}
-
-/// The batched query-serving front end: submit many, flush once.
+/// The batched query-serving front end: submit many, flush what's due.
 pub struct QueryBatcher {
-    engine: Engine,
+    pool: EnginePool,
     cfg: ServeConfig,
-    cache: GroupingCache,
-    pending: Vec<(QueryId, ServeRequest)>,
-    next_id: QueryId,
+    policy: FlushPolicy,
+    queue: AdmissionQueue,
+    /// Dataset fingerprints, memoized across polls/flushes and pruned
+    /// to the still-pending datasets after every flush attempt.
+    memo: FingerprintMemo,
+    shards: Vec<ShardState>,
     stats: ServeStats,
 }
 
 impl QueryBatcher {
+    /// Build a batcher over `cfg.shards` engine shards: the given
+    /// engine plus clones of its configuration sharing its runtime.
     pub fn new(engine: Engine, cfg: ServeConfig) -> Self {
-        let cache = GroupingCache::new(cfg.grouping_cache_cap);
-        Self { engine, cfg, cache, pending: Vec::new(), next_id: 0, stats: ServeStats::default() }
+        let pool = EnginePool::new(engine, cfg.shards)
+            .expect("pool construction over an already-validated engine config cannot fail");
+        let shards = (0..pool.shard_count()).map(|_| ShardState::new(&cfg)).collect();
+        let policy = FlushPolicy::from_config(&cfg);
+        Self {
+            pool,
+            cfg,
+            policy,
+            queue: AdmissionQueue::new(),
+            memo: FingerprintMemo::new(),
+            shards,
+            stats: ServeStats::default(),
+        }
     }
 
-    /// Enqueue a request; it executes at the next [`QueryBatcher::flush`].
+    /// Enqueue a request under the config's default deadline (none
+    /// when `serve.deadline_ms == 0`).  It executes at the next
+    /// [`QueryBatcher::flush`], or at a [`QueryBatcher::poll`] once
+    /// due.
     pub fn submit(&mut self, req: ServeRequest) -> QueryId {
-        let id = self.next_id;
-        self.next_id += 1;
-        self.pending.push((id, req));
-        id
+        let deadline = self.policy.admission_deadline(Instant::now());
+        self.queue.push(req, deadline)
     }
 
-    /// Number of queries waiting for the next flush.
+    /// Enqueue a request that becomes due `deadline` from now.
+    pub fn submit_with_deadline(&mut self, req: ServeRequest, deadline: Duration) -> QueryId {
+        self.queue.push(req, Some(Instant::now() + deadline))
+    }
+
+    /// Number of queries waiting for a flush.
     pub fn pending_len(&self) -> usize {
-        self.pending.len()
+        self.queue.len()
     }
 
-    /// Lifetime serving statistics (across flushes).
+    /// Earliest pending deadline — when the next `poll` could have
+    /// work (absent a size trigger).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.next_deadline()
+    }
+
+    /// Merged lifetime serving statistics (all shards, all flushes).
     pub fn stats(&self) -> &ServeStats {
         &self.stats
     }
 
-    /// Borrow the underlying engine (e.g. for config inspection).
+    /// Per-shard lifetime serving statistics, in shard order.
+    pub fn shard_stats(&self) -> Vec<&ServeStats> {
+        self.shards.iter().map(|s| &s.stats).collect()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.pool.shard_count()
+    }
+
+    /// Borrow the primary shard's engine (e.g. for config inspection).
     pub fn engine(&self) -> &Engine {
-        &self.engine
+        self.pool.primary()
     }
 
     /// Execute up to `serve.max_batch` pending queries as one batch and
@@ -207,529 +166,75 @@ impl QueryBatcher {
     /// batch is validated (arguments + tile-catalogue limits) *before*
     /// anything is drained, and if execution itself fails mid-flush
     /// (e.g. a corrupted artifact deployment) the drained queries are
-    /// re-queued in order and the stats rolled back before the error
-    /// is returned.  A query that fails validation must be removed or
-    /// fixed by the caller before retrying.
+    /// re-queued at the front in order, with no stats applied, before
+    /// the error is returned.  A query that fails validation must be
+    /// removed or fixed by the caller before retrying.
     pub fn flush(&mut self) -> Result<Vec<(QueryId, ServeResponse)>> {
-        let t0 = std::time::Instant::now();
-        let take = if self.cfg.max_batch == 0 {
-            self.pending.len()
-        } else {
-            self.cfg.max_batch.min(self.pending.len())
-        };
-        for i in 0..take {
-            let (_, req) = &self.pending[i];
-            self.validate_request(req)?;
-        }
-        let batch: Vec<(QueryId, ServeRequest)> = self.pending.drain(..take).collect();
-        if batch.is_empty() {
+        let sel = self.policy.select_flush(&self.queue);
+        self.run_selected(sel, false)
+    }
+
+    /// Execute only what the [`FlushPolicy`] says is due now: queries
+    /// whose deadline expired (plus their dedup-identical duplicates,
+    /// which inherit the earliest deadline of the class), or a full
+    /// batch when `max_batch` queries are already pending.  A no-op
+    /// returning an empty vec when nothing is due.  Same failure
+    /// contract as [`QueryBatcher::flush`].
+    pub fn poll(&mut self) -> Result<Vec<(QueryId, ServeResponse)>> {
+        let (sel, deadline_driven) =
+            self.policy.select_due(&self.queue, Instant::now(), self.cfg.dedup, &mut self.memo);
+        self.run_selected(sel, deadline_driven)
+    }
+
+    /// Shared flush core: validate, drain, partition, place, execute,
+    /// commit stats (only on full success), prune the memo.
+    fn run_selected(
+        &mut self,
+        sel: Vec<usize>,
+        deadline_driven: bool,
+    ) -> Result<Vec<(QueryId, ServeResponse)>> {
+        if sel.is_empty() {
             return Ok(Vec::new());
         }
-
-        // --- Partition: coalesce cohorts, dedup identical queries ---------
-        let mut cohorts: Vec<KnnCohort> = Vec::new();
-        let mut kmeans_jobs: Vec<KmeansJob> = Vec::new();
-        let mut nbody_jobs: Vec<NbodyJob> = Vec::new();
-        for (pos, (_, req)) in batch.iter().enumerate() {
-            match req {
-                ServeRequest::Knn { src, trg, k, metric } => {
-                    let found = cohorts
-                        .iter()
-                        .position(|c| c.metric == *metric && same_points(&c.trg, trg));
-                    let q = KnnQ { pos, src: src.clone(), k: *k };
-                    match found {
-                        Some(ci) => cohorts[ci].queries.push(q),
-                        None => cohorts.push(KnnCohort {
-                            trg: trg.clone(),
-                            metric: *metric,
-                            queries: vec![q],
-                        }),
-                    }
-                }
-                ServeRequest::Kmeans { ds, k, max_iters } => {
-                    // Dedup requires the dataset *name* to match too:
-                    // results carry it in report.dataset, and batched
-                    // responses must be indistinguishable from solo runs.
-                    let dup = if self.cfg.dedup {
-                        kmeans_jobs.iter().position(|j| {
-                            j.k == *k
-                                && j.max_iters == *max_iters
-                                && j.ds.name == ds.name
-                                && same_points(&j.ds, ds)
-                        })
-                    } else {
-                        None
-                    };
-                    match dup {
-                        Some(ji) => kmeans_jobs[ji].dups.push(pos),
-                        None => kmeans_jobs.push(KmeansJob {
-                            pos,
-                            ds: ds.clone(),
-                            k: *k,
-                            max_iters: *max_iters,
-                            dups: Vec::new(),
-                        }),
-                    }
-                }
-                ServeRequest::Nbody { ds, masses, steps, dt, radius } => {
-                    let dup = if self.cfg.dedup {
-                        nbody_jobs.iter().position(|j| {
-                            j.steps == *steps
-                                && j.dt.to_bits() == dt.to_bits()
-                                && j.radius.to_bits() == radius.to_bits()
-                                && j.ds.name == ds.name
-                                && (Arc::ptr_eq(&j.masses, masses) || *j.masses == **masses)
-                                && same_points(&j.ds, ds)
-                        })
-                    } else {
-                        None
-                    };
-                    match dup {
-                        Some(ji) => nbody_jobs[ji].dups.push(pos),
-                        None => nbody_jobs.push(NbodyJob {
-                            pos,
-                            ds: ds.clone(),
-                            masses: masses.clone(),
-                            steps: *steps,
-                            dt: *dt,
-                            radius: *radius,
-                            dups: Vec::new(),
-                        }),
-                    }
-                }
-            }
+        let t0 = Instant::now();
+        let tile = self.pool.primary().runtime.manifest().tile.clone();
+        for &i in &sel {
+            admission::validate_request(&self.queue.get(i).req, &tile)?;
         }
-
-        // --- Execute -------------------------------------------------------
-        // A mid-flush execution error (e.g. a corrupted artifact file
-        // failing lazy kernel resolution) must not cost clients their
-        // queued work: on failure, roll the stats back and re-queue the
-        // whole drained batch at the front, then surface the error.
-        let mut responses: Vec<Option<ServeResponse>> = batch.iter().map(|_| None).collect();
-        let stats_snapshot = self.stats.clone();
-        let executed = self.execute_batch(cohorts, kmeans_jobs, nbody_jobs, &mut responses);
-        if let Err(e) = executed {
-            self.stats = stats_snapshot;
-            self.pending.splice(0..0, batch);
-            return Err(e);
-        }
-
-        // Headline counters land only after the whole batch succeeded
-        // (per-kind counters mutated during execution are covered by
-        // the rollback above), keeping ServeStats self-consistent.
-        self.stats.flushes += 1;
-        self.stats.queries += batch.len() as u64;
-        self.stats.grouping_cache_hits = self.cache.hits;
-        self.stats.grouping_cache_misses = self.cache.misses;
-        self.stats.wall_secs += t0.elapsed().as_secs_f64();
-
-        Ok(batch
-            .into_iter()
-            .zip(responses)
-            .map(|((id, _), r)| (id, r.expect("every query answered")))
-            .collect())
-    }
-
-    /// Execute a partitioned batch (all-or-nothing from the caller's
-    /// perspective; `flush` rolls back on error).
-    fn execute_batch(
-        &mut self,
-        cohorts: Vec<KnnCohort>,
-        kmeans_jobs: Vec<KmeansJob>,
-        nbody_jobs: Vec<NbodyJob>,
-        responses: &mut [Option<ServeResponse>],
-    ) -> Result<()> {
-        for cohort in cohorts {
-            self.run_knn_cohort(cohort, responses)?;
-        }
-        for job in kmeans_jobs {
-            self.run_kmeans_job(job, responses)?;
-        }
-        for job in nbody_jobs {
-            self.run_nbody_job(job, responses)?;
-        }
-        Ok(())
-    }
-
-    /// Admission-time validation: the same argument checks the solo
-    /// engine entry points perform (shared helpers, so the two paths
-    /// cannot diverge) plus the tile-catalogue limits the planner would
-    /// otherwise only hit mid-flush — all applied before a flush
-    /// consumes anything.
-    fn validate_request(&self, req: &ServeRequest) -> Result<()> {
-        let tile = &self.engine.runtime.manifest().tile;
-        match req {
-            ServeRequest::Knn { src, trg, k, .. } => {
-                knn::validate(src, trg, *k)?;
-                tile.pad_d(src.d())?;
-                Ok(())
-            }
-            ServeRequest::Kmeans { ds, k, .. } => {
-                kmeans::validate(ds, *k)?;
-                tile.pad_d(ds.d())?;
-                tile.pad_kmeans_k(*k)?;
-                Ok(())
-            }
-            ServeRequest::Nbody { ds, masses, .. } => nbody::validate(ds, masses),
-        }
-    }
-
-    /// Grouping-cache lookup with the engine's config baked into the
-    /// key.  One `fingerprint_pair` pass covers both the key hash and
-    /// the collision probe.
-    fn cached_grouping(
-        &mut self,
-        ds: &Arc<Dataset>,
-        groups: usize,
-        seed: u64,
-        metric: Metric,
-    ) -> Result<Arc<PackedGrouping>> {
-        let cfg = &self.engine.config.gti;
-        let (iters, sample) = (cfg.grouping_iters, cfg.grouping_sample);
-        let (fingerprint, probe) = gti::fingerprint_pair(&ds.points);
-        let key = GroupingKey { fingerprint, groups, iters, sample, seed, metric };
-        let points = &ds.points;
-        self.cache.get_or_build(key, probe, || {
-            PackedGrouping::build(points, groups, iters, sample, seed, metric, 8)
-        })
-    }
-
-    /// Execute one KNN cohort: shared target grouping + slabs, one
-    /// tagged pipeline over every unique query's dispatch batches,
-    /// per-query demux and merge.
-    fn run_knn_cohort(
-        &mut self,
-        cohort: KnnCohort,
-        responses: &mut [Option<ServeResponse>],
-    ) -> Result<()> {
-        let cohort_t0 = std::time::Instant::now();
-        let KnnCohort { trg, metric, queries } = cohort;
-        let seed = self.engine.config.seed;
-        let tile = self.engine.runtime.manifest().tile.clone();
-
-        let trg_groups = self.engine.trg_groups(trg.n());
-        let trg_pg = self.cached_grouping(&trg, trg_groups, seed ^ 0x7267, metric)?;
-
-        // Plan every unique query, sharing packed target slabs.
-        struct Unique {
-            pos: usize,
-            src: Arc<Dataset>,
-            k: usize,
-            src_pg: Arc<PackedGrouping>,
-            plan: knn::KnnPlan,
-            dups: Vec<usize>,
-        }
-        let mut uniques: Vec<Unique> = Vec::new();
-        let mut slab_cache = knn::TrgSlabCache::new();
-        for q in queries {
-            if self.cfg.dedup {
-                // Name must match too: report.dataset carries it, and a
-                // deduplicated answer must equal the solo answer exactly.
-                let dup = uniques.iter().position(|u| {
-                    u.k == q.k && u.src.name == q.src.name && same_points(&u.src, &q.src)
-                });
-                if let Some(ui) = dup {
-                    uniques[ui].dups.push(q.pos);
-                    continue;
-                }
-            }
-            let src_groups = self.engine.src_groups(q.src.n());
-            let src_pg = self.cached_grouping(&q.src, src_groups, seed, metric)?;
-            let plan =
-                knn::plan_metric(&tile, &q.src, q.k, metric, &src_pg, &trg_pg, &mut slab_cache)?;
-            self.stats.slabs_shared +=
-                plan.batches.iter().filter(|b| b.shared).count() as u64;
-            uniques.push(Unique {
-                pos: q.pos,
-                src: q.src,
-                k: q.k,
-                src_pg,
-                plan,
-                dups: Vec::new(),
-            });
-        }
-
-        // Stream every unique query's batches through one tagged
-        // bounded pipeline (query-major order: per-tag FIFO makes each
-        // query's merge identical to its solo run).
-        self.engine.device.reset_stats();
-        let device = &self.engine.device;
-        let depth = self.cfg.pipeline_depth;
-        let flat: Vec<(usize, usize)> = uniques
-            .iter()
-            .enumerate()
-            .flat_map(|(qi, u)| (0..u.plan.batches.len()).map(move |bi| (qi, bi)))
-            .collect();
-        let mut results: Vec<Vec<(usize, TileResult)>> =
-            uniques.iter().map(|_| Vec::new()).collect();
-        let mut tiles_by_query = vec![0u64; uniques.len()];
-        let mut shared_tiles_by_query = vec![0u64; uniques.len()];
-        let mut job_err: Option<Error> = None;
-        {
-            let uniques_ref = &uniques;
-            pipeline::run_tagged(
-                depth,
-                |i| {
-                    let &(qi, bi) = flat.get(i as usize)?;
-                    let u = &uniques_ref[qi];
-                    Some((
-                        qi as u64,
-                        (bi, knn::build_job(&u.plan.batches[bi], &u.src_pg, &u.plan, &tile)),
-                    ))
-                },
-                |tag, (bi, job)| {
-                    if job_err.is_some() {
-                        return;
-                    }
-                    if job.src_rows == 0 || job.trg_rows == 0 {
-                        return;
-                    }
-                    let qi = tag as usize;
-                    let before = device.stats().tiles;
-                    match device.distance_block(&job) {
-                        Ok(res) => {
-                            let delta = device.stats().tiles - before;
-                            tiles_by_query[qi] += delta;
-                            if uniques_ref[qi].plan.batches[bi].shared {
-                                shared_tiles_by_query[qi] += delta;
-                            }
-                            results[qi].push((bi, res));
-                        }
-                        Err(e) => job_err = Some(e),
-                    }
-                },
-            );
-        }
-        if let Some(e) = job_err {
-            return Err(e);
-        }
-        let cohort_device = self.engine.device.stats();
-        let cohort_secs = cohort_t0.elapsed().as_secs_f64();
-
-        // Per-query merge + response fan-out.
-        for (qi, u) in uniques.into_iter().enumerate() {
-            let batch_results = std::mem::take(&mut results[qi]);
-            let neighbors = knn::merge_results(&u.plan, batch_results.into_iter());
-            let mut report = RunReport::new("knn_join", &u.src.name, "accd-serve");
-            report.filter.merge(&u.plan.filter_stats);
-            report.layout = u.plan.layout_stats.clone();
-            // Device/wall accounting is cohort-scoped: tile execution is
-            // deliberately shared, so per-query attribution would lie.
-            report.device = cohort_device.clone();
-            report.device_wall_secs = cohort_device.wall_secs;
-            report.device_modeled_secs = cohort_device.modeled_secs;
-            report.wall_secs = cohort_secs;
-            report.iterations = 1;
-            report.quality = knn::quality_of(&neighbors);
-            let result = KnnResult { neighbors, k: u.k, report };
-
-            let has_dups = !u.dups.is_empty();
-            self.stats.tiles_total += tiles_by_query[qi];
-            self.stats.tiles_shared += if has_dups {
-                tiles_by_query[qi]
-            } else {
-                shared_tiles_by_query[qi]
-            };
-            self.stats.knn_queries += 1 + u.dups.len() as u64;
-            self.stats.dedup_hits += u.dups.len() as u64;
-            for &pos in &u.dups {
-                responses[pos] = Some(ServeResponse::Knn(result.clone()));
-            }
-            responses[u.pos] = Some(ServeResponse::Knn(result));
-        }
-        Ok(())
-    }
-
-    fn run_kmeans_job(
-        &mut self,
-        job: KmeansJob,
-        responses: &mut [Option<ServeResponse>],
-    ) -> Result<()> {
-        let seed = self.engine.config.seed;
-        let groups = self.engine.src_groups(job.ds.n());
-        let pg = self.cached_grouping(&job.ds, groups, seed, Metric::L2)?;
-        let result = kmeans::run_shared(&mut self.engine, &job.ds, job.k, job.max_iters, Some(&pg))?;
-        // `run_shared` resets device stats on entry, so this is the
-        // query's own tile count.
-        let tiles = self.engine.device.stats().tiles;
-        let has_dups = !job.dups.is_empty();
-        self.stats.tiles_total += tiles;
-        if has_dups {
-            self.stats.tiles_shared += tiles;
-        }
-        self.stats.kmeans_queries += 1 + job.dups.len() as u64;
-        self.stats.dedup_hits += job.dups.len() as u64;
-        for &pos in &job.dups {
-            responses[pos] = Some(ServeResponse::Kmeans(result.clone()));
-        }
-        responses[job.pos] = Some(ServeResponse::Kmeans(result));
-        Ok(())
-    }
-
-    fn run_nbody_job(
-        &mut self,
-        job: NbodyJob,
-        responses: &mut [Option<ServeResponse>],
-    ) -> Result<()> {
-        let seed = self.engine.config.seed;
-        let groups = self.engine.src_groups(job.ds.n());
-        let pg = self.cached_grouping(&job.ds, groups, seed, Metric::L2)?;
-        let result = nbody::run_shared(
-            &mut self.engine,
-            &job.ds,
-            &job.masses,
-            job.steps,
-            job.dt,
-            job.radius,
-            Some(&pg),
-        )?;
-        let tiles = self.engine.device.stats().tiles;
-        let has_dups = !job.dups.is_empty();
-        self.stats.tiles_total += tiles;
-        if has_dups {
-            self.stats.tiles_shared += tiles;
-        }
-        self.stats.nbody_queries += 1 + job.dups.len() as u64;
-        self.stats.dedup_hits += job.dups.len() as u64;
-        for &pos in &job.dups {
-            responses[pos] = Some(ServeResponse::Nbody(result.clone()));
-        }
-        responses[job.pos] = Some(ServeResponse::Nbody(result));
-        Ok(())
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::AccdConfig;
-    use crate::data::synthetic;
-
-    fn batcher() -> QueryBatcher {
-        let cfg = AccdConfig::new();
-        let engine = Engine::new(cfg.clone()).unwrap();
-        QueryBatcher::new(engine, cfg.serve.clone())
-    }
-
-    #[test]
-    fn flush_on_empty_queue_is_a_noop() {
-        let mut b = batcher();
-        assert!(b.flush().unwrap().is_empty());
-        assert_eq!(b.stats().flushes, 0);
-    }
-
-    #[test]
-    fn responses_come_back_in_submission_order() {
-        let mut b = batcher();
-        let trg = Arc::new(synthetic::clustered(400, 4, 8, 0.03, 1));
-        let src_a = Arc::new(synthetic::clustered(60, 4, 4, 0.03, 2));
-        let src_b = Arc::new(synthetic::clustered(80, 4, 4, 0.03, 3));
-        let ds = Arc::new(synthetic::clustered(200, 5, 6, 0.03, 4));
-        let id0 = b.submit(ServeRequest::knn(src_a, trg.clone(), 5));
-        let id1 = b.submit(ServeRequest::kmeans(ds, 8, 4));
-        let id2 = b.submit(ServeRequest::knn(src_b, trg, 7));
-        let out = b.flush().unwrap();
-        assert_eq!(out.len(), 3);
-        assert_eq!(out[0].0, id0);
-        assert_eq!(out[1].0, id1);
-        assert_eq!(out[2].0, id2);
-        assert!(out[0].1.as_knn().is_some());
-        assert!(out[1].1.as_kmeans().is_some());
-        assert_eq!(out[2].1.as_knn().unwrap().k, 7);
-        assert_eq!(b.stats().queries, 3);
-        assert_eq!(b.stats().knn_queries, 2);
-        assert_eq!(b.stats().kmeans_queries, 1);
-    }
-
-    #[test]
-    fn identical_queries_are_deduplicated() {
-        let mut b = batcher();
-        let trg = Arc::new(synthetic::clustered(300, 4, 6, 0.03, 1));
-        let src = Arc::new(synthetic::clustered(50, 4, 4, 0.03, 2));
-        for _ in 0..4 {
-            b.submit(ServeRequest::knn(src.clone(), trg.clone(), 5));
-        }
-        let out = b.flush().unwrap();
-        assert_eq!(out.len(), 4);
-        assert_eq!(b.stats().dedup_hits, 3);
-        // All four answers identical.
-        let first = out[0].1.as_knn().unwrap();
-        for (_, r) in &out[1..] {
-            assert_eq!(r.as_knn().unwrap().neighbors, first.neighbors);
-        }
-        // Dedup makes every dispatched tile serve all four queries.
-        assert!(b.stats().tiles_total > 0);
-        assert_eq!(b.stats().tiles_shared, b.stats().tiles_total);
-    }
-
-    #[test]
-    fn max_batch_leaves_overflow_pending() {
-        let mut b = batcher();
-        b.cfg.max_batch = 2;
-        let trg = Arc::new(synthetic::clustered(200, 3, 4, 0.05, 1));
-        for s in 0..3u64 {
-            let src = Arc::new(synthetic::clustered(40, 3, 3, 0.05, 10 + s));
-            b.submit(ServeRequest::knn(src, trg.clone(), 3));
-        }
-        let out = b.flush().unwrap();
-        assert_eq!(out.len(), 2);
-        assert_eq!(b.pending_len(), 1);
-        let out2 = b.flush().unwrap();
-        assert_eq!(out2.len(), 1);
-        assert_eq!(b.pending_len(), 0);
-    }
-
-    #[test]
-    fn grouping_cache_hits_across_flushes() {
-        let mut b = batcher();
-        let trg = Arc::new(synthetic::clustered(300, 4, 6, 0.03, 1));
-        let src = Arc::new(synthetic::clustered(60, 4, 4, 0.03, 2));
-        b.submit(ServeRequest::knn(src.clone(), trg.clone(), 5));
-        b.flush().unwrap();
-        let misses_after_first = b.stats().grouping_cache_misses;
-        b.submit(ServeRequest::knn(src, trg, 5));
-        b.flush().unwrap();
-        // Second flush reuses both groupings: no new misses, two hits.
-        assert_eq!(b.stats().grouping_cache_misses, misses_after_first);
-        assert!(b.stats().grouping_cache_hits >= 2);
-    }
-
-    #[test]
-    fn invalid_query_fails_the_flush_without_consuming_the_queue() {
-        let mut b = batcher();
-        let trg = Arc::new(synthetic::clustered(50, 4, 4, 0.03, 1));
-        let src = Arc::new(synthetic::clustered(20, 4, 4, 0.03, 2));
-        b.submit(ServeRequest::knn(src.clone(), trg.clone(), 5)); // valid
-        b.submit(ServeRequest::knn(src, trg, 51)); // k > target size
-        assert!(b.flush().is_err());
-        // Nothing was drained or executed: both queries still queued,
-        // no flush/query counted.
-        assert_eq!(b.pending_len(), 2);
-        assert_eq!(b.stats().flushes, 0);
-        assert_eq!(b.stats().queries, 0);
-        assert_eq!(b.stats().tiles_total, 0);
-    }
-
-    #[test]
-    fn dedup_requires_matching_dataset_names() {
-        let mut b = batcher();
-        let trg = Arc::new(synthetic::clustered(300, 4, 6, 0.03, 1));
-        let src_a = Arc::new(synthetic::clustered(50, 4, 4, 0.03, 2));
-        // Same points, different name: must NOT dedup (report.dataset
-        // would otherwise carry the wrong name).
-        let mut renamed = (*src_a).clone();
-        renamed.name = "renamed-copy".to_string();
-        let src_b = Arc::new(renamed);
-        b.submit(ServeRequest::knn(src_a, trg.clone(), 5));
-        b.submit(ServeRequest::knn(src_b, trg, 5));
-        let out = b.flush().unwrap();
-        assert_eq!(b.stats().dedup_hits, 0);
-        assert_ne!(out[0].1.as_knn().unwrap().report.dataset, "renamed-copy");
-        assert_eq!(out[1].1.as_knn().unwrap().report.dataset, "renamed-copy");
-        // Results still identical (same points), just attributed right.
-        assert_eq!(
-            out[0].1.as_knn().unwrap().neighbors,
-            out[1].1.as_knn().unwrap().neighbors
+        let batch = self.queue.remove_selected(&sel);
+        let units = admission::partition(&batch, self.cfg.dedup, &mut self.memo);
+        let costs: Vec<u64> = units.iter().map(|u| u.cost_estimate(self.cfg.dedup)).collect();
+        let assignments = ShardPlanner::partition(&costs, self.pool.shard_count());
+        let executed = exec::execute_plan(
+            &mut self.pool,
+            &mut self.shards,
+            units,
+            &assignments,
+            batch.len(),
+            &self.cfg,
         );
+        let out = match executed {
+            Ok((responses, deltas)) => {
+                self.stats.flushes += 1;
+                if deadline_driven {
+                    self.stats.deadline_flushes += 1;
+                }
+                // Absolute, like the cache gauges: cannot drift.
+                self.stats.content_full_scans = self.memo.full_scans;
+                self.stats.wall_secs += t0.elapsed().as_secs_f64();
+                exec::commit_deltas(&mut self.shards, &deltas, &mut self.stats);
+                Ok(batch
+                    .into_iter()
+                    .zip(responses)
+                    .map(|(p, r)| (p.id, r.expect("every query answered")))
+                    .collect())
+            }
+            Err(e) => {
+                self.queue.requeue_front(batch);
+                Err(e)
+            }
+        };
+        self.memo.prune(&self.queue);
+        out
     }
 }

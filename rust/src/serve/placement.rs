@@ -1,0 +1,139 @@
+//! Placement layer of the serving runtime: which shard runs what.
+//!
+//! Owns the [`EnginePool`] — N independent [`Engine`] shards over one
+//! shared [`crate::runtime::Runtime`] (so the kernel cache is paid for
+//! once) — and the [`ShardPlanner`], which partitions a flush's work
+//! units across the shards by cost estimate.  Placement never looks
+//! inside a unit beyond its cost: admission decides *what* runs,
+//! execution decides *how*; this layer only decides *where*.
+//!
+//! Placement cannot affect results: every work unit is self-contained
+//! (the parity contract holds for any shard count), so the planner is
+//! free to optimize purely for balance.  It uses the classic LPT
+//! (longest-processing-time-first) greedy — sort units by descending
+//! cost, assign each to the least-loaded shard — which is within 4/3
+//! of the optimal makespan and, with deterministic tie-breaking, makes
+//! placement reproducible run to run.
+
+use crate::coordinator::Engine;
+use crate::Result;
+
+/// A pool of independent engine shards sharing one runtime.
+pub struct EnginePool {
+    engines: Vec<Engine>,
+}
+
+impl EnginePool {
+    /// Build a pool of `shards` engines (>= 1): the given engine plus
+    /// `shards - 1` clones of its configuration over the same shared
+    /// runtime.
+    pub fn new(primary: Engine, shards: usize) -> Result<Self> {
+        let shards = shards.max(1);
+        let mut engines = Vec::with_capacity(shards);
+        let cfg = primary.config.clone();
+        let runtime = primary.runtime.clone();
+        engines.push(primary);
+        for _ in 1..shards {
+            engines.push(Engine::with_runtime(cfg.clone(), runtime.clone())?);
+        }
+        Ok(Self { engines })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// The first shard — the engine existing single-engine callers see
+    /// through `QueryBatcher::engine()`.
+    pub fn primary(&self) -> &Engine {
+        &self.engines[0]
+    }
+
+    pub(crate) fn engines_mut(&mut self) -> &mut [Engine] {
+        &mut self.engines
+    }
+}
+
+/// Cost-balancing partitioner of work units onto shards.
+pub struct ShardPlanner;
+
+impl ShardPlanner {
+    /// Assign unit indices to shards, balancing total cost (LPT
+    /// greedy).  Returns one ascending index list per shard; every
+    /// index in `0..costs.len()` appears exactly once.  Deterministic:
+    /// cost ties break by unit index, load ties by shard index.
+    pub fn partition(costs: &[u64], shards: usize) -> Vec<Vec<usize>> {
+        let shards = shards.max(1);
+        let mut order: Vec<usize> = (0..costs.len()).collect();
+        order.sort_by(|&a, &b| costs[b].cmp(&costs[a]).then(a.cmp(&b)));
+        let mut load = vec![0u64; shards];
+        let mut out = vec![Vec::new(); shards];
+        for i in order {
+            let s = (0..shards)
+                .min_by_key(|&s| (load[s], s))
+                .expect("at least one shard");
+            // Even zero-cost units occupy a slot, so they still
+            // spread instead of all landing on shard 0.
+            load[s] += costs[i].max(1);
+            out[s].push(i);
+        }
+        for units in &mut out {
+            units.sort_unstable();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flatten(mut parts: Vec<Vec<usize>>) -> Vec<usize> {
+        let mut all: Vec<usize> = parts.drain(..).flatten().collect();
+        all.sort_unstable();
+        all
+    }
+
+    #[test]
+    fn partition_covers_every_unit_exactly_once() {
+        let costs = [5, 1, 9, 3, 3, 7];
+        for shards in [1, 2, 3, 4, 8] {
+            let parts = ShardPlanner::partition(&costs, shards);
+            assert_eq!(parts.len(), shards);
+            assert_eq!(flatten(parts), (0..costs.len()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn partition_balances_load() {
+        // LPT on [9,7,5,3,3,1] over 2 shards: {9,3,3} vs {7,5,1} —
+        // loads 15 vs 13, optimal within the LPT bound.
+        let costs = [5, 1, 9, 3, 3, 7];
+        let parts = ShardPlanner::partition(&costs, 2);
+        let load =
+            |p: &Vec<usize>| -> u64 { p.iter().map(|&i| costs[i]).sum() };
+        let (a, b) = (load(&parts[0]), load(&parts[1]));
+        assert_eq!(a + b, 28);
+        assert!(a.abs_diff(b) <= 2, "unbalanced: {a} vs {b}");
+    }
+
+    #[test]
+    fn partition_is_deterministic_and_single_shard_trivial() {
+        let costs = [2, 2, 2, 2];
+        assert_eq!(
+            ShardPlanner::partition(&costs, 2),
+            ShardPlanner::partition(&costs, 2)
+        );
+        assert_eq!(ShardPlanner::partition(&costs, 1), vec![vec![0, 1, 2, 3]]);
+        // More shards than units: extras stay empty.
+        let parts = ShardPlanner::partition(&[4, 2], 4);
+        assert_eq!(parts.iter().filter(|p| !p.is_empty()).count(), 2);
+    }
+
+    #[test]
+    fn zero_cost_units_still_spread() {
+        let parts = ShardPlanner::partition(&[0, 0, 0, 0], 2);
+        assert_eq!(parts[0].len(), 2);
+        assert_eq!(parts[1].len(), 2);
+    }
+}

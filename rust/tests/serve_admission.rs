@@ -1,0 +1,296 @@
+//! Admission semantics of the serving runtime: deadline-driven
+//! `poll()`, coalescing, dedup deadline inheritance, and the
+//! fingerprint-based identity fast path — plus the batcher-facade
+//! behaviors that used to live in `serve/mod.rs` unit tests (order,
+//! dedup, max_batch overflow, failure recovery, cache warmth).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::{synthetic, Dataset};
+use accd::serve::{QueryBatcher, ServeRequest};
+
+fn batcher() -> QueryBatcher {
+    let cfg = AccdConfig::new();
+    let engine = Engine::new(cfg.clone()).unwrap();
+    QueryBatcher::new(engine, cfg.serve.clone())
+}
+
+fn batcher_with(tweak: impl FnOnce(&mut AccdConfig)) -> QueryBatcher {
+    let mut cfg = AccdConfig::new();
+    tweak(&mut cfg);
+    let engine = Engine::new(cfg.clone()).unwrap();
+    QueryBatcher::new(engine, cfg.serve.clone())
+}
+
+/// A bitwise copy behind a fresh `Arc` — what deserializing the same
+/// dataset twice produces: identical content, unrelated pointers.
+fn deserialized_copy(ds: &Arc<Dataset>) -> Arc<Dataset> {
+    Arc::new((**ds).clone())
+}
+
+const FAR: Duration = Duration::from_secs(3600);
+
+// --- deadline-driven admission (poll) ----------------------------------
+
+#[test]
+fn poll_on_empty_or_not_yet_due_queue_is_a_noop() {
+    let mut b = batcher();
+    assert!(b.poll().unwrap().is_empty());
+    assert_eq!(b.stats().flushes, 0);
+
+    let trg = Arc::new(synthetic::clustered(200, 4, 4, 0.05, 1));
+    let src = Arc::new(synthetic::clustered(40, 4, 3, 0.05, 2));
+    b.submit_with_deadline(ServeRequest::knn(src, trg, 3), FAR);
+    assert!(b.poll().unwrap().is_empty(), "not-yet-due query must keep waiting");
+    assert_eq!(b.pending_len(), 1);
+    assert_eq!(b.stats().flushes, 0);
+    assert!(b.next_deadline().is_some());
+}
+
+#[test]
+fn deadline_expired_queries_flush_alone() {
+    let mut b = batcher();
+    let trg = Arc::new(synthetic::clustered(200, 4, 4, 0.05, 1));
+    let hot = Arc::new(synthetic::clustered(40, 4, 3, 0.05, 2));
+    let cold = Arc::new(synthetic::clustered(50, 4, 3, 0.05, 3));
+    let id_hot = b.submit_with_deadline(ServeRequest::knn(hot, trg.clone(), 3), Duration::ZERO);
+    b.submit_with_deadline(ServeRequest::knn(cold, trg.clone(), 3), FAR);
+    b.submit(ServeRequest::knn(
+        Arc::new(synthetic::clustered(60, 4, 3, 0.05, 4)),
+        trg,
+        3,
+    )); // no deadline: waits for an explicit flush
+    let out = b.poll().unwrap();
+    assert_eq!(out.len(), 1, "only the expired query is due");
+    assert_eq!(out[0].0, id_hot);
+    assert_eq!(b.pending_len(), 2);
+    assert_eq!(b.stats().flushes, 1);
+    assert_eq!(b.stats().deadline_flushes, 1);
+}
+
+#[test]
+fn under_deadline_queries_coalesce_in_one_explicit_flush() {
+    let mut b = batcher();
+    let trg = Arc::new(synthetic::clustered(200, 4, 4, 0.05, 1));
+    for s in 0..3u64 {
+        let src = Arc::new(synthetic::clustered(40, 4, 3, 0.05, 10 + s));
+        b.submit_with_deadline(ServeRequest::knn(src, trg.clone(), 3), FAR);
+    }
+    assert!(b.poll().unwrap().is_empty());
+    let out = b.flush().unwrap();
+    assert_eq!(out.len(), 3, "explicit flush coalesces everything pending");
+    assert_eq!(b.stats().flushes, 1);
+    assert_eq!(b.stats().deadline_flushes, 0);
+}
+
+#[test]
+fn deduped_queries_inherit_the_earliest_deadline() {
+    let mut b = batcher();
+    let trg = Arc::new(synthetic::clustered(200, 4, 4, 0.05, 1));
+    let src = Arc::new(synthetic::clustered(40, 4, 3, 0.05, 2));
+    // Same query twice: one patient, one already due.  The patient
+    // copy inherits the earliest deadline and rides along.
+    let id_a = b.submit_with_deadline(ServeRequest::knn(src.clone(), trg.clone(), 3), FAR);
+    let id_b = b.submit_with_deadline(ServeRequest::knn(src, trg, 3), Duration::ZERO);
+    let out = b.poll().unwrap();
+    assert_eq!(out.len(), 2, "duplicate must flush with its expired twin");
+    assert_eq!((out[0].0, out[1].0), (id_a, id_b));
+    assert_eq!(b.pending_len(), 0);
+    assert_eq!(b.stats().dedup_hits, 1);
+    assert_eq!(
+        out[0].1.as_knn().unwrap().neighbors,
+        out[1].1.as_knn().unwrap().neighbors
+    );
+}
+
+#[test]
+fn poll_size_trigger_takes_a_full_batch() {
+    let mut b = batcher_with(|c| c.serve.max_batch = 2);
+    let trg = Arc::new(synthetic::clustered(200, 3, 4, 0.05, 1));
+    for s in 0..3u64 {
+        let src = Arc::new(synthetic::clustered(40, 3, 3, 0.05, 10 + s));
+        b.submit_with_deadline(ServeRequest::knn(src, trg.clone(), 3), FAR);
+    }
+    // No deadline expired, but max_batch queries are pending.
+    let out = b.poll().unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(b.pending_len(), 1);
+    assert_eq!(b.stats().flushes, 1);
+    assert_eq!(b.stats().deadline_flushes, 0, "size trigger is not a deadline flush");
+}
+
+#[test]
+fn default_deadline_from_config_applies_to_submit() {
+    let mut b = batcher_with(|c| c.serve.deadline_ms = 1);
+    let trg = Arc::new(synthetic::clustered(200, 4, 4, 0.05, 1));
+    let src = Arc::new(synthetic::clustered(40, 4, 3, 0.05, 2));
+    b.submit(ServeRequest::knn(src, trg, 3));
+    assert!(b.next_deadline().is_some());
+    std::thread::sleep(Duration::from_millis(5));
+    let out = b.poll().unwrap();
+    assert_eq!(out.len(), 1, "default deadline expired; poll must flush");
+    assert_eq!(b.stats().deadline_flushes, 1);
+}
+
+// --- fingerprint-based identity (no full point scans) ------------------
+
+#[test]
+fn deserialized_identical_queries_dedup_without_full_scans() {
+    let mut b = batcher();
+    let trg = Arc::new(synthetic::clustered(300, 4, 6, 0.03, 1));
+    let src = Arc::new(synthetic::clustered(50, 4, 4, 0.03, 2));
+    // Arc-distinct but bit-identical request pair, as arrives from two
+    // network clients deserializing the same catalogue.
+    b.submit(ServeRequest::knn(src.clone(), trg.clone(), 5));
+    b.submit(ServeRequest::knn(deserialized_copy(&src), deserialized_copy(&trg), 5));
+    let out = b.flush().unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(b.stats().dedup_hits, 1, "fingerprint identity must dedup across Arcs");
+    assert_eq!(
+        b.stats().content_full_scans,
+        0,
+        "dataset identity must resolve by pointer or fingerprint, never a point scan"
+    );
+    assert_eq!(
+        out[0].1.as_knn().unwrap().neighbors,
+        out[1].1.as_knn().unwrap().neighbors
+    );
+    // Both queries answered from ONE execution: all tiles shared.
+    assert!(b.stats().tiles_total > 0);
+    assert_eq!(b.stats().tiles_shared, b.stats().tiles_total);
+}
+
+// --- persistent caches across flushes ----------------------------------
+
+#[test]
+fn slab_and_grouping_caches_persist_across_flushes() {
+    let mut b = batcher();
+    let trg = Arc::new(synthetic::clustered(300, 4, 6, 0.03, 1));
+    let src = Arc::new(synthetic::clustered(60, 4, 4, 0.03, 2));
+    b.submit(ServeRequest::knn(src.clone(), trg.clone(), 5));
+    b.flush().unwrap();
+    let misses_after_first = b.stats().grouping_cache_misses;
+    let slab_misses_after_first = b.stats().slab_cache_misses;
+    assert!(b.stats().slab_cache_bytes > 0, "slabs must stay resident");
+    b.submit(ServeRequest::knn(src, trg, 5));
+    b.flush().unwrap();
+    // Second flush reuses both groupings and every packed slab.
+    assert_eq!(b.stats().grouping_cache_misses, misses_after_first);
+    assert!(b.stats().grouping_cache_hits >= 2);
+    assert_eq!(b.stats().slab_cache_misses, slab_misses_after_first);
+    assert!(b.stats().slab_cache_hits >= 1, "{:?}", b.stats());
+    assert!(b.stats().slabs_shared >= 1);
+}
+
+// --- facade behaviors (migrated from serve/mod.rs unit tests) -----------
+
+#[test]
+fn flush_on_empty_queue_is_a_noop() {
+    let mut b = batcher();
+    assert!(b.flush().unwrap().is_empty());
+    assert_eq!(b.stats().flushes, 0);
+}
+
+#[test]
+fn responses_come_back_in_submission_order() {
+    let mut b = batcher();
+    let trg = Arc::new(synthetic::clustered(400, 4, 8, 0.03, 1));
+    let src_a = Arc::new(synthetic::clustered(60, 4, 4, 0.03, 2));
+    let src_b = Arc::new(synthetic::clustered(80, 4, 4, 0.03, 3));
+    let ds = Arc::new(synthetic::clustered(200, 5, 6, 0.03, 4));
+    let id0 = b.submit(ServeRequest::knn(src_a, trg.clone(), 5));
+    let id1 = b.submit(ServeRequest::kmeans(ds, 8, 4));
+    let id2 = b.submit(ServeRequest::knn(src_b, trg, 7));
+    let out = b.flush().unwrap();
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].0, id0);
+    assert_eq!(out[1].0, id1);
+    assert_eq!(out[2].0, id2);
+    assert!(out[0].1.as_knn().is_some());
+    assert!(out[1].1.as_kmeans().is_some());
+    assert_eq!(out[2].1.as_knn().unwrap().k, 7);
+    assert_eq!(b.stats().queries, 3);
+    assert_eq!(b.stats().knn_queries, 2);
+    assert_eq!(b.stats().kmeans_queries, 1);
+    // Per-shard stats sum to the merged view.
+    let shard_total: u64 = b.shard_stats().iter().map(|s| s.queries).sum();
+    assert_eq!(shard_total, 3);
+}
+
+#[test]
+fn identical_queries_are_deduplicated() {
+    let mut b = batcher();
+    let trg = Arc::new(synthetic::clustered(300, 4, 6, 0.03, 1));
+    let src = Arc::new(synthetic::clustered(50, 4, 4, 0.03, 2));
+    for _ in 0..4 {
+        b.submit(ServeRequest::knn(src.clone(), trg.clone(), 5));
+    }
+    let out = b.flush().unwrap();
+    assert_eq!(out.len(), 4);
+    assert_eq!(b.stats().dedup_hits, 3);
+    let first = out[0].1.as_knn().unwrap();
+    for (_, r) in &out[1..] {
+        assert_eq!(r.as_knn().unwrap().neighbors, first.neighbors);
+    }
+    // Dedup makes every dispatched tile serve all four queries.
+    assert!(b.stats().tiles_total > 0);
+    assert_eq!(b.stats().tiles_shared, b.stats().tiles_total);
+}
+
+#[test]
+fn max_batch_leaves_overflow_pending() {
+    let mut b = batcher_with(|c| c.serve.max_batch = 2);
+    let trg = Arc::new(synthetic::clustered(200, 3, 4, 0.05, 1));
+    for s in 0..3u64 {
+        let src = Arc::new(synthetic::clustered(40, 3, 3, 0.05, 10 + s));
+        b.submit(ServeRequest::knn(src, trg.clone(), 3));
+    }
+    let out = b.flush().unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(b.pending_len(), 1);
+    let out2 = b.flush().unwrap();
+    assert_eq!(out2.len(), 1);
+    assert_eq!(b.pending_len(), 0);
+}
+
+#[test]
+fn invalid_query_fails_the_flush_without_consuming_the_queue() {
+    let mut b = batcher();
+    let trg = Arc::new(synthetic::clustered(50, 4, 4, 0.03, 1));
+    let src = Arc::new(synthetic::clustered(20, 4, 4, 0.03, 2));
+    b.submit(ServeRequest::knn(src.clone(), trg.clone(), 5)); // valid
+    b.submit(ServeRequest::knn(src, trg, 51)); // k > target size
+    assert!(b.flush().is_err());
+    // Nothing was drained or executed: both queries still queued,
+    // no flush/query counted.
+    assert_eq!(b.pending_len(), 2);
+    assert_eq!(b.stats().flushes, 0);
+    assert_eq!(b.stats().queries, 0);
+    assert_eq!(b.stats().tiles_total, 0);
+}
+
+#[test]
+fn dedup_requires_matching_dataset_names() {
+    let mut b = batcher();
+    let trg = Arc::new(synthetic::clustered(300, 4, 6, 0.03, 1));
+    let src_a = Arc::new(synthetic::clustered(50, 4, 4, 0.03, 2));
+    // Same points, different name: must NOT dedup (report.dataset
+    // would otherwise carry the wrong name).
+    let mut renamed = (*src_a).clone();
+    renamed.name = "renamed-copy".to_string();
+    let src_b = Arc::new(renamed);
+    b.submit(ServeRequest::knn(src_a, trg.clone(), 5));
+    b.submit(ServeRequest::knn(src_b, trg, 5));
+    let out = b.flush().unwrap();
+    assert_eq!(b.stats().dedup_hits, 0);
+    assert_ne!(out[0].1.as_knn().unwrap().report.dataset, "renamed-copy");
+    assert_eq!(out[1].1.as_knn().unwrap().report.dataset, "renamed-copy");
+    // Results still identical (same points), just attributed right.
+    assert_eq!(
+        out[0].1.as_knn().unwrap().neighbors,
+        out[1].1.as_knn().unwrap().neighbors
+    );
+}

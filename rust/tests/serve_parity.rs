@@ -1,11 +1,13 @@
 //! The serving runtime's correctness contract, end to end: a batch of
 //! mixed queries through `serve::QueryBatcher` must produce results
 //! **identical** to running each query alone through `Engine` — not
-//! merely close: grouping reuse, slab sharing, deduplication and the
-//! shared tagged pipeline are all engineered to be bit-transparent, so
-//! every comparison below is exact (`assert_eq!` on floats).
+//! merely close: grouping reuse, slab sharing, deduplication, the
+//! shared tagged pipeline, shard placement and deadline-driven flush
+//! order are all engineered to be bit-transparent, so every comparison
+//! below is exact (`assert_eq!` on floats), for every shard count.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use accd::config::AccdConfig;
 use accd::coordinator::Engine;
@@ -20,6 +22,46 @@ fn fresh_engine() -> Engine {
 fn fresh_batcher() -> QueryBatcher {
     let cfg = AccdConfig::new();
     QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), cfg.serve.clone())
+}
+
+fn sharded_batcher(shards: usize) -> QueryBatcher {
+    let mut cfg = AccdConfig::new();
+    cfg.serve.shards = shards;
+    QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), cfg.serve.clone())
+}
+
+/// Exact comparison of a served response against the solo engine run
+/// of the same request.
+fn assert_matches_solo(
+    resp: &ServeResponse,
+    req: &ServeRequest,
+    solo: &mut Engine,
+    what: &str,
+) {
+    match req {
+        ServeRequest::Knn { src, trg, k, metric } => {
+            let want = solo.knn_join_metric(src, trg, *k, *metric).expect("solo knn");
+            assert_knn_identical(resp, &want, what);
+        }
+        ServeRequest::Kmeans { ds, k, max_iters } => {
+            let want = solo.kmeans(ds, *k, *max_iters).expect("solo kmeans");
+            let got = resp.as_kmeans().unwrap_or_else(|| panic!("{what}: wrong response kind"));
+            assert_eq!(got.assign, want.assign, "{what}: assignment");
+            assert_eq!(got.sse, want.sse, "{what}: sse (exact)");
+            assert_eq!(got.iterations, want.iterations, "{what}: iterations");
+            assert_eq!(got.centers.as_slice(), want.centers.as_slice(), "{what}: centers");
+        }
+        ServeRequest::Nbody { ds, masses, steps, dt, radius } => {
+            let want = solo.nbody(ds, masses.as_slice(), *steps, *dt, *radius).expect("solo nbody");
+            let got = resp.as_nbody().unwrap_or_else(|| panic!("{what}: wrong response kind"));
+            assert_eq!(got.positions.as_slice(), want.positions.as_slice(), "{what}: positions");
+            assert_eq!(
+                got.velocities.as_slice(),
+                want.velocities.as_slice(),
+                "{what}: velocities"
+            );
+        }
+    }
 }
 
 fn assert_knn_identical(got: &ServeResponse, want: &accd::coordinator::KnnResult, what: &str) {
@@ -176,4 +218,84 @@ fn parity_holds_with_dedup_disabled() {
     // Without dedup the second copy re-dispatches against fully shared
     // slabs, so sharing is still visible.
     assert!(batcher.stats().tiles_shared > 0, "{:?}", batcher.stats());
+}
+
+/// A mixed KNN / K-means / N-body workload with two KNN cohorts,
+/// duplicates and an L1 query — the same query set, bit-for-bit, for
+/// shard counts 1, 2 and 4.
+fn mixed_workload() -> Vec<ServeRequest> {
+    let trg_a = Arc::new(synthetic::clustered(500, 5, 8, 0.03, 31));
+    let trg_b = Arc::new(synthetic::clustered(350, 5, 6, 0.03, 32));
+    let km_ds = Arc::new(synthetic::clustered(400, 6, 8, 0.03, 33));
+    let nb_ds = Arc::new(synthetic::uniform(180, 3, 34));
+    let masses = Arc::new(synthetic::equal_masses(180, 1.0));
+    let src_a = Arc::new(synthetic::clustered(110, 5, 5, 0.04, 35));
+    let src_b = Arc::new(synthetic::clustered(90, 5, 5, 0.04, 36));
+    let src_c = Arc::new(synthetic::clustered(70, 5, 5, 0.04, 37));
+    vec![
+        ServeRequest::knn(src_a.clone(), trg_a.clone(), 6),
+        ServeRequest::kmeans(km_ds.clone(), 10, 5),
+        ServeRequest::knn(src_b.clone(), trg_b.clone(), 4),
+        ServeRequest::knn(src_a.clone(), trg_a.clone(), 6), // duplicate of 0
+        ServeRequest::nbody(nb_ds, masses, 3, 1e-3, 0.15),
+        ServeRequest::knn_metric(src_c, trg_a.clone(), 5, Metric::L1),
+        ServeRequest::kmeans(km_ds, 10, 5), // duplicate of 1
+        ServeRequest::knn(src_b, trg_a, 9), // same src, other cohort
+    ]
+}
+
+#[test]
+fn sharded_mixed_workload_is_identical_for_1_2_and_4_shards() {
+    let queries = mixed_workload();
+    let mut solo = fresh_engine();
+    for shards in [1usize, 2, 4] {
+        let mut batcher = sharded_batcher(shards);
+        assert_eq!(batcher.shard_count(), shards);
+        for q in &queries {
+            batcher.submit(q.clone());
+        }
+        let out = batcher.flush().expect("flush");
+        assert_eq!(out.len(), queries.len());
+        for (i, (_, resp)) in out.iter().enumerate() {
+            let what = format!("{shards} shards, query {i}");
+            assert_matches_solo(resp, &queries[i], &mut solo, &what);
+        }
+        // The shards actually shared the work and the stats merged.
+        let stats = batcher.stats();
+        assert_eq!(stats.queries, queries.len() as u64);
+        assert_eq!(stats.dedup_hits, 2, "{stats:?}");
+        let shard_sum: u64 = batcher.shard_stats().iter().map(|s| s.queries).sum();
+        assert_eq!(shard_sum, stats.queries);
+        if shards > 1 {
+            let busy = batcher.shard_stats().iter().filter(|s| s.queries > 0).count();
+            assert!(busy > 1, "work must spread across shards: {stats:?}");
+        }
+    }
+}
+
+#[test]
+fn deadline_driven_flush_order_preserves_parity() {
+    let queries = mixed_workload();
+    let mut solo = fresh_engine();
+    let mut batcher = sharded_batcher(2);
+    // Half the workload is latency-sensitive (already due), the rest
+    // patient; a poll answers the first half alone, an explicit flush
+    // the remainder — two different cohort compositions than the
+    // all-at-once test, same bit-for-bit results.
+    let mut ids = Vec::new();
+    for (i, q) in queries.iter().enumerate() {
+        let deadline =
+            if i % 2 == 0 { Duration::ZERO } else { Duration::from_secs(3600) };
+        ids.push(batcher.submit_with_deadline(q.clone(), deadline));
+    }
+    let first = batcher.poll().expect("poll");
+    assert!(!first.is_empty(), "expired deadlines must flush");
+    assert!(batcher.pending_len() > 0, "patient queries must wait");
+    let second = batcher.flush().expect("flush");
+    assert_eq!(first.len() + second.len(), queries.len());
+    assert_eq!(batcher.stats().deadline_flushes, 1);
+    for (id, resp) in first.iter().chain(second.iter()) {
+        let qi = ids.iter().position(|x| x == id).expect("known id");
+        assert_matches_solo(resp, &queries[qi], &mut solo, &format!("deadline query {qi}"));
+    }
 }
