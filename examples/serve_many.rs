@@ -86,12 +86,15 @@ fn main() -> anyhow::Result<()> {
     println!();
     for (i, shard) in batcher.shard_stats().iter().enumerate() {
         println!(
-            "  shard {i}: {} queries in {} flushes | {} tiles | slab cache {} hits / {} misses",
+            "  shard {i}: {} queries in {} flushes | {} tiles | slab cache {} hits / {} misses \
+             | {} lockstep rounds, {} stolen",
             shard.queries,
             shard.flushes,
             shard.tiles_total,
             shard.slab_cache_hits,
             shard.slab_cache_misses,
+            shard.lockstep_rounds,
+            shard.steals,
         );
     }
     anyhow::ensure!(
@@ -99,5 +102,9 @@ fn main() -> anyhow::Result<()> {
         "coalescible burst shared no tiles"
     );
     anyhow::ensure!(batcher.stats().deadline_flushes == 1, "poll must have served the deadline");
+    anyhow::ensure!(
+        batcher.stats().lockstep_rounds > 0,
+        "the lockstep scheduler must have run rounds"
+    );
     Ok(())
 }

@@ -2,17 +2,25 @@
 //! `serve::QueryBatcher` vs the same N queries as independent `Engine`
 //! calls — swept across engine-shard counts (1/2/4), plus a
 //! repeated-flush scenario that shows the persistent per-shard slab
-//! cache converting packing work into cache hits.
+//! cache converting packing work into cache hits, plus a
+//! repeated-cohort K-means scenario that shows the lockstep scheduler
+//! sharing packed assignment tiles across same-dataset programs.
 //!
 //! The batched path amortizes exactly what a serving deployment
 //! amortizes: the target grouping is built once per cohort instead of
-//! once per query, packed target slabs are shared across queries with
-//! identical candidate sets (and across flushes, until LRU-evicted
-//! over the byte budget), duplicated queries are answered from one
-//! execution, and independent cohorts run concurrently on the engine
-//! pool.  `ServeStats` reports the sharing that proves it happened.
+//! once per query, packed slabs are shared across queries (and across
+//! flushes, until LRU-evicted over the byte budget), duplicated
+//! queries are answered from one execution, independent cohorts run
+//! concurrently on the engine pool, and idle shards steal
+//! not-yet-started units when the cost estimates misfire.
+//! `ServeStats` reports the sharing that proves it happened.
 //!
-//! Scale down with ACCD_BENCH_FAST=1 (CI).
+//! Machine-readable output: every scenario row is also written to
+//! `BENCH_serve.json` (override the path with `ACCD_BENCH_JSON`) —
+//! q/s, lockstep shared-tile hit rate and steal count per scenario —
+//! so CI can archive the numbers as an artifact.
+//!
+//! Scale down with ACCD_BENCH_FAST=1 (CI smoke mode).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -22,11 +30,44 @@ use accd::coordinator::Engine;
 use accd::data::{synthetic, Dataset};
 use accd::serve::{QueryBatcher, ServeRequest};
 use accd::util::bench::{fmt_x, Table};
+use accd::util::json::{self, Value};
+
+/// One scenario's machine-readable record.
+fn scenario_row(
+    name: &str,
+    queries: usize,
+    wall_secs: f64,
+    speedup: f64,
+    batcher: &QueryBatcher,
+) -> Value {
+    let stats = batcher.stats();
+    let slab_total = stats.slab_cache_hits + stats.slab_cache_misses;
+    let shared_tile_rate = if slab_total == 0 {
+        0.0
+    } else {
+        stats.lockstep_shared_tiles as f64 / slab_total as f64
+    };
+    json::obj(vec![
+        ("name", json::s(name.to_string())),
+        ("queries", json::num(queries as f64)),
+        ("wall_secs", json::num(wall_secs)),
+        ("qps", json::num(queries as f64 / wall_secs.max(1e-12))),
+        ("speedup_vs_sequential", json::num(speedup)),
+        ("shards", json::num(batcher.shard_count() as f64)),
+        ("tiles_shared_ratio", json::num(stats.tiles_shared_ratio())),
+        ("slab_hit_rate", json::num(stats.slab_hit_rate())),
+        ("lockstep_rounds", json::num(stats.lockstep_rounds as f64)),
+        ("lockstep_shared_tiles", json::num(stats.lockstep_shared_tiles as f64)),
+        ("lockstep_shared_tile_rate", json::num(shared_tile_rate)),
+        ("steals", json::num(stats.steals as f64)),
+    ])
+}
 
 fn main() {
     let fast = std::env::var("ACCD_BENCH_FAST").as_deref() == Ok("1");
     let (n_trg, n_src) = if fast { (4_000, 300) } else { (20_000, 1_500) };
     let k = 10;
+    let mut scenarios: Vec<Value> = Vec::new();
 
     // Two hot target datasets, 6 distinct user queries, each submitted
     // twice (live traffic repeats itself) -> 12 coalescible queries in
@@ -95,6 +136,13 @@ fn main() {
             format!("{:.1}", q / secs),
             fmt_x(seq_secs / secs),
         ]);
+        scenarios.push(scenario_row(
+            &format!("knn_cold_{shards}shard"),
+            queries.len(),
+            secs,
+            seq_secs / secs,
+            &batcher,
+        ));
     }
     table.print("Batched serving vs sequential engine calls (shard sweep)");
 
@@ -104,6 +152,7 @@ fn main() {
     serve_cfg.shards = 2;
     let mut batcher = QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), serve_cfg);
     let mut round_rows = Table::new(&["flush", "wall (s)", "q/s", "slab hit rate"]);
+    let mut warm_secs = 0.0f64;
     for round in 0..rounds {
         for (src, trg) in &queries {
             batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), k));
@@ -113,6 +162,7 @@ fn main() {
         let t = Instant::now();
         batcher.flush().expect("repeated flush");
         let secs = t.elapsed().as_secs_f64();
+        warm_secs += secs;
         let (hits, misses) = (
             batcher.stats().slab_cache_hits - hits0,
             batcher.stats().slab_cache_misses - misses0,
@@ -128,6 +178,13 @@ fn main() {
     round_rows.print("Repeated flushes (2 shards): persistent slab cache");
     let stats = batcher.stats();
     println!("\n{}", stats.summary());
+    scenarios.push(scenario_row(
+        "knn_repeated_flushes_2shard",
+        queries.len() * rounds,
+        warm_secs,
+        (seq_secs * rounds as f64) / warm_secs.max(1e-12),
+        &batcher,
+    ));
 
     if !any_shared || stats.tiles_shared == 0 {
         eprintln!("FAIL: coalescible queries shared no tiles — coalescing regressed");
@@ -137,6 +194,86 @@ fn main() {
         eprintln!("FAIL: repeated flushes hit no cached slabs — persistence regressed");
         std::process::exit(1);
     }
+
+    // --- Repeated-cohort K-means: lockstep shared assignment tiles -------
+    // Six same-dataset K-means queries with different k: NOT
+    // deduplicable, so six distinct iterative programs co-reside under
+    // the lockstep scheduler and share one packed assignment slab (and
+    // one grouping) through the shard caches.
+    let (n_km, km_iters) = if fast { (3_000, 4) } else { (12_000, 8) };
+    let km_ds = Arc::new(synthetic::clustered(n_km, 8, 16, 0.03, 7));
+    let km_ks = [8usize, 12, 16, 20, 24, 32];
+
+    let mut engine = Engine::new(cfg.clone()).expect("engine");
+    let t = Instant::now();
+    let mut km_seq = Vec::new();
+    for &kk in &km_ks {
+        km_seq.push(engine.kmeans(&km_ds, kk, km_iters).expect("solo kmeans"));
+    }
+    let km_seq_secs = t.elapsed().as_secs_f64();
+
+    let mut serve_cfg = cfg.serve.clone();
+    serve_cfg.shards = 2;
+    let mut km_batcher =
+        QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), serve_cfg);
+    for &kk in &km_ks {
+        km_batcher.submit(ServeRequest::kmeans(km_ds.clone(), kk, km_iters));
+    }
+    let t = Instant::now();
+    let km_out = km_batcher.flush().expect("kmeans flush");
+    let km_secs = t.elapsed().as_secs_f64();
+    for (i, (_, resp)) in km_out.iter().enumerate() {
+        let got = resp.as_kmeans().expect("kmeans response");
+        assert_eq!(got.assign, km_seq[i].assign, "lockstep kmeans diverged on query {i}");
+        assert_eq!(got.sse, km_seq[i].sse, "lockstep kmeans sse diverged on query {i}");
+    }
+    let km_stats = km_batcher.stats();
+    let mut km_table = Table::new(&["path", "wall (s)", "q/s", "speedup"]);
+    km_table.row(vec![
+        "sequential kmeans calls".into(),
+        format!("{km_seq_secs:.3}"),
+        format!("{:.1}", km_ks.len() as f64 / km_seq_secs),
+        fmt_x(1.0),
+    ]);
+    km_table.row(vec![
+        "serve, 2 shards, lockstep".into(),
+        format!("{km_secs:.3}"),
+        format!("{:.1}", km_ks.len() as f64 / km_secs),
+        fmt_x(km_seq_secs / km_secs),
+    ]);
+    km_table.print("Repeated-cohort K-means (one dataset, six k values)");
+    println!(
+        "lockstep: {} rounds, {} shared tiles | {} units stolen",
+        km_stats.lockstep_rounds, km_stats.lockstep_shared_tiles, km_stats.steals
+    );
+    scenarios.push(scenario_row(
+        "kmeans_repeated_cohort_2shard",
+        km_ks.len(),
+        km_secs,
+        km_seq_secs / km_secs,
+        &km_batcher,
+    ));
+
+    if km_stats.lockstep_shared_tiles == 0 {
+        eprintln!(
+            "FAIL: same-dataset kmeans cohort shared no assignment tiles — lockstep regressed"
+        );
+        std::process::exit(1);
+    }
+
+    // --- Machine-readable output ------------------------------------------
+    let out_path = std::env::var("ACCD_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let doc = json::obj(vec![
+        ("bench", json::s("serve_throughput".to_string())),
+        ("fast_mode", Value::Bool(fast)),
+        ("sequential_knn_secs", json::num(seq_secs)),
+        ("sequential_kmeans_secs", json::num(km_seq_secs)),
+        ("scenarios", Value::Arr(scenarios)),
+    ]);
+    std::fs::write(&out_path, doc.to_string()).expect("write bench json");
+    println!("\nwrote {out_path}");
+
     println!(
         "\ntiles shared: {}/{} ({:.1}%) | grouping cache hit rate {:.1}% | \
          slab cache hit rate {:.1}% ({} evictions)",

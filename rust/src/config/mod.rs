@@ -71,10 +71,23 @@ pub struct ServeConfig {
     /// an explicit `flush()` or the max_batch size trigger).
     /// `submit_with_deadline` overrides this per query.
     pub deadline_ms: u64,
-    /// Byte budget of each shard's cross-flush packed-slab cache
-    /// (0 = unbounded).  Hot cohorts' target slabs stay resident
-    /// across flushes until LRU-evicted over this budget.
+    /// Byte budget of each shard's cross-flush packed-slab cache.
+    /// **0 = disabled**: every slab is built fresh and nothing is
+    /// retained (results are unchanged; only the reuse disappears).
+    /// Hot cohorts' packed slabs otherwise stay resident across
+    /// flushes until LRU-evicted over this budget.
     pub slab_cache_bytes: usize,
+    /// Lockstep step scheduling: each shard advances all its resident
+    /// iterative programs one iteration per round (sharing cached
+    /// groupings and packed slabs across same-dataset programs)
+    /// instead of running each work unit to completion serially.
+    /// Results are bit-identical either way (serve parity contract).
+    pub lockstep: bool,
+    /// Work stealing: minimum cost estimate a not-yet-started work
+    /// unit must have for an idle shard to steal it from a busy one
+    /// when the LPT placement's estimates misfire.  **0 disables
+    /// stealing**; 1 (the default) steals anything available.
+    pub steal_threshold: u64,
 }
 
 impl Default for ServeConfig {
@@ -87,7 +100,32 @@ impl Default for ServeConfig {
             shards: 2,
             deadline_ms: 0,
             slab_cache_bytes: 64 << 20,
+            lockstep: true,
+            steal_threshold: 1,
         }
+    }
+}
+
+impl ServeConfig {
+    /// Validate the serving knobs.  Called by `AccdConfig::validate`
+    /// and by `QueryBatcher` construction, so an invalid config can
+    /// never reach the serving runtime.  Note the explicit zero
+    /// semantics: `max_batch == 0` means unbounded batches,
+    /// `slab_cache_bytes == 0` means the slab cache is *disabled* (not
+    /// unbounded), `steal_threshold == 0` disables work stealing —
+    /// all legal; `shards`, `pipeline_depth` and `grouping_cache_cap`
+    /// must be positive.
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            return Err(Error::Config("serve.shards must be positive".into()));
+        }
+        if self.pipeline_depth == 0 {
+            return Err(Error::Config("serve.pipeline_depth must be positive".into()));
+        }
+        if self.grouping_cache_cap == 0 {
+            return Err(Error::Config("serve.grouping_cache_cap must be positive".into()));
+        }
+        Ok(())
     }
 }
 
@@ -154,6 +192,14 @@ impl AccdConfig {
                 s.get("deadline_ms").as_usize().map(|v| v as u64).unwrap_or(cfg.serve.deadline_ms);
             cfg.serve.slab_cache_bytes =
                 s.get("slab_cache_bytes").as_usize().unwrap_or(cfg.serve.slab_cache_bytes);
+            if let Some(b) = s.get("lockstep").as_bool() {
+                cfg.serve.lockstep = b;
+            }
+            cfg.serve.steal_threshold = s
+                .get("steal_threshold")
+                .as_usize()
+                .map(|v| v as u64)
+                .unwrap_or(cfg.serve.steal_threshold);
         }
         if let Some(s) = v.get("artifact_dir").as_str() {
             cfg.artifact_dir = s.to_string();
@@ -187,15 +233,7 @@ impl AccdConfig {
         if self.hw.freq_mhz <= 0.0 {
             return Err(Error::Config("hw.freq_mhz must be positive".into()));
         }
-        if self.serve.pipeline_depth == 0 {
-            return Err(Error::Config("serve.pipeline_depth must be positive".into()));
-        }
-        if self.serve.grouping_cache_cap == 0 {
-            return Err(Error::Config("serve.grouping_cache_cap must be positive".into()));
-        }
-        if self.serve.shards == 0 {
-            return Err(Error::Config("serve.shards must be positive".into()));
-        }
+        self.serve.validate()?;
         Ok(())
     }
 
@@ -230,6 +268,8 @@ impl AccdConfig {
                     ("shards", json::num(self.serve.shards as f64)),
                     ("deadline_ms", json::num(self.serve.deadline_ms as f64)),
                     ("slab_cache_bytes", json::num(self.serve.slab_cache_bytes as f64)),
+                    ("lockstep", Value::Bool(self.serve.lockstep)),
+                    ("steal_threshold", json::num(self.serve.steal_threshold as f64)),
                 ]),
             ),
             ("artifact_dir", json::s(self.artifact_dir.clone())),
@@ -261,6 +301,8 @@ mod tests {
         cfg.serve.shards = 4;
         cfg.serve.deadline_ms = 15;
         cfg.serve.slab_cache_bytes = 1 << 20;
+        cfg.serve.lockstep = false;
+        cfg.serve.steal_threshold = 9000;
         let re = AccdConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, re);
     }
@@ -281,6 +323,32 @@ mod tests {
         assert_eq!(cfg.serve.pipeline_depth, ServeConfig::default().pipeline_depth);
         assert_eq!(cfg.serve.deadline_ms, ServeConfig::default().deadline_ms);
         assert_eq!(cfg.serve.slab_cache_bytes, ServeConfig::default().slab_cache_bytes);
+        assert!(cfg.serve.lockstep, "lockstep defaults on");
+        assert_eq!(cfg.serve.steal_threshold, 1, "stealing defaults on at threshold 1");
+    }
+
+    #[test]
+    fn serve_validate_error_paths_and_zero_semantics() {
+        // Each rejected knob names itself in the error.
+        let bad = ServeConfig { shards: 0, ..ServeConfig::default() };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("shards"), "{msg}");
+        let bad = ServeConfig { pipeline_depth: 0, ..ServeConfig::default() };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("pipeline_depth"), "{msg}");
+        let bad = ServeConfig { grouping_cache_cap: 0, ..ServeConfig::default() };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("grouping_cache_cap"), "{msg}");
+        // Legal zeros: unbounded batches, DISABLED slab cache,
+        // DISABLED stealing — explicitly not errors.
+        let ok = ServeConfig {
+            max_batch: 0,
+            slab_cache_bytes: 0,
+            steal_threshold: 0,
+            lockstep: false,
+            ..ServeConfig::default()
+        };
+        ok.validate().unwrap();
     }
 
     #[test]

@@ -19,16 +19,23 @@
 //! `gti::filter` and exercised by `rust/tests/integration_algorithms.rs`
 //! which checks exact agreement with the naive CPU baseline.
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use crate::data::{Dataset, Matrix};
+use crate::fpga::device::DeviceStats;
 use crate::fpga::FpgaDevice;
 use crate::gti::{bounds, Grouping};
 use crate::layout::{PackedGrouping, PackedSet};
 use crate::metrics::RunReport;
+use crate::runtime::TileInfo;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 
 use super::engine::Engine;
+use super::knn::{SharedSlab, SlabCache, SlabKind, SlabScope};
 use super::pipeline;
+use super::program::{self, CohortProgram, StepCtx, StepOutcome};
 
 /// Result of a K-means run.
 #[derive(Debug, Clone)]
@@ -53,6 +60,48 @@ pub(super) fn run(
     run_shared(engine, ds, k, max_iters, None)
 }
 
+/// One K-means query as a stepwise program.
+///
+/// [`plan`] groups + packs the points, initializes centers and runs the
+/// exact iteration-0 assignment; [`CohortProgram::step`] is one Lloyd
+/// iteration under the trace-based + group-level filter, converging
+/// when no assignment changed and center drift vanished (or the
+/// iteration cap is reached — the cap belongs to the program, not the
+/// driver, so every driver observes identical iteration counts);
+/// [`CohortProgram::finish`] is the exact SSE pass + unpacking.
+pub(crate) struct KmeansProgram {
+    k: usize,
+    max_iters: usize,
+    pg: Arc<PackedGrouping>,
+    centers: Matrix,
+    center_grouping: Grouping,
+    z_trg: usize,
+    /// Assignment + upper bounds in packed-row order.
+    assign: Vec<u32>,
+    ub: Vec<f32>,
+    k_pad: usize,
+    d_pad: usize,
+    tile: TileInfo,
+    /// Padded full packed-points slab — the assignment tile's row
+    /// input, fetched through the caller's [`SlabCache`] so every
+    /// same-dataset K-means program in a serving cohort shares one
+    /// build.
+    points_slab: SharedSlab,
+    iterations: usize,
+    /// Converged via the drift criterion — makes `step` after
+    /// `Converged` an idempotent no-op, as the contract requires.
+    converged: bool,
+    report: RunReport,
+    /// Wall seconds spent inside THIS program's plan/step/finish calls
+    /// (per-call accumulation — like the device counters, exact even
+    /// when the lockstep scheduler interleaves other programs).
+    wall_secs: f64,
+    /// This program's own device counters (snapshot diffs — exact even
+    /// when the lockstep scheduler interleaves other programs' steps
+    /// on the same engine).
+    device: DeviceStats,
+}
+
 /// Validate a K-means request (shared by the solo path and the serving
 /// layer's admission check, so the two can never silently diverge).
 pub(crate) fn validate(ds: &Dataset, k: usize) -> Result<()> {
@@ -62,7 +111,8 @@ pub(crate) fn validate(ds: &Dataset, k: usize) -> Result<()> {
     Ok(())
 }
 
-/// K-means with an optionally pre-built (cached) source grouping.
+/// K-means with an optionally pre-built (cached) source grouping —
+/// the solo driver: plan, step to convergence, finish.
 ///
 /// `shared` must be exactly what [`PackedGrouping::build`] would
 /// produce for this dataset and the engine's config — the serving
@@ -73,11 +123,36 @@ pub(crate) fn run_shared(
     ds: &Dataset,
     k: usize,
     max_iters: usize,
-    shared: Option<&PackedGrouping>,
+    shared: Option<Arc<PackedGrouping>>,
 ) -> Result<KmeansResult> {
     validate(ds, k)?;
-    let t0 = std::time::Instant::now();
     engine.device.reset_stats();
+    // Run-local scratch cache: identity fields are irrelevant (nothing
+    // outlives this run), only key consistency matters.
+    let mut slab_cache = SlabCache::unbounded();
+    let program =
+        plan(&*engine, ds, k, max_iters, shared.map(|pg| (pg, (0, 0))), &mut slab_cache)?;
+    let mut ctx = StepCtx { engine: &*engine };
+    program::run_to_completion(program, &mut ctx)
+}
+
+/// CPU-side planning + exact iteration-0 assignment.
+///
+/// `shared` carries a cached `(grouping, content fingerprint)` pair
+/// from the serving layer; `None` builds the grouping here (solo path,
+/// fingerprint fields zeroed — the run-local cache never aliases).
+/// The padded full points slab is fetched through `slab_cache`, so
+/// same-dataset programs sharing a persistent cache share one build.
+pub(crate) fn plan(
+    engine: &Engine,
+    ds: &Dataset,
+    k: usize,
+    max_iters: usize,
+    shared: Option<(Arc<PackedGrouping>, (u64, u64))>,
+    slab_cache: &mut SlabCache,
+) -> Result<KmeansProgram> {
+    validate(ds, k)?;
+    let t0 = Instant::now();
     let mut report = RunReport::new("kmeans", &ds.name, "accd");
     let cfg = engine.config.clone();
     let tile = engine.runtime.manifest().tile.clone();
@@ -85,13 +160,12 @@ pub(crate) fn run_shared(
     let d_pad = tile.pad_d(d)?;
 
     // --- CPU side: grouping + packing (filter stage) -------------------
-    let filt0 = std::time::Instant::now();
+    let filt0 = Instant::now();
     let z_src = engine.src_groups(ds.n());
-    let pg_owned;
-    let pg: &PackedGrouping = match shared {
-        Some(pg) => pg,
-        None => {
-            pg_owned = PackedGrouping::build(
+    let (pg, ds_fp) = match shared {
+        Some((pg, fp)) => (pg, fp),
+        None => (
+            Arc::new(PackedGrouping::build(
                 &ds.points,
                 z_src,
                 cfg.gti.grouping_iters,
@@ -99,61 +173,128 @@ pub(crate) fn run_shared(
                 cfg.seed,
                 crate::gti::Metric::L2,
                 8,
-            )?;
-            &pg_owned
-        }
+            )?),
+            (0, 0),
+        ),
     };
-    let grouping = &pg.grouping;
-    let packed = &pg.packed;
 
     // Initial centers: k distinct random points.
     let mut rng = Rng::new(cfg.seed ^ 0x6B6D_6561_6E73); // "kmeans" salt
-    let mut centers = ds.points.gather_rows(&rng.sample_indices(ds.n(), k));
+    let centers = ds.points.gather_rows(&rng.sample_indices(ds.n(), k));
 
     // Group the centers (membership fixed; positions will drift).
     let z_trg = engine.trg_groups(k).min(k);
-    let mut center_grouping =
+    let center_grouping =
         Grouping::build(&centers, z_trg, cfg.gti.grouping_iters, k, cfg.seed ^ 0xC0)?;
     report.filter_secs += filt0.elapsed().as_secs_f64();
 
     // --- Iteration 0: exact assignment of everything -------------------
     let k_pad = tile.pad_kmeans_k(k)?;
-    let centers_slab = pad_centers(&centers, k_pad, d_pad);
-    let mut assign = vec![0u32; ds.n()]; // packed-row order
-    let mut ub = vec![0.0f32; ds.n()]; // upper bound on dist to assigned
-    assign_full(&engine.device, packed, &centers_slab, k, k_pad, d_pad, &mut assign, &mut ub)?;
+    let n = pg.packed.points.rows();
+    let rows_pad = crate::util::round_up(n.max(1), tile.m);
+    // The assignment tile's row input depends only on the packed
+    // points and the tile geometry — identical for every program over
+    // this dataset under this grouping, so it lives in the slab cache.
+    let scope = SlabScope {
+        kind: SlabKind::KmeansPoints,
+        fingerprint: ds_fp.0,
+        probe: ds_fp.1,
+        groups: z_src,
+        iters: cfg.gti.grouping_iters,
+        sample: cfg.gti.grouping_sample,
+        seed: cfg.seed,
+        metric: crate::gti::Metric::L2,
+        d_pad,
+        tile_n: tile.m,
+    };
+    let points = &pg.packed.points;
+    let (points_slab, _hit) = slab_cache.get_or_build(&scope, &[], || SharedSlab {
+        slab: Arc::new(FpgaDevice::pad_slab(points.as_slice(), n, d, rows_pad, d_pad)),
+        col_ids: Arc::new(Vec::new()),
+        rows: n,
+    });
 
-    // --- Iterations -----------------------------------------------------
-    let mut iterations = 0usize;
-    let mut drift = vec![0.0f32; k];
-    for _iter in 0..max_iters {
-        iterations += 1;
+    let centers_slab = pad_centers(&centers, k_pad, d_pad);
+    let mut assign = vec![0u32; n]; // packed-row order
+    let mut ub = vec![0.0f32; n]; // upper bound on dist to assigned
+    let dev0 = engine.device.stats();
+    assign_full(
+        &engine.device,
+        &points_slab.slab,
+        n,
+        &centers_slab,
+        k,
+        k_pad,
+        d_pad,
+        &mut assign,
+        &mut ub,
+    )?;
+    let mut device = DeviceStats::default();
+    program::absorb_device(&mut device, &program::device_delta(&dev0, &engine.device.stats()));
+
+    Ok(KmeansProgram {
+        k,
+        max_iters,
+        pg,
+        centers,
+        center_grouping,
+        z_trg,
+        assign,
+        ub,
+        k_pad,
+        d_pad,
+        tile,
+        points_slab,
+        iterations: 0,
+        converged: false,
+        report,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        device,
+    })
+}
+
+impl CohortProgram for KmeansProgram {
+    type Output = KmeansResult;
+
+    /// One Lloyd iteration: center update, trace-based bound widening,
+    /// group-level filter, surviving rectangles to the device.
+    fn step(&mut self, ctx: &mut StepCtx<'_>) -> Result<StepOutcome> {
+        if self.converged || self.iterations >= self.max_iters {
+            return Ok(StepOutcome::Converged);
+        }
+        let step_t0 = Instant::now();
+        let engine = ctx.engine;
+        let dev0 = engine.device.stats();
+        self.iterations += 1;
+        let k = self.k;
+        let grouping = &self.pg.grouping;
+        let packed = &self.pg.packed;
+
         // Center update (CPU): means over packed points.
-        let filt = std::time::Instant::now();
-        let moved = update_centers(packed, &assign, &mut centers, k);
-        drift.copy_from_slice(&moved);
-        let max_drift = moved.iter().cloned().fold(0.0f32, f32::max);
+        let filt = Instant::now();
+        let drift = update_centers(packed, &self.assign, &mut self.centers, k);
+        let max_drift = drift.iter().cloned().fold(0.0f32, f32::max);
         // Trace-based: widen ubs by assigned center drift.
-        for (i, a) in assign.iter().enumerate() {
-            ub[i] += drift[*a as usize];
+        for (i, a) in self.assign.iter().enumerate() {
+            self.ub[i] += drift[*a as usize];
         }
         // Center grouping follows its members (recenter + radii).
-        let cg_drift = recenter_center_groups(&mut center_grouping, &centers);
+        let cg_drift = recenter_center_groups(&mut self.center_grouping, &self.centers);
         let _ = cg_drift;
         // Group-level bounds: Eq. 2 on (source group, center group).
-        let pair_bounds = bounds::group_pair_bounds(grouping, &center_grouping);
-        report.filter.bound_comps += (grouping.num_groups() * z_trg) as u64;
+        let pair_bounds = bounds::group_pair_bounds(grouping, &self.center_grouping);
+        self.report.filter.bound_comps += (grouping.num_groups() * self.z_trg) as u64;
         // Per source group: ub = max member ub.
         let mut grp_ub = vec![0.0f32; grouping.num_groups()];
         for g in 0..grouping.num_groups() {
             let (start, len) = (packed.group_start(g), packed.group_len(g));
             let mut m = 0.0f32;
             for i in start..start + len {
-                m = m.max(ub[i]);
+                m = m.max(self.ub[i]);
             }
             grp_ub[g] = m;
         }
-        report.filter_secs += filt.elapsed().as_secs_f64();
+        self.report.filter_secs += filt.elapsed().as_secs_f64();
 
         // Candidate center-groups per source group.  Source groups
         // sharing the same candidate signature are merged into ONE
@@ -170,14 +311,14 @@ pub(crate) fn run_shared(
                 continue;
             }
             let mut cand_groups: Vec<u32> = Vec::new();
-            for b in 0..z_trg {
-                report.filter.group_pairs += 1;
+            for b in 0..self.z_trg {
+                self.report.filter.group_pairs += 1;
                 if pair_bounds[g][b].lb <= grp_ub[g] {
-                    report.filter.surviving_group_pairs += 1;
+                    self.report.filter.surviving_group_pairs += 1;
                     cand_groups.push(b as u32);
                 }
             }
-            report.filter.total_pairs += (len * k) as u64;
+            self.report.filter.total_pairs += (len * k) as u64;
             if !cand_groups.is_empty() {
                 batches.entry(cand_groups).or_default().push(g);
             }
@@ -190,6 +331,11 @@ pub(crate) fn run_shared(
         let mut results: Vec<(Vec<u32>, Vec<u32>, Vec<i32>, Vec<f32>)> = Vec::new();
         {
             let jobs_ref = &jobs;
+            let center_grouping = &self.center_grouping;
+            let centers = &self.centers;
+            let report = &mut self.report;
+            let tile = &self.tile;
+            let d_pad = self.d_pad;
             pipeline::run(
                 8,
                 |i| jobs_ref.get(i as usize).cloned(),
@@ -215,7 +361,7 @@ pub(crate) fn run_shared(
                         device,
                         &packed.points,
                         &rows,
-                        &centers,
+                        centers,
                         &cand_centers,
                         &tile.kmeans_k_pad,
                         d_pad,
@@ -233,63 +379,88 @@ pub(crate) fn run_shared(
             for (r, &packed_row) in rows.iter().enumerate() {
                 let true_center = cand[idx[r] as usize];
                 let i = packed_row as usize;
-                if assign[i] != true_center {
-                    assign[i] = true_center;
+                if self.assign[i] != true_center {
+                    self.assign[i] = true_center;
                     changed += 1;
                 }
-                ub[i] = dist[r].max(0.0).sqrt();
+                self.ub[i] = dist[r].max(0.0).sqrt();
             }
         }
+        program::absorb_device(
+            &mut self.device,
+            &program::device_delta(&dev0, &engine.device.stats()),
+        );
+        self.wall_secs += step_t0.elapsed().as_secs_f64();
 
-        if changed == 0 && max_drift < 1e-6 {
-            break;
+        self.converged = changed == 0 && max_drift < 1e-6;
+        if self.converged || self.iterations >= self.max_iters {
+            Ok(StepOutcome::Converged)
+        } else {
+            Ok(StepOutcome::Continue)
         }
     }
 
-    // --- Final exact pass: SSE + assignment validation ------------------
-    let centers_slab = pad_centers(&centers, k_pad, d_pad);
-    let mut final_dist = vec![0.0f32; ds.n()];
-    assign_full(
-        &engine.device,
-        packed,
-        &centers_slab,
-        k,
-        k_pad,
-        d_pad,
-        &mut assign,
-        &mut final_dist,
-    )?;
-    let sse: f64 = final_dist.iter().map(|&x| (x * x) as f64).sum();
+    /// Final exact pass: SSE + assignment validation + unpacking.
+    fn finish(mut self, ctx: &mut StepCtx<'_>) -> Result<KmeansResult> {
+        let finish_t0 = Instant::now();
+        let engine = ctx.engine;
+        let dev0 = engine.device.stats();
+        let n = self.pg.packed.points.rows();
+        let centers_slab = pad_centers(&self.centers, self.k_pad, self.d_pad);
+        let mut final_dist = vec![0.0f32; n];
+        assign_full(
+            &engine.device,
+            &self.points_slab.slab,
+            n,
+            &centers_slab,
+            self.k,
+            self.k_pad,
+            self.d_pad,
+            &mut self.assign,
+            &mut final_dist,
+        )?;
+        let sse: f64 = final_dist.iter().map(|&x| (x * x) as f64).sum();
 
-    // Unpack assignment to original point order.
-    let mut assign_orig = vec![0u32; ds.n()];
-    for (new_row, &old) in packed.new2old.iter().enumerate() {
-        assign_orig[old as usize] = assign[new_row];
+        // Unpack assignment to original point order.
+        let mut assign_orig = vec![0u32; n];
+        for (new_row, &old) in self.pg.packed.new2old.iter().enumerate() {
+            assign_orig[old as usize] = self.assign[new_row];
+        }
+        program::absorb_device(
+            &mut self.device,
+            &program::device_delta(&dev0, &engine.device.stats()),
+        );
+
+        // --- Report ------------------------------------------------------
+        let iterations = self.iterations;
+        let mut report = self.report;
+        report.iterations = iterations;
+        report.wall_secs = self.wall_secs + finish_t0.elapsed().as_secs_f64();
+        report.device = self.device.clone();
+        report.device_wall_secs = report.device.wall_secs;
+        report.device_modeled_secs = report.device.modeled_secs;
+        report.quality = sse;
+        report.energy_j = engine.power.accd_joules(
+            report.wall_secs,
+            report.filter_secs,
+            1.0,
+            report.device.wall_secs,
+        );
+        report.avg_watts = report.energy_j / report.wall_secs.max(1e-9);
+
+        Ok(KmeansResult { centers: self.centers, assign: assign_orig, sse, iterations, report })
     }
-
-    // --- Report ----------------------------------------------------------
-    report.iterations = iterations;
-    report.wall_secs = t0.elapsed().as_secs_f64();
-    report.device = engine.device.stats();
-    report.device_wall_secs = report.device.wall_secs;
-    report.device_modeled_secs = report.device.modeled_secs;
-    report.quality = sse;
-    report.energy_j = engine.power.accd_joules(
-        report.wall_secs,
-        report.filter_secs,
-        1.0,
-        report.device.wall_secs,
-    );
-    report.avg_watts = report.energy_j / report.wall_secs.max(1e-9);
-
-    Ok(KmeansResult { centers, assign: assign_orig, sse, iterations, report })
 }
 
-/// Exact assignment of every packed point against the full center slab.
+/// Exact assignment of every packed point against the full center
+/// slab.  `points_slab` is the pre-padded full packed-points slab
+/// (built once per program, shared across same-dataset programs
+/// through the slab cache).
 #[allow(clippy::too_many_arguments)]
 fn assign_full(
     device: &FpgaDevice,
-    packed: &PackedSet,
+    points_slab: &[f32],
+    n: usize,
     centers_slab: &[f32],
     k: usize,
     k_pad: usize,
@@ -297,12 +468,7 @@ fn assign_full(
     assign: &mut [u32],
     best_dist: &mut [f32],
 ) -> Result<()> {
-    let n = packed.points.rows();
-    let d = packed.points.cols();
-    let tile_m = device.runtime().manifest().tile.m;
-    let rows_pad = crate::util::round_up(n.max(1), tile_m);
-    let slab = FpgaDevice::pad_slab(packed.points.as_slice(), n, d, rows_pad, d_pad);
-    let (idx, dist) = device.kmeans_assign_block(&slab, n, d_pad, centers_slab, k_pad)?;
+    let (idx, dist) = device.kmeans_assign_block(points_slab, n, d_pad, centers_slab, k_pad)?;
     for i in 0..n {
         let ci = idx[i] as usize;
         debug_assert!(ci < k, "assignment hit a padded center slot");
@@ -409,4 +575,30 @@ fn update_centers(packed: &PackedSet, assign: &[u32], centers: &mut Matrix, k: u
 /// center-group drift (max member drift is folded into radii already).
 fn recenter_center_groups(cg: &mut Grouping, centers: &Matrix) -> Vec<f32> {
     cg.recenter(centers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Empty-cluster edge case: a center that loses every member must
+    /// keep its position exactly (zero drift) — the invariant the
+    /// batched-equals-sequential contract relies on when clusters die
+    /// mid-run (`rust/tests/serve_parity.rs` covers it end to end).
+    #[test]
+    fn update_centers_keeps_empty_cluster_position() {
+        let pts =
+            Matrix::from_vec(vec![0.0, 0.0, 0.0, 2.0, 10.0, 10.0, 10.0, 12.0], 4, 2).unwrap();
+        let g = Grouping::build(&pts, 1, 2, 4096, 7).unwrap();
+        let packed = PackedSet::pack(&pts, &g, 4);
+        // 3 centers; center 2 never assigned.
+        let mut centers = Matrix::from_vec(vec![0.0, 0.0, 10.0, 10.0, 50.0, 50.0], 3, 2).unwrap();
+        let assign: Vec<u32> = packed.new2old.iter().map(|&old| u32::from(old >= 2)).collect();
+        let drift = update_centers(&packed, &assign, &mut centers, 3);
+        assert_eq!(drift[2], 0.0, "empty cluster must not drift");
+        assert_eq!(centers.row(2).to_vec(), vec![50.0f32, 50.0]);
+        // Non-empty centers moved exactly to their member means.
+        assert_eq!(centers.row(0).to_vec(), vec![0.0f32, 1.0]);
+        assert_eq!(centers.row(1).to_vec(), vec![10.0f32, 11.0]);
+    }
 }

@@ -29,8 +29,10 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::data::Dataset;
+use crate::fpga::device::DeviceStats;
 use crate::fpga::TileJob;
 use crate::gti::{FilterStats, KnnFilter, Metric};
 use crate::layout::{self, LayoutStats, PackedGrouping};
@@ -41,6 +43,7 @@ use crate::{Error, Result};
 
 use super::engine::Engine;
 use super::pipeline;
+use super::program::{self, CohortProgram, StepCtx, StepOutcome};
 
 /// Result of a KNN-join: for each source point, its K nearest target
 /// points (ascending by distance).
@@ -64,15 +67,30 @@ pub(crate) struct SharedSlab {
     pub rows: usize,
 }
 
-/// Everything a packed target slab's bytes are determined by, besides
-/// the candidate group set: the target grouping's identity (content
-/// fingerprint pair + build parameters — the same 128-bit guarantee
-/// [`crate::serve::GroupingCache`] relies on) and the tile geometry the
-/// slab was padded for.  Two equal scopes imply bit-identical
-/// groupings, so a slab cached under one scope can be served to any
-/// later query in the same scope without perturbing results.
+/// What family of packed slab a [`SlabScope`] identifies — the
+/// namespace that keeps different algorithms' cache entries from ever
+/// aliasing, even for one dataset under identical grouping parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SlabKind {
+    /// Packed candidate-target-group slab of a KNN query.
+    KnnTarget,
+    /// Full padded packed-points slab of a K-means dataset (the
+    /// assignment tile's row input, shared by every same-dataset
+    /// K-means program in a serving cohort).
+    KmeansPoints,
+}
+
+/// Everything a packed slab's bytes are determined by, besides the
+/// candidate group set: the slab family, the grouping's identity
+/// (content fingerprint pair + build parameters — the same 128-bit
+/// guarantee [`crate::serve::GroupingCache`] relies on) and the tile
+/// geometry the slab was padded for.  Two equal scopes imply
+/// bit-identical groupings, so a slab cached under one scope can be
+/// served to any later query in the same scope without perturbing
+/// results.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SlabScope {
+    pub(crate) kind: SlabKind,
     pub(crate) fingerprint: u64,
     pub(crate) probe: u64,
     pub(crate) groups: usize,
@@ -91,6 +109,7 @@ impl SlabScope {
     /// matters.
     pub(crate) fn transient(metric: Metric) -> Self {
         Self {
+            kind: SlabKind::KnnTarget,
             fingerprint: 0,
             probe: 0,
             groups: 0,
@@ -123,6 +142,11 @@ struct SlabEntry {
 pub struct SlabCache {
     /// Max resident bytes (0 = unbounded).
     budget: usize,
+    /// Disabled: every lookup builds fresh and nothing is retained
+    /// (the serving layer's `slab_cache_bytes == 0` setting).  Results
+    /// are unchanged — cached slabs are bit-identical to fresh builds
+    /// — only the reuse disappears.
+    disabled: bool,
     /// Nested so the hot hit path borrows `cand` (`Vec<u32>: Borrow<[u32]>`)
     /// instead of allocating an owned key per lookup.
     map: HashMap<SlabScope, HashMap<Vec<u32>, SlabEntry>>,
@@ -143,6 +167,7 @@ impl SlabCache {
     pub fn with_budget(budget: usize) -> Self {
         Self {
             budget,
+            disabled: false,
             map: HashMap::new(),
             bytes: 0,
             tick: 0,
@@ -150,6 +175,12 @@ impl SlabCache {
             misses: 0,
             evictions: 0,
         }
+    }
+
+    /// A cache that never retains anything: every fetch is a counted
+    /// miss that builds fresh.
+    pub fn disabled() -> Self {
+        Self { disabled: true, ..Self::with_budget(0) }
     }
 
     /// Resident slab count (across all scopes).
@@ -175,6 +206,10 @@ impl SlabCache {
         cand: &[u32],
         build: impl FnOnce() -> SharedSlab,
     ) -> (SharedSlab, bool) {
+        if self.disabled {
+            self.misses += 1;
+            return (build(), false);
+        }
         self.tick += 1;
         if let Some(entry) = self.map.get_mut(scope).and_then(|inner| inner.get_mut(cand)) {
             entry.last_used = self.tick;
@@ -282,7 +317,9 @@ pub(crate) fn validate(src: &Dataset, trg: &Dataset, k: usize) -> Result<()> {
 
 /// Metric-aware KNN-join (paper Table I `mtr`): neighbor values are in
 /// *device space* — squared distances for L2, plain sums for L1 — so
-/// the ordering is metric-correct either way.
+/// the ordering is metric-correct either way.  Drives the one-shot
+/// [`KnnProgram`] to completion — plan / execute / merge as a
+/// single-step [`CohortProgram`].
 pub(super) fn run_metric(
     engine: &mut Engine,
     src: &Dataset,
@@ -291,14 +328,46 @@ pub(super) fn run_metric(
     metric: Metric,
 ) -> Result<KnnResult> {
     validate(src, trg, k)?;
-    let t0 = std::time::Instant::now();
     engine.device.reset_stats();
+    let program = plan_program(&*engine, src, trg, k, metric)?;
+    let mut ctx = StepCtx { engine: &*engine };
+    program::run_to_completion(program, &mut ctx)
+}
+
+/// One solo KNN query as a stepwise program: `plan_program` is the CPU
+/// filter stage (groupings + [`plan_metric`]), the single `step` is
+/// the device stage (bounded pipeline over the dispatch batches), and
+/// `finish` is the Top-K merge + report.
+pub(crate) struct KnnProgram {
+    plan: KnnPlan,
+    src_pg: Arc<PackedGrouping>,
+    tile: TileInfo,
+    results: Vec<(usize, crate::fpga::TileResult)>,
+    report: RunReport,
+    /// This program's own device counters (snapshot diffs — safe under
+    /// interleaved execution).
+    device: DeviceStats,
+    t0: Instant,
+    executed: bool,
+}
+
+/// CPU filter stage of one solo KNN query (serving cohorts build their
+/// shared plans in `serve::exec` instead, where the per-shard caches
+/// live).
+pub(crate) fn plan_program(
+    engine: &Engine,
+    src: &Dataset,
+    trg: &Dataset,
+    k: usize,
+    metric: Metric,
+) -> Result<KnnProgram> {
+    validate(src, trg, k)?;
+    let t0 = Instant::now();
     let mut report = RunReport::new("knn_join", &src.name, "accd");
     let cfg = engine.config.clone();
     let tile = engine.runtime.manifest().tile.clone();
 
-    // --- Filter stage (CPU) ---------------------------------------------
-    let filt0 = std::time::Instant::now();
+    let filt0 = Instant::now();
     let src_pg = PackedGrouping::build(
         &src.points,
         engine.src_groups(src.n()),
@@ -324,56 +393,91 @@ pub(super) fn run_metric(
     report.layout = plan.layout_stats.clone();
     report.filter_secs += filt0.elapsed().as_secs_f64();
 
-    // --- Device stage -----------------------------------------------------
-    let device = &engine.device;
-    let mut job_err: Option<Error> = None;
-    let mut results: Vec<(usize, crate::fpga::TileResult)> = Vec::new();
-    {
-        let plan_ref = &plan;
-        let src_pg_ref = &src_pg;
-        pipeline::run(
-            4,
-            |i| -> Option<(usize, TileJob)> {
-                let bi = i as usize;
-                let batch = plan_ref.batches.get(bi)?;
-                Some((bi, build_job(batch, src_pg_ref, plan_ref, &tile)))
-            },
-            |(bi, job): (usize, TileJob)| {
-                if job_err.is_some() {
-                    return;
-                }
-                if job.src_rows == 0 || job.trg_rows == 0 {
-                    return;
-                }
-                match device.distance_block(&job) {
-                    Ok(res) => results.push((bi, res)),
-                    Err(e) => job_err = Some(e),
-                }
-            },
+    Ok(KnnProgram {
+        plan,
+        src_pg: Arc::new(src_pg),
+        tile,
+        results: Vec::new(),
+        report,
+        device: DeviceStats::default(),
+        t0,
+        executed: false,
+    })
+}
+
+impl CohortProgram for KnnProgram {
+    type Output = KnnResult;
+
+    /// The device stage: every surviving dispatch batch through the
+    /// bounded pipeline.  One-shot — converges on the first call.
+    fn step(&mut self, ctx: &mut StepCtx<'_>) -> Result<StepOutcome> {
+        if self.executed {
+            return Ok(StepOutcome::Converged);
+        }
+        self.executed = true;
+        let engine = ctx.engine;
+        let dev0 = engine.device.stats();
+        let device = &engine.device;
+        let mut job_err: Option<Error> = None;
+        {
+            let plan_ref = &self.plan;
+            let src_pg_ref = &self.src_pg;
+            let tile = &self.tile;
+            let results = &mut self.results;
+            pipeline::run(
+                4,
+                |i| -> Option<(usize, TileJob)> {
+                    let bi = i as usize;
+                    let batch = plan_ref.batches.get(bi)?;
+                    Some((bi, build_job(batch, src_pg_ref, plan_ref, tile)))
+                },
+                |(bi, job): (usize, TileJob)| {
+                    if job_err.is_some() {
+                        return;
+                    }
+                    if job.src_rows == 0 || job.trg_rows == 0 {
+                        return;
+                    }
+                    match device.distance_block(&job) {
+                        Ok(res) => results.push((bi, res)),
+                        Err(e) => job_err = Some(e),
+                    }
+                },
+            );
+        }
+        if let Some(e) = job_err {
+            return Err(e);
+        }
+        program::absorb_device(
+            &mut self.device,
+            &program::device_delta(&dev0, &engine.device.stats()),
         );
-    }
-    if let Some(e) = job_err {
-        return Err(e);
+        Ok(StepOutcome::Converged)
     }
 
-    // --- Merge stage (CPU) -------------------------------------------------
-    let neighbors = merge_results(&plan, results.into_iter());
+    /// Merge stage (CPU): per-point Top-K heaps + report assembly.
+    fn finish(mut self, ctx: &mut StepCtx<'_>) -> Result<KnnResult> {
+        let engine = ctx.engine;
+        let results = std::mem::take(&mut self.results);
+        let neighbors = merge_results(&self.plan, results.into_iter());
 
-    report.wall_secs = t0.elapsed().as_secs_f64();
-    report.device = engine.device.stats();
-    report.device_wall_secs = report.device.wall_secs;
-    report.device_modeled_secs = report.device.modeled_secs;
-    report.iterations = 1;
-    report.quality = quality_of(&neighbors);
-    report.energy_j = engine.power.accd_joules(
-        report.wall_secs,
-        report.filter_secs,
-        1.0,
-        report.device.wall_secs,
-    );
-    report.avg_watts = report.energy_j / report.wall_secs.max(1e-9);
+        let mut report = self.report;
+        report.wall_secs = self.t0.elapsed().as_secs_f64();
+        report.device = self.device.clone();
+        report.device_wall_secs = report.device.wall_secs;
+        report.device_modeled_secs = report.device.modeled_secs;
+        report.iterations = 1;
+        report.quality = quality_of(&neighbors);
+        report.energy_j = engine.power.accd_joules(
+            report.wall_secs,
+            report.filter_secs,
+            1.0,
+            report.device.wall_secs,
+        );
+        report.avg_watts = report.energy_j / report.wall_secs.max(1e-9);
 
-    Ok(KnnResult { neighbors, k, report })
+        Ok(KnnResult { neighbors, k: self.plan.k, report })
+    }
 }
 
 /// CPU filter stage: GTI candidate selection + Fig. 4b schedule +

@@ -10,6 +10,10 @@
 //! * [`nbody`] — Two-landmark + Trace-based + Group-level (N-body).
 //! * [`pipeline`] — bounded-queue dataflow executor used to stream
 //!   jobs between the filter stage and the device stage.
+//! * `program` — the stepwise `CohortProgram` contract every
+//!   algorithm compiles to (`plan` / `step` / `finish`), so the
+//!   runtime — solo driver or the serving layer's lockstep scheduler —
+//!   owns execution order, not the algorithm.
 //!
 //! [`Engine`] owns the runtime + device and exposes the public API the
 //! examples and benches call.
@@ -19,8 +23,9 @@ pub mod kmeans;
 pub mod knn;
 pub mod nbody;
 pub mod pipeline;
+pub(crate) mod program;
 
 pub use engine::Engine;
 pub use kmeans::KmeansResult;
-pub use knn::{KnnResult, SlabCache, SlabScope};
+pub use knn::{KnnResult, SlabCache, SlabKind, SlabScope};
 pub use nbody::NbodyResult;

@@ -8,8 +8,12 @@
 //! pairs run on the device's radius-masked force tile; positions
 //! integrate with leapfrog on the CPU.
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use crate::data::{Dataset, Matrix};
-use crate::gti::NbodyFilter;
+use crate::fpga::device::DeviceStats;
+use crate::gti::{Grouping, NbodyFilter};
 use crate::layout::PackedGrouping;
 use crate::metrics::RunReport;
 use crate::util::round_up;
@@ -17,6 +21,7 @@ use crate::{Error, Result};
 
 use super::engine::Engine;
 use super::pipeline;
+use super::program::{self, CohortProgram, StepCtx, StepOutcome};
 
 /// Result of an N-body run.
 #[derive(Debug, Clone)]
@@ -56,7 +61,8 @@ pub(crate) fn validate(ds: &Dataset, masses: &[f32]) -> Result<()> {
     Ok(())
 }
 
-/// N-body with an optionally pre-built (cached) grouping.  The grouping
+/// N-body with an optionally pre-built (cached) grouping — the solo
+/// driver: plan, step through every time step, finish.  The grouping
 /// is *cloned* before use — the integrator recenters it every step —
 /// so a cached instance stays pristine for the next query.
 pub(crate) fn run_shared(
@@ -66,39 +72,92 @@ pub(crate) fn run_shared(
     steps: usize,
     dt: f32,
     radius: f32,
-    shared: Option<&PackedGrouping>,
+    shared: Option<Arc<PackedGrouping>>,
 ) -> Result<NbodyResult> {
     validate(ds, masses)?;
-    let t0 = std::time::Instant::now();
     engine.device.reset_stats();
+    let program = plan(&*engine, ds, Arc::new(masses.to_vec()), steps, dt, radius, shared)?;
+    let mut ctx = StepCtx { engine: &*engine };
+    program::run_to_completion(program, &mut ctx)
+}
+
+/// One N-body query as a stepwise program: [`plan`] groups + packs the
+/// particles and seeds the hybrid GTI filter; [`CohortProgram::step`]
+/// is one time step (filter → force tiles → leapfrog integration →
+/// trace update), converging after the requested step count;
+/// [`CohortProgram::finish`] unpacks to original order and assembles
+/// the report.
+pub(crate) struct NbodyProgram {
+    steps: usize,
+    dt: f32,
+    radius: f32,
+    rmax2: f32,
+    pg: Arc<PackedGrouping>,
+    /// Private clone of the packed grouping (recentered every step; a
+    /// cached instance stays pristine for the next query).
+    grouping: Grouping,
+    /// Positions/velocities in packed order for slab locality.
+    pos: Matrix,
+    vel: Matrix,
+    mass_packed: Vec<f32>,
+    /// Masses in original order (finish's kinetic-energy quality
+    /// number sums in original order, bit-for-bit like the solo path
+    /// always did).  `Arc`-shared with the serving layer's job, so
+    /// co-resident programs never hold private copies.
+    masses_orig: Arc<Vec<f32>>,
+    filter: NbodyFilter,
+    acc: Vec<f32>,
+    tile_n: usize,
+    n: usize,
+    steps_done: usize,
+    report: RunReport,
+    /// Wall seconds spent inside THIS program's plan/step/finish calls
+    /// (per-call accumulation — like the device counters, exact even
+    /// when the lockstep scheduler interleaves other programs).
+    wall_secs: f64,
+    /// This program's own device counters (snapshot diffs — exact even
+    /// when the lockstep scheduler interleaves other programs' steps
+    /// on the same engine).
+    device: DeviceStats,
+}
+
+/// CPU-side planning: grouping (built or cached), packing, filter
+/// seeding.
+pub(crate) fn plan(
+    engine: &Engine,
+    ds: &Dataset,
+    masses: Arc<Vec<f32>>,
+    steps: usize,
+    dt: f32,
+    radius: f32,
+    shared: Option<Arc<PackedGrouping>>,
+) -> Result<NbodyProgram> {
+    validate(ds, &masses)?;
+    let t0 = Instant::now();
     let mut report = RunReport::new("nbody", &ds.name, "accd");
     let cfg = engine.config.clone();
     let tile_n = engine.runtime.manifest().tile.nbody;
 
     // --- Grouping (once) ---------------------------------------------------
-    let filt0 = std::time::Instant::now();
+    let filt0 = Instant::now();
     let z = engine.src_groups(ds.n());
-    let pg_owned;
-    let pg: &PackedGrouping = match shared {
+    let pg: Arc<PackedGrouping> = match shared {
         Some(pg) => pg,
-        None => {
-            pg_owned = PackedGrouping::build(
-                &ds.points,
-                z,
-                cfg.gti.grouping_iters,
-                cfg.gti.grouping_sample,
-                cfg.seed,
-                crate::gti::Metric::L2,
-                8,
-            )?;
-            &pg_owned
-        }
+        None => Arc::new(PackedGrouping::build(
+            &ds.points,
+            z,
+            cfg.gti.grouping_iters,
+            cfg.gti.grouping_sample,
+            cfg.seed,
+            crate::gti::Metric::L2,
+            8,
+        )?),
     };
     let mut grouping = pg.grouping.clone();
     let packed = &pg.packed;
     // Positions/velocities live in packed order for slab locality.
-    let mut pos = packed.points.clone();
-    let mut vel = Matrix::zeros(ds.n(), 3);
+    let pos = packed.points.clone();
+    let vel = Matrix::zeros(ds.n(), 3);
     let mass_packed: Vec<f32> =
         packed.new2old.iter().map(|&old| masses[old as usize]).collect();
     // Re-index grouping members/assignment to packed rows: positions
@@ -115,20 +174,53 @@ pub(crate) fn run_shared(
     let assign_packed: Vec<u32> =
         packed.new2old.iter().map(|&old| grouping.assign[old as usize]).collect();
     grouping.assign = assign_packed;
-    let mut filter = NbodyFilter::new(&grouping, 0.25);
+    let filter = NbodyFilter::new(&grouping, 0.25);
     report.filter_secs += filt0.elapsed().as_secs_f64();
 
-    let rmax2 = radius * radius;
-    let mut acc = vec![0.0f32; ds.n() * 3];
+    let n = ds.n();
+    Ok(NbodyProgram {
+        steps,
+        dt,
+        radius,
+        rmax2: radius * radius,
+        pg,
+        grouping,
+        pos,
+        vel,
+        mass_packed,
+        masses_orig: masses,
+        filter,
+        acc: vec![0.0f32; n * 3],
+        tile_n,
+        n,
+        steps_done: 0,
+        report,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        device: DeviceStats::default(),
+    })
+}
 
-    for _step in 0..steps {
+impl CohortProgram for NbodyProgram {
+    type Output = NbodyResult;
+
+    /// One time step: surviving group pairs → radius-masked force
+    /// tiles → symplectic-Euler integration → trace update.
+    fn step(&mut self, ctx: &mut StepCtx<'_>) -> Result<StepOutcome> {
+        if self.steps_done >= self.steps {
+            return Ok(StepOutcome::Converged);
+        }
+        let step_t0 = Instant::now();
+        let engine = ctx.engine;
+        let dev0 = engine.device.stats();
+        self.steps_done += 1;
+
         // --- Filter: surviving group pairs (CPU) ---------------------------
-        let filt = std::time::Instant::now();
-        let candidates = filter.candidates(&grouping, radius);
-        report.filter_secs += filt.elapsed().as_secs_f64();
+        let filt = Instant::now();
+        let candidates = self.filter.candidates(&self.grouping, self.radius);
+        self.report.filter_secs += filt.elapsed().as_secs_f64();
 
         // --- Device: radius-masked force tiles -----------------------------
-        acc.iter_mut().for_each(|a| *a = 0.0);
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
         let device = &engine.device;
         let mut job_err: Option<Error> = None;
         struct ForceJob {
@@ -142,41 +234,48 @@ pub(crate) fn run_shared(
             mass_j: Vec<f32>,
         }
         let mut jobs: Vec<ForceJob> = Vec::new();
-        for g in 0..grouping.num_groups() {
-            let len = packed.group_len(g);
-            if len == 0 || candidates[g].is_empty() {
-                continue;
-            }
-            let start = packed.group_start(g);
-            // Target slab: concatenation of candidate groups.
-            let total: usize =
-                candidates[g].iter().map(|&b| packed.group_len(b as usize)).sum();
-            let cols_pad = round_up(total.max(1), tile_n);
-            let mut pos_j = vec![0.0f32; cols_pad * 3];
-            let mut mass_j = vec![0.0f32; cols_pad];
-            let mut row = 0usize;
-            for &b in &candidates[g] {
-                let b = b as usize;
-                let (bs, bl) = (packed.group_start(b), packed.group_len(b));
-                for r in 0..bl {
-                    pos_j[(row + r) * 3..(row + r) * 3 + 3]
-                        .copy_from_slice(pos.row(bs + r));
-                    mass_j[row + r] = mass_packed[bs + r];
+        {
+            let packed = &self.pg.packed;
+            let pos = &self.pos;
+            let mass_packed = &self.mass_packed;
+            let tile_n = self.tile_n;
+            for g in 0..self.grouping.num_groups() {
+                let len = packed.group_len(g);
+                if len == 0 || candidates[g].is_empty() {
+                    continue;
                 }
-                row += bl;
+                let start = packed.group_start(g);
+                // Target slab: concatenation of candidate groups.
+                let total: usize =
+                    candidates[g].iter().map(|&b| packed.group_len(b as usize)).sum();
+                let cols_pad = round_up(total.max(1), tile_n);
+                let mut pos_j = vec![0.0f32; cols_pad * 3];
+                let mut mass_j = vec![0.0f32; cols_pad];
+                let mut row = 0usize;
+                for &b in &candidates[g] {
+                    let b = b as usize;
+                    let (bs, bl) = (packed.group_start(b), packed.group_len(b));
+                    for r in 0..bl {
+                        pos_j[(row + r) * 3..(row + r) * 3 + 3]
+                            .copy_from_slice(pos.row(bs + r));
+                        mass_j[row + r] = mass_packed[bs + r];
+                    }
+                    row += bl;
+                }
+                // One job per group: the device segments the slab over its
+                // tile variants internally (perf pass).
+                let rows_pad = round_up(len, tile_n);
+                let mut pos_i = vec![0.0f32; rows_pad * 3];
+                for r in 0..len {
+                    pos_i[r * 3..r * 3 + 3].copy_from_slice(pos.row(start + r));
+                }
+                jobs.push(ForceJob { pos_i, valid_i: len, row0: start, pos_j, mass_j });
             }
-            // One job per group: the device segments the slab over its
-            // tile variants internally (perf pass).
-            let rows_pad = round_up(len, tile_n);
-            let mut pos_i = vec![0.0f32; rows_pad * 3];
-            for r in 0..len {
-                pos_i[r * 3..r * 3 + 3].copy_from_slice(pos.row(start + r));
-            }
-            jobs.push(ForceJob { pos_i, valid_i: len, row0: start, pos_j, mass_j });
         }
         {
             let jobs_ref = &mut jobs;
-            let acc_ref = &mut acc;
+            let acc_ref = &mut self.acc;
+            let rmax2 = self.rmax2;
             pipeline::run(
                 4,
                 |_| if jobs_ref.is_empty() { None } else { Some(jobs_ref.remove(0)) },
@@ -211,66 +310,79 @@ pub(crate) fn run_shared(
         }
 
         // --- Integrate (CPU, leapfrog KDK collapsed to symplectic Euler) ---
-        let filt = std::time::Instant::now();
-        for i in 0..ds.n() {
-            let v = vel.row_mut(i);
-            v[0] += acc[i * 3] * dt;
-            v[1] += acc[i * 3 + 1] * dt;
-            v[2] += acc[i * 3 + 2] * dt;
+        let filt = Instant::now();
+        let dt = self.dt;
+        for i in 0..self.n {
+            let v = self.vel.row_mut(i);
+            v[0] += self.acc[i * 3] * dt;
+            v[1] += self.acc[i * 3 + 1] * dt;
+            v[2] += self.acc[i * 3 + 2] * dt;
         }
-        for i in 0..ds.n() {
+        for i in 0..self.n {
             let (vx, vy, vz) = {
-                let v = vel.row(i);
+                let v = self.vel.row(i);
                 (v[0], v[1], v[2])
             };
-            let p = pos.row_mut(i);
+            let p = self.pos.row_mut(i);
             p[0] += vx * dt;
             p[1] += vy * dt;
             p[2] += vz * dt;
         }
         // --- Trace update: recenter groups, accumulate drift ---------------
-        let drifts = grouping.recenter(&pos);
-        filter.step(&grouping, &drifts, radius);
-        report.filter_secs += filt.elapsed().as_secs_f64();
-        report.filter.merge(&filter_stats_snapshot(&filter));
+        let drifts = self.grouping.recenter(&self.pos);
+        self.filter.step(&self.grouping, &drifts, self.radius);
+        self.report.filter_secs += filt.elapsed().as_secs_f64();
+
+        program::absorb_device(
+            &mut self.device,
+            &program::device_delta(&dev0, &engine.device.stats()),
+        );
+        self.wall_secs += step_t0.elapsed().as_secs_f64();
+        if self.steps_done >= self.steps {
+            Ok(StepOutcome::Converged)
+        } else {
+            Ok(StepOutcome::Continue)
+        }
     }
-    // Take final filter stats once (they accumulate inside the filter).
-    report.filter = filter.stats.clone();
 
-    // Unpack to original order.
-    let mut pos_orig = Matrix::zeros(ds.n(), 3);
-    let mut vel_orig = Matrix::zeros(ds.n(), 3);
-    for (new_row, &old) in packed.new2old.iter().enumerate() {
-        pos_orig.row_mut(old as usize).copy_from_slice(pos.row(new_row));
-        vel_orig.row_mut(old as usize).copy_from_slice(vel.row(new_row));
+    /// Unpack to original order + assemble the report.
+    fn finish(mut self, ctx: &mut StepCtx<'_>) -> Result<NbodyResult> {
+        let finish_t0 = Instant::now();
+        let engine = ctx.engine;
+        // Final filter stats once (they accumulate inside the filter;
+        // per-step merging would double-count).
+        self.report.filter = self.filter.stats.clone();
+
+        let n = self.n;
+        let mut pos_orig = Matrix::zeros(n, 3);
+        let mut vel_orig = Matrix::zeros(n, 3);
+        for (new_row, &old) in self.pg.packed.new2old.iter().enumerate() {
+            pos_orig.row_mut(old as usize).copy_from_slice(self.pos.row(new_row));
+            vel_orig.row_mut(old as usize).copy_from_slice(self.vel.row(new_row));
+        }
+
+        let mut report = self.report;
+        report.wall_secs = self.wall_secs + finish_t0.elapsed().as_secs_f64();
+        report.device = self.device.clone();
+        report.device_wall_secs = report.device.wall_secs;
+        report.device_modeled_secs = report.device.modeled_secs;
+        report.iterations = self.steps;
+        // Quality: total kinetic energy (cross-impl comparable).
+        let masses = &self.masses_orig;
+        report.quality = (0..n)
+            .map(|i| {
+                let v = vel_orig.row(i);
+                0.5 * masses[i] as f64 * (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]) as f64
+            })
+            .sum();
+        report.energy_j = engine.power.accd_joules(
+            report.wall_secs,
+            report.filter_secs,
+            1.0,
+            report.device.wall_secs,
+        );
+        report.avg_watts = report.energy_j / report.wall_secs.max(1e-9);
+
+        Ok(NbodyResult { positions: pos_orig, velocities: vel_orig, steps: self.steps, report })
     }
-
-    report.wall_secs = t0.elapsed().as_secs_f64();
-    report.device = engine.device.stats();
-    report.device_wall_secs = report.device.wall_secs;
-    report.device_modeled_secs = report.device.modeled_secs;
-    report.iterations = steps;
-    // Quality: total kinetic energy (cross-impl comparable).
-    report.quality = (0..ds.n())
-        .map(|i| {
-            let v = vel_orig.row(i);
-            0.5 * masses[i] as f64 * (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]) as f64
-        })
-        .sum();
-    report.energy_j = engine.power.accd_joules(
-        report.wall_secs,
-        report.filter_secs,
-        1.0,
-        report.device.wall_secs,
-    );
-    report.avg_watts = report.energy_j / report.wall_secs.max(1e-9);
-
-    Ok(NbodyResult { positions: pos_orig, velocities: vel_orig, steps, report })
-}
-
-/// The NbodyFilter accumulates stats internally; per-step merging would
-/// double-count, so return an empty snapshot here and read the final
-/// stats after the loop.
-fn filter_stats_snapshot(_f: &NbodyFilter) -> crate::gti::FilterStats {
-    crate::gti::FilterStats::default()
 }

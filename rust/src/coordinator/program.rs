@@ -1,0 +1,134 @@
+//! Stepwise cohort programs — the contract between the coordinator's
+//! algorithms and whoever drives them.
+//!
+//! Every algorithm compiles to a *program*: a `plan` constructor (one
+//! per algorithm module — grouping, packing, initialization, any
+//! iteration-0 work), a [`CohortProgram::step`] that advances exactly
+//! one iteration and reports whether the program converged, and a
+//! [`CohortProgram::finish`] that runs the final exact pass and
+//! assembles the result.  The split exists so the *runtime* owns
+//! execution order, not the algorithm: a solo engine call drives one
+//! program to completion ([`run_to_completion`]); the serving layer's
+//! lockstep scheduler (`serve::exec`) advances many resident programs
+//! one step per round, sharing cached groupings and packed slabs
+//! across same-dataset programs (the KPynq-style per-iteration tile is
+//! the batching unit).
+//!
+//! Correctness: a program's state is fully owned (or `Arc`-shared and
+//! immutable), so interleaving steps of independent programs on one
+//! engine cannot perturb any result — the bit-for-bit serving parity
+//! contract extends to any step schedule.
+//!
+//! Device accounting: programs interleave on one engine, so a program
+//! cannot read `engine.device.stats()` as its own.  Instead every
+//! `plan`/`step`/`finish` snapshots the device counters around its own
+//! device calls ([`device_delta`]) and accumulates the difference into
+//! the program's private [`DeviceStats`] ([`absorb_device`]) — exact,
+//! because steps on one engine are serial.
+
+use crate::coordinator::Engine;
+use crate::fpga::device::DeviceStats;
+use crate::Result;
+
+/// What one [`CohortProgram::step`] reports back to its driver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// More iterations remain; call `step` again.
+    Continue,
+    /// The program converged (or exhausted its iteration budget);
+    /// `finish` may be called.
+    Converged,
+}
+
+/// Everything a program may touch while stepping: the engine it
+/// executes on.  Passed per call — programs own all their state, so a
+/// program can migrate between calls (work stealing moves whole
+/// not-yet-started programs across shards).
+pub(crate) struct StepCtx<'a> {
+    pub engine: &'a Engine,
+}
+
+/// The stepwise execution contract every coordinator algorithm
+/// implements: `step` advances one iteration, `finish` consumes the
+/// program into its result.  One-shot algorithms (KNN) execute in a
+/// single step and converge immediately.
+pub(crate) trait CohortProgram {
+    type Output;
+
+    /// Advance one iteration.  Must be callable again after
+    /// `Converged` (idempotently returning `Converged`), so drivers
+    /// need no extra bookkeeping.
+    fn step(&mut self, ctx: &mut StepCtx<'_>) -> Result<StepOutcome>;
+
+    /// Final exact pass + result assembly.
+    fn finish(self, ctx: &mut StepCtx<'_>) -> Result<Self::Output>;
+}
+
+/// Drive a program to completion — the solo-engine schedule (and the
+/// reference semantics every other schedule must reproduce exactly).
+pub(crate) fn run_to_completion<P: CohortProgram>(
+    mut program: P,
+    ctx: &mut StepCtx<'_>,
+) -> Result<P::Output> {
+    loop {
+        match program.step(ctx)? {
+            StepOutcome::Converged => break,
+            StepOutcome::Continue => {}
+        }
+    }
+    program.finish(ctx)
+}
+
+/// Counter-wise difference `after - before` of two device snapshots
+/// (saturating: a mid-flight `reset_stats` can only under-count, never
+/// underflow).
+pub(crate) fn device_delta(before: &DeviceStats, after: &DeviceStats) -> DeviceStats {
+    DeviceStats {
+        jobs: after.jobs.saturating_sub(before.jobs),
+        tiles: after.tiles.saturating_sub(before.tiles),
+        padded_pairs: after.padded_pairs.saturating_sub(before.padded_pairs),
+        valid_pairs: after.valid_pairs.saturating_sub(before.valid_pairs),
+        wall_secs: (after.wall_secs - before.wall_secs).max(0.0),
+        modeled_secs: (after.modeled_secs - before.modeled_secs).max(0.0),
+        bytes_moved: after.bytes_moved.saturating_sub(before.bytes_moved),
+    }
+}
+
+/// Fold one delta into a program's private device accumulator.
+pub(crate) fn absorb_device(acc: &mut DeviceStats, delta: &DeviceStats) {
+    acc.jobs += delta.jobs;
+    acc.tiles += delta.tiles;
+    acc.padded_pairs += delta.padded_pairs;
+    acc.valid_pairs += delta.valid_pairs;
+    acc.wall_secs += delta.wall_secs;
+    acc.modeled_secs += delta.modeled_secs;
+    acc.bytes_moved += delta.bytes_moved;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_delta_and_absorb_are_counterwise() {
+        let before = DeviceStats { jobs: 2, tiles: 10, wall_secs: 1.0, ..Default::default() };
+        let after = DeviceStats { jobs: 5, tiles: 14, wall_secs: 1.5, ..Default::default() };
+        let d = device_delta(&before, &after);
+        assert_eq!(d.jobs, 3);
+        assert_eq!(d.tiles, 4);
+        assert!((d.wall_secs - 0.5).abs() < 1e-12);
+        let mut acc = DeviceStats::default();
+        absorb_device(&mut acc, &d);
+        absorb_device(&mut acc, &d);
+        assert_eq!(acc.tiles, 8);
+    }
+
+    #[test]
+    fn device_delta_saturates_across_a_reset() {
+        let before = DeviceStats { tiles: 100, wall_secs: 3.0, ..Default::default() };
+        let after = DeviceStats::default(); // reset happened in between
+        let d = device_delta(&before, &after);
+        assert_eq!(d.tiles, 0);
+        assert_eq!(d.wall_secs, 0.0);
+    }
+}

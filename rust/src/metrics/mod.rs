@@ -190,6 +190,22 @@ pub struct ServeStats {
     /// fast path did not apply (today: only N-body mass vectors —
     /// dataset identity always resolves via pointer or fingerprint).
     pub content_full_scans: u64,
+    /// Lockstep rounds executed (summed over shards): one round
+    /// advances every resident iterative program on a shard by one
+    /// step.
+    pub lockstep_rounds: u64,
+    /// Packed slabs (K-means assignment-tile inputs, KNN target
+    /// slabs) served from a shard's slab cache while planning a
+    /// program *alongside co-resident programs* under the lockstep
+    /// scheduler.  Mostly the scheduler's own cross-program sharing;
+    /// a warm persistent cache can also contribute when its entries
+    /// are re-hit during co-resident planning (hits on an idle shard
+    /// are never counted — those are purely cross-flush reuse and
+    /// show in the `slab_cache_*` gauges).
+    pub lockstep_shared_tiles: u64,
+    /// Not-yet-started work units an idle shard stole from a busy one
+    /// after the LPT placement's cost estimates misfired.
+    pub steals: u64,
     /// Device tiles dispatched across all flushes...
     pub tiles_total: u64,
     /// ...of which this many served more than one query: tiles of
@@ -260,6 +276,9 @@ impl ServeStats {
         self.slabs_shared += d.slabs_shared;
         self.tiles_total += d.tiles_total;
         self.tiles_shared += d.tiles_shared;
+        self.lockstep_rounds += d.lockstep_rounds;
+        self.lockstep_shared_tiles += d.lockstep_shared_tiles;
+        self.steals += d.steals;
     }
 
     pub fn to_json(&self) -> Value {
@@ -282,6 +301,9 @@ impl ServeStats {
             ("slab_cache_bytes", json::num(self.slab_cache_bytes as f64)),
             ("slab_hit_rate", json::num(self.slab_hit_rate())),
             ("content_full_scans", json::num(self.content_full_scans as f64)),
+            ("lockstep_rounds", json::num(self.lockstep_rounds as f64)),
+            ("lockstep_shared_tiles", json::num(self.lockstep_shared_tiles as f64)),
+            ("steals", json::num(self.steals as f64)),
             ("tiles_total", json::num(self.tiles_total as f64)),
             ("tiles_shared", json::num(self.tiles_shared as f64)),
             ("tiles_shared_ratio", json::num(self.tiles_shared_ratio())),
@@ -297,6 +319,7 @@ impl ServeStats {
              mix: {} knn / {} kmeans / {} nbody | dedup {} ({} full scans)\n  \
              grouping cache: {} hits / {} misses ({:.1}% hit rate, {} probe collisions)\n  \
              slab cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, {:.1} MB resident\n  \
+             lockstep: {} rounds, {} shared tiles | {} units stolen\n  \
              tiles: {} shared of {} total ({:.1}%) | shared slabs {}",
             self.queries,
             self.flushes,
@@ -316,6 +339,9 @@ impl ServeStats {
             100.0 * self.slab_hit_rate(),
             self.slab_cache_evictions,
             self.slab_cache_bytes as f64 / 1e6,
+            self.lockstep_rounds,
+            self.lockstep_shared_tiles,
+            self.steals,
             self.tiles_shared,
             self.tiles_total,
             100.0 * self.tiles_shared_ratio(),
@@ -373,6 +399,9 @@ mod tests {
             slab_cache_bytes: 999,
             tiles_total: 40,
             tiles_shared: 10,
+            lockstep_rounds: 6,
+            lockstep_shared_tiles: 4,
+            steals: 2,
             flushes: 7,
             wall_secs: 9.0,
             ..Default::default()
@@ -383,6 +412,9 @@ mod tests {
         assert_eq!(total.dedup_hits, 1);
         assert_eq!(total.slabs_shared, 5);
         assert_eq!(total.tiles_total, 40);
+        assert_eq!(total.lockstep_rounds, 6);
+        assert_eq!(total.lockstep_shared_tiles, 4);
+        assert_eq!(total.steals, 2);
         // Batcher-level fields and cache gauges untouched (gauges are
         // re-published absolutely from the caches, not delta-summed).
         assert_eq!(total.flushes, 2);

@@ -1,36 +1,59 @@
-//! Execution layer of the serving runtime: cohorts on engine shards.
+//! Execution layer of the serving runtime: stepwise cohort programs on
+//! engine shards.
 //!
 //! Each shard owns a [`ShardState`] — its grouping cache, its
 //! persistent cross-flush [`SlabCache`] and its lifetime
-//! [`ServeStats`] — and executes the work units the placement layer
-//! assigned to it: KNN cohorts stream every member query's surviving
+//! [`ServeStats`] — and executes work units pulled from the flush's
+//! shared [`WorkPool`].  Every unit is *planned* into a stepwise
+//! program (`coordinator::program`): KNN cohorts become one-shot
+//! [`KnnCohortProgram`]s streaming every member query's surviving
 //! tiles through ONE tagged [`pipeline`] run with per-query demux;
-//! K-means / N-body jobs run through the engine's shared-grouping
-//! entry points.  [`execute_plan`] fans the shards out on scoped OS
-//! threads (independent cohorts execute concurrently; everything a
-//! thread touches is its own shard's state) and joins them in shard
-//! order, so result assembly and stats accounting stay deterministic.
+//! K-means / N-body jobs become the coordinator's iterative
+//! [`kmeans::KmeansProgram`] / [`nbody::NbodyProgram`].
+//!
+//! With `serve.lockstep` on, a shard runs a **lockstep step
+//! scheduler**: each round it claims at most one new own unit from the
+//! pool (planning it against the shard caches — same-dataset programs
+//! share groupings, packed K-means assignment tiles and KNN target
+//! slabs through the persistent [`SlabCache`]) and then advances every
+//! resident program by exactly one iteration; converged programs
+//! retire into responses.  Off, units run to completion serially (the
+//! pre-lockstep schedule).  Either way results are bit-identical to
+//! solo runs: programs own all their state, so the step schedule
+//! cannot perturb any result.
+//!
+//! When the LPT placement's cost estimates misfire, an **idle** shard
+//! (nothing resident, own queue empty) steals whole not-yet-started
+//! units from a busy victim ([`WorkPool::steal`];
+//! `serve.steal_threshold` gates it).  [`execute_plan`] fans the
+//! shards out on scoped OS threads and joins them in shard order, so
+//! result assembly stays deterministic (responses carry their
+//! submission slots; stats attribution follows the executing shard).
 //!
 //! Failure is all-or-nothing per flush: a shard error aborts the whole
 //! flush; per-shard deltas are only applied by the facade on full
 //! success, so no partial accounting can leak.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::config::ServeConfig;
+use crate::coordinator::knn::SlabKind;
+use crate::coordinator::program::{self, CohortProgram, StepCtx, StepOutcome};
 use crate::coordinator::{kmeans, knn, nbody, pipeline};
 use crate::coordinator::{Engine, SlabCache, SlabScope};
 use crate::data::Dataset;
+use crate::fpga::device::DeviceStats;
 use crate::fpga::TileResult;
 use crate::gti::Metric;
 use crate::layout::PackedGrouping;
 use crate::metrics::{RunReport, ServeStats};
+use crate::runtime::TileInfo;
 use crate::{Error, Result};
 
-use super::admission::{KmeansJob, KnnCohort, KnnQ, NbodyJob, ServeResponse, WorkUnit};
+use super::admission::{KnnCohort, KnnQ, ServeResponse, WorkUnit};
 use super::cache::{GroupingCache, GroupingKey};
-use super::placement::EnginePool;
+use super::placement::{EnginePool, WorkPool};
 
 /// Per-shard serving state: caches survive across flushes (that is
 /// the point), stats accumulate over the shard's lifetime.
@@ -44,7 +67,14 @@ impl ShardState {
     pub fn new(cfg: &ServeConfig) -> Self {
         Self {
             grouping_cache: GroupingCache::new(cfg.grouping_cache_cap),
-            slab_cache: SlabCache::with_budget(cfg.slab_cache_bytes),
+            // slab_cache_bytes == 0 means DISABLED (build fresh every
+            // time), not unbounded — `ServeConfig::validate` documents
+            // the zero semantics.
+            slab_cache: if cfg.slab_cache_bytes == 0 {
+                SlabCache::disabled()
+            } else {
+                SlabCache::with_budget(cfg.slab_cache_bytes)
+            },
             stats: ServeStats::default(),
         }
     }
@@ -60,50 +90,52 @@ pub(crate) struct ShardDelta {
 }
 
 /// Execute one flush's placed units across the pool, concurrently when
-/// more than one shard has work.  Returns the filled response slots
-/// and one delta per shard (empty for idle shards); `Err` aborts the
-/// whole flush (first erroring shard in shard order).
+/// more than one shard has (or can steal) work.  `costs` are the same
+/// estimates the planner balanced on (computed once per flush; the
+/// steal threshold compares against them).  Returns the filled
+/// response slots and one delta per shard (empty for idle shards);
+/// `Err` aborts the whole flush (first erroring shard in shard order).
 pub(crate) fn execute_plan(
     pool: &mut EnginePool,
     states: &mut [ShardState],
     units: Vec<WorkUnit>,
+    costs: Vec<u64>,
     assignments: &[Vec<usize>],
     n_slots: usize,
     cfg: &ServeConfig,
 ) -> Result<(Vec<Option<ServeResponse>>, Vec<ShardDelta>)> {
     debug_assert_eq!(pool.shard_count(), assignments.len());
-    let mut slots: Vec<Option<WorkUnit>> = units.into_iter().map(Some).collect();
-    let shard_units: Vec<Vec<WorkUnit>> = assignments
-        .iter()
-        .map(|idxs| {
-            idxs.iter().map(|&i| slots[i].take().expect("unit assigned exactly once")).collect()
-        })
-        .collect();
+    let n_shards = pool.shard_count();
+    let work_pool = WorkPool::new(units, costs, assignments);
+    // Idle shards spawn as thieves only when stealing could ever fire
+    // this flush (the eligibility policy lives in WorkPool).
+    let thieves = cfg.steal_threshold > 0
+        && n_shards > 1
+        && work_pool.any_tail_prospect(cfg.steal_threshold);
+    let work = Mutex::new(work_pool);
+    let workers: Vec<bool> =
+        (0..n_shards).map(|s| thieves || !assignments[s].is_empty()).collect();
 
-    let active = shard_units.iter().filter(|u| !u.is_empty()).count();
     let engines = pool.engines_mut();
     let mut outcomes: Vec<Result<ShardDelta>> = Vec::with_capacity(engines.len());
-    if active <= 1 {
+    if workers.iter().filter(|&&w| w).count() <= 1 {
         // Inline fast path: nothing to overlap, so skip thread spawn.
-        for ((engine, state), units) in
-            engines.iter_mut().zip(states.iter_mut()).zip(shard_units.into_iter())
-        {
-            outcomes.push(if units.is_empty() {
-                Ok(ShardDelta::default())
+        for (s, (engine, state)) in engines.iter_mut().zip(states.iter_mut()).enumerate() {
+            outcomes.push(if workers[s] {
+                run_shard(engine, state, &work, s, cfg)
             } else {
-                run_shard(engine, state, units, cfg)
+                Ok(ShardDelta::default())
             });
         }
     } else {
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(engines.len());
-            for ((engine, state), units) in
-                engines.iter_mut().zip(states.iter_mut()).zip(shard_units.into_iter())
-            {
-                handles.push(if units.is_empty() {
-                    None
+            let work_ref = &work;
+            for (s, (engine, state)) in engines.iter_mut().zip(states.iter_mut()).enumerate() {
+                handles.push(if workers[s] {
+                    Some(scope.spawn(move || run_shard(engine, state, work_ref, s, cfg)))
                 } else {
-                    Some(scope.spawn(move || run_shard(engine, state, units, cfg)))
+                    None
                 });
             }
             for handle in handles {
@@ -175,24 +207,299 @@ pub(crate) fn commit_deltas(
     merged.slab_cache_bytes = gauges.slab_cache_bytes;
 }
 
-/// Run one shard's units serially on its engine, collecting the delta.
+// --- the per-shard schedulers ----------------------------------------------
+
+/// Run one shard's share of a flush — lockstep rounds or serial
+/// run-to-completion — collecting the delta.
 fn run_shard(
     engine: &mut Engine,
     state: &mut ShardState,
-    units: Vec<WorkUnit>,
+    work: &Mutex<WorkPool<WorkUnit>>,
+    shard: usize,
     cfg: &ServeConfig,
 ) -> Result<ShardDelta> {
     let t0 = Instant::now();
     let mut delta = ShardDelta::default();
-    for unit in units {
-        match unit {
-            WorkUnit::Knn(cohort) => run_knn_cohort(engine, state, cohort, cfg, &mut delta)?,
-            WorkUnit::Kmeans(job) => run_kmeans_job(engine, state, job, &mut delta)?,
-            WorkUnit::Nbody(job) => run_nbody_job(engine, state, job, &mut delta)?,
-        }
+    if cfg.lockstep {
+        run_lockstep(engine, state, work, shard, cfg, &mut delta)?;
+    } else {
+        run_serial(engine, state, work, shard, cfg, &mut delta)?;
     }
     delta.stats.wall_secs = t0.elapsed().as_secs_f64();
     Ok(delta)
+}
+
+/// Pull one unit from the pool: own queue first, then — only when the
+/// shard is otherwise idle — a steal.
+fn claim(
+    work: &Mutex<WorkPool<WorkUnit>>,
+    shard: usize,
+    cfg: &ServeConfig,
+    idle: bool,
+    delta: &mut ShardDelta,
+) -> Option<WorkUnit> {
+    let mut pool = work.lock().expect("work pool poisoned");
+    if let Some(unit) = pool.claim_own(shard) {
+        return Some(unit);
+    }
+    if idle && cfg.steal_threshold > 0 {
+        if let Some(unit) = pool.steal(shard, cfg.steal_threshold) {
+            delta.stats.steals += 1;
+            return Some(unit);
+        }
+    }
+    None
+}
+
+/// Whether some victim still holds a qualifying pending unit this
+/// shard could steal once the victim starts (see
+/// [`WorkPool::stealable_prospect`]).  While true, an idle shard
+/// yields and retries instead of exiting the flush: the only way a
+/// prospect disappears is a shard claiming it — owner or thief — so
+/// the wait is always bounded by live progress.
+fn steal_prospect(work: &Mutex<WorkPool<WorkUnit>>, shard: usize, cfg: &ServeConfig) -> bool {
+    cfg.steal_threshold > 0
+        && work
+            .lock()
+            .expect("work pool poisoned")
+            .stealable_prospect(shard, cfg.steal_threshold)
+}
+
+/// The lockstep step scheduler: one round = claim at most one new own
+/// unit (plan it against the shard caches), then advance every
+/// resident program by one step; converged programs retire in the
+/// order they entered the resident set (= the shard's claim order;
+/// per-shard queues are ascending unit indices, so this is the
+/// partition order of the shard's units).  Claiming one unit per
+/// round keeps the tail of the queue stealable while co-residency
+/// (and the persistent caches) still shares packed tiles across
+/// same-dataset programs.
+fn run_lockstep(
+    engine: &mut Engine,
+    state: &mut ShardState,
+    work: &Mutex<WorkPool<WorkUnit>>,
+    shard: usize,
+    cfg: &ServeConfig,
+    delta: &mut ShardDelta,
+) -> Result<()> {
+    let mut resident: Vec<Option<Resident>> = Vec::new();
+    loop {
+        let idle = resident.is_empty();
+        if let Some(unit) = claim(work, shard, cfg, idle, delta) {
+            let hits0 = state.slab_cache.hits;
+            let planned = plan_unit(engine, state, unit, cfg)?;
+            // Slab-cache hits while planning ALONGSIDE resident
+            // programs are the lockstep scheduler's own cross-program
+            // sharing; hits on an idle shard are the persistent
+            // cache's cross-flush reuse and stay out of this counter
+            // (they show in the slab_cache_* gauges).
+            if !idle {
+                delta.stats.lockstep_shared_tiles +=
+                    state.slab_cache.hits.saturating_sub(hits0);
+            }
+            resident.push(Some(planned));
+        } else if resident.is_empty() {
+            // Nothing to run and nothing stealable *yet*: if a victim
+            // still holds a qualifying pending unit (it merely has not
+            // started), wait for it to claim its first unit rather
+            // than exiting and leaving the imbalance uncorrected.
+            if steal_prospect(work, shard, cfg) {
+                std::thread::yield_now();
+                continue;
+            }
+            break;
+        }
+        delta.stats.lockstep_rounds += 1;
+        for slot in resident.iter_mut() {
+            let converged = match slot.as_mut() {
+                Some(prog) => {
+                    matches!(step_resident(engine, prog)?, StepOutcome::Converged)
+                }
+                None => false,
+            };
+            if converged {
+                let prog = slot.take().expect("stepped program present");
+                finish_resident(engine, prog, delta)?;
+            }
+        }
+        resident.retain(|slot| slot.is_some());
+    }
+    Ok(())
+}
+
+/// The serial schedule (lockstep off): claim, run to completion,
+/// repeat — stealing still applies between units (with the same
+/// wait-for-a-late-victim retry as the lockstep path).
+fn run_serial(
+    engine: &mut Engine,
+    state: &mut ShardState,
+    work: &Mutex<WorkPool<WorkUnit>>,
+    shard: usize,
+    cfg: &ServeConfig,
+    delta: &mut ShardDelta,
+) -> Result<()> {
+    loop {
+        let Some(unit) = claim(work, shard, cfg, true, delta) else {
+            if steal_prospect(work, shard, cfg) {
+                std::thread::yield_now();
+                continue;
+            }
+            return Ok(());
+        };
+        let mut prog = plan_unit(engine, state, unit, cfg)?;
+        loop {
+            if let StepOutcome::Converged = step_resident(engine, &mut prog)? {
+                break;
+            }
+        }
+        finish_resident(engine, prog, delta)?;
+    }
+}
+
+// --- resident programs ------------------------------------------------------
+
+/// One planned program resident on a shard, with the response-slot
+/// metadata the coordinator programs do not know about.  Boxed:
+/// residents move between rounds (and, stolen, between shards), so
+/// keep the moves pointer-sized.
+enum Resident {
+    Knn(Box<KnnCohortProgram>),
+    Kmeans { prog: Box<kmeans::KmeansProgram>, pos: usize, dups: Vec<usize> },
+    Nbody { prog: Box<nbody::NbodyProgram>, pos: usize, dups: Vec<usize> },
+}
+
+/// Plan one work unit into a resident program against this shard's
+/// caches.
+fn plan_unit(
+    engine: &Engine,
+    state: &mut ShardState,
+    unit: WorkUnit,
+    cfg: &ServeConfig,
+) -> Result<Resident> {
+    match unit {
+        WorkUnit::Knn(cohort) => {
+            Ok(Resident::Knn(Box::new(plan_knn_cohort(engine, state, cohort, cfg)?)))
+        }
+        WorkUnit::Kmeans(job) => {
+            let seed = engine.config.seed;
+            let groups = engine.src_groups(job.ds.n());
+            let pg = cached_grouping(
+                engine,
+                &mut state.grouping_cache,
+                &job.ds,
+                job.ds_fp,
+                groups,
+                seed,
+                Metric::L2,
+            )?;
+            let prog = kmeans::plan(
+                engine,
+                &job.ds,
+                job.k,
+                job.max_iters,
+                Some((pg, job.ds_fp)),
+                &mut state.slab_cache,
+            )?;
+            Ok(Resident::Kmeans { prog: Box::new(prog), pos: job.pos, dups: job.dups })
+        }
+        WorkUnit::Nbody(job) => {
+            let seed = engine.config.seed;
+            let groups = engine.src_groups(job.ds.n());
+            let pg = cached_grouping(
+                engine,
+                &mut state.grouping_cache,
+                &job.ds,
+                job.ds_fp,
+                groups,
+                seed,
+                Metric::L2,
+            )?;
+            let prog = nbody::plan(
+                engine,
+                &job.ds,
+                job.masses.clone(),
+                job.steps,
+                job.dt,
+                job.radius,
+                Some(pg),
+            )?;
+            Ok(Resident::Nbody { prog: Box::new(prog), pos: job.pos, dups: job.dups })
+        }
+    }
+}
+
+/// Advance one resident program by one step.
+fn step_resident(engine: &Engine, resident: &mut Resident) -> Result<StepOutcome> {
+    let mut ctx = StepCtx { engine };
+    match resident {
+        Resident::Knn(prog) => prog.step(&mut ctx),
+        Resident::Kmeans { prog, .. } => prog.step(&mut ctx),
+        Resident::Nbody { prog, .. } => prog.step(&mut ctx),
+    }
+}
+
+/// Retire one converged program: final pass, response fan-out, stats.
+fn finish_resident(engine: &Engine, resident: Resident, delta: &mut ShardDelta) -> Result<()> {
+    let mut ctx = StepCtx { engine };
+    match resident {
+        Resident::Knn(prog) => (*prog).finish_into(&mut ctx, delta),
+        Resident::Kmeans { prog, pos, dups } => {
+            let result = (*prog).finish(&mut ctx)?;
+            delta.stats.kmeans_queries += 1 + dups.len() as u64;
+            retire_job(delta, result, pos, &dups, ServeResponse::Kmeans);
+            Ok(())
+        }
+        Resident::Nbody { prog, pos, dups } => {
+            let result = (*prog).finish(&mut ctx)?;
+            delta.stats.nbody_queries += 1 + dups.len() as u64;
+            retire_job(delta, result, pos, &dups, ServeResponse::Nbody);
+            Ok(())
+        }
+    }
+}
+
+/// The shared retirement bookkeeping of a K-means / N-body job: tile
+/// accounting from the program's OWN device counters (snapshot diffs,
+/// so interleaved neighbors never pollute the count) and response
+/// fan-out to the job's slot plus its deduplicated duplicates.
+fn retire_job<R>(
+    delta: &mut ShardDelta,
+    result: R,
+    pos: usize,
+    dups: &[usize],
+    wrap: impl Fn(R) -> ServeResponse,
+) where
+    R: Clone + HasReport,
+{
+    let tiles = result.report().device.tiles;
+    delta.stats.tiles_total += tiles;
+    if !dups.is_empty() {
+        // Every tile of a deduplicated job served >1 query.
+        delta.stats.tiles_shared += tiles;
+    }
+    delta.stats.queries += 1 + dups.len() as u64;
+    delta.stats.dedup_hits += dups.len() as u64;
+    for &p in dups {
+        delta.responses.push((p, wrap(result.clone())));
+    }
+    delta.responses.push((pos, wrap(result)));
+}
+
+/// The one thing `retire_job` needs from a result type.
+trait HasReport {
+    fn report(&self) -> &RunReport;
+}
+
+impl HasReport for kmeans::KmeansResult {
+    fn report(&self) -> &RunReport {
+        &self.report
+    }
+}
+
+impl HasReport for nbody::NbodyResult {
+    fn report(&self) -> &RunReport {
+        &self.report
+    }
 }
 
 /// Grouping-cache lookup with the engine's config baked into the key.
@@ -216,17 +523,54 @@ fn cached_grouping(
     })
 }
 
-/// Execute one KNN cohort: shared target grouping + slabs (served
-/// through the shard's persistent cache), one tagged pipeline over
-/// every unique query's dispatch batches, per-query demux and merge.
-fn run_knn_cohort(
-    engine: &mut Engine,
+// --- the KNN cohort program -------------------------------------------------
+
+/// One planned unique query inside a cohort.
+struct UniqueQuery {
+    q: KnnQ,
+    src_pg: Arc<PackedGrouping>,
+    plan: knn::KnnPlan,
+    dups: Vec<usize>,
+}
+
+/// A whole KNN cohort as a one-shot stepwise program: planning shares
+/// the target grouping + packed slabs (served through the shard's
+/// persistent caches) across every member query, the single step
+/// streams every unique query's dispatch batches through one tagged
+/// bounded pipeline, and `finish_into` demuxes per-query merges into
+/// response slots.
+struct KnnCohortProgram {
+    uniques: Vec<UniqueQuery>,
+    tile: TileInfo,
+    depth: usize,
+    /// (unique index, batch index) in query-major dispatch order.
+    flat: Vec<(usize, usize)>,
+    results: Vec<Vec<(usize, TileResult)>>,
+    tiles_by_query: Vec<u64>,
+    shared_tiles_by_query: Vec<u64>,
+    /// Dispatch batches whose packed target slab came from the cache.
+    slabs_shared: u64,
+    /// Cohort-scoped device counters (tile execution is deliberately
+    /// shared; per-query attribution would lie).
+    device: DeviceStats,
+    /// Wall seconds spent inside THIS cohort's plan/step calls
+    /// (per-call accumulation, so interleaved neighbor programs never
+    /// inflate it; within the cohort the accounting stays deliberately
+    /// cohort-scoped).
+    wall_secs: f64,
+    executed: bool,
+}
+
+/// Plan one KNN cohort: shared target grouping + slabs (served through
+/// the shard's persistent caches), one plan per unique query, dedup
+/// under the admission identity.
+fn plan_knn_cohort(
+    engine: &Engine,
     state: &mut ShardState,
     cohort: KnnCohort,
     cfg: &ServeConfig,
-    delta: &mut ShardDelta,
-) -> Result<()> {
-    let cohort_t0 = Instant::now();
+) -> Result<KnnCohortProgram> {
+    let t0 = Instant::now();
     let KnnCohort { trg, trg_fp, metric, queries } = cohort;
     let seed = engine.config.seed;
     let (iters, sample) = (engine.config.gti.grouping_iters, engine.config.gti.grouping_sample);
@@ -248,6 +592,7 @@ fn run_knn_cohort(
     // targets, parameters or paddings.
     let d_pad = tile.pad_d(trg.d())?;
     let slab_scope = SlabScope {
+        kind: SlabKind::KnnTarget,
         fingerprint: trg_fp.0,
         probe: trg_fp.1,
         groups: trg_groups,
@@ -260,13 +605,8 @@ fn run_knn_cohort(
     };
 
     // Plan every unique query, sharing packed target slabs.
-    struct Unique {
-        q: KnnQ,
-        src_pg: Arc<PackedGrouping>,
-        plan: knn::KnnPlan,
-        dups: Vec<usize>,
-    }
-    let mut uniques: Vec<Unique> = Vec::new();
+    let mut uniques: Vec<UniqueQuery> = Vec::new();
+    let mut slabs_shared = 0u64;
     for q in queries {
         if cfg.dedup {
             // The ONE within-cohort identity (KnnQ::same_query):
@@ -298,176 +638,160 @@ fn run_knn_cohort(
             &slab_scope,
             &mut state.slab_cache,
         )?;
-        delta.stats.slabs_shared += plan.batches.iter().filter(|b| b.shared).count() as u64;
-        uniques.push(Unique { q, src_pg, plan, dups: Vec::new() });
+        slabs_shared += plan.batches.iter().filter(|b| b.shared).count() as u64;
+        uniques.push(UniqueQuery { q, src_pg, plan, dups: Vec::new() });
     }
 
-    // Stream every unique query's batches through one tagged bounded
-    // pipeline (query-major order: per-tag FIFO makes each query's
-    // merge identical to its solo run).
-    engine.device.reset_stats();
-    let device = &engine.device;
-    let depth = cfg.pipeline_depth;
+    // Query-major dispatch order: per-tag FIFO makes each query's
+    // merge identical to its solo run.
     let flat: Vec<(usize, usize)> = uniques
         .iter()
         .enumerate()
         .flat_map(|(qi, u)| (0..u.plan.batches.len()).map(move |bi| (qi, bi)))
         .collect();
-    let mut results: Vec<Vec<(usize, TileResult)>> =
-        uniques.iter().map(|_| Vec::new()).collect();
-    let mut tiles_by_query = vec![0u64; uniques.len()];
-    let mut shared_tiles_by_query = vec![0u64; uniques.len()];
-    let mut job_err: Option<Error> = None;
-    {
-        let uniques_ref = &uniques;
-        pipeline::run_tagged(
-            depth,
-            |i| {
-                let &(qi, bi) = flat.get(i as usize)?;
-                let u = &uniques_ref[qi];
-                Some((
-                    qi as u64,
-                    (bi, knn::build_job(&u.plan.batches[bi], &u.src_pg, &u.plan, &tile)),
-                ))
-            },
-            |tag, (bi, job)| {
-                if job_err.is_some() {
-                    return;
-                }
-                if job.src_rows == 0 || job.trg_rows == 0 {
-                    return;
-                }
-                let qi = tag as usize;
-                let before = device.stats().tiles;
-                match device.distance_block(&job) {
-                    Ok(res) => {
-                        let tiles = device.stats().tiles - before;
-                        tiles_by_query[qi] += tiles;
-                        if uniques_ref[qi].plan.batches[bi].shared {
-                            shared_tiles_by_query[qi] += tiles;
-                        }
-                        results[qi].push((bi, res));
-                    }
-                    Err(e) => job_err = Some(e),
-                }
-            },
-        );
-    }
-    if let Some(e) = job_err {
-        return Err(e);
-    }
-    let cohort_device = engine.device.stats();
-    let cohort_secs = cohort_t0.elapsed().as_secs_f64();
+    let results = uniques.iter().map(|_| Vec::new()).collect();
+    let tiles_by_query = vec![0u64; uniques.len()];
+    let shared_tiles_by_query = vec![0u64; uniques.len()];
 
-    // Per-query merge + response fan-out.
-    for (qi, u) in uniques.into_iter().enumerate() {
-        let batch_results = std::mem::take(&mut results[qi]);
-        let neighbors = knn::merge_results(&u.plan, batch_results.into_iter());
-        let mut report = RunReport::new("knn_join", &u.q.src.name, "accd-serve");
-        report.filter.merge(&u.plan.filter_stats);
-        report.layout = u.plan.layout_stats.clone();
-        // Device/wall accounting is cohort-scoped: tile execution is
-        // deliberately shared, so per-query attribution would lie.
-        report.device = cohort_device.clone();
-        report.device_wall_secs = cohort_device.wall_secs;
-        report.device_modeled_secs = cohort_device.modeled_secs;
-        report.wall_secs = cohort_secs;
-        report.iterations = 1;
-        report.quality = knn::quality_of(&neighbors);
-        let result = knn::KnnResult { neighbors, k: u.q.k, report };
+    Ok(KnnCohortProgram {
+        uniques,
+        tile,
+        depth: cfg.pipeline_depth,
+        flat,
+        results,
+        tiles_by_query,
+        shared_tiles_by_query,
+        slabs_shared,
+        device: DeviceStats::default(),
+        wall_secs: t0.elapsed().as_secs_f64(),
+        executed: false,
+    })
+}
 
-        let has_dups = !u.dups.is_empty();
-        delta.stats.tiles_total += tiles_by_query[qi];
-        delta.stats.tiles_shared += if has_dups {
-            tiles_by_query[qi]
-        } else {
-            shared_tiles_by_query[qi]
-        };
-        delta.stats.knn_queries += 1 + u.dups.len() as u64;
-        delta.stats.queries += 1 + u.dups.len() as u64;
-        delta.stats.dedup_hits += u.dups.len() as u64;
-        for &pos in &u.dups {
-            delta.responses.push((pos, ServeResponse::Knn(result.clone())));
+impl CohortProgram for KnnCohortProgram {
+    type Output = ShardDelta;
+
+    /// The device stage: every unique query's batches through one
+    /// tagged bounded pipeline.  One-shot — converges on the first
+    /// call.
+    fn step(&mut self, ctx: &mut StepCtx<'_>) -> Result<StepOutcome> {
+        if self.executed {
+            return Ok(StepOutcome::Converged);
         }
-        delta.responses.push((u.q.pos, ServeResponse::Knn(result)));
+        self.executed = true;
+        let step_t0 = Instant::now();
+        let engine = ctx.engine;
+        let dev0 = engine.device.stats();
+        let device = &engine.device;
+        let mut job_err: Option<Error> = None;
+        {
+            let flat = &self.flat;
+            let uniques_ref = &self.uniques;
+            let tile = &self.tile;
+            let results = &mut self.results;
+            let tiles_by_query = &mut self.tiles_by_query;
+            let shared_tiles_by_query = &mut self.shared_tiles_by_query;
+            pipeline::run_tagged(
+                self.depth,
+                |i| {
+                    let &(qi, bi) = flat.get(i as usize)?;
+                    let u = &uniques_ref[qi];
+                    Some((
+                        qi as u64,
+                        (bi, knn::build_job(&u.plan.batches[bi], &u.src_pg, &u.plan, tile)),
+                    ))
+                },
+                |tag, (bi, job)| {
+                    if job_err.is_some() {
+                        return;
+                    }
+                    if job.src_rows == 0 || job.trg_rows == 0 {
+                        return;
+                    }
+                    let qi = tag as usize;
+                    let before = device.stats().tiles;
+                    match device.distance_block(&job) {
+                        Ok(res) => {
+                            let tiles = device.stats().tiles - before;
+                            tiles_by_query[qi] += tiles;
+                            if uniques_ref[qi].plan.batches[bi].shared {
+                                shared_tiles_by_query[qi] += tiles;
+                            }
+                            results[qi].push((bi, res));
+                        }
+                        Err(e) => job_err = Some(e),
+                    }
+                },
+            );
+        }
+        if let Some(e) = job_err {
+            return Err(e);
+        }
+        program::absorb_device(
+            &mut self.device,
+            &program::device_delta(&dev0, &engine.device.stats()),
+        );
+        self.wall_secs += step_t0.elapsed().as_secs_f64();
+        Ok(StepOutcome::Converged)
     }
-    Ok(())
+
+    /// The trait-level finish returns the cohort's whole delta
+    /// (responses + stats) so no driver can lose responses; the
+    /// serving layer uses [`KnnCohortProgram::finish_into`] to write
+    /// into the shard's accumulating delta directly.
+    fn finish(self, ctx: &mut StepCtx<'_>) -> Result<ShardDelta> {
+        let mut delta = ShardDelta::default();
+        self.finish_into(ctx, &mut delta)?;
+        Ok(delta)
+    }
 }
 
-fn run_kmeans_job(
-    engine: &mut Engine,
-    state: &mut ShardState,
-    job: KmeansJob,
-    delta: &mut ShardDelta,
-) -> Result<()> {
-    let seed = engine.config.seed;
-    let groups = engine.src_groups(job.ds.n());
-    let pg = cached_grouping(
-        engine,
-        &mut state.grouping_cache,
-        &job.ds,
-        job.ds_fp,
-        groups,
-        seed,
-        Metric::L2,
-    )?;
-    let result = kmeans::run_shared(engine, &job.ds, job.k, job.max_iters, Some(&pg))?;
-    // `run_shared` resets device stats on entry, so this is the
-    // query's own tile count.
-    let tiles = engine.device.stats().tiles;
-    let has_dups = !job.dups.is_empty();
-    delta.stats.tiles_total += tiles;
-    if has_dups {
-        delta.stats.tiles_shared += tiles;
-    }
-    delta.stats.kmeans_queries += 1 + job.dups.len() as u64;
-    delta.stats.queries += 1 + job.dups.len() as u64;
-    delta.stats.dedup_hits += job.dups.len() as u64;
-    for &pos in &job.dups {
-        delta.responses.push((pos, ServeResponse::Kmeans(result.clone())));
-    }
-    delta.responses.push((job.pos, ServeResponse::Kmeans(result)));
-    Ok(())
-}
+impl KnnCohortProgram {
+    /// Per-query merge + response fan-out into `delta`.
+    fn finish_into(self, _ctx: &mut StepCtx<'_>, delta: &mut ShardDelta) -> Result<()> {
+        let KnnCohortProgram {
+            uniques,
+            mut results,
+            tiles_by_query,
+            shared_tiles_by_query,
+            slabs_shared,
+            device: cohort_device,
+            wall_secs: cohort_secs,
+            ..
+        } = self;
+        delta.stats.slabs_shared += slabs_shared;
+        for (qi, u) in uniques.into_iter().enumerate() {
+            let batch_results = std::mem::take(&mut results[qi]);
+            let neighbors = knn::merge_results(&u.plan, batch_results.into_iter());
+            let mut report = RunReport::new("knn_join", &u.q.src.name, "accd-serve");
+            report.filter.merge(&u.plan.filter_stats);
+            report.layout = u.plan.layout_stats.clone();
+            // Device/wall accounting is cohort-scoped: tile execution
+            // is deliberately shared, so per-query attribution would
+            // lie.
+            report.device = cohort_device.clone();
+            report.device_wall_secs = cohort_device.wall_secs;
+            report.device_modeled_secs = cohort_device.modeled_secs;
+            report.wall_secs = cohort_secs;
+            report.iterations = 1;
+            report.quality = knn::quality_of(&neighbors);
+            let result = knn::KnnResult { neighbors, k: u.q.k, report };
 
-fn run_nbody_job(
-    engine: &mut Engine,
-    state: &mut ShardState,
-    job: NbodyJob,
-    delta: &mut ShardDelta,
-) -> Result<()> {
-    let seed = engine.config.seed;
-    let groups = engine.src_groups(job.ds.n());
-    let pg = cached_grouping(
-        engine,
-        &mut state.grouping_cache,
-        &job.ds,
-        job.ds_fp,
-        groups,
-        seed,
-        Metric::L2,
-    )?;
-    let result = nbody::run_shared(
-        engine,
-        &job.ds,
-        &job.masses,
-        job.steps,
-        job.dt,
-        job.radius,
-        Some(&pg),
-    )?;
-    let tiles = engine.device.stats().tiles;
-    let has_dups = !job.dups.is_empty();
-    delta.stats.tiles_total += tiles;
-    if has_dups {
-        delta.stats.tiles_shared += tiles;
+            let has_dups = !u.dups.is_empty();
+            delta.stats.tiles_total += tiles_by_query[qi];
+            delta.stats.tiles_shared += if has_dups {
+                tiles_by_query[qi]
+            } else {
+                shared_tiles_by_query[qi]
+            };
+            delta.stats.knn_queries += 1 + u.dups.len() as u64;
+            delta.stats.queries += 1 + u.dups.len() as u64;
+            delta.stats.dedup_hits += u.dups.len() as u64;
+            for &pos in &u.dups {
+                delta.responses.push((pos, ServeResponse::Knn(result.clone())));
+            }
+            delta.responses.push((u.q.pos, ServeResponse::Knn(result)));
+        }
+        Ok(())
     }
-    delta.stats.nbody_queries += 1 + job.dups.len() as u64;
-    delta.stats.queries += 1 + job.dups.len() as u64;
-    delta.stats.dedup_hits += job.dups.len() as u64;
-    for &pos in &job.dups {
-        delta.responses.push((pos, ServeResponse::Nbody(result.clone())));
-    }
-    delta.responses.push((job.pos, ServeResponse::Nbody(result)));
-    Ok(())
 }

@@ -21,12 +21,17 @@
 //!   +-- placement -----------------------------------------+
 //!   | ShardPlanner: LPT partition by cohort cost estimate  |
 //!   | EnginePool: N engine shards over one shared Runtime  |
+//!   | WorkPool: shared queue of not-yet-started units;     |
+//!   |   idle shards STEAL from busy ones when LPT misfires |
 //!   +------+------------------------+----------------------+
 //!          v                        v
 //!   +-- exec: shard 0 ----+  +-- exec: shard N-1 --+  scoped
-//!   | GroupingCache (LRU) |  |        ...          |  threads,
-//!   | SlabCache (byte-    |  |                     |  one per
-//!   |   budget LRU, lives |  |                     |  busy shard
+//!   | lockstep rounds over|  |        ...          |  threads,
+//!   |   resident stepwise |  |                     |  one per
+//!   |   CohortPrograms    |  |                     |  busy shard
+//!   | GroupingCache (LRU) |  |                     |
+//!   | SlabCache (byte-    |  |                     |
+//!   |   budget LRU, lives |  |                     |
 //!   |   across flushes)   |  |                     |
 //!   | tagged pipeline,    |  |                     |
 //!   |   per-query demux   |  |                     |
@@ -43,7 +48,13 @@
 //! * Compatible KNN queries (same target content + metric) form
 //!   **cohorts** sharing one target grouping and packed target slabs;
 //!   each cohort streams through ONE tagged [`coordinator::pipeline`]
-//!   run with per-query demux.  Cohorts are the unit of placement.
+//!   run with per-query demux.  Cohorts are the unit of placement —
+//!   and, on a shard, every unit is planned into a stepwise
+//!   `CohortProgram` the **lockstep scheduler** advances one iteration
+//!   per round (`serve.lockstep`), so co-resident K-means / N-body /
+//!   KNN programs on one dataset share packed tiles per round instead
+//!   of per job, and the tail of a shard's queue stays stealable
+//!   (`serve.steal_threshold`) for idle shards.
 //! * [`GroupingCache`] (groupings, per shard) and the coordinator's
 //!   [`crate::coordinator::SlabCache`] (packed target slabs, per
 //!   shard, byte-budgeted) persist across flushes, keyed by 128-bit
@@ -55,12 +66,14 @@
 //!
 //! **Correctness contract:** batched results are identical to running
 //! each query alone through [`Engine`] with the same config — for any
-//! shard count and any flush order.  Every shared artifact is
-//! bit-identical to what the solo path would build (deterministic
-//! grouping builds, byte-equal target slabs, per-tag FIFO tile order),
-//! and every work unit is self-contained, so neither sharing nor
-//! placement can perturb a result.  Enforced end-to-end by
-//! `rust/tests/serve_parity.rs`.
+//! shard count, any flush order, lockstep on or off, stealing on or
+//! off.  Every shared artifact is bit-identical to what the solo path
+//! would build (deterministic grouping builds, byte-equal target and
+//! assignment slabs, per-tag FIFO tile order), every work unit is
+//! self-contained, and every program owns its iteration state, so
+//! neither sharing, placement, step interleaving nor migration can
+//! perturb a result.  Enforced end-to-end by
+//! `rust/tests/serve_parity.rs` and `rust/tests/prop_serve_lockstep.rs`.
 //!
 //! [`coordinator::pipeline`]: crate::coordinator::pipeline
 
@@ -99,12 +112,27 @@ pub struct QueryBatcher {
 impl QueryBatcher {
     /// Build a batcher over `cfg.shards` engine shards: the given
     /// engine plus clones of its configuration sharing its runtime.
+    ///
+    /// Panics on an invalid `cfg` (see [`ServeConfig::validate`]);
+    /// use [`QueryBatcher::try_new`] to handle the error instead.
     pub fn new(engine: Engine, cfg: ServeConfig) -> Self {
-        let pool = EnginePool::new(engine, cfg.shards)
-            .expect("pool construction over an already-validated engine config cannot fail");
+        match Self::try_new(engine, cfg) {
+            Ok(batcher) => batcher,
+            Err(e) => panic!("invalid serve config: {e}"),
+        }
+    }
+
+    /// Fallible construction: the config is validated here, so an
+    /// invalid `ServeConfig` (zero shards, zero pipeline depth, zero
+    /// grouping-cache capacity) can never reach the serving runtime.
+    /// `slab_cache_bytes == 0` is legal and means the per-shard slab
+    /// cache is *disabled*.
+    pub fn try_new(engine: Engine, cfg: ServeConfig) -> Result<Self> {
+        cfg.validate()?;
+        let pool = EnginePool::new(engine, cfg.shards)?;
         let shards = (0..pool.shard_count()).map(|_| ShardState::new(&cfg)).collect();
         let policy = FlushPolicy::from_config(&cfg);
-        Self {
+        Ok(Self {
             pool,
             cfg,
             policy,
@@ -112,7 +140,7 @@ impl QueryBatcher {
             memo: FingerprintMemo::new(),
             shards,
             stats: ServeStats::default(),
-        }
+        })
     }
 
     /// Enqueue a request under the config's default deadline (none
@@ -209,6 +237,7 @@ impl QueryBatcher {
             &mut self.pool,
             &mut self.shards,
             units,
+            costs,
             &assignments,
             batch.len(),
             &self.cfg,

@@ -14,6 +14,17 @@
 //! cost, assign each to the least-loaded shard — which is within 4/3
 //! of the optimal makespan and, with deterministic tie-breaking, makes
 //! placement reproducible run to run.
+//!
+//! LPT balances *a-priori estimates*; when they misfire (skewed filter
+//! survival, a cohort converging early), the [`WorkPool`] corrects at
+//! runtime: shard queues hold not-yet-started units, shards claim
+//! their own units incrementally (one per lockstep round), and an idle
+//! shard **steals** whole not-yet-started units from a busy victim.
+//! Stealing relocates only work, never state — units are
+//! self-contained, so results stay bit-identical; only which shard's
+//! caches warm up changes.
+
+use std::collections::VecDeque;
 
 use crate::coordinator::Engine;
 use crate::Result;
@@ -84,6 +95,109 @@ impl ShardPlanner {
     }
 }
 
+/// Flush-scoped shared queue of not-yet-started work units, one
+/// pending FIFO per shard (behind one mutex at the execution layer).
+///
+/// Shards pull their *own* pending units via [`WorkPool::claim_own`];
+/// an idle shard (nothing resident, own queue empty) may
+/// [`WorkPool::steal`] from a victim.  Steal rules, all deterministic:
+///
+/// * only not-yet-started units move — a running program stays where
+///   its caches are warm;
+/// * the victim must have claimed at least one unit already (a shard
+///   that has not even started is about to run its queue itself;
+///   robbing it would merely relocate work and its cache warm-up);
+/// * the most expensive eligible unit wins (ties: lowest unit index),
+///   and it must cost at least `min_cost` — tiny units are not worth
+///   migrating.
+///
+/// Generic over the unit type so the policy is testable without
+/// constructing real cohorts.
+pub(crate) struct WorkPool<T> {
+    slots: Vec<Option<T>>,
+    costs: Vec<u64>,
+    pending: Vec<VecDeque<usize>>,
+    claimed: Vec<usize>,
+}
+
+impl<T> WorkPool<T> {
+    /// `assignments[s]` lists the unit indices the planner gave shard
+    /// `s` (each index in `0..units.len()` at most once).
+    pub fn new(units: Vec<T>, costs: Vec<u64>, assignments: &[Vec<usize>]) -> Self {
+        debug_assert_eq!(units.len(), costs.len());
+        Self {
+            slots: units.into_iter().map(Some).collect(),
+            costs,
+            pending: assignments.iter().map(|idxs| idxs.iter().copied().collect()).collect(),
+            claimed: vec![0; assignments.len()],
+        }
+    }
+
+    /// Next not-yet-started unit assigned to `shard`, in placement
+    /// order.
+    pub fn claim_own(&mut self, shard: usize) -> Option<T> {
+        let i = self.pending[shard].pop_front()?;
+        self.claimed[shard] += 1;
+        Some(self.slots[i].take().expect("unit claimed twice"))
+    }
+
+    /// Whether some OTHER shard still holds a pending unit that meets
+    /// the cost bar — i.e. a unit that either is stealable now or will
+    /// become stealable the moment its owner starts.  An idle thief
+    /// whose `steal` came up empty uses this to decide between
+    /// retrying (the victim merely has not started yet) and exiting
+    /// (nothing will ever qualify).
+    pub fn stealable_prospect(&self, thief: usize, min_cost: u64) -> bool {
+        (0..self.pending.len()).any(|victim| {
+            victim != thief
+                && self.pending[victim].iter().any(|&i| self.costs[i].max(1) >= min_cost)
+        })
+    }
+
+    /// Whether any queue's *tail* — everything behind the first unit,
+    /// which its owner always claims before anything becomes stealable
+    /// — holds a unit meeting the cost bar: i.e. whether stealing
+    /// could ever fire at all.  The execution layer uses this to
+    /// decide whether idle shards spawn as thieves for a flush.
+    pub fn any_tail_prospect(&self, min_cost: u64) -> bool {
+        self.pending.iter().any(|queue| {
+            queue.len() >= 2
+                && queue.iter().skip(1).any(|&i| self.costs[i].max(1) >= min_cost)
+        })
+    }
+
+    /// Steal the best eligible unit for `thief` (see type docs for the
+    /// rules), or `None` when nothing qualifies.
+    pub fn steal(&mut self, thief: usize, min_cost: u64) -> Option<T> {
+        let mut best: Option<(u64, usize, usize)> = None; // (cost, unit, victim)
+        for victim in 0..self.pending.len() {
+            if victim == thief || self.claimed[victim] == 0 {
+                continue;
+            }
+            for &i in &self.pending[victim] {
+                // Zero-cost units still occupy a slot (mirrors the
+                // planner's load accounting), so they stay stealable
+                // at the default threshold of 1.
+                let cost = self.costs[i].max(1);
+                if cost < min_cost {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((bc, bi, _)) => cost > bc || (cost == bc && i < bi),
+                };
+                if better {
+                    best = Some((cost, i, victim));
+                }
+            }
+        }
+        let (_, i, victim) = best?;
+        self.pending[victim].retain(|&x| x != i);
+        self.claimed[thief] += 1;
+        Some(self.slots[i].take().expect("unit stolen twice"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,5 +249,76 @@ mod tests {
         let parts = ShardPlanner::partition(&[0, 0, 0, 0], 2);
         assert_eq!(parts[0].len(), 2);
         assert_eq!(parts[1].len(), 2);
+    }
+
+    /// Units "a".."e" with costs, shard 0 owns 0..=2, shard 1 owns 3..=4.
+    fn pool() -> WorkPool<&'static str> {
+        WorkPool::new(
+            vec!["a", "b", "c", "d", "e"],
+            vec![5, 9, 2, 4, 4],
+            &[vec![0, 1, 2], vec![3, 4]],
+        )
+    }
+
+    #[test]
+    fn claim_own_is_fifo_in_placement_order() {
+        let mut p = pool();
+        assert_eq!(p.claim_own(0), Some("a"));
+        assert_eq!(p.claim_own(0), Some("b"));
+        assert_eq!(p.claim_own(1), Some("d"));
+        assert_eq!(p.claim_own(0), Some("c"));
+        assert_eq!(p.claim_own(0), None);
+    }
+
+    #[test]
+    fn steal_requires_a_started_victim() {
+        let mut p = pool();
+        // Shard 0 has not claimed anything yet: nothing is stealable —
+        // but its queue IS a prospect, so an idle thief waits instead
+        // of exiting.
+        assert!(p.steal(1, 1).is_none());
+        assert!(p.stealable_prospect(1, 1));
+        assert!(!p.stealable_prospect(1, 100), "no unit meets a cost bar of 100");
+        // Tail prospect (the thief-spawn gate): shard 0's tail [b, c]
+        // qualifies at 1 and at 9 (unit b), but not at 10.
+        assert!(p.any_tail_prospect(1));
+        assert!(p.any_tail_prospect(9));
+        assert!(!p.any_tail_prospect(10));
+        // Once shard 0 started, its backlog is fair game — the most
+        // expensive pending unit goes first.
+        assert_eq!(p.claim_own(0), Some("a"));
+        assert_eq!(p.steal(1, 1), Some("b"));
+        assert_eq!(p.steal(1, 1), Some("c"));
+        assert!(p.steal(1, 1).is_none(), "victim's queue drained");
+        assert!(!p.stealable_prospect(1, 1), "no prospect left either");
+        // The victim keeps claiming what is left of its own queue.
+        assert_eq!(p.claim_own(0), None);
+    }
+
+    #[test]
+    fn steal_respects_the_cost_threshold() {
+        let mut p = pool();
+        p.claim_own(0);
+        // Threshold above every pending cost: no steal.
+        assert!(p.steal(1, 100).is_none());
+        // "b" (cost 9) qualifies at threshold 9; "c" (cost 2) does not.
+        assert_eq!(p.steal(1, 9), Some("b"));
+        assert!(p.steal(1, 9).is_none());
+    }
+
+    #[test]
+    fn steal_never_takes_from_the_thief_and_ties_break_low() {
+        let mut p: WorkPool<u32> =
+            WorkPool::new(vec![10, 11, 12], vec![4, 4, 4], &[vec![0, 1], vec![2]]);
+        p.claim_own(0);
+        p.claim_own(1);
+        // Thief 1: only shard 0's pending unit 1 is eligible (its own
+        // queue is never a victim).
+        assert_eq!(p.steal(1, 1), Some(11));
+        // Equal costs tie-break by unit index.
+        let mut p: WorkPool<u32> =
+            WorkPool::new(vec![20, 21, 22], vec![4, 4, 4], &[vec![0, 1, 2], vec![]]);
+        p.claim_own(0);
+        assert_eq!(p.steal(1, 1), Some(21));
     }
 }

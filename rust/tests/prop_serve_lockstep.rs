@@ -1,0 +1,119 @@
+//! Property test for the lockstep serving schedule: batched K-means /
+//! N-body cohorts through `serve::QueryBatcher` must equal sequential
+//! solo runs **bit-for-bit** across random iteration caps, random
+//! cohort mixes and shard counts 1 / 2 / 4 — with lockstep stepping
+//! and work stealing at their defaults (on).  This is the executable
+//! form of the stepwise-program safety argument: programs own all
+//! their iteration state, so no step schedule, placement or migration
+//! can perturb a result.
+
+use std::sync::Arc;
+
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::synthetic;
+use accd::serve::{QueryBatcher, ServeRequest, ServeResponse};
+use accd::util::prop::{self, Config};
+
+/// Exact comparison of one served response against the solo run.
+fn check_against_solo(
+    resp: &ServeResponse,
+    req: &ServeRequest,
+    solo: &mut Engine,
+    what: &str,
+) -> Result<(), String> {
+    match req {
+        ServeRequest::Kmeans { ds, k, max_iters } => {
+            let want = solo.kmeans(ds, *k, *max_iters).map_err(|e| e.to_string())?;
+            let got = resp.as_kmeans().ok_or_else(|| format!("{what}: wrong kind"))?;
+            if got.assign != want.assign {
+                return Err(format!("{what}: kmeans assignment diverged"));
+            }
+            if got.sse != want.sse {
+                return Err(format!("{what}: kmeans sse {} != {}", got.sse, want.sse));
+            }
+            if got.iterations != want.iterations {
+                return Err(format!(
+                    "{what}: iterations {} != {}",
+                    got.iterations, want.iterations
+                ));
+            }
+            if got.centers.as_slice() != want.centers.as_slice() {
+                return Err(format!("{what}: kmeans centers diverged"));
+            }
+        }
+        ServeRequest::Nbody { ds, masses, steps, dt, radius } => {
+            let want = solo
+                .nbody(ds, masses.as_slice(), *steps, *dt, *radius)
+                .map_err(|e| e.to_string())?;
+            let got = resp.as_nbody().ok_or_else(|| format!("{what}: wrong kind"))?;
+            if got.positions.as_slice() != want.positions.as_slice() {
+                return Err(format!("{what}: nbody positions diverged"));
+            }
+            if got.velocities.as_slice() != want.velocities.as_slice() {
+                return Err(format!("{what}: nbody velocities diverged"));
+            }
+        }
+        ServeRequest::Knn { .. } => unreachable!("workload has no KNN queries"),
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_lockstep_batched_iterative_cohorts_equal_sequential() {
+    prop::check(
+        &Config { cases: 4, max_size: 70, seed: 0x10C5, ..Default::default() },
+        |rng, size| {
+            let n_km = 80 + size; // 80..150 points
+            let n_nb = 60 + size / 2;
+            let km_ds = Arc::new(synthetic::clustered(n_km, 4, 4, 0.05, 1000 + size as u64));
+            let nb_ds = Arc::new(synthetic::uniform(n_nb, 3, 2000 + size as u64));
+            let masses = Arc::new(synthetic::equal_masses(n_nb, 1.0));
+            let mut reqs: Vec<ServeRequest> = Vec::new();
+            // Cohort mix: 2-4 K-means on ONE dataset with random k and
+            // random iteration caps (including a 0-iteration cap, the
+            // plan-then-finish edge), plus 1-2 N-body with random step
+            // counts — co-resident iterative programs of every shape.
+            for _ in 0..(2 + rng.below(3)) {
+                let k = 2 + rng.below(6);
+                let iters = rng.below(5);
+                reqs.push(ServeRequest::kmeans(km_ds.clone(), k, iters));
+            }
+            for _ in 0..(1 + rng.below(2)) {
+                let steps = 1 + rng.below(3);
+                reqs.push(ServeRequest::nbody(
+                    nb_ds.clone(),
+                    masses.clone(),
+                    steps,
+                    1e-3,
+                    0.2,
+                ));
+            }
+            reqs
+        },
+        |reqs| {
+            let mut solo = Engine::new(AccdConfig::new()).map_err(|e| e.to_string())?;
+            for shards in [1usize, 2, 4] {
+                let mut cfg = AccdConfig::new();
+                cfg.serve.shards = shards;
+                if !cfg.serve.lockstep || cfg.serve.steal_threshold == 0 {
+                    return Err("lockstep + stealing must default on".into());
+                }
+                let engine = Engine::new(cfg.clone()).map_err(|e| e.to_string())?;
+                let mut batcher = QueryBatcher::new(engine, cfg.serve.clone());
+                for req in reqs {
+                    batcher.submit(req.clone());
+                }
+                let out = batcher.flush().map_err(|e| e.to_string())?;
+                if out.len() != reqs.len() {
+                    return Err(format!("{} responses for {} queries", out.len(), reqs.len()));
+                }
+                for (i, (_, resp)) in out.iter().enumerate() {
+                    let what = format!("{shards} shards, query {i}");
+                    check_against_solo(resp, &reqs[i], &mut solo, &what)?;
+                }
+            }
+            Ok(())
+        },
+    );
+}

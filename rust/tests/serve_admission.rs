@@ -33,6 +33,60 @@ fn deserialized_copy(ds: &Arc<Dataset>) -> Arc<Dataset> {
 
 const FAR: Duration = Duration::from_secs(3600);
 
+// --- construction-time config validation --------------------------------
+
+#[test]
+fn try_new_rejects_invalid_serve_configs() {
+    let cfg = AccdConfig::new();
+    let tweaks: [fn(&mut accd::config::ServeConfig); 3] = [
+        |s| s.shards = 0,
+        |s| s.pipeline_depth = 0,
+        |s| s.grouping_cache_cap = 0,
+    ];
+    for tweak in tweaks {
+        let mut serve = cfg.serve.clone();
+        tweak(&mut serve);
+        let engine = Engine::new(cfg.clone()).unwrap();
+        assert!(
+            QueryBatcher::try_new(engine, serve).is_err(),
+            "invalid serve config must be rejected on construction"
+        );
+    }
+    // slab_cache_bytes == 0 is legal: it means DISABLED, not invalid.
+    let mut serve = cfg.serve.clone();
+    serve.slab_cache_bytes = 0;
+    let engine = Engine::new(cfg.clone()).unwrap();
+    assert!(QueryBatcher::try_new(engine, serve).is_ok());
+}
+
+#[test]
+fn disabled_slab_cache_still_answers_identically() {
+    let mut on = batcher();
+    let mut off = batcher_with(|cfg| cfg.serve.slab_cache_bytes = 0);
+    let trg = Arc::new(synthetic::clustered(300, 4, 6, 0.03, 91));
+    let src = Arc::new(synthetic::clustered(60, 4, 4, 0.03, 92));
+    let mut run = |b: &mut QueryBatcher| {
+        b.submit(ServeRequest::knn(src.clone(), trg.clone(), 5));
+        let first = b.flush().unwrap();
+        b.submit(ServeRequest::knn(src.clone(), trg.clone(), 5));
+        let second = b.flush().unwrap();
+        (
+            first[0].1.as_knn().unwrap().neighbors.clone(),
+            second[0].1.as_knn().unwrap().neighbors.clone(),
+        )
+    };
+    let (on1, on2) = run(&mut on);
+    let (off1, off2) = run(&mut off);
+    // Identical answers either way (cached slabs are bit-identical to
+    // fresh builds)...
+    assert_eq!(on1, off1);
+    assert_eq!(on2, off2);
+    // ...but the disabled cache retains nothing across flushes.
+    assert!(on.stats().slab_cache_hits > 0, "{:?}", on.stats());
+    assert_eq!(off.stats().slab_cache_hits, 0, "{:?}", off.stats());
+    assert_eq!(off.stats().slab_cache_bytes, 0, "nothing resident when disabled");
+}
+
 // --- deadline-driven admission (poll) ----------------------------------
 
 #[test]

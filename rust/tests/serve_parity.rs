@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use accd::config::AccdConfig;
 use accd::coordinator::Engine;
-use accd::data::{synthetic, Dataset};
+use accd::data::{synthetic, Dataset, Matrix};
 use accd::gti::Metric;
 use accd::serve::{QueryBatcher, ServeRequest, ServeResponse};
 
@@ -271,6 +271,155 @@ fn sharded_mixed_workload_is_identical_for_1_2_and_4_shards() {
             assert!(busy > 1, "work must spread across shards: {stats:?}");
         }
     }
+}
+
+/// The tentpole contract: lockstep step scheduling × shard counts ×
+/// work stealing, over a mixed K-means + N-body + KNN workload with a
+/// same-dataset K-means cohort (different k — NOT deduplicable, so
+/// the programs genuinely co-reside and share packed assignment
+/// tiles).  Bit-for-bit against solo runs for 1, 2 and 4 shards.
+#[test]
+fn lockstep_with_stealing_is_identical_for_1_2_and_4_shards() {
+    let km_ds = Arc::new(synthetic::clustered(350, 6, 8, 0.03, 41));
+    let nb_ds = Arc::new(synthetic::uniform(160, 3, 42));
+    let masses = Arc::new(synthetic::equal_masses(160, 1.0));
+    let trg = Arc::new(synthetic::clustered(400, 5, 6, 0.03, 43));
+    let src = Arc::new(synthetic::clustered(90, 5, 4, 0.04, 44));
+    let queries = vec![
+        ServeRequest::kmeans(km_ds.clone(), 8, 6),
+        ServeRequest::kmeans(km_ds.clone(), 12, 6), // same dataset, other k
+        ServeRequest::nbody(nb_ds, masses, 4, 1e-3, 0.15),
+        ServeRequest::knn(src, trg, 6),
+        ServeRequest::kmeans(km_ds, 8, 3), // same dataset, other cap
+    ];
+    let mut solo = fresh_engine();
+    for shards in [1usize, 2, 4] {
+        let mut cfg = AccdConfig::new();
+        cfg.serve.shards = shards;
+        assert!(cfg.serve.lockstep, "lockstep is the default");
+        assert!(cfg.serve.steal_threshold > 0, "stealing is the default");
+        let mut batcher =
+            QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), cfg.serve.clone());
+        for q in &queries {
+            batcher.submit(q.clone());
+        }
+        let out = batcher.flush().expect("flush");
+        assert_eq!(out.len(), queries.len());
+        for (i, (_, resp)) in out.iter().enumerate() {
+            let what = format!("lockstep, {shards} shards, query {i}");
+            assert_matches_solo(resp, &queries[i], &mut solo, &what);
+        }
+        let stats = batcher.stats();
+        assert!(stats.lockstep_rounds > 0, "lockstep must have run rounds: {stats:?}");
+        assert_eq!(stats.queries, queries.len() as u64);
+    }
+}
+
+/// Lockstep off must reproduce the same bits through the serial
+/// schedule (the step refactor cannot have changed the algorithms).
+#[test]
+fn serial_schedule_matches_lockstep_and_solo() {
+    let km_ds = Arc::new(synthetic::clustered(300, 5, 6, 0.03, 51));
+    let nb_ds = Arc::new(synthetic::uniform(140, 3, 52));
+    let masses = Arc::new(synthetic::equal_masses(140, 1.0));
+    let queries = vec![
+        ServeRequest::kmeans(km_ds.clone(), 9, 5),
+        ServeRequest::nbody(nb_ds, masses, 3, 1e-3, 0.15),
+        ServeRequest::kmeans(km_ds, 5, 5),
+    ];
+    let mut solo = fresh_engine();
+    let mut cfg = AccdConfig::new();
+    cfg.serve.lockstep = false;
+    cfg.serve.shards = 2;
+    let mut batcher =
+        QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), cfg.serve.clone());
+    for q in &queries {
+        batcher.submit(q.clone());
+    }
+    let out = batcher.flush().expect("flush");
+    for (i, (_, resp)) in out.iter().enumerate() {
+        assert_matches_solo(resp, &queries[i], &mut solo, &format!("serial, query {i}"));
+    }
+    assert_eq!(batcher.stats().lockstep_rounds, 0, "serial mode counts no rounds");
+}
+
+/// K-means empty-cluster regression.  The dataset is 10 distinct
+/// point values × 12 exact copies; with k = 32 > 10, pigeonhole forces
+/// at least two initial centers onto the same position, and argmin
+/// tie-breaking sends every member to one of them — the other is
+/// empty from iteration 0 on (keeping its position, per the
+/// empty-cluster rule).  The batched (lockstep, sharded) result must
+/// still equal the sequential one bit-for-bit, and re-running solo
+/// must be deterministic.
+#[test]
+fn kmeans_empty_clusters_keep_batched_equal_to_sequential() {
+    let mut vals = Vec::with_capacity(120 * 4);
+    for v in 0..10 {
+        for _copy in 0..12 {
+            for x in 0..4 {
+                vals.push(v as f32 * 1.7 + x as f32 * 0.3);
+            }
+        }
+    }
+    let ds = Arc::new(Dataset::new(
+        "dup-points",
+        Matrix::from_vec(vals, 120, 4).expect("matrix"),
+        61,
+    ));
+    let (k, iters) = (32, 8);
+
+    let mut solo_a = fresh_engine();
+    let want = solo_a.kmeans(&ds, k, iters).expect("solo kmeans");
+    let mut solo_b = fresh_engine();
+    let again = solo_b.kmeans(&ds, k, iters).expect("solo kmeans repeat");
+    assert_eq!(want.assign, again.assign, "solo kmeans must be deterministic");
+    assert_eq!(want.sse, again.sse);
+
+    // Some cluster must actually have died for this regression test to
+    // test anything: with 32 centers over 10 distinct point values, at
+    // least one center ends memberless (keeping its initial position).
+    let mut counts = vec![0u32; k];
+    for &a in &want.assign {
+        counts[a as usize] += 1;
+    }
+    assert!(
+        counts.iter().any(|&c| c == 0),
+        "workload no longer produces an empty cluster; tighten it: {counts:?}"
+    );
+
+    let mut batcher = sharded_batcher(2);
+    batcher.submit(ServeRequest::kmeans(ds.clone(), k, iters));
+    batcher.submit(ServeRequest::kmeans(ds, k, iters)); // dedup path too
+    let out = batcher.flush().expect("flush");
+    for (_, resp) in &out {
+        let got = resp.as_kmeans().expect("kmeans response");
+        assert_eq!(got.assign, want.assign, "empty-cluster assignment drifted");
+        assert_eq!(got.sse, want.sse, "empty-cluster sse drifted");
+        assert_eq!(got.centers.as_slice(), want.centers.as_slice(), "centers drifted");
+        assert_eq!(got.iterations, want.iterations);
+    }
+}
+
+/// Same-dataset K-means cohort under lockstep: the padded full
+/// packed-points slab (the assignment tile's row input) is built once
+/// and served from the slab cache to every later program — the
+/// "shared tile" hits the stats must report.
+#[test]
+fn lockstep_kmeans_cohort_shares_assignment_tiles() {
+    let ds = Arc::new(synthetic::clustered(400, 6, 8, 0.03, 71));
+    let mut batcher = sharded_batcher(1); // one shard: deterministic counts
+    batcher.submit(ServeRequest::kmeans(ds.clone(), 6, 4));
+    batcher.submit(ServeRequest::kmeans(ds.clone(), 10, 4));
+    batcher.submit(ServeRequest::kmeans(ds, 14, 4));
+    let out = batcher.flush().expect("flush");
+    assert_eq!(out.len(), 3);
+    let stats = batcher.stats();
+    assert!(
+        stats.lockstep_shared_tiles >= 2,
+        "2nd and 3rd same-dataset programs must hit the cached assignment slab: {stats:?}"
+    );
+    assert!(stats.lockstep_rounds >= 3, "one admission per round: {stats:?}");
+    assert!(stats.grouping_cache_hits >= 2, "grouping shared too: {stats:?}");
 }
 
 #[test]
