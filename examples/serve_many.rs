@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
     for (i, shard) in batcher.shard_stats().iter().enumerate() {
         println!(
             "  shard {i}: {} queries in {} flushes | {} tiles | slab cache {} hits / {} misses \
-             | {} lockstep rounds, {} stolen",
+             | {} lockstep rounds, {} stolen | p95 {:.3} ms, {} met / {} missed",
             shard.queries,
             shard.flushes,
             shard.tiles_total,
@@ -95,6 +95,9 @@ fn main() -> anyhow::Result<()> {
             shard.slab_cache_misses,
             shard.lockstep_rounds,
             shard.steals,
+            shard.latency_p95_ms(),
+            shard.deadline_met,
+            shard.deadline_misses,
         );
     }
     anyhow::ensure!(
@@ -105,6 +108,15 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         batcher.stats().lockstep_rounds > 0,
         "the lockstep scheduler must have run rounds"
+    );
+    let stats = batcher.stats();
+    anyhow::ensure!(
+        stats.latency_ns.len() == stats.queries as usize,
+        "every answered query must contribute a latency sample"
+    );
+    anyhow::ensure!(
+        stats.deadline_met + stats.deadline_misses > 0,
+        "deadline queries must be accounted met or missed"
     );
     Ok(())
 }

@@ -4,7 +4,11 @@
 //! repeated-flush scenario that shows the persistent per-shard slab
 //! cache converting packing work into cache hits, plus a
 //! repeated-cohort K-means scenario that shows the lockstep scheduler
-//! sharing packed assignment tiles across same-dataset programs.
+//! sharing packed assignment tiles across same-dataset programs, plus
+//! a deadline/latency scenario (EDF-LPT placement, staggered generous
+//! deadlines) that emits p50/p95/p99 latency + deadline met/miss
+//! counts and FAILS the smoke run if the deadline-aware planner
+//! misses a deadline despite sufficient capacity.
 //!
 //! The batched path amortizes exactly what a serving deployment
 //! amortizes: the target grouping is built once per cohort instead of
@@ -23,7 +27,7 @@
 //! Scale down with ACCD_BENCH_FAST=1 (CI smoke mode).
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use accd::config::AccdConfig;
 use accd::coordinator::Engine;
@@ -47,6 +51,7 @@ fn scenario_row(
     } else {
         stats.lockstep_shared_tiles as f64 / slab_total as f64
     };
+    let (lat_p50, lat_p95, lat_p99) = stats.latency_percentiles_ms();
     json::obj(vec![
         ("name", json::s(name.to_string())),
         ("queries", json::num(queries as f64)),
@@ -60,6 +65,11 @@ fn scenario_row(
         ("lockstep_shared_tiles", json::num(stats.lockstep_shared_tiles as f64)),
         ("lockstep_shared_tile_rate", json::num(shared_tile_rate)),
         ("steals", json::num(stats.steals as f64)),
+        ("latency_p50_ms", json::num(lat_p50)),
+        ("latency_p95_ms", json::num(lat_p95)),
+        ("latency_p99_ms", json::num(lat_p99)),
+        ("deadline_met", json::num(stats.deadline_met as f64)),
+        ("deadline_misses", json::num(stats.deadline_misses as f64)),
     ])
 }
 
@@ -257,6 +267,63 @@ fn main() {
     if km_stats.lockstep_shared_tiles == 0 {
         eprintln!(
             "FAIL: same-dataset kmeans cohort shared no assignment tiles — lockstep regressed"
+        );
+        std::process::exit(1);
+    }
+
+    // --- Latency scenario: EDF placement under generous deadlines ---------
+    // Every query carries a deadline far beyond what serving needs
+    // (capacity-sufficient by construction), staggered so the EDF
+    // planner sees distinct urgency tiers.  Met/missed is judged at
+    // service start, so this pre-deadline flush cannot miss by
+    // construction — the smoke gate below is an ACCOUNTING guard: it
+    // fails CI if the deadline bookkeeping ever loses or miscounts an
+    // outcome on the capacity-sufficient path (every query must
+    // resolve to met, none to missed); the completion tail is
+    // reported through the latency percentiles.
+    let mut serve_cfg = cfg.serve.clone();
+    serve_cfg.shards = 2;
+    serve_cfg.placement = "edf-lpt".to_string();
+    let mut lat_batcher =
+        QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), serve_cfg);
+    for (i, (src, trg)) in queries.iter().enumerate() {
+        let deadline = Duration::from_secs(60 + 10 * i as u64);
+        lat_batcher.submit_with_deadline(
+            ServeRequest::knn(src.clone(), trg.clone(), k),
+            deadline,
+        );
+    }
+    let t = Instant::now();
+    let lat_out = lat_batcher.flush().expect("latency flush");
+    let lat_secs = t.elapsed().as_secs_f64();
+    for (i, (_, resp)) in lat_out.iter().enumerate() {
+        let got = resp.as_knn().expect("knn response");
+        assert_eq!(
+            got.neighbors, seq_results[i].neighbors,
+            "deadline-aware placement diverged from sequential on query {i}"
+        );
+    }
+    let lat_stats = lat_batcher.stats();
+    let (lat_p50, lat_p95, lat_p99) = lat_stats.latency_percentiles_ms();
+    println!(
+        "\nlatency scenario (edf-lpt, 2 shards): p50 {lat_p50:.3} ms / p95 {lat_p95:.3} ms / \
+         p99 {lat_p99:.3} ms | {} met / {} missed",
+        lat_stats.deadline_met, lat_stats.deadline_misses,
+    );
+    scenarios.push(scenario_row(
+        "knn_deadline_edf_2shard",
+        queries.len(),
+        lat_secs,
+        seq_secs / lat_secs.max(1e-12),
+        &lat_batcher,
+    ));
+    if lat_stats.deadline_misses > 0 || lat_stats.deadline_met != queries.len() as u64 {
+        eprintln!(
+            "FAIL: deadline accounting regressed on the capacity-sufficient EDF scenario \
+             ({} met / {} missed, expected {} met / 0 missed)",
+            lat_stats.deadline_met,
+            lat_stats.deadline_misses,
+            queries.len()
         );
         std::process::exit(1);
     }

@@ -48,6 +48,39 @@ impl Default for HwConfig {
     }
 }
 
+/// Placement policy of the serving runtime's `ShardPlanner`
+/// (`serve.placement`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// Pure longest-processing-time-first cost balancing: minimizes
+    /// makespan, ignores deadlines.
+    Lpt,
+    /// Earliest-deadline-first tiers, LPT within each tier: urgent
+    /// units are assigned (and so claimed) first, landing on the
+    /// lightest shards; deadline-free units sort last.  Degenerates to
+    /// pure LPT when no unit carries a deadline.
+    EdfLpt,
+}
+
+impl PlacementMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "lpt" => Ok(Self::Lpt),
+            "edf-lpt" => Ok(Self::EdfLpt),
+            other => Err(Error::Config(format!(
+                "serve.placement must be \"lpt\" or \"edf-lpt\", got \"{other}\""
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Lpt => "lpt",
+            Self::EdfLpt => "edf-lpt",
+        }
+    }
+}
+
 /// Serving-runtime parameters (`accd::serve`) — the batched multi-query
 /// layer on top of the engine.
 #[derive(Debug, Clone, PartialEq)]
@@ -88,6 +121,12 @@ pub struct ServeConfig {
     /// when the LPT placement's estimates misfire.  **0 disables
     /// stealing**; 1 (the default) steals anything available.
     pub steal_threshold: u64,
+    /// Shard-placement policy: `"lpt"` (pure cost balancing) or
+    /// `"edf-lpt"` (the default: earliest-deadline-first tiers, LPT
+    /// within each tier — urgent cohorts land on lightly-loaded shards
+    /// and are claimed first).  Results are bit-identical either way
+    /// (serve parity contract); only latency changes.
+    pub placement: String,
 }
 
 impl Default for ServeConfig {
@@ -102,6 +141,7 @@ impl Default for ServeConfig {
             slab_cache_bytes: 64 << 20,
             lockstep: true,
             steal_threshold: 1,
+            placement: "edf-lpt".to_string(),
         }
     }
 }
@@ -114,7 +154,7 @@ impl ServeConfig {
     /// `slab_cache_bytes == 0` means the slab cache is *disabled* (not
     /// unbounded), `steal_threshold == 0` disables work stealing —
     /// all legal; `shards`, `pipeline_depth` and `grouping_cache_cap`
-    /// must be positive.
+    /// must be positive, and `placement` must name a known policy.
     pub fn validate(&self) -> Result<()> {
         if self.shards == 0 {
             return Err(Error::Config("serve.shards must be positive".into()));
@@ -125,7 +165,15 @@ impl ServeConfig {
         if self.grouping_cache_cap == 0 {
             return Err(Error::Config("serve.grouping_cache_cap must be positive".into()));
         }
+        self.placement_mode()?;
         Ok(())
+    }
+
+    /// The parsed `placement` policy.  Errs on an unknown name —
+    /// `validate()` (run at `QueryBatcher` construction) guarantees
+    /// the serving runtime itself never sees the error path.
+    pub fn placement_mode(&self) -> Result<PlacementMode> {
+        PlacementMode::parse(&self.placement)
     }
 }
 
@@ -200,6 +248,9 @@ impl AccdConfig {
                 .as_usize()
                 .map(|v| v as u64)
                 .unwrap_or(cfg.serve.steal_threshold);
+            if let Some(p) = s.get("placement").as_str() {
+                cfg.serve.placement = p.to_string();
+            }
         }
         if let Some(s) = v.get("artifact_dir").as_str() {
             cfg.artifact_dir = s.to_string();
@@ -270,6 +321,7 @@ impl AccdConfig {
                     ("slab_cache_bytes", json::num(self.serve.slab_cache_bytes as f64)),
                     ("lockstep", Value::Bool(self.serve.lockstep)),
                     ("steal_threshold", json::num(self.serve.steal_threshold as f64)),
+                    ("placement", json::s(self.serve.placement.clone())),
                 ]),
             ),
             ("artifact_dir", json::s(self.artifact_dir.clone())),
@@ -303,6 +355,7 @@ mod tests {
         cfg.serve.slab_cache_bytes = 1 << 20;
         cfg.serve.lockstep = false;
         cfg.serve.steal_threshold = 9000;
+        cfg.serve.placement = "lpt".to_string();
         let re = AccdConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, re);
     }
@@ -325,6 +378,25 @@ mod tests {
         assert_eq!(cfg.serve.slab_cache_bytes, ServeConfig::default().slab_cache_bytes);
         assert!(cfg.serve.lockstep, "lockstep defaults on");
         assert_eq!(cfg.serve.steal_threshold, 1, "stealing defaults on at threshold 1");
+        assert_eq!(cfg.serve.placement, "edf-lpt", "deadline-aware placement defaults on");
+    }
+
+    #[test]
+    fn placement_mode_parses_and_rejects_unknown_names() {
+        assert_eq!(PlacementMode::parse("lpt").unwrap(), PlacementMode::Lpt);
+        assert_eq!(PlacementMode::parse("edf-lpt").unwrap(), PlacementMode::EdfLpt);
+        assert_eq!(PlacementMode::Lpt.as_str(), "lpt");
+        assert_eq!(PlacementMode::EdfLpt.as_str(), "edf-lpt");
+        let msg = PlacementMode::parse("sjf").unwrap_err().to_string();
+        assert!(msg.contains("placement"), "{msg}");
+        // ...and validate() gates it, so QueryBatcher::try_new rejects it.
+        let bad = ServeConfig { placement: "random".into(), ..ServeConfig::default() };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("placement"), "{msg}");
+        let v = json::parse(r#"{"serve": {"placement": "nope"}}"#).unwrap();
+        assert!(AccdConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"serve": {"placement": "lpt"}}"#).unwrap();
+        assert_eq!(AccdConfig::from_json(&v).unwrap().serve.placement, "lpt");
     }
 
     #[test]

@@ -46,7 +46,8 @@
 //! dedup, deadline/size-triggered flush decisions via a
 //! [`serve::FlushPolicy`]), `serve::placement` (a
 //! [`serve::ShardPlanner`] balancing cohorts across an
-//! [`serve::EnginePool`] by cost estimate) and `serve::exec`
+//! [`serve::EnginePool`] by earliest-deadline tier + cost estimate,
+//! `serve.placement = "edf-lpt" | "lpt"`) and `serve::exec`
 //! (per-shard execution on scoped threads, with per-shard grouping and
 //! packed-slab caches that persist across flushes):
 //!
@@ -62,9 +63,13 @@
 //!   earliest deadline of their identity class) without ever
 //!   re-scanning points;
 //! * `submit_with_deadline` + `poll` flush only what is due, so
-//!   latency-sensitive queries stop waiting for stragglers;
+//!   latency-sensitive queries stop waiting for stragglers — and
+//!   every deadline decision reads an injected [`serve::Clock`]
+//!   ([`serve::VirtualClock`] in tests: deadline semantics without
+//!   sleeps);
 //! * a [`metrics::ServeStats`] report exposes queries/sec, the
-//!   tiles-shared ratio and cache hit rates, merged and per shard.
+//!   tiles-shared ratio, cache hit rates, per-query latency
+//!   percentiles and deadline met/miss counts, merged and per shard.
 //!
 //! The contract is strict: batched results are **identical** to running
 //! each query alone through [`coordinator::Engine`], for any shard

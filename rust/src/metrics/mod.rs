@@ -150,6 +150,21 @@ impl RunReport {
     }
 }
 
+/// Retained latency samples per [`ServeStats`] view: a bounded ring
+/// (newest overwrites oldest past the cap) keeping a long-lived
+/// server's stats O(1) in memory; at 8 bytes a sample this is 512 KiB
+/// per view, and the percentile accessors describe the most recent
+/// window.
+pub const LATENCY_SAMPLE_CAP: usize = 65_536;
+
+/// Nearest-rank percentile (`q` in 0..=100) over ascending-sorted
+/// nanosecond samples, in milliseconds.  The single shared formula
+/// behind every `ServeStats` latency accessor.
+fn percentile_of_sorted_ms(sorted: &[u64], q: f64) -> f64 {
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1] as f64 / 1e6
+}
+
 /// Accounting of the batched serving runtime (`accd::serve`).
 ///
 /// Two views exist: each engine shard accumulates one instance over
@@ -206,6 +221,27 @@ pub struct ServeStats {
     /// Not-yet-started work units an idle shard stole from a busy one
     /// after the LPT placement's cost estimates misfired.
     pub steals: u64,
+    /// Queries that carried a deadline and whose service STARTED at or
+    /// before it (the flush that answered them was selected by the
+    /// deadline — a deadline-triggered `poll` fires exactly at expiry
+    /// and counts as met; completion tail shows in the latency
+    /// percentiles instead).
+    pub deadline_met: u64,
+    /// Queries that carried a deadline the scheduler had not even
+    /// started serving by expiry (backlog / capacity shortfall).  A
+    /// late query is still answered — never dropped — but the miss is
+    /// counted here, merged and per executing shard.
+    pub deadline_misses: u64,
+    /// Per-query completion-latency samples in clock ticks
+    /// (nanoseconds; submit-to-response on the batcher's injected
+    /// `serve::Clock`).  Every answered query contributes one sample,
+    /// deadline or not; the `latency_p*_ms` accessors report
+    /// percentiles over them.  Bounded: a ring of the most recent
+    /// [`LATENCY_SAMPLE_CAP`] samples, so a long-lived server's stats
+    /// stay O(1) in memory.
+    pub latency_ns: Vec<u64>,
+    /// Ring write position within `latency_ns` once the cap is hit.
+    latency_cursor: usize,
     /// Device tiles dispatched across all flushes...
     pub tiles_total: u64,
     /// ...of which this many served more than one query: tiles of
@@ -256,6 +292,75 @@ impl ServeStats {
         }
     }
 
+    /// Record one answered query's latency and — when the query
+    /// carried a deadline — whether it was met.  `missed` is `None`
+    /// for deadline-free queries (they contribute a latency sample but
+    /// no met/miss count).  The batcher calls this once per answered
+    /// query, on the merged view and on the executing shard's view, so
+    /// both report percentiles (latencies are recorded at commit time,
+    /// not through `absorb_exec`).  Samples beyond
+    /// [`LATENCY_SAMPLE_CAP`] overwrite the oldest (ring), so
+    /// percentiles always describe the most recent window.
+    pub fn record_latency(&mut self, latency_ns: u64, missed: Option<bool>) {
+        if self.latency_ns.len() < LATENCY_SAMPLE_CAP {
+            self.latency_ns.push(latency_ns);
+        } else {
+            self.latency_ns[self.latency_cursor] = latency_ns;
+            self.latency_cursor = (self.latency_cursor + 1) % LATENCY_SAMPLE_CAP;
+        }
+        match missed {
+            Some(true) => self.deadline_misses += 1,
+            Some(false) => self.deadline_met += 1,
+            None => {}
+        }
+    }
+
+    /// The sorted latency window, or `None` when no samples exist —
+    /// the one place the clone+sort happens.
+    fn sorted_latencies(&self) -> Option<Vec<u64>> {
+        if self.latency_ns.is_empty() {
+            return None;
+        }
+        let mut sorted = self.latency_ns.clone();
+        sorted.sort_unstable();
+        Some(sorted)
+    }
+
+    /// `(p50, p95, p99)` latency in milliseconds with ONE sort of the
+    /// sample window — what `to_json`/`summary` (and the bench) use,
+    /// instead of three independent sort passes.
+    pub fn latency_percentiles_ms(&self) -> (f64, f64, f64) {
+        match self.sorted_latencies() {
+            None => (0.0, 0.0, 0.0),
+            Some(sorted) => (
+                percentile_of_sorted_ms(&sorted, 50.0),
+                percentile_of_sorted_ms(&sorted, 95.0),
+                percentile_of_sorted_ms(&sorted, 99.0),
+            ),
+        }
+    }
+
+    /// Nearest-rank latency percentile in milliseconds (`q` in 0..=100);
+    /// 0.0 with no samples.
+    pub fn latency_percentile_ms(&self, q: f64) -> f64 {
+        match self.sorted_latencies() {
+            None => 0.0,
+            Some(sorted) => percentile_of_sorted_ms(&sorted, q),
+        }
+    }
+
+    pub fn latency_p50_ms(&self) -> f64 {
+        self.latency_percentile_ms(50.0)
+    }
+
+    pub fn latency_p95_ms(&self) -> f64 {
+        self.latency_percentile_ms(95.0)
+    }
+
+    pub fn latency_p99_ms(&self) -> f64 {
+        self.latency_percentile_ms(99.0)
+    }
+
     /// Fold one flush's execution counters into this accumulator.
     ///
     /// Sums what a shard's execution produces per flush (queries,
@@ -267,6 +372,10 @@ impl ServeStats {
     /// `grouping_probe_collisions`, `slab_cache_*`) — those are
     /// re-published as absolute values read from the caches after each
     /// successful flush, so they can never drift from cache reality.
+    /// Latency samples and `deadline_met` / `deadline_misses` are also
+    /// not summed here: the batcher records them per answered query via
+    /// [`ServeStats::record_latency`] (a shard's delta never carries
+    /// them — only the batcher knows submit times).
     pub fn absorb_exec(&mut self, d: &ServeStats) {
         self.queries += d.queries;
         self.knn_queries += d.knn_queries;
@@ -282,6 +391,7 @@ impl ServeStats {
     }
 
     pub fn to_json(&self) -> Value {
+        let (p50, p95, p99) = self.latency_percentiles_ms();
         json::obj(vec![
             ("queries", json::num(self.queries as f64)),
             ("flushes", json::num(self.flushes as f64)),
@@ -304,6 +414,11 @@ impl ServeStats {
             ("lockstep_rounds", json::num(self.lockstep_rounds as f64)),
             ("lockstep_shared_tiles", json::num(self.lockstep_shared_tiles as f64)),
             ("steals", json::num(self.steals as f64)),
+            ("deadline_met", json::num(self.deadline_met as f64)),
+            ("deadline_misses", json::num(self.deadline_misses as f64)),
+            ("latency_p50_ms", json::num(p50)),
+            ("latency_p95_ms", json::num(p95)),
+            ("latency_p99_ms", json::num(p99)),
             ("tiles_total", json::num(self.tiles_total as f64)),
             ("tiles_shared", json::num(self.tiles_shared as f64)),
             ("tiles_shared_ratio", json::num(self.tiles_shared_ratio())),
@@ -314,12 +429,15 @@ impl ServeStats {
 
     /// Human-readable summary for CLIs and benches.
     pub fn summary(&self) -> String {
+        let (p50, p95, p99) = self.latency_percentiles_ms();
         format!(
             "serve: {} queries in {} flushes ({:.1} q/s, {} deadline-driven)\n  \
              mix: {} knn / {} kmeans / {} nbody | dedup {} ({} full scans)\n  \
              grouping cache: {} hits / {} misses ({:.1}% hit rate, {} probe collisions)\n  \
              slab cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, {:.1} MB resident\n  \
              lockstep: {} rounds, {} shared tiles | {} units stolen\n  \
+             latency: p50 {:.3} ms / p95 {:.3} ms / p99 {:.3} ms | \
+             deadlines: {} met / {} missed\n  \
              tiles: {} shared of {} total ({:.1}%) | shared slabs {}",
             self.queries,
             self.flushes,
@@ -342,6 +460,11 @@ impl ServeStats {
             self.lockstep_rounds,
             self.lockstep_shared_tiles,
             self.steals,
+            p50,
+            p95,
+            p99,
+            self.deadline_met,
+            self.deadline_misses,
             self.tiles_shared,
             self.tiles_total,
             100.0 * self.tiles_shared_ratio(),
@@ -382,6 +505,49 @@ mod tests {
     }
 
     #[test]
+    fn latency_percentiles_and_deadline_counters() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.latency_p50_ms(), 0.0, "no samples -> 0");
+        // 10 samples: 1..=10 ms.
+        for ms in 1..=10u64 {
+            let missed = match ms {
+                1..=3 => Some(false),
+                4 => Some(true),
+                _ => None,
+            };
+            s.record_latency(ms * 1_000_000, missed);
+        }
+        assert_eq!(s.deadline_met, 3);
+        assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.latency_ns.len(), 10);
+        // Nearest-rank: p50 of 1..=10 ms is the 5th sample.
+        assert_eq!(s.latency_p50_ms(), 5.0);
+        assert_eq!(s.latency_p95_ms(), 10.0);
+        assert_eq!(s.latency_p99_ms(), 10.0);
+        assert_eq!(s.latency_percentiles_ms(), (5.0, 10.0, 10.0), "single-sort triple agrees");
+        assert_eq!(s.latency_percentile_ms(0.0), 1.0, "floor clamps to the first sample");
+        let v = s.to_json();
+        assert_eq!(v.get("deadline_met").as_usize(), Some(3));
+        assert_eq!(v.get("deadline_misses").as_usize(), Some(1));
+        assert_eq!(v.get("latency_p50_ms").as_f64(), Some(5.0));
+        assert!(s.summary().contains("p50"));
+        assert!(s.summary().contains("3 met / 1 missed"));
+    }
+
+    #[test]
+    fn latency_samples_are_ring_bounded() {
+        let mut s = ServeStats::default();
+        for i in 0..(LATENCY_SAMPLE_CAP + 10) {
+            s.record_latency(i as u64, None);
+        }
+        assert_eq!(s.latency_ns.len(), LATENCY_SAMPLE_CAP, "ring never grows past the cap");
+        // The 10 overflow samples overwrote the 10 oldest slots.
+        assert_eq!(s.latency_ns[0], LATENCY_SAMPLE_CAP as u64);
+        assert_eq!(s.latency_ns[9], LATENCY_SAMPLE_CAP as u64 + 9);
+        assert_eq!(s.latency_ns[10], 10);
+    }
+
+    #[test]
     fn absorb_exec_sums_counters_but_not_batcher_fields() {
         let mut total = ServeStats { flushes: 2, wall_secs: 1.5, ..Default::default() };
         let delta = ServeStats {
@@ -404,6 +570,9 @@ mod tests {
             steals: 2,
             flushes: 7,
             wall_secs: 9.0,
+            deadline_met: 5,
+            deadline_misses: 6,
+            latency_ns: vec![1, 2, 3],
             ..Default::default()
         };
         total.absorb_exec(&delta);
@@ -423,6 +592,11 @@ mod tests {
         assert_eq!(total.slab_cache_hits, 0);
         assert_eq!(total.slab_cache_evictions, 0);
         assert_eq!(total.slab_cache_bytes, 0);
+        // Latency/deadline accounting is recorded per answered query by
+        // the batcher (record_latency), never delta-summed.
+        assert_eq!(total.deadline_met, 0);
+        assert_eq!(total.deadline_misses, 0);
+        assert!(total.latency_ns.is_empty());
     }
 
     #[test]

@@ -13,10 +13,19 @@
 //! distinct `Arc`, and reused downstream for grouping-cache keys and
 //! slab-cache scopes) — so deserialized-identical datasets never cost
 //! a full O(n·d) point comparison.
+//!
+//! All deadline bookkeeping runs on injected [`super::clock::Clock`]
+//! [`Tick`]s, never on `Instant`: the batcher stamps `submitted_at`
+//! and absolute deadlines at admission, [`FlushPolicy::select_due`]
+//! compares them against the caller-provided `now`, and
+//! [`partition`] threads each [`WorkUnit`]'s *inherited* deadline (the
+//! earliest across its member queries) through to placement and
+//! execution — so tests drive every deadline semantic through a
+//! `VirtualClock` instead of sleeping.
 
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::config::ServeConfig;
 use crate::coordinator::{kmeans, knn, nbody};
@@ -25,6 +34,8 @@ use crate::data::Dataset;
 use crate::gti::{self, Metric};
 use crate::runtime::TileInfo;
 use crate::Result;
+
+use super::clock::{ticks, Tick};
 
 /// Ticket handed back by `QueryBatcher::submit`.
 pub type QueryId = u64;
@@ -241,9 +252,11 @@ impl FingerprintMemo {
 pub(crate) struct Pending {
     pub id: QueryId,
     pub req: ServeRequest,
-    /// Absolute due time; `None` waits for an explicit flush or the
-    /// size trigger.
-    pub deadline: Option<Instant>,
+    /// Absolute due time (clock ticks); `None` waits for an explicit
+    /// flush or the size trigger.
+    pub deadline: Option<Tick>,
+    /// Clock reading at admission — the latency accounting's zero.
+    pub submitted_at: Tick,
 }
 
 /// FIFO queue of admitted queries.  Storage only — *when* entries
@@ -259,10 +272,10 @@ impl AdmissionQueue {
         Self::default()
     }
 
-    pub fn push(&mut self, req: ServeRequest, deadline: Option<Instant>) -> QueryId {
+    pub fn push(&mut self, req: ServeRequest, deadline: Option<Tick>, now: Tick) -> QueryId {
         let id = self.next_id;
         self.next_id += 1;
-        self.pending.push(Pending { id, req, deadline });
+        self.pending.push(Pending { id, req, deadline, submitted_at: now });
         id
     }
 
@@ -276,7 +289,7 @@ impl AdmissionQueue {
 
     /// Earliest pending deadline, if any — lets a serving loop sleep
     /// until the next `poll` could have work.
-    pub fn next_deadline(&self) -> Option<Instant> {
+    pub fn next_deadline(&self) -> Option<Tick> {
         self.pending.iter().filter_map(|p| p.deadline).min()
     }
 
@@ -335,8 +348,8 @@ impl FlushPolicy {
     }
 
     /// Absolute deadline `submit` stamps on a new query.
-    pub fn admission_deadline(&self, now: Instant) -> Option<Instant> {
-        self.default_deadline.map(|d| now + d)
+    pub fn admission_deadline(&self, now: Tick) -> Option<Tick> {
+        self.default_deadline.map(|d| now.saturating_add(ticks(d)))
     }
 
     /// Selection for an explicit flush: the queue's front.
@@ -359,7 +372,7 @@ impl FlushPolicy {
     pub(crate) fn select_due(
         &self,
         queue: &AdmissionQueue,
-        now: Instant,
+        now: Tick,
         dedup: bool,
         memo: &mut FingerprintMemo,
     ) -> (Vec<usize>, bool) {
@@ -467,6 +480,9 @@ pub(crate) struct KnnCohort {
     pub trg_fp: (u64, u64),
     pub metric: Metric,
     pub queries: Vec<KnnQ>,
+    /// Inherited deadline: the earliest across the cohort's member
+    /// queries (`None` when no member carries one).
+    pub deadline: Option<Tick>,
 }
 
 pub(crate) struct KmeansJob {
@@ -477,6 +493,8 @@ pub(crate) struct KmeansJob {
     pub max_iters: usize,
     /// Response slots of deduplicated identical queries.
     pub dups: Vec<usize>,
+    /// Inherited deadline: the earliest across the job + its dups.
+    pub deadline: Option<Tick>,
 }
 
 pub(crate) struct NbodyJob {
@@ -488,6 +506,17 @@ pub(crate) struct NbodyJob {
     pub dt: f32,
     pub radius: f32,
     pub dups: Vec<usize>,
+    /// Inherited deadline: the earliest across the job + its dups.
+    pub deadline: Option<Tick>,
+}
+
+/// Earliest of two optional deadlines (`None` = no deadline).
+pub(crate) fn earliest(a: Option<Tick>, b: Option<Tick>) -> Option<Tick> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.min(y)),
+        (x, None) => x,
+        (None, y) => y,
+    }
 }
 
 /// The unit of placement: one independent piece of work an engine
@@ -501,6 +530,18 @@ pub(crate) enum WorkUnit {
 }
 
 impl WorkUnit {
+    /// The unit's inherited deadline: the earliest deadline of any
+    /// member query (`None` = fully patient).  Placement sorts EDF
+    /// tiers by it, the lockstep scheduler orders claims and step
+    /// priority by it, and urgency-preferring steals read it.
+    pub fn deadline(&self) -> Option<Tick> {
+        match self {
+            WorkUnit::Knn(c) => c.deadline,
+            WorkUnit::Kmeans(j) => j.deadline,
+            WorkUnit::Nbody(j) => j.deadline,
+        }
+    }
+
     /// Relative cost estimate for load balancing: the dominant
     /// distance-pair count of the unit.  Only ratios matter.  With
     /// `dedup` on, KNN queries the execution layer will collapse into
@@ -542,8 +583,9 @@ impl WorkUnit {
 /// Partition a drained batch into work units: coalesce KNN queries
 /// into cohorts by (target content, metric); deduplicate identical
 /// K-means / N-body queries (KNN dedup happens inside cohort
-/// execution, where the per-query plans are built).  Deterministic in
-/// the batch order.
+/// execution, where the per-query plans are built).  Every unit
+/// inherits the earliest deadline of its member queries.
+/// Deterministic in the batch order.
 pub(crate) fn partition(
     batch: &[Pending],
     dedup: bool,
@@ -560,12 +602,16 @@ pub(crate) fn partition(
                     .position(|c| c.metric == *metric && memo.same_dataset(&c.trg, trg));
                 let q = KnnQ { pos, src: src.clone(), src_fp: memo.fingerprint(src), k: *k };
                 match found {
-                    Some(ci) => cohorts[ci].queries.push(q),
+                    Some(ci) => {
+                        cohorts[ci].queries.push(q);
+                        cohorts[ci].deadline = earliest(cohorts[ci].deadline, p.deadline);
+                    }
                     None => cohorts.push(KnnCohort {
                         trg: trg.clone(),
                         trg_fp: memo.fingerprint(trg),
                         metric: *metric,
                         queries: vec![q],
+                        deadline: p.deadline,
                     }),
                 }
             }
@@ -581,7 +627,10 @@ pub(crate) fn partition(
                     None
                 };
                 match dup {
-                    Some(ji) => kmeans_jobs[ji].dups.push(pos),
+                    Some(ji) => {
+                        kmeans_jobs[ji].dups.push(pos);
+                        kmeans_jobs[ji].deadline = earliest(kmeans_jobs[ji].deadline, p.deadline);
+                    }
                     None => kmeans_jobs.push(KmeansJob {
                         pos,
                         ds: ds.clone(),
@@ -589,6 +638,7 @@ pub(crate) fn partition(
                         k: *k,
                         max_iters: *max_iters,
                         dups: Vec::new(),
+                        deadline: p.deadline,
                     }),
                 }
             }
@@ -601,7 +651,10 @@ pub(crate) fn partition(
                     None
                 };
                 match dup {
-                    Some(ji) => nbody_jobs[ji].dups.push(pos),
+                    Some(ji) => {
+                        nbody_jobs[ji].dups.push(pos);
+                        nbody_jobs[ji].deadline = earliest(nbody_jobs[ji].deadline, p.deadline);
+                    }
                     None => nbody_jobs.push(NbodyJob {
                         pos,
                         ds: ds.clone(),
@@ -611,6 +664,7 @@ pub(crate) fn partition(
                         dt: *dt,
                         radius: *radius,
                         dups: Vec::new(),
+                        deadline: p.deadline,
                     }),
                 }
             }
@@ -671,7 +725,7 @@ mod tests {
         let mut q = AdmissionQueue::new();
         let trg = ds(10);
         for s in 0..5u64 {
-            q.push(ServeRequest::knn(ds(s), trg.clone(), 3), None);
+            q.push(ServeRequest::knn(ds(s), trg.clone(), 3), None, 0);
         }
         let taken = q.remove_selected(&[1, 3]);
         assert_eq!(taken.iter().map(|p| p.id).collect::<Vec<_>>(), vec![1, 3]);
@@ -687,26 +741,26 @@ mod tests {
         let mut q = AdmissionQueue::new();
         let trg = ds(10);
         let src = ds(1);
-        let now = Instant::now();
-        let later = now + Duration::from_secs(600);
+        let (now, later) = (1_000u64, 900_000u64);
         // 0: expired; 1: far future, NOT identical; 2: far future,
         // identical to 0 (deserialized copy) -> inherits 0's deadline;
         // 3: no deadline.
-        q.push(ServeRequest::knn(src.clone(), trg.clone(), 3), Some(now));
-        q.push(ServeRequest::knn(ds(2), trg.clone(), 3), Some(later));
+        q.push(ServeRequest::knn(src.clone(), trg.clone(), 3), Some(now), 0);
+        q.push(ServeRequest::knn(ds(2), trg.clone(), 3), Some(later), 0);
         q.push(
             ServeRequest::knn(deserialized_copy(&src), deserialized_copy(&trg), 3),
             Some(later),
+            0,
         );
-        q.push(ServeRequest::knn(ds(3), trg.clone(), 3), None);
+        q.push(ServeRequest::knn(ds(3), trg.clone(), 3), None, 0);
         let mut memo = FingerprintMemo::new();
-        let (sel, by_deadline) = policy.select_due(&q, Instant::now(), true, &mut memo);
+        let (sel, by_deadline) = policy.select_due(&q, now, true, &mut memo);
         assert_eq!(sel, vec![0, 2]);
         assert!(by_deadline);
         assert_eq!(memo.full_scans, 0, "identity resolved without point scans");
         // Without dedup, only the expired entry itself is due.
         let mut memo = FingerprintMemo::new();
-        let (sel, _) = policy.select_due(&q, Instant::now(), false, &mut memo);
+        let (sel, _) = policy.select_due(&q, now, false, &mut memo);
         assert_eq!(sel, vec![0]);
     }
 
@@ -716,10 +770,10 @@ mod tests {
         let mut q = AdmissionQueue::new();
         let trg = ds(10);
         for s in 0..3u64 {
-            q.push(ServeRequest::knn(ds(s), trg.clone(), 3), None);
+            q.push(ServeRequest::knn(ds(s), trg.clone(), 3), None, 0);
         }
         let mut memo = FingerprintMemo::new();
-        let (sel, by_deadline) = policy.select_due(&q, Instant::now(), true, &mut memo);
+        let (sel, by_deadline) = policy.select_due(&q, 0, true, &mut memo);
         assert_eq!(sel, vec![0, 1]);
         assert!(!by_deadline, "size trigger is not a deadline flush");
         assert_eq!(policy.select_flush(&q), vec![0, 1]);
@@ -732,11 +786,11 @@ mod tests {
         let policy = FlushPolicy { max_batch: 2, default_deadline: None };
         let mut q = AdmissionQueue::new();
         let trg = ds(10);
-        q.push(ServeRequest::knn(ds(1), trg.clone(), 3), None);
-        q.push(ServeRequest::knn(ds(2), trg.clone(), 3), None);
-        q.push(ServeRequest::knn(ds(3), trg.clone(), 3), Some(Instant::now()));
+        q.push(ServeRequest::knn(ds(1), trg.clone(), 3), None, 0);
+        q.push(ServeRequest::knn(ds(2), trg.clone(), 3), None, 0);
+        q.push(ServeRequest::knn(ds(3), trg.clone(), 3), Some(5), 0);
         let mut memo = FingerprintMemo::new();
-        let (sel, by_deadline) = policy.select_due(&q, Instant::now(), true, &mut memo);
+        let (sel, by_deadline) = policy.select_due(&q, 5, true, &mut memo);
         assert_eq!(sel, vec![0, 2], "due query included, batch topped up from the front");
         assert!(by_deadline);
     }
@@ -746,13 +800,11 @@ mod tests {
         let policy = FlushPolicy { max_batch: 1, default_deadline: None };
         let mut q = AdmissionQueue::new();
         let trg = ds(10);
-        let early = Instant::now();
-        let later = early + Duration::from_millis(1);
-        q.push(ServeRequest::knn(ds(1), trg.clone(), 3), Some(later));
-        q.push(ServeRequest::knn(ds(2), trg, 3), Some(early));
+        let (early, later) = (100u64, 200u64);
+        q.push(ServeRequest::knn(ds(1), trg.clone(), 3), Some(later), 0);
+        q.push(ServeRequest::knn(ds(2), trg, 3), Some(early), 0);
         let mut memo = FingerprintMemo::new();
-        let now = later + Duration::from_millis(1); // both expired
-        let (sel, by_deadline) = policy.select_due(&q, now, true, &mut memo);
+        let (sel, by_deadline) = policy.select_due(&q, 300, true, &mut memo); // both expired
         assert_eq!(sel, vec![1], "the longer-overdue query wins the only slot");
         assert!(by_deadline);
     }
@@ -767,7 +819,7 @@ mod tests {
         memo.fingerprint(&kept);
         memo.fingerprint(&dropped);
         memo.fingerprint(&trg);
-        q.push(ServeRequest::knn(kept.clone(), trg.clone(), 3), None);
+        q.push(ServeRequest::knn(kept.clone(), trg.clone(), 3), None, 0);
         memo.prune(&q);
         assert_eq!(memo.map.len(), 2, "kept src + trg survive, flushed dataset dropped");
         assert!(memo.map.contains_key(&(Arc::as_ptr(&kept) as usize)));
@@ -775,14 +827,18 @@ mod tests {
         assert!(!memo.map.contains_key(&(Arc::as_ptr(&dropped) as usize)));
     }
 
+    fn pending(id: QueryId, req: ServeRequest, deadline: Option<Tick>) -> Pending {
+        Pending { id, req, deadline, submitted_at: 0 }
+    }
+
     #[test]
     fn partition_coalesces_arc_distinct_identical_targets() {
         let trg = ds(10);
         let trg_copy = deserialized_copy(&trg);
         let batch = vec![
-            Pending { id: 0, req: ServeRequest::knn(ds(1), trg.clone(), 3), deadline: None },
-            Pending { id: 1, req: ServeRequest::knn(ds(2), trg_copy, 3), deadline: None },
-            Pending { id: 2, req: ServeRequest::kmeans(ds(3), 4, 2), deadline: None },
+            pending(0, ServeRequest::knn(ds(1), trg.clone(), 3), None),
+            pending(1, ServeRequest::knn(ds(2), trg_copy, 3), None),
+            pending(2, ServeRequest::kmeans(ds(3), 4, 2), None),
         ];
         let mut memo = FingerprintMemo::new();
         let units = partition(&batch, true, &mut memo);
@@ -796,24 +852,44 @@ mod tests {
     }
 
     #[test]
+    fn partition_inherits_the_earliest_member_deadline() {
+        let trg = ds(10);
+        let src = ds(1);
+        let km = ds(3);
+        let batch = vec![
+            // Cohort members: patient, urgent (tick 40), deadline-free.
+            pending(0, ServeRequest::knn(ds(2), trg.clone(), 3), Some(900)),
+            pending(1, ServeRequest::knn(src.clone(), trg.clone(), 3), Some(40)),
+            pending(2, ServeRequest::knn(ds(4), trg.clone(), 3), None),
+            // Dedup pair: the duplicate carries the earlier deadline.
+            pending(3, ServeRequest::kmeans(km.clone(), 4, 2), Some(500)),
+            pending(4, ServeRequest::kmeans(km.clone(), 4, 2), Some(70)),
+            // Deadline-free job stays deadline-free.
+            pending(5, ServeRequest::kmeans(km.clone(), 8, 2), None),
+        ];
+        let mut memo = FingerprintMemo::new();
+        let units = partition(&batch, true, &mut memo);
+        assert_eq!(units.len(), 3, "one cohort + two kmeans jobs");
+        assert_eq!(units[0].deadline(), Some(40), "cohort inherits its most urgent member");
+        assert_eq!(units[1].deadline(), Some(70), "dedup inherits the earlier deadline");
+        assert_eq!(units[2].deadline(), None, "no member deadline -> patient unit");
+    }
+
+    #[test]
     fn cost_estimate_counts_deduplicable_knn_queries_once() {
         let trg = ds(10);
         let src = ds(1);
         let other = ds(2);
         let batch = vec![
-            Pending { id: 0, req: ServeRequest::knn(src.clone(), trg.clone(), 3), deadline: None },
-            Pending { id: 1, req: ServeRequest::knn(src.clone(), trg.clone(), 3), deadline: None },
-            Pending { id: 2, req: ServeRequest::knn(src, trg.clone(), 3), deadline: None },
+            pending(0, ServeRequest::knn(src.clone(), trg.clone(), 3), None),
+            pending(1, ServeRequest::knn(src.clone(), trg.clone(), 3), None),
+            pending(2, ServeRequest::knn(src, trg.clone(), 3), None),
         ];
         let mut memo = FingerprintMemo::new();
         let units = partition(&batch, true, &mut memo);
         assert_eq!(units.len(), 1);
         let single = {
-            let batch = vec![Pending {
-                id: 0,
-                req: ServeRequest::knn(other, trg, 3),
-                deadline: None,
-            }];
+            let batch = vec![pending(0, ServeRequest::knn(other, trg, 3), None)];
             let mut memo = FingerprintMemo::new();
             partition(&batch, true, &mut memo).remove(0)
         };

@@ -1,0 +1,142 @@
+//! Time source of the serving runtime.
+//!
+//! Every deadline decision in `accd::serve` — admission stamping,
+//! `FlushPolicy` due-selection, deadline inheritance, the EDF tier of
+//! the placement planner, urgency-preferring steals and the latency /
+//! miss accounting — reads time from ONE injected [`Clock`] instead of
+//! calling `Instant::now()` directly.  Production uses
+//! [`MonotonicClock`] (a monotonic wall clock); tests inject a
+//! [`VirtualClock`] they advance by hand, so every deadline semantic in
+//! the test tree is exercised deterministically, without a single
+//! `std::thread::sleep`.
+//!
+//! Time is a [`Tick`]: nanoseconds since the clock's epoch (~584 years
+//! of range).  Ticks are plain `u64`s on purpose — deadline algebra is
+//! `min`/`+`/`<=`, test fixtures write literals (`deadline: Some(10)`),
+//! and the type never smuggles a wall-clock anchor into code that must
+//! stay virtual-clock-clean.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A point in time: nanoseconds since the owning clock's epoch.
+pub type Tick = u64;
+
+/// Convert a span into clock ticks (saturating at ~584 years, so
+/// "patient" far-future deadlines can never wrap into the past).
+pub fn ticks(d: Duration) -> Tick {
+    d.as_nanos().min(u64::MAX as u128) as Tick
+}
+
+/// A monotonic time source.  `now()` must never decrease.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> Tick;
+}
+
+/// The production clock: monotonic wall time since construction.
+pub struct MonotonicClock {
+    epoch: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> Self {
+        Self { epoch: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now(&self) -> Tick {
+        ticks(self.epoch.elapsed())
+    }
+}
+
+/// A test-controlled clock: time stands still until the test advances
+/// it.  Clones share the same underlying time, so a test keeps one
+/// handle while the batcher owns another.
+#[derive(Clone, Default)]
+pub struct VirtualClock {
+    now: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    /// A virtual clock starting at tick 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A virtual clock starting at `t`.
+    pub fn at(t: Tick) -> Self {
+        let clock = Self::default();
+        clock.set(t);
+        clock
+    }
+
+    /// Advance by a span.
+    pub fn advance(&self, d: Duration) {
+        self.advance_ticks(ticks(d));
+    }
+
+    /// Advance by raw ticks.
+    pub fn advance_ticks(&self, t: Tick) {
+        self.now.fetch_add(t, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute tick.  Must never move time backwards
+    /// (monotonicity is the one promise of the `Clock` trait).
+    pub fn set(&self, t: Tick) {
+        let prev = self.now.swap(t, Ordering::SeqCst);
+        assert!(prev <= t, "VirtualClock::set moved time backwards: {prev} -> {t}");
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Tick {
+        self.now.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_test_controlled_and_shared() {
+        let clock = VirtualClock::new();
+        let handle = clock.clone();
+        assert_eq!(clock.now(), 0);
+        handle.advance(Duration::from_millis(3));
+        assert_eq!(clock.now(), 3_000_000, "clones share one time line");
+        clock.advance_ticks(5);
+        assert_eq!(handle.now(), 3_000_005);
+        clock.set(10_000_000);
+        assert_eq!(handle.now(), 10_000_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn virtual_clock_refuses_to_rewind() {
+        let clock = VirtualClock::at(100);
+        clock.set(99);
+    }
+
+    #[test]
+    fn monotonic_clock_never_decreases() {
+        let clock = MonotonicClock::new();
+        let a = clock.now();
+        let b = clock.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn ticks_saturates_instead_of_wrapping() {
+        assert_eq!(ticks(Duration::from_nanos(7)), 7);
+        assert_eq!(ticks(Duration::MAX), u64::MAX);
+    }
+}

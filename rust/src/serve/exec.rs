@@ -13,22 +13,28 @@
 //!
 //! With `serve.lockstep` on, a shard runs a **lockstep step
 //! scheduler**: each round it claims at most one new own unit from the
-//! pool (planning it against the shard caches — same-dataset programs
-//! share groupings, packed K-means assignment tiles and KNN target
-//! slabs through the persistent [`SlabCache`]) and then advances every
-//! resident program by exactly one iteration; converged programs
-//! retire into responses.  Off, units run to completion serially (the
-//! pre-lockstep schedule).  Either way results are bit-identical to
-//! solo runs: programs own all their state, so the step schedule
-//! cannot perturb any result.
+//! pool — most urgent deadline first ([`WorkPool::claim_own`]) —
+//! planning it against the shard caches (same-dataset programs share
+//! groupings, packed K-means assignment tiles and KNN target slabs
+//! through the persistent [`SlabCache`]) and then advances every
+//! resident program by exactly one iteration, in deadline-slack order
+//! (earliest inherited deadline first, admission order among equals),
+//! so an urgent program converges — and its response lands — as early
+//! as the round structure allows.  Converged programs retire into
+//! responses.  Off, units run to completion serially (the pre-lockstep
+//! schedule).  Either way results are bit-identical to solo runs:
+//! programs own all their state, so the step schedule cannot perturb
+//! any result.
 //!
-//! When the LPT placement's cost estimates misfire, an **idle** shard
+//! When the placement's cost estimates misfire, an **idle** shard
 //! (nothing resident, own queue empty) steals whole not-yet-started
 //! units from a busy victim ([`WorkPool::steal`];
-//! `serve.steal_threshold` gates it).  [`execute_plan`] fans the
-//! shards out on scoped OS threads and joins them in shard order, so
-//! result assembly stays deterministic (responses carry their
-//! submission slots; stats attribution follows the executing shard).
+//! `serve.steal_threshold` gates it) — preferring the most urgent
+//! at-risk unit (deadline expired at the flush's clock reading) over
+//! the max-cost one.  [`execute_plan`] fans the shards out on scoped
+//! OS threads and joins them in shard order, so result assembly stays
+//! deterministic (responses carry their submission slots; stats and
+//! latency attribution follow the executing shard).
 //!
 //! Failure is all-or-nothing per flush: a shard error aborts the whole
 //! flush; per-shard deltas are only applied by the facade on full
@@ -53,6 +59,7 @@ use crate::{Error, Result};
 
 use super::admission::{KnnCohort, KnnQ, ServeResponse, WorkUnit};
 use super::cache::{GroupingCache, GroupingKey};
+use super::clock::Tick;
 use super::placement::{EnginePool, WorkPool};
 
 /// Per-shard serving state: caches survive across flushes (that is
@@ -90,23 +97,29 @@ pub(crate) struct ShardDelta {
 }
 
 /// Execute one flush's placed units across the pool, concurrently when
-/// more than one shard has (or can steal) work.  `costs` are the same
-/// estimates the planner balanced on (computed once per flush; the
-/// steal threshold compares against them).  Returns the filled
-/// response slots and one delta per shard (empty for idle shards);
-/// `Err` aborts the whole flush (first erroring shard in shard order).
+/// more than one shard has (or can steal) work.  `costs` and
+/// `deadlines` are the same per-unit values the planner balanced on
+/// (computed once per flush; the steal threshold compares against the
+/// costs, claim order and at-risk steals against the deadlines); `now`
+/// is the flush's clock reading.  Returns the filled response slots,
+/// which shard answered each slot (latency attribution), and one delta
+/// per shard (empty for idle shards); `Err` aborts the whole flush
+/// (first erroring shard in shard order).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn execute_plan(
     pool: &mut EnginePool,
     states: &mut [ShardState],
     units: Vec<WorkUnit>,
     costs: Vec<u64>,
+    deadlines: Vec<Option<Tick>>,
     assignments: &[Vec<usize>],
     n_slots: usize,
     cfg: &ServeConfig,
-) -> Result<(Vec<Option<ServeResponse>>, Vec<ShardDelta>)> {
+    now: Tick,
+) -> Result<(Vec<Option<ServeResponse>>, Vec<Option<usize>>, Vec<ShardDelta>)> {
     debug_assert_eq!(pool.shard_count(), assignments.len());
     let n_shards = pool.shard_count();
-    let work_pool = WorkPool::new(units, costs, assignments);
+    let work_pool = WorkPool::new(units, costs, deadlines, assignments);
     // Idle shards spawn as thieves only when stealing could ever fire
     // this flush (the eligibility policy lives in WorkPool).
     let thieves = cfg.steal_threshold > 0
@@ -122,7 +135,7 @@ pub(crate) fn execute_plan(
         // Inline fast path: nothing to overlap, so skip thread spawn.
         for (s, (engine, state)) in engines.iter_mut().zip(states.iter_mut()).enumerate() {
             outcomes.push(if workers[s] {
-                run_shard(engine, state, &work, s, cfg)
+                run_shard(engine, state, &work, s, cfg, now)
             } else {
                 Ok(ShardDelta::default())
             });
@@ -133,7 +146,7 @@ pub(crate) fn execute_plan(
             let work_ref = &work;
             for (s, (engine, state)) in engines.iter_mut().zip(states.iter_mut()).enumerate() {
                 handles.push(if workers[s] {
-                    Some(scope.spawn(move || run_shard(engine, state, work_ref, s, cfg)))
+                    Some(scope.spawn(move || run_shard(engine, state, work_ref, s, cfg, now)))
                 } else {
                     None
                 });
@@ -155,12 +168,14 @@ pub(crate) fn execute_plan(
         deltas.push(outcome?);
     }
     let mut responses: Vec<Option<ServeResponse>> = (0..n_slots).map(|_| None).collect();
-    for delta in &mut deltas {
+    let mut shard_of: Vec<Option<usize>> = vec![None; n_slots];
+    for (s, delta) in deltas.iter_mut().enumerate() {
         for (pos, resp) in delta.responses.drain(..) {
             responses[pos] = Some(resp);
+            shard_of[pos] = Some(s);
         }
     }
-    Ok((responses, deltas))
+    Ok((responses, shard_of, deltas))
 }
 
 /// Commit one successful flush's deltas: fold execution counters into
@@ -217,25 +232,27 @@ fn run_shard(
     work: &Mutex<WorkPool<WorkUnit>>,
     shard: usize,
     cfg: &ServeConfig,
+    now: Tick,
 ) -> Result<ShardDelta> {
     let t0 = Instant::now();
     let mut delta = ShardDelta::default();
     if cfg.lockstep {
-        run_lockstep(engine, state, work, shard, cfg, &mut delta)?;
+        run_lockstep(engine, state, work, shard, cfg, now, &mut delta)?;
     } else {
-        run_serial(engine, state, work, shard, cfg, &mut delta)?;
+        run_serial(engine, state, work, shard, cfg, now, &mut delta)?;
     }
     delta.stats.wall_secs = t0.elapsed().as_secs_f64();
     Ok(delta)
 }
 
-/// Pull one unit from the pool: own queue first, then — only when the
-/// shard is otherwise idle — a steal.
+/// Pull one unit from the pool: own queue first (most urgent
+/// deadline), then — only when the shard is otherwise idle — a steal.
 fn claim(
     work: &Mutex<WorkPool<WorkUnit>>,
     shard: usize,
     cfg: &ServeConfig,
     idle: bool,
+    now: Tick,
     delta: &mut ShardDelta,
 ) -> Option<WorkUnit> {
     let mut pool = work.lock().expect("work pool poisoned");
@@ -243,7 +260,7 @@ fn claim(
         return Some(unit);
     }
     if idle && cfg.steal_threshold > 0 {
-        if let Some(unit) = pool.steal(shard, cfg.steal_threshold) {
+        if let Some(unit) = pool.steal(shard, cfg.steal_threshold, now) {
             delta.stats.steals += 1;
             return Some(unit);
         }
@@ -266,26 +283,34 @@ fn steal_prospect(work: &Mutex<WorkPool<WorkUnit>>, shard: usize, cfg: &ServeCon
 }
 
 /// The lockstep step scheduler: one round = claim at most one new own
-/// unit (plan it against the shard caches), then advance every
-/// resident program by one step; converged programs retire in the
-/// order they entered the resident set (= the shard's claim order;
-/// per-shard queues are ascending unit indices, so this is the
-/// partition order of the shard's units).  Claiming one unit per
-/// round keeps the tail of the queue stealable while co-residency
-/// (and the persistent caches) still shares packed tiles across
-/// same-dataset programs.
+/// unit (most urgent deadline first; plan it against the shard
+/// caches), then advance every resident program by one step in
+/// deadline-slack order — earliest inherited deadline first,
+/// admission order among equals and for deadline-free programs — so
+/// the program whose deadline is tightest is also the first to make
+/// progress (and to retire) each round.  Claiming one unit per round
+/// keeps the tail of the queue stealable while co-residency (and the
+/// persistent caches) still shares packed tiles across same-dataset
+/// programs.  The step order cannot perturb results (programs own
+/// their state); it only decides which response exists earliest.
+#[allow(clippy::too_many_arguments)]
 fn run_lockstep(
     engine: &mut Engine,
     state: &mut ShardState,
     work: &Mutex<WorkPool<WorkUnit>>,
     shard: usize,
     cfg: &ServeConfig,
+    now: Tick,
     delta: &mut ShardDelta,
 ) -> Result<()> {
-    let mut resident: Vec<Option<Resident>> = Vec::new();
+    // (inherited deadline, admission sequence, program): the first two
+    // are the per-round step priority.
+    let mut resident: Vec<Option<(Option<Tick>, usize, Resident)>> = Vec::new();
+    let mut admitted = 0usize;
     loop {
         let idle = resident.is_empty();
-        if let Some(unit) = claim(work, shard, cfg, idle, delta) {
+        if let Some(unit) = claim(work, shard, cfg, idle, now, delta) {
+            let deadline = unit.deadline();
             let hits0 = state.slab_cache.hits;
             let planned = plan_unit(engine, state, unit, cfg)?;
             // Slab-cache hits while planning ALONGSIDE resident
@@ -297,7 +322,8 @@ fn run_lockstep(
                 delta.stats.lockstep_shared_tiles +=
                     state.slab_cache.hits.saturating_sub(hits0);
             }
-            resident.push(Some(planned));
+            resident.push(Some((deadline, admitted, planned)));
+            admitted += 1;
         } else if resident.is_empty() {
             // Nothing to run and nothing stealable *yet*: if a victim
             // still holds a qualifying pending unit (it merely has not
@@ -310,15 +336,21 @@ fn run_lockstep(
             break;
         }
         delta.stats.lockstep_rounds += 1;
-        for slot in resident.iter_mut() {
+        let mut order: Vec<usize> = (0..resident.len()).collect();
+        order.sort_by_key(|&i| {
+            let entry = resident[i].as_ref().expect("resident before stepping");
+            (entry.0.unwrap_or(Tick::MAX), entry.1)
+        });
+        for i in order {
+            let slot = &mut resident[i];
             let converged = match slot.as_mut() {
-                Some(prog) => {
+                Some((_, _, prog)) => {
                     matches!(step_resident(engine, prog)?, StepOutcome::Converged)
                 }
                 None => false,
             };
             if converged {
-                let prog = slot.take().expect("stepped program present");
+                let (_, _, prog) = slot.take().expect("stepped program present");
                 finish_resident(engine, prog, delta)?;
             }
         }
@@ -327,19 +359,21 @@ fn run_lockstep(
     Ok(())
 }
 
-/// The serial schedule (lockstep off): claim, run to completion,
-/// repeat — stealing still applies between units (with the same
-/// wait-for-a-late-victim retry as the lockstep path).
+/// The serial schedule (lockstep off): claim (most urgent first), run
+/// to completion, repeat — stealing still applies between units (with
+/// the same wait-for-a-late-victim retry as the lockstep path).
+#[allow(clippy::too_many_arguments)]
 fn run_serial(
     engine: &mut Engine,
     state: &mut ShardState,
     work: &Mutex<WorkPool<WorkUnit>>,
     shard: usize,
     cfg: &ServeConfig,
+    now: Tick,
     delta: &mut ShardDelta,
 ) -> Result<()> {
     loop {
-        let Some(unit) = claim(work, shard, cfg, true, delta) else {
+        let Some(unit) = claim(work, shard, cfg, true, now, delta) else {
             if steal_prospect(work, shard, cfg) {
                 std::thread::yield_now();
                 continue;

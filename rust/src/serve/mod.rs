@@ -19,10 +19,13 @@
 //!   +-----------------------+--------------------------------+
 //!                           v
 //!   +-- placement -----------------------------------------+
-//!   | ShardPlanner: LPT partition by cohort cost estimate  |
+//!   | ShardPlanner: EDF-tiered LPT partition by inherited  |
+//!   |   unit deadline + cohort cost (serve.placement:      |
+//!   |   "edf-lpt" default | "lpt")                         |
 //!   | EnginePool: N engine shards over one shared Runtime  |
 //!   | WorkPool: shared queue of not-yet-started units;     |
-//!   |   idle shards STEAL from busy ones when LPT misfires |
+//!   |   urgent-first claims; idle shards STEAL from busy   |
+//!   |   ones (most urgent at-risk unit preferred)          |
 //!   +------+------------------------+----------------------+
 //!          v                        v
 //!   +-- exec: shard 0 ----+  +-- exec: shard N-1 --+  scoped
@@ -60,14 +63,23 @@
 //!   shard, byte-budgeted) persist across flushes, keyed by 128-bit
 //!   content fingerprints; identical in-flight queries are
 //!   deduplicated without ever re-scanning points.
+//! * Every deadline decision — admission stamping, `poll`
+//!   due-selection, the planner's EDF tiers, urgent-first claims and
+//!   at-risk steals, latency / miss accounting — reads one injected
+//!   [`Clock`] ([`MonotonicClock`] in production; tests inject a
+//!   [`VirtualClock`] and advance it by hand, so deadline semantics
+//!   are testable without sleeping).
 //! * [`crate::metrics::ServeStats`] reports the merged view
 //!   ([`QueryBatcher::stats`]) and per-shard views
-//!   ([`QueryBatcher::shard_stats`]).
+//!   ([`QueryBatcher::shard_stats`]) — including per-query latency
+//!   percentiles and `deadline_met` / `deadline_misses` counters (a
+//!   late query is answered late and counted, never dropped).
 //!
 //! **Correctness contract:** batched results are identical to running
 //! each query alone through [`Engine`] with the same config — for any
-//! shard count, any flush order, lockstep on or off, stealing on or
-//! off.  Every shared artifact is bit-identical to what the solo path
+//! shard count, any flush order, any placement mode, any deadline
+//! pattern, lockstep on or off, stealing on or off.  Every shared
+//! artifact is bit-identical to what the solo path
 //! would build (deterministic grouping builds, byte-equal target and
 //! assignment slabs, per-tag FIFO tile order), every work unit is
 //! self-contained, and every program owns its iteration state, so
@@ -79,19 +91,22 @@
 
 mod admission;
 mod cache;
+mod clock;
 mod exec;
 mod placement;
 
 pub use admission::{FlushPolicy, QueryId, ServeRequest, ServeResponse};
 pub use cache::{GroupingCache, GroupingKey};
+pub use clock::{ticks, Clock, MonotonicClock, Tick, VirtualClock};
 pub use placement::{EnginePool, ShardPlanner};
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use admission::{AdmissionQueue, FingerprintMemo};
 use exec::ShardState;
 
-use crate::config::ServeConfig;
+use crate::config::{PlacementMode, ServeConfig};
 use crate::coordinator::Engine;
 use crate::metrics::ServeStats;
 use crate::Result;
@@ -100,6 +115,9 @@ use crate::Result;
 pub struct QueryBatcher {
     pool: EnginePool,
     cfg: ServeConfig,
+    /// Parsed once at construction (`cfg.placement` is validated
+    /// there), so the flush path never re-parses.
+    placement: PlacementMode,
     policy: FlushPolicy,
     queue: AdmissionQueue,
     /// Dataset fingerprints, memoized across polls/flushes and pruned
@@ -107,6 +125,10 @@ pub struct QueryBatcher {
     memo: FingerprintMemo,
     shards: Vec<ShardState>,
     stats: ServeStats,
+    /// The injected time source every deadline decision reads
+    /// ([`MonotonicClock`] by default; tests inject a
+    /// [`VirtualClock`]).
+    clock: Arc<dyn Clock>,
 }
 
 impl QueryBatcher {
@@ -124,22 +146,49 @@ impl QueryBatcher {
 
     /// Fallible construction: the config is validated here, so an
     /// invalid `ServeConfig` (zero shards, zero pipeline depth, zero
-    /// grouping-cache capacity) can never reach the serving runtime.
-    /// `slab_cache_bytes == 0` is legal and means the per-shard slab
-    /// cache is *disabled*.
+    /// grouping-cache capacity, unknown placement policy) can never
+    /// reach the serving runtime.  `slab_cache_bytes == 0` is legal
+    /// and means the per-shard slab cache is *disabled*.  Deadlines
+    /// run on a fresh [`MonotonicClock`]; use
+    /// [`QueryBatcher::try_new_with_clock`] to inject a
+    /// [`VirtualClock`] for deterministic deadline tests.
     pub fn try_new(engine: Engine, cfg: ServeConfig) -> Result<Self> {
+        Self::try_new_with_clock(engine, cfg, Arc::new(MonotonicClock::new()))
+    }
+
+    /// Like [`QueryBatcher::new`], with an injected clock; panics on
+    /// an invalid config.
+    pub fn with_clock(engine: Engine, cfg: ServeConfig, clock: Arc<dyn Clock>) -> Self {
+        match Self::try_new_with_clock(engine, cfg, clock) {
+            Ok(batcher) => batcher,
+            Err(e) => panic!("invalid serve config: {e}"),
+        }
+    }
+
+    /// Like [`QueryBatcher::try_new`], but every deadline decision —
+    /// admission stamping, `poll` due-selection, EDF placement,
+    /// urgency-preferring steals, latency / miss accounting — reads
+    /// the given clock.
+    pub fn try_new_with_clock(
+        engine: Engine,
+        cfg: ServeConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Self> {
         cfg.validate()?;
+        let placement = cfg.placement_mode().expect("validated above");
         let pool = EnginePool::new(engine, cfg.shards)?;
         let shards = (0..pool.shard_count()).map(|_| ShardState::new(&cfg)).collect();
         let policy = FlushPolicy::from_config(&cfg);
         Ok(Self {
             pool,
             cfg,
+            placement,
             policy,
             queue: AdmissionQueue::new(),
             memo: FingerprintMemo::new(),
             shards,
             stats: ServeStats::default(),
+            clock,
         })
     }
 
@@ -148,13 +197,16 @@ impl QueryBatcher {
     /// [`QueryBatcher::flush`], or at a [`QueryBatcher::poll`] once
     /// due.
     pub fn submit(&mut self, req: ServeRequest) -> QueryId {
-        let deadline = self.policy.admission_deadline(Instant::now());
-        self.queue.push(req, deadline)
+        let now = self.clock.now();
+        let deadline = self.policy.admission_deadline(now);
+        self.queue.push(req, deadline, now)
     }
 
-    /// Enqueue a request that becomes due `deadline` from now.
+    /// Enqueue a request that becomes due `deadline` from now (on the
+    /// batcher's clock).
     pub fn submit_with_deadline(&mut self, req: ServeRequest, deadline: Duration) -> QueryId {
-        self.queue.push(req, Some(Instant::now() + deadline))
+        let now = self.clock.now();
+        self.queue.push(req, Some(now.saturating_add(ticks(deadline))), now)
     }
 
     /// Number of queries waiting for a flush.
@@ -162,9 +214,18 @@ impl QueryBatcher {
         self.queue.len()
     }
 
-    /// Earliest pending deadline — when the next `poll` could have
-    /// work (absent a size trigger).
-    pub fn next_deadline(&self) -> Option<Instant> {
+    /// The batcher's current clock reading.  [`QueryBatcher::next_deadline`]
+    /// is on the same timeline, so a serving loop sleeps for
+    /// `next_deadline().map(|d| d.saturating_sub(batcher.now()))`
+    /// nanoseconds before its next poll.
+    pub fn now(&self) -> Tick {
+        self.clock.now()
+    }
+
+    /// Earliest pending deadline, in ticks of the batcher's clock
+    /// (compare with [`QueryBatcher::now`]) — when the next `poll`
+    /// could have work (absent a size trigger).
+    pub fn next_deadline(&self) -> Option<Tick> {
         self.queue.next_deadline()
     }
 
@@ -198,8 +259,9 @@ impl QueryBatcher {
     /// the error is returned.  A query that fails validation must be
     /// removed or fixed by the caller before retrying.
     pub fn flush(&mut self) -> Result<Vec<(QueryId, ServeResponse)>> {
+        let now = self.clock.now();
         let sel = self.policy.select_flush(&self.queue);
-        self.run_selected(sel, false)
+        self.run_selected(sel, false, now)
     }
 
     /// Execute only what the [`FlushPolicy`] says is due now: queries
@@ -209,17 +271,27 @@ impl QueryBatcher {
     /// returning an empty vec when nothing is due.  Same failure
     /// contract as [`QueryBatcher::flush`].
     pub fn poll(&mut self) -> Result<Vec<(QueryId, ServeResponse)>> {
+        let now = self.clock.now();
         let (sel, deadline_driven) =
-            self.policy.select_due(&self.queue, Instant::now(), self.cfg.dedup, &mut self.memo);
-        self.run_selected(sel, deadline_driven)
+            self.policy.select_due(&self.queue, now, self.cfg.dedup, &mut self.memo);
+        self.run_selected(sel, deadline_driven, now)
     }
 
-    /// Shared flush core: validate, drain, partition, place, execute,
-    /// commit stats (only on full success), prune the memo.
+    /// Shared flush core: validate, drain, partition, place (deadline
+    /// aware under `edf-lpt`), execute, commit stats + latency / miss
+    /// accounting (only on full success), prune the memo.
+    ///
+    /// `flush_now` is the SELECTION-time clock reading of the calling
+    /// `poll`/`flush` — passed in rather than re-read, so a
+    /// deadline-triggered query selected exactly at expiry
+    /// (`deadline <= now` in `select_due`) is judged against that same
+    /// instant and counts met, not an ε-miss from a second,
+    /// strictly-later monotonic read.
     fn run_selected(
         &mut self,
         sel: Vec<usize>,
         deadline_driven: bool,
+        flush_now: Tick,
     ) -> Result<Vec<(QueryId, ServeResponse)>> {
         if sel.is_empty() {
             return Ok(Vec::new());
@@ -232,18 +304,22 @@ impl QueryBatcher {
         let batch = self.queue.remove_selected(&sel);
         let units = admission::partition(&batch, self.cfg.dedup, &mut self.memo);
         let costs: Vec<u64> = units.iter().map(|u| u.cost_estimate(self.cfg.dedup)).collect();
-        let assignments = ShardPlanner::partition(&costs, self.pool.shard_count());
+        let deadlines: Vec<Option<Tick>> = units.iter().map(|u| u.deadline()).collect();
+        let assignments =
+            ShardPlanner::plan(&costs, &deadlines, self.pool.shard_count(), self.placement);
         let executed = exec::execute_plan(
             &mut self.pool,
             &mut self.shards,
             units,
             costs,
+            deadlines,
             &assignments,
             batch.len(),
             &self.cfg,
+            flush_now,
         );
         let out = match executed {
-            Ok((responses, deltas)) => {
+            Ok((responses, shard_of, deltas)) => {
                 self.stats.flushes += 1;
                 if deadline_driven {
                     self.stats.deadline_flushes += 1;
@@ -252,6 +328,27 @@ impl QueryBatcher {
                 self.stats.content_full_scans = self.memo.full_scans;
                 self.stats.wall_secs += t0.elapsed().as_secs_f64();
                 exec::commit_deltas(&mut self.shards, &deltas, &mut self.stats);
+                // Latency / deadline accounting: one sample per
+                // answered query, on the merged view and on the
+                // executing shard's.  Latency runs submit -> response
+                // (`done`, read after execution: a real clock yields
+                // true completion latency).  Met/missed is judged at
+                // service START (`flush_now`): a deadline-triggered
+                // poll fires exactly when `deadline <= now`, so
+                // judging by completion would brand every such query
+                // an epsilon-miss by construction; "missed" instead
+                // means the scheduler had not even started serving
+                // the query by its deadline (a backlog, not the
+                // unavoidable execution tail — that tail stays
+                // visible in the latency percentiles).
+                let done = self.clock.now();
+                for (slot, p) in batch.iter().enumerate() {
+                    let latency = done.saturating_sub(p.submitted_at);
+                    let missed = p.deadline.map(|d| flush_now > d);
+                    self.stats.record_latency(latency, missed);
+                    let shard = shard_of[slot].expect("every query answered");
+                    self.shards[shard].stats.record_latency(latency, missed);
+                }
                 Ok(batch
                     .into_iter()
                     .zip(responses)

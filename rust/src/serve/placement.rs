@@ -9,25 +9,41 @@
 //!
 //! Placement cannot affect results: every work unit is self-contained
 //! (the parity contract holds for any shard count), so the planner is
-//! free to optimize purely for balance.  It uses the classic LPT
-//! (longest-processing-time-first) greedy — sort units by descending
-//! cost, assign each to the least-loaded shard — which is within 4/3
-//! of the optimal makespan and, with deterministic tie-breaking, makes
-//! placement reproducible run to run.
+//! free to optimize for balance and urgency.  Two policies exist
+//! ([`crate::config::PlacementMode`], `serve.placement`):
 //!
-//! LPT balances *a-priori estimates*; when they misfire (skewed filter
-//! survival, a cohort converging early), the [`WorkPool`] corrects at
-//! runtime: shard queues hold not-yet-started units, shards claim
-//! their own units incrementally (one per lockstep round), and an idle
-//! shard **steals** whole not-yet-started units from a busy victim.
-//! Stealing relocates only work, never state — units are
+//! * **`lpt`** — the classic LPT (longest-processing-time-first)
+//!   greedy: sort units by descending cost, assign each to the
+//!   least-loaded shard — within 4/3 of the optimal makespan and,
+//!   with deterministic tie-breaking, reproducible run to run.
+//! * **`edf-lpt`** (default) — the slack-weighted planner: units are
+//!   ordered into earliest-deadline-first *tiers* (units sharing a
+//!   deadline form one tier; deadline-free units form the last tier),
+//!   LPT order within each tier, then the same least-loaded greedy.
+//!   Urgent units are therefore assigned while shards are still
+//!   lightly loaded — and, combined with the [`WorkPool`]'s
+//!   deadline-ordered claims, are claimed first on their shard.  With
+//!   no deadlines (or one shared deadline) the tier structure
+//!   collapses and `edf-lpt` IS pure LPT.
+//!
+//! The planner balances *a-priori estimates*; when they misfire
+//! (skewed filter survival, a cohort converging early), the
+//! [`WorkPool`] corrects at runtime: shard queues hold not-yet-started
+//! units, shards claim their own units incrementally (one per lockstep
+//! round, most urgent first), and an idle shard **steals** whole
+//! not-yet-started units from a busy victim — preferring the most
+//! urgent at-risk unit when a deadline has expired, the max-cost unit
+//! otherwise.  Stealing relocates only work, never state — units are
 //! self-contained, so results stay bit-identical; only which shard's
 //! caches warm up changes.
 
 use std::collections::VecDeque;
 
+use crate::config::PlacementMode;
 use crate::coordinator::Engine;
 use crate::Result;
+
+use super::clock::Tick;
 
 /// A pool of independent engine shards sharing one runtime.
 pub struct EnginePool {
@@ -65,18 +81,47 @@ impl EnginePool {
     }
 }
 
-/// Cost-balancing partitioner of work units onto shards.
+/// Cost- and deadline-balancing partitioner of work units onto shards.
 pub struct ShardPlanner;
 
 impl ShardPlanner {
-    /// Assign unit indices to shards, balancing total cost (LPT
-    /// greedy).  Returns one ascending index list per shard; every
-    /// index in `0..costs.len()` appears exactly once.  Deterministic:
-    /// cost ties break by unit index, load ties by shard index.
+    /// Pure-LPT assignment (no deadline information): equivalent to
+    /// [`ShardPlanner::plan`] with [`PlacementMode::Lpt`].
     pub fn partition(costs: &[u64], shards: usize) -> Vec<Vec<usize>> {
+        Self::plan(costs, &vec![None; costs.len()], shards, PlacementMode::Lpt)
+    }
+
+    /// Assign unit indices to shards.  Returns one ascending index
+    /// list per shard; every index in `0..costs.len()` appears exactly
+    /// once.  Deterministic throughout: deadline ties fall back to the
+    /// LPT order, cost ties break by unit index, load ties by shard
+    /// index.
+    ///
+    /// Assignment order is the policy (see module docs):
+    /// * [`PlacementMode::Lpt`] — descending cost.
+    /// * [`PlacementMode::EdfLpt`] — earliest-deadline-first tiers
+    ///   (deadline-free units last), descending cost within a tier.
+    ///
+    /// Each ordered unit goes to the least-loaded shard, so under
+    /// `EdfLpt` the most urgent units land on still-empty shards.
+    /// All-same-deadline (or all-`None`) degenerates to pure LPT.
+    pub fn plan(
+        costs: &[u64],
+        deadlines: &[Option<Tick>],
+        shards: usize,
+        mode: PlacementMode,
+    ) -> Vec<Vec<usize>> {
+        debug_assert_eq!(costs.len(), deadlines.len());
         let shards = shards.max(1);
         let mut order: Vec<usize> = (0..costs.len()).collect();
-        order.sort_by(|&a, &b| costs[b].cmp(&costs[a]).then(a.cmp(&b)));
+        let tier = |i: usize| match mode {
+            // One flat tier: deadlines are invisible to pure LPT.
+            PlacementMode::Lpt => 0u64,
+            PlacementMode::EdfLpt => deadlines[i].unwrap_or(Tick::MAX),
+        };
+        order.sort_by(|&a, &b| {
+            tier(a).cmp(&tier(b)).then(costs[b].cmp(&costs[a])).then(a.cmp(&b))
+        });
         let mut load = vec![0u64; shards];
         let mut out = vec![Vec::new(); shards];
         for i in order {
@@ -96,10 +141,12 @@ impl ShardPlanner {
 }
 
 /// Flush-scoped shared queue of not-yet-started work units, one
-/// pending FIFO per shard (behind one mutex at the execution layer).
+/// pending queue per shard (behind one mutex at the execution layer).
 ///
-/// Shards pull their *own* pending units via [`WorkPool::claim_own`];
-/// an idle shard (nothing resident, own queue empty) may
+/// Shards pull their *own* pending units via [`WorkPool::claim_own`] —
+/// most urgent deadline first, placement order among equals — so an
+/// urgent unit is never parked behind a patient one on its own shard.
+/// An idle shard (nothing resident, own queue empty) may
 /// [`WorkPool::steal`] from a victim.  Steal rules, all deterministic:
 ///
 /// * only not-yet-started units move — a running program stays where
@@ -107,15 +154,20 @@ impl ShardPlanner {
 /// * the victim must have claimed at least one unit already (a shard
 ///   that has not even started is about to run its queue itself;
 ///   robbing it would merely relocate work and its cache warm-up);
-/// * the most expensive eligible unit wins (ties: lowest unit index),
-///   and it must cost at least `min_cost` — tiny units are not worth
-///   migrating.
+/// * every candidate must cost at least `min_cost` — tiny units are
+///   not worth migrating;
+/// * when any candidate's deadline is **at risk** (expired at `now`),
+///   the most urgent such unit wins (ties: higher cost, then lowest
+///   unit index) — an idle thief rescues the deadline instead of
+///   grabbing bulk; otherwise the most expensive candidate wins
+///   (ties: lowest unit index), the classic makespan correction.
 ///
 /// Generic over the unit type so the policy is testable without
 /// constructing real cohorts.
 pub(crate) struct WorkPool<T> {
     slots: Vec<Option<T>>,
     costs: Vec<u64>,
+    deadlines: Vec<Option<Tick>>,
     pending: Vec<VecDeque<usize>>,
     claimed: Vec<usize>,
 }
@@ -123,20 +175,38 @@ pub(crate) struct WorkPool<T> {
 impl<T> WorkPool<T> {
     /// `assignments[s]` lists the unit indices the planner gave shard
     /// `s` (each index in `0..units.len()` at most once).
-    pub fn new(units: Vec<T>, costs: Vec<u64>, assignments: &[Vec<usize>]) -> Self {
+    pub fn new(
+        units: Vec<T>,
+        costs: Vec<u64>,
+        deadlines: Vec<Option<Tick>>,
+        assignments: &[Vec<usize>],
+    ) -> Self {
         debug_assert_eq!(units.len(), costs.len());
+        debug_assert_eq!(units.len(), deadlines.len());
         Self {
             slots: units.into_iter().map(Some).collect(),
             costs,
+            deadlines,
             pending: assignments.iter().map(|idxs| idxs.iter().copied().collect()).collect(),
             claimed: vec![0; assignments.len()],
         }
     }
 
-    /// Next not-yet-started unit assigned to `shard`, in placement
-    /// order.
+    /// Queue position `claim_own` would take next for `shard`: the
+    /// pending unit with the earliest deadline (deadline-free units
+    /// last), placement order among equals.
+    fn claim_pos(&self, shard: usize) -> Option<usize> {
+        let queue = &self.pending[shard];
+        (0..queue.len())
+            .min_by_key(|&pos| (self.deadlines[queue[pos]].unwrap_or(Tick::MAX), pos))
+    }
+
+    /// Next not-yet-started unit assigned to `shard`, most urgent
+    /// deadline first (placement order among equals and for
+    /// deadline-free units).
     pub fn claim_own(&mut self, shard: usize) -> Option<T> {
-        let i = self.pending[shard].pop_front()?;
+        let pos = self.claim_pos(shard)?;
+        let i = self.pending[shard].remove(pos).expect("claim position in range");
         self.claimed[shard] += 1;
         Some(self.slots[i].take().expect("unit claimed twice"))
     }
@@ -154,22 +224,28 @@ impl<T> WorkPool<T> {
         })
     }
 
-    /// Whether any queue's *tail* — everything behind the first unit,
-    /// which its owner always claims before anything becomes stealable
-    /// — holds a unit meeting the cost bar: i.e. whether stealing
-    /// could ever fire at all.  The execution layer uses this to
-    /// decide whether idle shards spawn as thieves for a flush.
+    /// Whether any queue's *tail* — everything behind the unit its
+    /// owner will claim first, which happens before anything becomes
+    /// stealable — holds a unit meeting the cost bar: i.e. whether
+    /// stealing could ever fire at all.  The execution layer uses this
+    /// to decide whether idle shards spawn as thieves for a flush.
     pub fn any_tail_prospect(&self, min_cost: u64) -> bool {
-        self.pending.iter().any(|queue| {
-            queue.len() >= 2
-                && queue.iter().skip(1).any(|&i| self.costs[i].max(1) >= min_cost)
+        (0..self.pending.len()).any(|shard| {
+            let queue = &self.pending[shard];
+            queue.len() >= 2 && {
+                let first = self.claim_pos(shard).expect("non-empty queue");
+                (0..queue.len())
+                    .any(|pos| pos != first && self.costs[queue[pos]].max(1) >= min_cost)
+            }
         })
     }
 
-    /// Steal the best eligible unit for `thief` (see type docs for the
-    /// rules), or `None` when nothing qualifies.
-    pub fn steal(&mut self, thief: usize, min_cost: u64) -> Option<T> {
-        let mut best: Option<(u64, usize, usize)> = None; // (cost, unit, victim)
+    /// Steal the best eligible unit for `thief` at time `now` (see
+    /// type docs for the rules), or `None` when nothing qualifies.
+    pub fn steal(&mut self, thief: usize, min_cost: u64, now: Tick) -> Option<T> {
+        // (at-risk deadline or MAX, cost, unit, victim); at-risk units
+        // dominate, then urgency, then the plain max-cost rule.
+        let mut best: Option<(Tick, u64, usize, usize)> = None;
         for victim in 0..self.pending.len() {
             if victim == thief || self.claimed[victim] == 0 {
                 continue;
@@ -182,16 +258,24 @@ impl<T> WorkPool<T> {
                 if cost < min_cost {
                     continue;
                 }
+                let risk = match self.deadlines[i] {
+                    Some(d) if d <= now => d,
+                    _ => Tick::MAX,
+                };
                 let better = match best {
                     None => true,
-                    Some((bc, bi, _)) => cost > bc || (cost == bc && i < bi),
+                    Some((br, bc, bi, _)) => {
+                        risk < br
+                            || (risk == br && cost > bc)
+                            || (risk == br && cost == bc && i < bi)
+                    }
                 };
                 if better {
-                    best = Some((cost, i, victim));
+                    best = Some((risk, cost, i, victim));
                 }
             }
         }
-        let (_, i, victim) = best?;
+        let (_, _, i, victim) = best?;
         self.pending[victim].retain(|&x| x != i);
         self.claimed[thief] += 1;
         Some(self.slots[i].take().expect("unit stolen twice"))
@@ -251,11 +335,90 @@ mod tests {
         assert_eq!(parts[1].len(), 2);
     }
 
-    /// Units "a".."e" with costs, shard 0 owns 0..=2, shard 1 owns 3..=4.
+    // --- the EDF-LPT planner ------------------------------------------
+
+    /// Reconstruct the planner's assignment order for one shard: which
+    /// unit is claimed first under deadline-ordered claims.
+    fn first_claim(parts: &[Vec<usize>], shard: usize, deadlines: &[Option<Tick>]) -> usize {
+        *parts[shard]
+            .iter()
+            .min_by_key(|&&i| deadlines[i].unwrap_or(Tick::MAX))
+            .expect("shard has units")
+    }
+
+    #[test]
+    fn edf_orders_deadline_tiers_before_cost() {
+        // Unit 2 is tiny but urgent; units 0/1 are heavy and patient.
+        let costs = [100, 80, 10];
+        let deadlines = [None, None, Some(5u64)];
+        let parts = ShardPlanner::plan(&costs, &deadlines, 2, PlacementMode::EdfLpt);
+        // EDF tier first: the urgent unit is assigned while both
+        // shards are empty -> shard 0, and its shard's remaining load
+        // (80) is the lighter one.
+        assert!(parts[0].contains(&2), "urgent unit must go to the first empty shard");
+        assert_eq!(parts[0], vec![1, 2]);
+        assert_eq!(parts[1], vec![0]);
+        assert_eq!(first_claim(&parts, 0, &deadlines), 2, "urgent unit claimed first");
+        // Pure LPT ignores the deadline: 100 -> s0, 80 -> s1, urgent
+        // 10 queues BEHIND the 80 on s1.
+        let lpt = ShardPlanner::plan(&costs, &deadlines, 2, PlacementMode::Lpt);
+        assert_eq!(lpt[0], vec![0]);
+        assert_eq!(lpt[1], vec![1, 2]);
+    }
+
+    #[test]
+    fn edf_ties_fall_back_to_lpt_and_degenerate_cases_are_pure_lpt() {
+        let costs = [5, 1, 9, 3, 3, 7];
+        // All-same-deadline: one tier -> identical to pure LPT.
+        let same = vec![Some(40u64); costs.len()];
+        assert_eq!(
+            ShardPlanner::plan(&costs, &same, 2, PlacementMode::EdfLpt),
+            ShardPlanner::partition(&costs, 2)
+        );
+        // All-None: also one (last) tier -> pure LPT.
+        let none = vec![None; costs.len()];
+        assert_eq!(
+            ShardPlanner::plan(&costs, &none, 2, PlacementMode::EdfLpt),
+            ShardPlanner::partition(&costs, 2)
+        );
+        // Deterministic: same inputs, same plan.
+        let mixed = [Some(9u64), None, Some(3), Some(9), None, Some(3)];
+        assert_eq!(
+            ShardPlanner::plan(&costs, &mixed, 3, PlacementMode::EdfLpt),
+            ShardPlanner::plan(&costs, &mixed, 3, PlacementMode::EdfLpt)
+        );
+        // Every unit appears exactly once under every mode.
+        for mode in [PlacementMode::Lpt, PlacementMode::EdfLpt] {
+            let parts = ShardPlanner::plan(&costs, &mixed, 3, mode);
+            assert_eq!(flatten(parts), (0..costs.len()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn edf_sorts_no_deadline_units_last() {
+        // One shard: the assignment order IS the claim order modulo
+        // the ascending-index normalization, so probe via claim_pos
+        // through a WorkPool instead.
+        let costs = [4, 4, 4];
+        let deadlines = [None, Some(50u64), Some(20u64)];
+        let parts = ShardPlanner::plan(&costs, &deadlines, 1, PlacementMode::EdfLpt);
+        assert_eq!(parts, vec![vec![0, 1, 2]]);
+        let mut p: WorkPool<u32> =
+            WorkPool::new(vec![10, 11, 12], costs.to_vec(), deadlines.to_vec(), &parts);
+        assert_eq!(p.claim_own(0), Some(12), "earliest deadline first");
+        assert_eq!(p.claim_own(0), Some(11));
+        assert_eq!(p.claim_own(0), Some(10), "deadline-free unit last");
+    }
+
+    // --- the work pool -------------------------------------------------
+
+    /// Units "a".."e" with costs, shard 0 owns 0..=2, shard 1 owns
+    /// 3..=4.  No deadlines: claims stay placement-ordered FIFO.
     fn pool() -> WorkPool<&'static str> {
         WorkPool::new(
             vec!["a", "b", "c", "d", "e"],
             vec![5, 9, 2, 4, 4],
+            vec![None; 5],
             &[vec![0, 1, 2], vec![3, 4]],
         )
     }
@@ -271,12 +434,25 @@ mod tests {
     }
 
     #[test]
+    fn claim_own_prefers_the_most_urgent_unit() {
+        let mut p: WorkPool<&'static str> = WorkPool::new(
+            vec!["patient", "urgent", "no-deadline"],
+            vec![9, 1, 9],
+            vec![Some(100), Some(10), None],
+            &[vec![0, 1, 2]],
+        );
+        assert_eq!(p.claim_own(0), Some("urgent"));
+        assert_eq!(p.claim_own(0), Some("patient"));
+        assert_eq!(p.claim_own(0), Some("no-deadline"));
+    }
+
+    #[test]
     fn steal_requires_a_started_victim() {
         let mut p = pool();
         // Shard 0 has not claimed anything yet: nothing is stealable —
         // but its queue IS a prospect, so an idle thief waits instead
         // of exiting.
-        assert!(p.steal(1, 1).is_none());
+        assert!(p.steal(1, 1, 0).is_none());
         assert!(p.stealable_prospect(1, 1));
         assert!(!p.stealable_prospect(1, 100), "no unit meets a cost bar of 100");
         // Tail prospect (the thief-spawn gate): shard 0's tail [b, c]
@@ -287,9 +463,9 @@ mod tests {
         // Once shard 0 started, its backlog is fair game — the most
         // expensive pending unit goes first.
         assert_eq!(p.claim_own(0), Some("a"));
-        assert_eq!(p.steal(1, 1), Some("b"));
-        assert_eq!(p.steal(1, 1), Some("c"));
-        assert!(p.steal(1, 1).is_none(), "victim's queue drained");
+        assert_eq!(p.steal(1, 1, 0), Some("b"));
+        assert_eq!(p.steal(1, 1, 0), Some("c"));
+        assert!(p.steal(1, 1, 0).is_none(), "victim's queue drained");
         assert!(!p.stealable_prospect(1, 1), "no prospect left either");
         // The victim keeps claiming what is left of its own queue.
         assert_eq!(p.claim_own(0), None);
@@ -300,25 +476,60 @@ mod tests {
         let mut p = pool();
         p.claim_own(0);
         // Threshold above every pending cost: no steal.
-        assert!(p.steal(1, 100).is_none());
+        assert!(p.steal(1, 100, 0).is_none());
         // "b" (cost 9) qualifies at threshold 9; "c" (cost 2) does not.
-        assert_eq!(p.steal(1, 9), Some("b"));
-        assert!(p.steal(1, 9).is_none());
+        assert_eq!(p.steal(1, 9, 0), Some("b"));
+        assert!(p.steal(1, 9, 0).is_none());
     }
 
     #[test]
     fn steal_never_takes_from_the_thief_and_ties_break_low() {
-        let mut p: WorkPool<u32> =
-            WorkPool::new(vec![10, 11, 12], vec![4, 4, 4], &[vec![0, 1], vec![2]]);
+        let mut p: WorkPool<u32> = WorkPool::new(
+            vec![10, 11, 12],
+            vec![4, 4, 4],
+            vec![None; 3],
+            &[vec![0, 1], vec![2]],
+        );
         p.claim_own(0);
         p.claim_own(1);
         // Thief 1: only shard 0's pending unit 1 is eligible (its own
         // queue is never a victim).
-        assert_eq!(p.steal(1, 1), Some(11));
+        assert_eq!(p.steal(1, 1, 0), Some(11));
         // Equal costs tie-break by unit index.
-        let mut p: WorkPool<u32> =
-            WorkPool::new(vec![20, 21, 22], vec![4, 4, 4], &[vec![0, 1, 2], vec![]]);
+        let mut p: WorkPool<u32> = WorkPool::new(
+            vec![20, 21, 22],
+            vec![4, 4, 4],
+            vec![None; 3],
+            &[vec![0, 1, 2], vec![]],
+        );
         p.claim_own(0);
-        assert_eq!(p.steal(1, 1), Some(21));
+        assert_eq!(p.steal(1, 1, 0), Some(21));
+    }
+
+    #[test]
+    fn steal_prefers_the_most_urgent_at_risk_unit() {
+        // Victim backlog: a heavy patient unit, a light unit whose
+        // deadline expired at tick 10, and a lighter one expired at 5.
+        let mut p: WorkPool<&'static str> = WorkPool::new(
+            vec!["tiny", "heavy", "late10", "late5"],
+            vec![1, 50, 8, 3],
+            vec![None, None, Some(10), Some(5)],
+            &[vec![0, 1, 2, 3], vec![]],
+        );
+        assert_eq!(p.claim_own(0), Some("late5"), "owner claims most urgent first");
+        // At tick 20 both remaining deadlines are at risk... only
+        // late10 is left with one; urgency beats the heavy unit.
+        assert_eq!(p.steal(1, 1, 20), Some("late10"));
+        // No at-risk unit left: fall back to max-cost.
+        assert_eq!(p.steal(1, 1, 20), Some("heavy"));
+        // Before any deadline expires, the plain max-cost rule holds.
+        let mut p: WorkPool<&'static str> = WorkPool::new(
+            vec!["tiny", "heavy", "urgent-later"],
+            vec![1, 50, 3],
+            vec![None, None, Some(1_000)],
+            &[vec![0, 2, 1], vec![]],
+        );
+        assert_eq!(p.claim_own(0), Some("urgent-later"));
+        assert_eq!(p.steal(1, 1, 0), Some("heavy"), "nothing at risk at tick 0");
     }
 }

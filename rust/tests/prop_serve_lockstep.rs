@@ -1,18 +1,24 @@
 //! Property test for the lockstep serving schedule: batched K-means /
 //! N-body cohorts through `serve::QueryBatcher` must equal sequential
 //! solo runs **bit-for-bit** across random iteration caps, random
-//! cohort mixes and shard counts 1 / 2 / 4 — with lockstep stepping
-//! and work stealing at their defaults (on).  This is the executable
-//! form of the stepwise-program safety argument: programs own all
-//! their iteration state, so no step schedule, placement or migration
-//! can perturb a result.
+//! cohort mixes, random *deadline permutations*, both placement modes
+//! (`lpt` / `edf-lpt`) and shard counts 1 / 2 / 4 — with lockstep
+//! stepping and work stealing at their defaults (on).  Deadlines run
+//! on a `VirtualClock` the property advances in waves, so the
+//! deadline-driven flush order, EDF placement tiers, urgent-first
+//! claims and step priority are all exercised without a single sleep
+//! — and none of them may perturb a single bit.  This is the
+//! executable form of the stepwise-program safety argument: programs
+//! own all their iteration state, so no step schedule, placement or
+//! migration can perturb a result.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use accd::config::AccdConfig;
 use accd::coordinator::Engine;
 use accd::data::synthetic;
-use accd::serve::{QueryBatcher, ServeRequest, ServeResponse};
+use accd::serve::{QueryBatcher, ServeRequest, ServeResponse, VirtualClock};
 use accd::util::prop::{self, Config};
 
 /// Exact comparison of one served response against the solo run.
@@ -89,28 +95,73 @@ fn prop_lockstep_batched_iterative_cohorts_equal_sequential() {
                     0.2,
                 ));
             }
-            reqs
+            // Random deadline permutation: each query is patient
+            // (None) or due at a random millisecond within the two
+            // poll waves — duplicates may straddle waves, exercising
+            // deadline inheritance across the identity class.
+            let deadlines: Vec<Option<u64>> = reqs
+                .iter()
+                .map(|_| {
+                    if rng.below(4) == 0 {
+                        None
+                    } else {
+                        Some(1 + rng.below(50) as u64)
+                    }
+                })
+                .collect();
+            reqs.into_iter().zip(deadlines).collect::<Vec<_>>()
         },
-        |reqs| {
+        |cases| {
             let mut solo = Engine::new(AccdConfig::new()).map_err(|e| e.to_string())?;
-            for shards in [1usize, 2, 4] {
-                let mut cfg = AccdConfig::new();
-                cfg.serve.shards = shards;
-                if !cfg.serve.lockstep || cfg.serve.steal_threshold == 0 {
-                    return Err("lockstep + stealing must default on".into());
-                }
-                let engine = Engine::new(cfg.clone()).map_err(|e| e.to_string())?;
-                let mut batcher = QueryBatcher::new(engine, cfg.serve.clone());
-                for req in reqs {
-                    batcher.submit(req.clone());
-                }
-                let out = batcher.flush().map_err(|e| e.to_string())?;
-                if out.len() != reqs.len() {
-                    return Err(format!("{} responses for {} queries", out.len(), reqs.len()));
-                }
-                for (i, (_, resp)) in out.iter().enumerate() {
-                    let what = format!("{shards} shards, query {i}");
-                    check_against_solo(resp, &reqs[i], &mut solo, &what)?;
+            for placement in ["lpt", "edf-lpt"] {
+                for shards in [1usize, 2, 4] {
+                    let mut cfg = AccdConfig::new();
+                    cfg.serve.shards = shards;
+                    cfg.serve.placement = placement.to_string();
+                    if !cfg.serve.lockstep || cfg.serve.steal_threshold == 0 {
+                        return Err("lockstep + stealing must default on".into());
+                    }
+                    let engine = Engine::new(cfg.clone()).map_err(|e| e.to_string())?;
+                    let clock = VirtualClock::new();
+                    let mut batcher = QueryBatcher::with_clock(
+                        engine,
+                        cfg.serve.clone(),
+                        Arc::new(clock.clone()),
+                    );
+                    for (req, deadline) in cases {
+                        match deadline {
+                            Some(ms) => batcher.submit_with_deadline(
+                                req.clone(),
+                                Duration::from_millis(*ms),
+                            ),
+                            None => batcher.submit(req.clone()),
+                        };
+                    }
+                    // Two deadline waves, then the patient remainder:
+                    // three different batch compositions per config.
+                    let mut out: Vec<(u64, ServeResponse)> = Vec::new();
+                    clock.advance(Duration::from_millis(25));
+                    out.extend(batcher.poll().map_err(|e| e.to_string())?);
+                    clock.advance(Duration::from_millis(35));
+                    out.extend(batcher.poll().map_err(|e| e.to_string())?);
+                    out.extend(batcher.flush().map_err(|e| e.to_string())?);
+                    if out.len() != cases.len() {
+                        return Err(format!(
+                            "{} responses for {} queries",
+                            out.len(),
+                            cases.len()
+                        ));
+                    }
+                    if batcher.stats().deadline_misses + batcher.stats().deadline_met
+                        != cases.iter().filter(|(_, d)| d.is_some()).count() as u64
+                    {
+                        return Err("every deadline query must be met or missed".into());
+                    }
+                    for (id, resp) in &out {
+                        let qi = *id as usize;
+                        let what = format!("{placement}, {shards} shards, query {qi}");
+                        check_against_solo(resp, &cases[qi].0, &mut solo, &what)?;
+                    }
                 }
             }
             Ok(())

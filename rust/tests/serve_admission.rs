@@ -3,6 +3,10 @@
 //! fingerprint-based identity fast path — plus the batcher-facade
 //! behaviors that used to live in `serve/mod.rs` unit tests (order,
 //! dedup, max_batch overflow, failure recovery, cache warmth).
+//!
+//! Deadline-triggered behavior is driven through an injected
+//! `VirtualClock` — no test here (or anywhere in the serve suite)
+//! sleeps to make a deadline expire.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -10,7 +14,7 @@ use std::time::Duration;
 use accd::config::AccdConfig;
 use accd::coordinator::Engine;
 use accd::data::{synthetic, Dataset};
-use accd::serve::{QueryBatcher, ServeRequest};
+use accd::serve::{QueryBatcher, ServeRequest, VirtualClock};
 
 fn batcher() -> QueryBatcher {
     let cfg = AccdConfig::new();
@@ -23,6 +27,18 @@ fn batcher_with(tweak: impl FnOnce(&mut AccdConfig)) -> QueryBatcher {
     tweak(&mut cfg);
     let engine = Engine::new(cfg.clone()).unwrap();
     QueryBatcher::new(engine, cfg.serve.clone())
+}
+
+/// A batcher on a test-controlled clock: deadlines expire when the
+/// test advances `clock`, never by sleeping.
+fn batcher_with_clock(
+    tweak: impl FnOnce(&mut AccdConfig),
+    clock: &VirtualClock,
+) -> QueryBatcher {
+    let mut cfg = AccdConfig::new();
+    tweak(&mut cfg);
+    let engine = Engine::new(cfg.clone()).unwrap();
+    QueryBatcher::with_clock(engine, cfg.serve.clone(), Arc::new(clock.clone()))
 }
 
 /// A bitwise copy behind a fresh `Arc` — what deserializing the same
@@ -101,7 +117,10 @@ fn poll_on_empty_or_not_yet_due_queue_is_a_noop() {
     assert!(b.poll().unwrap().is_empty(), "not-yet-due query must keep waiting");
     assert_eq!(b.pending_len(), 1);
     assert_eq!(b.stats().flushes, 0);
-    assert!(b.next_deadline().is_some());
+    // next_deadline is on the batcher's own clock: a serving loop can
+    // compute how long to wait before the next poll.
+    let wait = b.next_deadline().expect("deadline pending").saturating_sub(b.now());
+    assert!(wait > 0 && wait <= FAR.as_nanos() as u64, "wait {wait} ticks");
 }
 
 #[test]
@@ -178,15 +197,49 @@ fn poll_size_trigger_takes_a_full_batch() {
 
 #[test]
 fn default_deadline_from_config_applies_to_submit() {
-    let mut b = batcher_with(|c| c.serve.deadline_ms = 1);
+    let clock = VirtualClock::new();
+    let mut b = batcher_with_clock(|c| c.serve.deadline_ms = 5, &clock);
     let trg = Arc::new(synthetic::clustered(200, 4, 4, 0.05, 1));
     let src = Arc::new(synthetic::clustered(40, 4, 3, 0.05, 2));
     b.submit(ServeRequest::knn(src, trg, 3));
     assert!(b.next_deadline().is_some());
-    std::thread::sleep(Duration::from_millis(5));
+    // One tick short of the default deadline: still waiting.
+    clock.advance(Duration::from_millis(5) - Duration::from_nanos(1));
+    assert!(b.poll().unwrap().is_empty(), "deadline not reached yet");
+    // At exactly the deadline the query is due — and met, not missed.
+    clock.advance(Duration::from_nanos(1));
     let out = b.poll().unwrap();
     assert_eq!(out.len(), 1, "default deadline expired; poll must flush");
     assert_eq!(b.stats().deadline_flushes, 1);
+    assert_eq!(b.stats().deadline_met, 1);
+    assert_eq!(b.stats().deadline_misses, 0);
+}
+
+#[test]
+fn deadline_inheritance_is_deterministic_on_a_virtual_clock() {
+    // The dedup-inheritance semantics of `poll`, with the expiry
+    // driven by the test instead of a zero deadline: a patient copy of
+    // an urgent query rides along the moment the urgent twin expires.
+    let clock = VirtualClock::new();
+    let mut b = batcher_with_clock(|_| {}, &clock);
+    let trg = Arc::new(synthetic::clustered(200, 4, 4, 0.05, 1));
+    let src = Arc::new(synthetic::clustered(40, 4, 3, 0.05, 2));
+    let urgent_req = ServeRequest::knn(src.clone(), trg.clone(), 3);
+    let id_urgent = b.submit_with_deadline(urgent_req, Duration::from_millis(10));
+    let id_patient = b.submit_with_deadline(ServeRequest::knn(src, trg, 3), FAR);
+    clock.advance(Duration::from_millis(9));
+    assert!(b.poll().unwrap().is_empty(), "nothing due at 9ms");
+    clock.advance(Duration::from_millis(1));
+    let out = b.poll().unwrap();
+    assert_eq!(out.len(), 2, "patient duplicate must inherit the expired deadline");
+    assert_eq!((out[0].0, out[1].0), (id_urgent, id_patient));
+    assert_eq!(b.stats().dedup_hits, 1);
+    // Served at exactly its deadline: the urgent query is met; the
+    // patient twin (far-future deadline) is met trivially.
+    assert_eq!(b.stats().deadline_met, 2);
+    assert_eq!(b.stats().deadline_misses, 0);
+    // Both latency samples are the full 10 virtual milliseconds.
+    assert_eq!(b.stats().latency_ns, vec![10_000_000, 10_000_000]);
 }
 
 // --- fingerprint-based identity (no full point scans) ------------------

@@ -1,0 +1,277 @@
+//! Deadline-aware serving, end to end, on a virtual clock.
+//!
+//! A seeded scenario harness submits mixed KNN / K-means cohorts with
+//! staggered deadlines against a `QueryBatcher` whose time source is a
+//! test-controlled `VirtualClock`, then drives the clock wave by wave
+//! and asserts the deadline contract:
+//!
+//! (a) urgent cohorts place onto lightly-loaded shards (EDF-LPT
+//!     spreads same-tier urgent units while pure LPT piles them
+//!     behind the heavy unit's counterweight),
+//! (b) `deadline_misses == 0` when capacity suffices (every wave is
+//!     served at exactly its deadline tick),
+//! (c) when capacity does NOT suffice, misses are *counted* — never
+//!     silently dropped: every query is still answered, correctly.
+//!
+//! No sleeps anywhere: every deadline expiry is a clock advance.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use accd::config::{AccdConfig, PlacementMode};
+use accd::coordinator::Engine;
+use accd::data::synthetic;
+use accd::serve::{QueryBatcher, ServeRequest, ShardPlanner, VirtualClock};
+
+const MS: u64 = 1_000_000; // ticks per millisecond
+
+fn clocked_batcher(
+    clock: &VirtualClock,
+    tweak: impl FnOnce(&mut AccdConfig),
+) -> QueryBatcher {
+    let mut cfg = AccdConfig::new();
+    tweak(&mut cfg);
+    let engine = Engine::new(cfg.clone()).unwrap();
+    QueryBatcher::with_clock(engine, cfg.serve.clone(), Arc::new(clock.clone()))
+}
+
+/// One scenario query: the request, its deadline (from scenario start)
+/// and the wave (poll round) that must serve it.
+struct Planned {
+    req: ServeRequest,
+    deadline: Option<Duration>,
+    wave: usize,
+}
+
+/// The seeded staggered-deadline workload: three 10 ms waves of mixed
+/// KNN / K-means cohorts (wave 3 includes a patient duplicate that
+/// must ride along via deadline inheritance), plus a deadline-free
+/// straggler served only by the final explicit flush (wave 3).
+fn staggered_scenario(seed: u64) -> Vec<Planned> {
+    let trg_a = Arc::new(synthetic::clustered(300, 4, 6, 0.03, seed));
+    let trg_b = Arc::new(synthetic::clustered(220, 4, 5, 0.03, seed + 1));
+    let km_ds = Arc::new(synthetic::clustered(260, 5, 6, 0.03, seed + 2));
+    let src = |s: u64, n: usize| Arc::new(synthetic::clustered(n, 4, 4, 0.04, seed + 10 + s));
+    let wave3_src = src(4, 70);
+    let ms = Duration::from_millis;
+    let planned = |req: ServeRequest, deadline: Option<Duration>, wave: usize| Planned {
+        req,
+        deadline,
+        wave,
+    };
+    vec![
+        // Wave 0 (10 ms): one KNN + one K-means.
+        planned(ServeRequest::knn(src(0, 60), trg_a.clone(), 5), Some(ms(10)), 0),
+        planned(ServeRequest::kmeans(km_ds.clone(), 6, 3), Some(ms(10)), 0),
+        // Wave 1 (20 ms): same KNN cohort target, new source; another
+        // K-means on the same dataset (different k: not a duplicate).
+        planned(ServeRequest::knn(src(1, 80), trg_a.clone(), 5), Some(ms(20)), 1),
+        planned(ServeRequest::kmeans(km_ds.clone(), 9, 3), Some(ms(20)), 1),
+        // Wave 2 (30 ms): a second cohort + a patient duplicate that
+        // inherits the 30 ms deadline from its identical twin.
+        planned(ServeRequest::knn(wave3_src.clone(), trg_b.clone(), 4), Some(ms(30)), 2),
+        planned(ServeRequest::knn(wave3_src, trg_b, 4), Some(ms(3_600_000)), 2),
+        // Deadline-free straggler: only the explicit flush serves it.
+        planned(ServeRequest::kmeans(km_ds, 4, 2), None, 3),
+    ]
+}
+
+/// Exact parity of one response against the solo engine — every
+/// result field, same rigor as `serve_parity.rs`'s comparisons (a
+/// deadline-scheduling regression must not hide in an unchecked
+/// field).
+fn assert_solo_parity(
+    resp: &accd::serve::ServeResponse,
+    req: &ServeRequest,
+    solo: &mut Engine,
+    what: &str,
+) {
+    match req {
+        ServeRequest::Knn { src, trg, k, metric } => {
+            let want = solo.knn_join_metric(src, trg, *k, *metric).expect("solo knn");
+            let got = resp.as_knn().unwrap_or_else(|| panic!("{what}: wrong kind"));
+            assert_eq!(got.k, want.k, "{what}: k");
+            assert_eq!(got.neighbors, want.neighbors, "{what}: knn diverged");
+        }
+        ServeRequest::Kmeans { ds, k, max_iters } => {
+            let want = solo.kmeans(ds, *k, *max_iters).expect("solo kmeans");
+            let got = resp.as_kmeans().unwrap_or_else(|| panic!("{what}: wrong kind"));
+            assert_eq!(got.assign, want.assign, "{what}: kmeans diverged");
+            assert_eq!(got.sse, want.sse, "{what}: kmeans sse diverged");
+            assert_eq!(got.iterations, want.iterations, "{what}: kmeans iterations diverged");
+            assert_eq!(
+                got.centers.as_slice(),
+                want.centers.as_slice(),
+                "{what}: kmeans centers diverged"
+            );
+        }
+        ServeRequest::Nbody { .. } => unreachable!("scenario has no N-body queries"),
+    }
+}
+
+/// (b) Capacity suffices: the harness polls at exactly each wave's
+/// deadline tick, so every deadline is met, nothing is missed, and
+/// every response equals the solo run — across shard counts and both
+/// placement modes.
+#[test]
+fn staggered_waves_meet_every_deadline_when_capacity_suffices() {
+    let scenario_seed = 0xD0_5E;
+    let mut solo = Engine::new(AccdConfig::new()).expect("engine");
+    for placement in ["edf-lpt", "lpt"] {
+        for shards in [1usize, 2, 4] {
+            let clock = VirtualClock::new();
+            let mut b = clocked_batcher(&clock, |c| {
+                c.serve.shards = shards;
+                c.serve.placement = placement.to_string();
+            });
+            let plan = staggered_scenario(scenario_seed);
+            let ids: Vec<_> = plan
+                .iter()
+                .map(|p| match p.deadline {
+                    Some(d) => b.submit_with_deadline(p.req.clone(), d),
+                    None => b.submit(p.req.clone()),
+                })
+                .collect();
+
+            // Wave polls at deadline ticks 10/20/30 ms, then the
+            // explicit flush for the deadline-free straggler.
+            let mut served: Vec<(u64, accd::serve::ServeResponse)> = Vec::new();
+            for wave in 0..3usize {
+                clock.advance(Duration::from_millis(10));
+                let out = b.poll().expect("wave poll");
+                let want: Vec<u64> = plan
+                    .iter()
+                    .zip(&ids)
+                    .filter(|(p, _)| p.wave == wave)
+                    .map(|(_, id)| *id)
+                    .collect();
+                let got: Vec<u64> = out.iter().map(|(id, _)| *id).collect();
+                assert_eq!(got, want, "{placement}/{shards}: wave {wave} membership");
+                served.extend(out);
+            }
+            served.extend(b.flush().expect("final flush"));
+            assert_eq!(served.len(), plan.len(), "every query answered");
+
+            let stats = b.stats();
+            assert_eq!(stats.deadline_misses, 0, "{placement}/{shards}: {stats:?}");
+            // Six queries carried a deadline (incl. the inheriting
+            // duplicate); the straggler had none.
+            assert_eq!(stats.deadline_met, 6, "{placement}/{shards}: {stats:?}");
+            assert_eq!(stats.latency_ns.len(), plan.len());
+            assert!(stats.latency_p50_ms() > 0.0, "virtual latency must be visible");
+            // Per-shard accounting folds up to the merged view.
+            let met: u64 = b.shard_stats().iter().map(|s| s.deadline_met).sum();
+            let missed: u64 = b.shard_stats().iter().map(|s| s.deadline_misses).sum();
+            let samples: usize = b.shard_stats().iter().map(|s| s.latency_ns.len()).sum();
+            assert_eq!((met, missed, samples), (6, 0, plan.len()));
+
+            for (id, resp) in &served {
+                let qi = ids.iter().position(|x| x == id).expect("known id");
+                let what = format!("{placement}/{shards}: query {qi}");
+                assert_solo_parity(resp, &plan[qi].req, &mut solo, &what);
+            }
+        }
+    }
+}
+
+/// (c) Capacity does NOT suffice: the clock jumps far past every
+/// deadline before service happens (the virtual-clock stand-in for an
+/// overloaded pool).  Every miss is counted, every query is still
+/// answered — late, correct, never dropped.
+#[test]
+fn overload_counts_misses_and_drops_nothing() {
+    let clock = VirtualClock::new();
+    let mut b = clocked_batcher(&clock, |c| c.serve.shards = 2);
+    let plan = staggered_scenario(0xBEEF);
+    let with_deadline =
+        plan.iter().filter(|p| p.deadline.is_some()).count() as u64;
+    let ids: Vec<_> = plan
+        .iter()
+        .map(|p| match p.deadline {
+            Some(d) => b.submit_with_deadline(p.req.clone(), d),
+            None => b.submit(p.req.clone()),
+        })
+        .collect();
+    // 10 virtual minutes late: every wave deadline expires; only the
+    // patient duplicate's hour-long deadline survives.
+    clock.advance(Duration::from_secs(600));
+    let mut served = b.poll().expect("overload poll");
+    served.extend(b.flush().expect("final flush"));
+    assert_eq!(served.len(), ids.len(), "late queries are answered, not dropped");
+    let stats = b.stats();
+    // The 3600-second duplicate is still within its own deadline at
+    // t=600 s — it rides along via inheritance and is MET; the other
+    // five deadline queries all missed.
+    assert_eq!(stats.deadline_misses, with_deadline - 1, "{stats:?}");
+    assert_eq!(stats.deadline_met, 1, "{stats:?}");
+    assert_eq!(stats.latency_ns.len(), plan.len());
+    // Latency tells the true story: ~600 s p50, not a rosy zero.
+    assert!(stats.latency_p50_ms() >= 600_000.0, "{}", stats.latency_p50_ms());
+
+    let mut solo = Engine::new(AccdConfig::new()).expect("engine");
+    for (id, resp) in &served {
+        let qi = ids.iter().position(|x| x == id).expect("known id");
+        assert_solo_parity(resp, &plan[qi].req, &mut solo, &format!("late query {qi}"));
+    }
+}
+
+/// (a) Urgent cohorts place onto lightly-loaded shards.  Two equal
+/// urgent units and one heavy patient unit over two shards: EDF-LPT
+/// assigns the urgent tier first, spreading one urgent unit per
+/// shard; pure LPT assigns the heavy unit first and parks BOTH urgent
+/// units behind it on the other shard.  Asserted at the planner level
+/// and end to end via per-shard deadline accounting.
+#[test]
+fn urgent_units_spread_across_lightly_loaded_shards() {
+    // Planner level: the same-tier urgent units 1 and 2 must not share
+    // a shard under EDF-LPT.
+    let costs = [100_000u64, 1_000, 1_000];
+    let deadlines = [None, Some(5 * MS), Some(5 * MS)];
+    let edf = ShardPlanner::plan(&costs, &deadlines, 2, PlacementMode::EdfLpt);
+    let shard_of = |parts: &Vec<Vec<usize>>, unit: usize| {
+        parts.iter().position(|p| p.contains(&unit)).expect("placed")
+    };
+    assert_ne!(
+        shard_of(&edf, 1),
+        shard_of(&edf, 2),
+        "EDF must spread the urgent tier across shards: {edf:?}"
+    );
+    let lpt = ShardPlanner::plan(&costs, &deadlines, 2, PlacementMode::Lpt);
+    assert_eq!(
+        shard_of(&lpt, 1),
+        shard_of(&lpt, 2),
+        "pure LPT counterweights the heavy unit with both urgent ones: {lpt:?}"
+    );
+
+    // End to end: one heavy patient K-means + two small urgent ones on
+    // distinct datasets, flushed together at t=0 (stealing off so the
+    // plan IS the execution).  Per-shard deadline_met shows where the
+    // urgent queries ran: [1, 1] under EDF-LPT, [0, 2] under LPT.
+    let heavy = Arc::new(synthetic::clustered(600, 5, 8, 0.03, 21));
+    let fast_a = Arc::new(synthetic::clustered(120, 5, 4, 0.04, 22));
+    let fast_b = Arc::new(synthetic::clustered(120, 5, 4, 0.04, 23));
+    let rush = Duration::from_millis(5);
+    let submit = |b: &mut QueryBatcher| {
+        b.submit(ServeRequest::kmeans(heavy.clone(), 12, 6));
+        b.submit_with_deadline(ServeRequest::kmeans(fast_a.clone(), 4, 2), rush);
+        b.submit_with_deadline(ServeRequest::kmeans(fast_b.clone(), 4, 2), rush);
+    };
+    let mut met_by_mode = Vec::new();
+    for placement in ["edf-lpt", "lpt"] {
+        let clock = VirtualClock::new();
+        let mut b = clocked_batcher(&clock, |c| {
+            c.serve.shards = 2;
+            c.serve.steal_threshold = 0;
+            c.serve.placement = placement.to_string();
+        });
+        submit(&mut b);
+        let out = b.flush().expect("flush");
+        assert_eq!(out.len(), 3);
+        assert_eq!(b.stats().deadline_met, 2, "urgent pair served within deadline");
+        let mut met: Vec<u64> = b.shard_stats().iter().map(|s| s.deadline_met).collect();
+        met.sort_unstable();
+        met_by_mode.push((placement, met));
+    }
+    assert_eq!(met_by_mode[0], ("edf-lpt", vec![1, 1]), "EDF spreads urgency");
+    assert_eq!(met_by_mode[1], ("lpt", vec![0, 2]), "LPT piles urgency on one shard");
+}

@@ -422,6 +422,90 @@ fn lockstep_kmeans_cohort_shares_assignment_tiles() {
     assert!(stats.grouping_cache_hits >= 2, "grouping shared too: {stats:?}");
 }
 
+/// Run one request through a solo engine, wrapped as a `ServeResponse`
+/// for exact comparison.
+fn solo_response(solo: &mut Engine, req: &ServeRequest) -> ServeResponse {
+    match req {
+        ServeRequest::Knn { src, trg, k, metric } => {
+            ServeResponse::Knn(solo.knn_join_metric(src, trg, *k, *metric).expect("solo knn"))
+        }
+        ServeRequest::Kmeans { ds, k, max_iters } => {
+            ServeResponse::Kmeans(solo.kmeans(ds, *k, *max_iters).expect("solo kmeans"))
+        }
+        ServeRequest::Nbody { ds, masses, steps, dt, radius } => ServeResponse::Nbody(
+            solo.nbody(ds, masses.as_slice(), *steps, *dt, *radius).expect("solo nbody"),
+        ),
+    }
+}
+
+fn assert_same_response(got: &ServeResponse, want: &ServeResponse, what: &str) {
+    match (got, want) {
+        (ServeResponse::Knn(g), ServeResponse::Knn(w)) => {
+            assert_eq!(g.k, w.k, "{what}: k");
+            assert_eq!(g.neighbors, w.neighbors, "{what}: neighbors");
+        }
+        (ServeResponse::Kmeans(g), ServeResponse::Kmeans(w)) => {
+            assert_eq!(g.assign, w.assign, "{what}: assignment");
+            assert_eq!(g.sse, w.sse, "{what}: sse (exact)");
+            assert_eq!(g.iterations, w.iterations, "{what}: iterations");
+            assert_eq!(g.centers.as_slice(), w.centers.as_slice(), "{what}: centers");
+        }
+        (ServeResponse::Nbody(g), ServeResponse::Nbody(w)) => {
+            assert_eq!(g.positions.as_slice(), w.positions.as_slice(), "{what}: positions");
+            assert_eq!(g.velocities.as_slice(), w.velocities.as_slice(), "{what}: velocities");
+        }
+        _ => panic!("{what}: response kind mismatch"),
+    }
+}
+
+/// The deadline-aware acceptance sweep: the mixed workload with
+/// staggered urgency, bit-for-bit under BOTH placement modes, with
+/// stealing off and on, for shard counts 1 / 2 / 4.  Deadlines steer
+/// EDF tiers, urgent-first claims, step priority and at-risk steals —
+/// none of which may change a single bit.
+#[test]
+fn placement_modes_and_stealing_are_bit_transparent() {
+    let queries = mixed_workload();
+    let mut solo = fresh_engine();
+    let want: Vec<ServeResponse> =
+        queries.iter().map(|q| solo_response(&mut solo, q)).collect();
+    for placement in ["lpt", "edf-lpt"] {
+        for steal in [0u64, 1] {
+            for shards in [1usize, 2, 4] {
+                let mut cfg = AccdConfig::new();
+                cfg.serve.shards = shards;
+                cfg.serve.steal_threshold = steal;
+                cfg.serve.placement = placement.to_string();
+                let mut batcher =
+                    QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), cfg.serve);
+                for (i, q) in queries.iter().enumerate() {
+                    // Every other query urgent (already due), the rest
+                    // patient: units span EDF tiers.
+                    if i % 2 == 0 {
+                        batcher.submit_with_deadline(q.clone(), Duration::ZERO);
+                    } else {
+                        batcher.submit_with_deadline(q.clone(), Duration::from_secs(3600));
+                    }
+                }
+                let out = batcher.flush().expect("flush");
+                assert_eq!(out.len(), queries.len());
+                for (i, (_, resp)) in out.iter().enumerate() {
+                    let what =
+                        format!("{placement}, steal={steal}, {shards} shards, query {i}");
+                    assert_same_response(resp, &want[i], &what);
+                }
+                // Every deadline resolved to met or missed, none lost.
+                let stats = batcher.stats();
+                assert_eq!(
+                    stats.deadline_met + stats.deadline_misses,
+                    queries.len() as u64,
+                    "{stats:?}"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn deadline_driven_flush_order_preserves_parity() {
     let queries = mixed_workload();
