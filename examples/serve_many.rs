@@ -8,7 +8,10 @@
 //! honours per-query deadlines: `poll()` flushes only what is due, so
 //! a latency-sensitive query never waits for patient ones — while
 //! returning results identical to solo `Engine` calls (see
-//! rust/tests/serve_parity.rs).
+//! rust/tests/serve_parity.rs).  `next_wakeup()` tells a serving loop
+//! when it next has to act (size trigger met -> now; else the
+//! earliest deadline), and the always-on `Server` at the end runs
+//! that loop on its own scheduler thread.
 //!
 //! Run with:  cargo run --release --example serve_many
 
@@ -18,7 +21,7 @@ use std::time::{Duration, Instant};
 use accd::config::AccdConfig;
 use accd::coordinator::Engine;
 use accd::data::synthetic;
-use accd::serve::{QueryBatcher, ServeRequest, ServeResponse};
+use accd::serve::{QueryBatcher, Server, ServeRequest, ServeResponse};
 
 fn main() -> anyhow::Result<()> {
     let cfg = AccdConfig::new();
@@ -48,7 +51,17 @@ fn main() -> anyhow::Result<()> {
     }
     batcher.submit(ServeRequest::kmeans(catalog.clone(), 32, 8));
     batcher.submit(ServeRequest::nbody(particles, masses, 3, 1e-3, 0.12));
-    println!("submitted {} queries; polling...", batcher.pending_len());
+
+    // next_wakeup() is what a serving loop sleeps until: the urgent
+    // query is already due, so it reads "act now", not the patient
+    // burst's one-hour deadline.
+    let wake = batcher.next_wakeup().expect("pending queries imply a wake-up");
+    let now = batcher.now();
+    println!(
+        "submitted {} queries; next_wakeup() is {} -> polling...",
+        batcher.pending_len(),
+        if wake <= now { "already due".to_string() } else { format!("in {} ns", wake - now) }
+    );
 
     let polled = batcher.poll()?;
     println!(
@@ -117,6 +130,37 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         stats.deadline_met + stats.deadline_misses > 0,
         "deadline queries must be accounted met or missed"
+    );
+
+    // --- The always-on Server: same runtime, no manual polling ------------
+    // `serve::Server` owns the loop the code above drove by hand: a
+    // scheduler thread sleeps until `next_wakeup()`, producers submit
+    // from any thread and block on their own `ResponseHandle`, and
+    // shutdown drains every accepted query before returning the
+    // merged stats.
+    let server = Server::new(Engine::new(cfg.clone())?, cfg.serve.clone());
+    let mut handles = Vec::new();
+    for user in 0..4u64 {
+        let src = Arc::new(synthetic::clustered(300, 8, 6, 0.03, 150 + user));
+        handles.push(server.submit_with_deadline(
+            ServeRequest::knn(src, catalog.clone(), 10),
+            Duration::from_millis(5),
+        )?);
+    }
+    println!("\nserver: submitted 4 queries; waiting on their handles...");
+    for (i, handle) in handles.into_iter().enumerate() {
+        let resp = handle.wait()?;
+        let r = resp.as_knn().expect("knn response");
+        println!("  server query {i}: knn k={} -> {} result rows", r.k, r.neighbors.len());
+    }
+    let sstats = server.shutdown();
+    println!(
+        "server: {} queries in {} flushes | {} shed (intake high-water {})",
+        sstats.queries, sstats.flushes, sstats.shed, sstats.queue_depth_watermark
+    );
+    anyhow::ensure!(
+        sstats.latency_ns.len() == 4 && sstats.shed == 0,
+        "the server must answer every accepted query"
     );
     Ok(())
 }

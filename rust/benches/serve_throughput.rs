@@ -8,7 +8,12 @@
 //! a deadline/latency scenario (EDF-LPT placement, staggered generous
 //! deadlines) that emits p50/p95/p99 latency + deadline met/miss
 //! counts and FAILS the smoke run if the deadline-aware planner
-//! misses a deadline despite sufficient capacity.
+//! misses a deadline despite sufficient capacity, plus two open-loop
+//! arrival-trace scenarios (seeded Poisson and bursty) driven through
+//! the always-on `serve::Server` on a `VirtualClock` — producers
+//! submit on the arrival schedule without waiting for responses, the
+//! scheduler thread wakes on the registered clock waker, and the rows
+//! record q/s, latency percentiles and shed/backpressure counters.
 //!
 //! The batched path amortizes exactly what a serving deployment
 //! amortizes: the target grouping is built once per cohort instead of
@@ -32,19 +37,24 @@ use std::time::{Duration, Instant};
 use accd::config::AccdConfig;
 use accd::coordinator::Engine;
 use accd::data::{synthetic, Dataset};
-use accd::serve::{QueryBatcher, ServeRequest};
+use accd::metrics::ServeStats;
+use accd::serve::{QueryBatcher, ServeRequest, Server, VirtualClock};
 use accd::util::bench::{fmt_x, Table};
 use accd::util::json::{self, Value};
+use accd::util::rng::Rng;
 
-/// One scenario's machine-readable record.
+/// One scenario's machine-readable record.  Takes the merged stats
+/// view directly so both the caller-driven `QueryBatcher` scenarios
+/// and the always-on `Server` scenarios (whose batcher lives on the
+/// scheduler thread) emit identical rows.
 fn scenario_row(
     name: &str,
     queries: usize,
     wall_secs: f64,
     speedup: f64,
-    batcher: &QueryBatcher,
+    stats: &ServeStats,
+    shards: usize,
 ) -> Value {
-    let stats = batcher.stats();
     let slab_total = stats.slab_cache_hits + stats.slab_cache_misses;
     let shared_tile_rate = if slab_total == 0 {
         0.0
@@ -58,7 +68,7 @@ fn scenario_row(
         ("wall_secs", json::num(wall_secs)),
         ("qps", json::num(queries as f64 / wall_secs.max(1e-12))),
         ("speedup_vs_sequential", json::num(speedup)),
-        ("shards", json::num(batcher.shard_count() as f64)),
+        ("shards", json::num(shards as f64)),
         ("tiles_shared_ratio", json::num(stats.tiles_shared_ratio())),
         ("slab_hit_rate", json::num(stats.slab_hit_rate())),
         ("lockstep_rounds", json::num(stats.lockstep_rounds as f64)),
@@ -70,6 +80,9 @@ fn scenario_row(
         ("latency_p99_ms", json::num(lat_p99)),
         ("deadline_met", json::num(stats.deadline_met as f64)),
         ("deadline_misses", json::num(stats.deadline_misses as f64)),
+        ("shed", json::num(stats.shed as f64)),
+        ("queue_depth_watermark", json::num(stats.queue_depth_watermark as f64)),
+        ("flush_failures", json::num(stats.flush_failures as f64)),
     ])
 }
 
@@ -151,7 +164,8 @@ fn main() {
             queries.len(),
             secs,
             seq_secs / secs,
-            &batcher,
+            batcher.stats(),
+            batcher.shard_count(),
         ));
     }
     table.print("Batched serving vs sequential engine calls (shard sweep)");
@@ -193,7 +207,8 @@ fn main() {
         queries.len() * rounds,
         warm_secs,
         (seq_secs * rounds as f64) / warm_secs.max(1e-12),
-        &batcher,
+        batcher.stats(),
+        batcher.shard_count(),
     ));
 
     if !any_shared || stats.tiles_shared == 0 {
@@ -261,7 +276,8 @@ fn main() {
         km_ks.len(),
         km_secs,
         km_seq_secs / km_secs,
-        &km_batcher,
+        km_batcher.stats(),
+        km_batcher.shard_count(),
     ));
 
     if km_stats.lockstep_shared_tiles == 0 {
@@ -315,7 +331,8 @@ fn main() {
         queries.len(),
         lat_secs,
         seq_secs / lat_secs.max(1e-12),
-        &lat_batcher,
+        lat_batcher.stats(),
+        lat_batcher.shard_count(),
     ));
     if lat_stats.deadline_misses > 0 || lat_stats.deadline_met != queries.len() as u64 {
         eprintln!(
@@ -327,6 +344,93 @@ fn main() {
         );
         std::process::exit(1);
     }
+
+    // --- Open-loop arrival traces through the always-on Server ------------
+    // The same 12 KNN queries, now arriving on a schedule instead of
+    // pre-loaded: the producer jumps a VirtualClock to each arrival
+    // tick and submits WITHOUT waiting for earlier responses (open
+    // loop — arrivals do not slow down when the server does).  The
+    // scheduler thread coalesces whatever has arrived by each
+    // deadline expiry, so one trace exercises many wake-ups, partial
+    // batches and drain-on-shutdown.  Two canned traces, both seeded
+    // and fully deterministic:
+    //   poisson — exponential inter-arrivals, ~2 ms mean;
+    //   burst   — 4-query bursts every 10 ms (arrival spikes).
+    let poisson_trace: Vec<u64> = {
+        let mut rng = Rng::new(0xA221_7A1E);
+        let mut at = 0u64;
+        (0..queries.len())
+            .map(|_| {
+                at += (-(1.0 - rng.f64()).ln() * 2_000_000.0) as u64 + 1;
+                at
+            })
+            .collect()
+    };
+    let burst_trace: Vec<u64> =
+        (0..queries.len()).map(|i| (i / 4) as u64 * 10_000_000).collect();
+    let mut open_table = Table::new(&["trace", "wall (s)", "q/s", "p99 (ms)", "flushes"]);
+    for (trace_name, trace) in [("poisson", &poisson_trace), ("burst", &burst_trace)] {
+        let mut serve_cfg = cfg.serve.clone();
+        serve_cfg.shards = 2;
+        let clock = VirtualClock::new();
+        let server = Server::with_clock(
+            Engine::new(cfg.clone()).expect("engine"),
+            serve_cfg,
+            Arc::new(clock.clone()),
+        );
+        let t = Instant::now();
+        let mut handles = Vec::new();
+        for (i, (src, trg)) in queries.iter().enumerate() {
+            clock.set(trace[i]);
+            let handle = server
+                .submit_with_deadline(
+                    ServeRequest::knn(src.clone(), trg.clone(), k),
+                    Duration::from_millis(50),
+                )
+                .expect("accepted under default cap");
+            handles.push(handle);
+        }
+        // Expire every deadline, then collect and drain.
+        clock.advance(Duration::from_millis(100));
+        let responses: Vec<_> =
+            handles.into_iter().map(|h| h.wait().expect("served")).collect();
+        let secs = t.elapsed().as_secs_f64();
+        let shards = server.shard_count();
+        let stats = server.shutdown();
+        for (i, resp) in responses.iter().enumerate() {
+            let got = resp.as_knn().expect("knn response");
+            assert_eq!(
+                got.neighbors, seq_results[i].neighbors,
+                "open-loop {trace_name} trace diverged from sequential on query {i}"
+            );
+        }
+        if stats.latency_ns.len() != queries.len() || stats.shed != 0 {
+            eprintln!(
+                "FAIL: open-loop {trace_name} trace lost queries ({} answered of {}, {} shed)",
+                stats.latency_ns.len(),
+                queries.len(),
+                stats.shed
+            );
+            std::process::exit(1);
+        }
+        let (_, _, p99) = stats.latency_percentiles_ms();
+        open_table.row(vec![
+            trace_name.into(),
+            format!("{secs:.3}"),
+            format!("{:.1}", q / secs),
+            format!("{p99:.3}"),
+            format!("{}", stats.flushes),
+        ]);
+        scenarios.push(scenario_row(
+            &format!("knn_openloop_{trace_name}_2shard"),
+            queries.len(),
+            secs,
+            seq_secs / secs.max(1e-12),
+            &stats,
+            shards,
+        ));
+    }
+    open_table.print("Open-loop arrival traces (always-on Server, 2 shards, virtual clock)");
 
     // --- Machine-readable output ------------------------------------------
     let out_path = std::env::var("ACCD_BENCH_JSON")

@@ -81,6 +81,37 @@ impl PlacementMode {
     }
 }
 
+/// Overload policy of the always-on server's bounded intake queue
+/// (`serve.overload`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Backpressure: `Server::submit` blocks the producer until the
+    /// queue has room (or the server shuts down).
+    Block,
+    /// Shedding: `Server::submit` fails fast with an overload error;
+    /// the rejection is counted in `ServeStats::shed`.
+    Reject,
+}
+
+impl OverloadPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "block" => Ok(Self::Block),
+            "reject" => Ok(Self::Reject),
+            other => Err(Error::Config(format!(
+                "serve.overload must be \"block\" or \"reject\", got \"{other}\""
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Block => "block",
+            Self::Reject => "reject",
+        }
+    }
+}
+
 /// Serving-runtime parameters (`accd::serve`) — the batched multi-query
 /// layer on top of the engine.
 #[derive(Debug, Clone, PartialEq)]
@@ -127,6 +158,15 @@ pub struct ServeConfig {
     /// and are claimed first).  Results are bit-identical either way
     /// (serve parity contract); only latency changes.
     pub placement: String,
+    /// Bound on the always-on server's accepted-but-unanswered queries
+    /// (intake backlog + admitted pending).  **0 = unbounded** (no
+    /// backpressure, nothing shed).  Caller-driven `QueryBatcher` use
+    /// ignores it.
+    pub queue_cap: usize,
+    /// What `Server::submit` does when `queue_cap` is reached:
+    /// `"block"` (the default: backpressure the producer) or
+    /// `"reject"` (fail fast; counted in `ServeStats::shed`).
+    pub overload: String,
 }
 
 impl Default for ServeConfig {
@@ -142,6 +182,8 @@ impl Default for ServeConfig {
             lockstep: true,
             steal_threshold: 1,
             placement: "edf-lpt".to_string(),
+            queue_cap: 1024,
+            overload: "block".to_string(),
         }
     }
 }
@@ -153,8 +195,9 @@ impl ServeConfig {
     /// semantics: `max_batch == 0` means unbounded batches,
     /// `slab_cache_bytes == 0` means the slab cache is *disabled* (not
     /// unbounded), `steal_threshold == 0` disables work stealing —
-    /// all legal; `shards`, `pipeline_depth` and `grouping_cache_cap`
-    /// must be positive, and `placement` must name a known policy.
+    /// `queue_cap == 0` means the server intake is unbounded; `shards`,
+    /// `pipeline_depth` and `grouping_cache_cap` must be positive, and
+    /// `placement` / `overload` must name known policies.
     pub fn validate(&self) -> Result<()> {
         if self.shards == 0 {
             return Err(Error::Config("serve.shards must be positive".into()));
@@ -166,6 +209,7 @@ impl ServeConfig {
             return Err(Error::Config("serve.grouping_cache_cap must be positive".into()));
         }
         self.placement_mode()?;
+        self.overload_policy()?;
         Ok(())
     }
 
@@ -174,6 +218,13 @@ impl ServeConfig {
     /// the serving runtime itself never sees the error path.
     pub fn placement_mode(&self) -> Result<PlacementMode> {
         PlacementMode::parse(&self.placement)
+    }
+
+    /// The parsed `overload` policy.  Errs on an unknown name —
+    /// `validate()` (run at `Server` construction) guarantees the
+    /// server loop itself never sees the error path.
+    pub fn overload_policy(&self) -> Result<OverloadPolicy> {
+        OverloadPolicy::parse(&self.overload)
     }
 }
 
@@ -251,6 +302,10 @@ impl AccdConfig {
             if let Some(p) = s.get("placement").as_str() {
                 cfg.serve.placement = p.to_string();
             }
+            cfg.serve.queue_cap = s.get("queue_cap").as_usize().unwrap_or(cfg.serve.queue_cap);
+            if let Some(p) = s.get("overload").as_str() {
+                cfg.serve.overload = p.to_string();
+            }
         }
         if let Some(s) = v.get("artifact_dir").as_str() {
             cfg.artifact_dir = s.to_string();
@@ -322,6 +377,8 @@ impl AccdConfig {
                     ("lockstep", Value::Bool(self.serve.lockstep)),
                     ("steal_threshold", json::num(self.serve.steal_threshold as f64)),
                     ("placement", json::s(self.serve.placement.clone())),
+                    ("queue_cap", json::num(self.serve.queue_cap as f64)),
+                    ("overload", json::s(self.serve.overload.clone())),
                 ]),
             ),
             ("artifact_dir", json::s(self.artifact_dir.clone())),
@@ -356,6 +413,8 @@ mod tests {
         cfg.serve.lockstep = false;
         cfg.serve.steal_threshold = 9000;
         cfg.serve.placement = "lpt".to_string();
+        cfg.serve.queue_cap = 37;
+        cfg.serve.overload = "reject".to_string();
         let re = AccdConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, re);
     }
@@ -379,6 +438,28 @@ mod tests {
         assert!(cfg.serve.lockstep, "lockstep defaults on");
         assert_eq!(cfg.serve.steal_threshold, 1, "stealing defaults on at threshold 1");
         assert_eq!(cfg.serve.placement, "edf-lpt", "deadline-aware placement defaults on");
+        assert_eq!(cfg.serve.queue_cap, 1024, "server intake bounded by default");
+        assert_eq!(cfg.serve.overload, "block", "backpressure is the default overload policy");
+    }
+
+    #[test]
+    fn overload_policy_parses_and_rejects_unknown_names() {
+        assert_eq!(OverloadPolicy::parse("block").unwrap(), OverloadPolicy::Block);
+        assert_eq!(OverloadPolicy::parse("reject").unwrap(), OverloadPolicy::Reject);
+        assert_eq!(OverloadPolicy::Block.as_str(), "block");
+        assert_eq!(OverloadPolicy::Reject.as_str(), "reject");
+        let msg = OverloadPolicy::parse("drop-newest").unwrap_err().to_string();
+        assert!(msg.contains("overload"), "{msg}");
+        // validate() gates it, so Server construction rejects it.
+        let bad = ServeConfig { overload: "panic".into(), ..ServeConfig::default() };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("overload"), "{msg}");
+        let v = json::parse(r#"{"serve": {"overload": "nope"}}"#).unwrap();
+        assert!(AccdConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"serve": {"overload": "reject", "queue_cap": 0}}"#).unwrap();
+        let cfg = AccdConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.serve.overload, "reject");
+        assert_eq!(cfg.serve.queue_cap, 0, "0 = unbounded intake is legal");
     }
 
     #[test]

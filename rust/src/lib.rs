@@ -138,6 +138,9 @@ pub enum Error {
     Json(String),
     Dse(String),
     Data(String),
+    /// Serving-runtime front-end failures: overload shedding, submits
+    /// after shutdown, a query failed over from a draining server.
+    Serve(String),
 }
 
 impl std::fmt::Display for Error {
@@ -152,6 +155,7 @@ impl std::fmt::Display for Error {
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Dse(m) => write!(f, "dse error: {m}"),
             Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Serve(m) => write!(f, "serve error: {m}"),
         }
     }
 }

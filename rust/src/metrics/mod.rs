@@ -160,9 +160,25 @@ pub const LATENCY_SAMPLE_CAP: usize = 65_536;
 /// Nearest-rank percentile (`q` in 0..=100) over ascending-sorted
 /// nanosecond samples, in milliseconds.  The single shared formula
 /// behind every `ServeStats` latency accessor.
+///
+/// Nearest rank is the smallest `r` in `1..=n` with `r/n >= q/100`,
+/// checked as `r * 100 >= q * n` so no division can smuggle in a
+/// rounding error: `ceil(q/100 * n)` overshoots by one whenever
+/// `q/100` rounds up an ulp (q=7, n=100: `0.07 * 100` lands at
+/// `7.000000000000001`, ceil said rank 8 where rank 7 satisfies the
+/// defining inequality exactly).  The ceil estimate is kept as the
+/// starting point and corrected against the inequality itself.
 fn percentile_of_sorted_ms(sorted: &[u64], q: f64) -> f64 {
-    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
-    sorted[rank.clamp(1, sorted.len()) - 1] as f64 / 1e6
+    let n = sorted.len();
+    let target = q * n as f64;
+    let mut rank = (((q / 100.0) * n as f64).ceil() as usize).clamp(1, n);
+    while rank > 1 && ((rank - 1) as f64) * 100.0 >= target {
+        rank -= 1;
+    }
+    while rank < n && ((rank as f64) * 100.0) < target {
+        rank += 1;
+    }
+    sorted[rank - 1] as f64 / 1e6
 }
 
 /// Accounting of the batched serving runtime (`accd::serve`).
@@ -232,6 +248,23 @@ pub struct ServeStats {
     /// late query is still answered — never dropped — but the miss is
     /// counted here, merged and per executing shard.
     pub deadline_misses: u64,
+    /// Queries the server's bounded intake turned away under the
+    /// `reject` overload policy.  A shed query was never accepted: it
+    /// gets no response, no latency sample and no deadline judgement —
+    /// this counter is its only trace.  Server-level (merged view
+    /// only); shard views stay 0.
+    pub shed: u64,
+    /// High-water mark of accepted-but-unanswered queries (intake
+    /// backlog + admitted pending) observed by the server — how close
+    /// the bounded queue came to `serve.queue_cap`.  Server-level
+    /// gauge (merged view only), republished absolutely, never summed.
+    pub queue_depth_watermark: u64,
+    /// Service attempts that failed mid-flush under the always-on
+    /// server (the batch was requeued in order and retried at the next
+    /// wake event; shutdown drains count their retries here too).  No
+    /// query is lost on a failure — this counter is how operators see
+    /// the engine misbehaving.  Server-level (merged view only).
+    pub flush_failures: u64,
     /// Per-query completion-latency samples in clock ticks
     /// (nanoseconds; submit-to-response on the batcher's injected
     /// `serve::Clock`).  Every answered query contributes one sample,
@@ -375,7 +408,10 @@ impl ServeStats {
     /// Latency samples and `deadline_met` / `deadline_misses` are also
     /// not summed here: the batcher records them per answered query via
     /// [`ServeStats::record_latency`] (a shard's delta never carries
-    /// them — only the batcher knows submit times).
+    /// them — only the batcher knows submit times).  `shed`,
+    /// `queue_depth_watermark` and `flush_failures` are server-level
+    /// (the admission front end owns them; no shard ever sees a shed
+    /// query or a requeued batch).
     pub fn absorb_exec(&mut self, d: &ServeStats) {
         self.queries += d.queries;
         self.knn_queries += d.knn_queries;
@@ -416,6 +452,9 @@ impl ServeStats {
             ("steals", json::num(self.steals as f64)),
             ("deadline_met", json::num(self.deadline_met as f64)),
             ("deadline_misses", json::num(self.deadline_misses as f64)),
+            ("shed", json::num(self.shed as f64)),
+            ("queue_depth_watermark", json::num(self.queue_depth_watermark as f64)),
+            ("flush_failures", json::num(self.flush_failures as f64)),
             ("latency_p50_ms", json::num(p50)),
             ("latency_p95_ms", json::num(p95)),
             ("latency_p99_ms", json::num(p99)),
@@ -437,7 +476,7 @@ impl ServeStats {
              slab cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, {:.1} MB resident\n  \
              lockstep: {} rounds, {} shared tiles | {} units stolen\n  \
              latency: p50 {:.3} ms / p95 {:.3} ms / p99 {:.3} ms | \
-             deadlines: {} met / {} missed\n  \
+             deadlines: {} met / {} missed | shed {} (depth high-water {})\n  \
              tiles: {} shared of {} total ({:.1}%) | shared slabs {}",
             self.queries,
             self.flushes,
@@ -465,6 +504,8 @@ impl ServeStats {
             p99,
             self.deadline_met,
             self.deadline_misses,
+            self.shed,
+            self.queue_depth_watermark,
             self.tiles_shared,
             self.tiles_total,
             100.0 * self.tiles_shared_ratio(),
@@ -526,12 +567,121 @@ mod tests {
         assert_eq!(s.latency_p99_ms(), 10.0);
         assert_eq!(s.latency_percentiles_ms(), (5.0, 10.0, 10.0), "single-sort triple agrees");
         assert_eq!(s.latency_percentile_ms(0.0), 1.0, "floor clamps to the first sample");
+        s.shed = 2;
+        s.queue_depth_watermark = 17;
         let v = s.to_json();
         assert_eq!(v.get("deadline_met").as_usize(), Some(3));
         assert_eq!(v.get("deadline_misses").as_usize(), Some(1));
+        assert_eq!(v.get("shed").as_usize(), Some(2));
+        assert_eq!(v.get("queue_depth_watermark").as_usize(), Some(17));
         assert_eq!(v.get("latency_p50_ms").as_f64(), Some(5.0));
         assert!(s.summary().contains("p50"));
         assert!(s.summary().contains("3 met / 1 missed"));
+        assert!(s.summary().contains("shed 2 (depth high-water 17)"));
+    }
+
+    /// The defining nearest-rank inequality, evaluated directly: the
+    /// smallest rank `r` with `r * 100 >= q * n`.  O(n) and obviously
+    /// correct — the reference the fast path must match everywhere.
+    fn naive_percentile_ms(sorted: &[u64], q: f64) -> f64 {
+        let n = sorted.len();
+        let target = q * n as f64;
+        let r = (1..=n).find(|&r| (r as f64) * 100.0 >= target).unwrap_or(n);
+        sorted[r - 1] as f64 / 1e6
+    }
+
+    #[test]
+    fn percentile_rank_is_exact_at_float_boundaries() {
+        // Regression: `ceil(q/100 * n)` overshot the nearest rank by
+        // one whenever q/100 rounded up an ulp.  With samples
+        // 1..=100 ms, the q-th percentile of n=100 IS the q-th sample.
+        let mut s = ServeStats::default();
+        for ms in 1..=100u64 {
+            s.record_latency(ms * 1_000_000, None);
+        }
+        assert_eq!(s.latency_percentile_ms(7.0), 7.0, "q=7: 0.07*100 ceils to 8");
+        assert_eq!(s.latency_percentile_ms(55.0), 55.0, "q=55: 0.55*100 ceils to 56");
+        for q in 1..=100u64 {
+            assert_eq!(s.latency_percentile_ms(q as f64), q as f64, "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentile_boundaries_and_degenerate_windows() {
+        // Single sample: every q reports it.
+        let mut one = ServeStats::default();
+        one.record_latency(3_000_000, None);
+        for q in [-5.0, 0.0, 0.5, 50.0, 99.9, 100.0, 250.0] {
+            assert_eq!(one.latency_percentile_ms(q), 3.0, "single sample, q={q}");
+        }
+        // Out-of-range q clamps to the extremes instead of panicking.
+        let mut s = ServeStats::default();
+        for ms in 1..=10u64 {
+            s.record_latency(ms * 1_000_000, None);
+        }
+        assert_eq!(s.latency_percentile_ms(-1.0), 1.0);
+        assert_eq!(s.latency_percentile_ms(0.0), 1.0);
+        assert_eq!(s.latency_percentile_ms(100.0), 10.0);
+        assert_eq!(s.latency_percentile_ms(400.0), 10.0);
+        // q just above a rank boundary moves to the next sample.
+        assert_eq!(s.latency_percentile_ms(50.0), 5.0);
+        assert_eq!(s.latency_percentile_ms(50.1), 6.0);
+    }
+
+    #[test]
+    fn prop_percentile_matches_naive_reference() {
+        use crate::util::prop::{self, Config};
+        prop::check(
+            &Config { cases: 128, max_size: 200, seed: 0xbeef, ..Default::default() },
+            |rng, size| {
+                let n = 1 + rng.below(size.max(1));
+                let samples: Vec<u64> =
+                    (0..n).map(|_| rng.below(50) as u64 * 1_000_000).collect();
+                // Integer, fractional, boundary and out-of-range q.
+                let q = match rng.below(4) {
+                    0 => rng.below(101) as f64,
+                    1 => rng.below(1000) as f64 / 10.0,
+                    2 => [0.0, 100.0, -3.0, 180.0][rng.below(4)],
+                    _ => rng.below(101) as f64 + 1.0 / 3.0,
+                };
+                (samples, q)
+            },
+            |(samples, q)| {
+                let mut s = ServeStats::default();
+                for &ns in samples {
+                    s.record_latency(ns, None);
+                }
+                let mut sorted = samples.clone();
+                sorted.sort_unstable();
+                let want = naive_percentile_ms(&sorted, *q);
+                let got = s.latency_percentile_ms(*q);
+                if got != want {
+                    return Err(format!("n={}, q={q}: got {got}, want {want}", samples.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn percentiles_after_ring_wrap_describe_the_window() {
+        // Fill past the cap so the ring has wrapped, then check the
+        // percentile formula against the naive reference over the
+        // window that is actually retained.
+        let mut s = ServeStats::default();
+        for i in 0..(LATENCY_SAMPLE_CAP + 137) {
+            s.record_latency(i as u64, None);
+        }
+        assert_eq!(s.latency_ns.len(), LATENCY_SAMPLE_CAP);
+        let mut sorted = s.latency_ns.clone();
+        sorted.sort_unstable();
+        for q in [0.0, 1.0, 7.0, 50.0, 55.0, 95.0, 99.0, 100.0] {
+            assert_eq!(
+                s.latency_percentile_ms(q),
+                naive_percentile_ms(&sorted, q),
+                "q={q} after ring wrap"
+            );
+        }
     }
 
     #[test]
@@ -572,6 +722,8 @@ mod tests {
             wall_secs: 9.0,
             deadline_met: 5,
             deadline_misses: 6,
+            shed: 3,
+            queue_depth_watermark: 11,
             latency_ns: vec![1, 2, 3],
             ..Default::default()
         };
@@ -597,6 +749,9 @@ mod tests {
         assert_eq!(total.deadline_met, 0);
         assert_eq!(total.deadline_misses, 0);
         assert!(total.latency_ns.is_empty());
+        // Server-level fields: the admission front end owns them.
+        assert_eq!(total.shed, 0);
+        assert_eq!(total.queue_depth_watermark, 0);
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! `VirtualClock` instead of sleeping.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Weak};
 use std::time::Duration;
 
 use crate::config::ServeConfig;
@@ -116,11 +116,18 @@ impl ServeResponse {
 
 // --- content identity ------------------------------------------------------
 
-/// Memo of dataset fingerprints, keyed by `Arc` address (the memo
-/// holds a clone of every `Arc` it has hashed, so addresses stay
-/// unique for its lifetime).  Content identity of two datasets then
-/// costs pointer equality in the common case, one `fingerprint_pair`
-/// pass per *distinct* `Arc` otherwise — never a repeated full point
+/// Memo of dataset fingerprints, keyed by `Arc` address and guarded
+/// by a [`Weak`] reference to the allocation the address was taken
+/// from.  An address alone is NOT identity: a dataset `Arc` dropped
+/// between flushes can have its allocation reused by a *different*
+/// dataset at the same address (ABA), so a hit only counts while the
+/// original allocation is still alive — a successful upgrade at the
+/// same address is the same allocation.  Holding `Weak` (not strong)
+/// references also means the memo never pins point data: a dataset
+/// dropped by its last client is freed immediately, not at the next
+/// prune.  Content identity of two datasets then costs pointer
+/// equality in the common case, one `fingerprint_pair` pass per
+/// *distinct live* `Arc` otherwise — never a repeated full point
 /// scan, even for deserialized-identical duplicates.  Equal 128-bit
 /// pairs imply equal content under the same ~2^-128 collision
 /// assumption the grouping cache already relies on.
@@ -128,13 +135,12 @@ impl ServeResponse {
 /// The batcher keeps one memo for its lifetime and [`prunes`] it to
 /// the still-pending datasets after every flush attempt: repeated
 /// `poll`s over a deep patient queue never re-hash an unchanged
-/// dataset, and the memo never pins point data beyond its stay in the
-/// queue.
+/// dataset.
 ///
 /// [`prunes`]: FingerprintMemo::prune
 #[derive(Default)]
 pub struct FingerprintMemo {
-    map: HashMap<usize, (Arc<Dataset>, (u64, u64))>,
+    map: HashMap<usize, (Weak<Dataset>, (u64, u64))>,
     /// Full element-wise comparisons performed where no fingerprint
     /// fast path exists (today: only N-body mass vectors), over the
     /// memo's lifetime.
@@ -147,14 +153,19 @@ impl FingerprintMemo {
     }
 
     /// The 128-bit content fingerprint of `ds`, computed at most once
-    /// per distinct `Arc`.
+    /// per distinct live `Arc`.
     pub fn fingerprint(&mut self, ds: &Arc<Dataset>) -> (u64, u64) {
         let key = Arc::as_ptr(ds) as usize;
-        if let Some((_, fp)) = self.map.get(&key) {
-            return *fp;
+        if let Some((live, fp)) = self.map.get(&key) {
+            // The upgrade proves the memoized allocation is the one
+            // `ds` points at; a dead entry is a reused address and
+            // must be re-fingerprinted, never trusted.
+            if live.upgrade().is_some() {
+                return *fp;
+            }
         }
         let fp = gti::fingerprint_pair(&ds.points);
-        self.map.insert(key, (ds.clone(), fp));
+        self.map.insert(key, (Arc::downgrade(ds), fp));
         fp
     }
 
@@ -170,27 +181,28 @@ impl FingerprintMemo {
     }
 
     /// Drop memoized fingerprints whose dataset no longer appears in
-    /// any pending request, so the memo never pins `Arc`s (and their
-    /// point data) beyond their stay in the queue.  Fingerprints of
+    /// any pending request (or whose allocation has died — a reused
+    /// address must never inherit a stale fingerprint), keeping the
+    /// memo's footprint bounded by the queue.  Fingerprints of
     /// still-pending datasets survive — repeated polls never re-hash
     /// them.
     pub(crate) fn prune(&mut self, queue: &AdmissionQueue) {
         if self.map.is_empty() {
             return;
         }
-        let mut live = std::collections::HashSet::new();
+        let mut pending = std::collections::HashSet::new();
         for p in &queue.pending {
             match &p.req {
                 ServeRequest::Knn { src, trg, .. } => {
-                    live.insert(Arc::as_ptr(src) as usize);
-                    live.insert(Arc::as_ptr(trg) as usize);
+                    pending.insert(Arc::as_ptr(src) as usize);
+                    pending.insert(Arc::as_ptr(trg) as usize);
                 }
                 ServeRequest::Kmeans { ds, .. } | ServeRequest::Nbody { ds, .. } => {
-                    live.insert(Arc::as_ptr(ds) as usize);
+                    pending.insert(Arc::as_ptr(ds) as usize);
                 }
             }
         }
-        self.map.retain(|ptr, _| live.contains(ptr));
+        self.map.retain(|ptr, (live, _)| pending.contains(ptr) && live.upgrade().is_some());
     }
 
     /// Content equality of two mass vectors.  No fingerprint is kept
@@ -283,12 +295,18 @@ impl AdmissionQueue {
         self.pending.len()
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
     pub fn get(&self, i: usize) -> &Pending {
         &self.pending[i]
     }
 
-    /// Earliest pending deadline, if any — lets a serving loop sleep
-    /// until the next `poll` could have work.
+    /// Earliest pending deadline, if any.  NOT a safe sleep target on
+    /// its own: deadline-free queries make it `None` while work is
+    /// still pending — [`FlushPolicy::next_wakeup`] is the
+    /// trigger-aware sleep target a serving loop must use.
     pub fn next_deadline(&self) -> Option<Tick> {
         self.pending.iter().filter_map(|p| p.deadline).min()
     }
@@ -350,6 +368,33 @@ impl FlushPolicy {
     /// Absolute deadline `submit` stamps on a new query.
     pub fn admission_deadline(&self, now: Tick) -> Option<Tick> {
         self.default_deadline.map(|d| now.saturating_add(ticks(d)))
+    }
+
+    /// The next tick at which a trigger could make pending work due —
+    /// the serving loop's sleep target.  The deadline-only
+    /// [`AdmissionQueue::next_deadline`] is `None` whenever every
+    /// pending query is deadline-free, so a loop sleeping on it
+    /// stalls forever on size-trigger-only workloads with admitted
+    /// queries queued; this accounts for every trigger:
+    ///
+    /// * empty queue — `None`: nothing becomes due until a submit,
+    ///   which wakes the loop by itself.
+    /// * size trigger already met (`max_batch > 0` and a full batch
+    ///   pending) — due `now`.
+    /// * else the earliest pending deadline (`default_deadline` was
+    ///   already stamped as a per-query deadline at admission, so it
+    ///   is covered here).
+    /// * deadline-free stragglers below the size trigger — due `now`:
+    ///   no future trigger would ever fire for them on its own, so
+    ///   the loop must flush them rather than sleep forever.
+    pub(crate) fn next_wakeup(&self, queue: &AdmissionQueue, now: Tick) -> Option<Tick> {
+        if queue.is_empty() {
+            return None;
+        }
+        if self.max_batch > 0 && queue.len() >= self.max_batch {
+            return Some(now);
+        }
+        Some(queue.next_deadline().unwrap_or(now))
     }
 
     /// Selection for an explicit flush: the queue's front.
@@ -807,6 +852,90 @@ mod tests {
         let (sel, by_deadline) = policy.select_due(&q, 300, true, &mut memo); // both expired
         assert_eq!(sel, vec![1], "the longer-overdue query wins the only slot");
         assert!(by_deadline);
+    }
+
+    #[test]
+    fn memo_does_not_pin_dropped_datasets() {
+        // The memo must hold Weak references: a memoized dataset whose
+        // last client drops it must be freed immediately, not pinned
+        // until the next prune (an always-on server would otherwise
+        // accumulate every dataset it ever fingerprinted).
+        let mut memo = FingerprintMemo::new();
+        let a = ds(1);
+        memo.fingerprint(&a);
+        let w = Arc::downgrade(&a);
+        drop(a);
+        assert!(w.upgrade().is_none(), "memo kept a dropped dataset alive");
+    }
+
+    #[test]
+    fn memo_never_trusts_a_reused_address() {
+        // ABA: drop a fingerprinted dataset and allocate fresh ones of
+        // the same shape until the allocator reuses its address.  The
+        // stale entry must be re-fingerprinted, never returned as-is.
+        let mut memo = FingerprintMemo::new();
+        let first = ds(100);
+        let stale_fp = memo.fingerprint(&first);
+        let stale_ptr = Arc::as_ptr(&first) as usize;
+        drop(first);
+        let mut reused = false;
+        for seed in 101..164u64 {
+            let fresh = ds(seed);
+            let got = memo.fingerprint(&fresh);
+            let want = gti::fingerprint_pair(&fresh.points);
+            assert_eq!(got, want, "stale memo entry aliased a different dataset");
+            if Arc::as_ptr(&fresh) as usize == stale_ptr {
+                reused = true;
+                assert_ne!(got, stale_fp, "distinct content, same address");
+            }
+        }
+        // Same-size allocations on the test allocator overwhelmingly
+        // reuse the freed block; if this ever stops holding the assert
+        // above still ran against every fresh allocation.
+        let _ = reused;
+    }
+
+    #[test]
+    fn memo_identity_survives_drop_and_reallocate() {
+        // same_dataset must stay correct across address reuse too: a
+        // fresh dataset at a recycled address must not compare equal
+        // to anything through the stale fingerprint.
+        let mut memo = FingerprintMemo::new();
+        let reference = ds(7);
+        memo.fingerprint(&reference);
+        for seed in 8..40u64 {
+            let probe = ds(seed);
+            assert!(!memo.same_dataset(&reference, &probe), "seed {seed} falsely deduped");
+            drop(probe);
+        }
+        let copy = deserialized_copy(&reference);
+        assert!(memo.same_dataset(&reference, &copy), "true duplicate still dedupes");
+    }
+
+    #[test]
+    fn policy_next_wakeup_covers_every_trigger() {
+        // Pre-fix, the serving loop slept on next_deadline() alone:
+        // None for deadline-free queues, so size-trigger-only
+        // workloads stalled forever with admitted queries pending.
+        let policy = FlushPolicy { max_batch: 3, default_deadline: None };
+        let mut q = AdmissionQueue::new();
+        let trg = ds(10);
+        let now = 1_000u64;
+        assert_eq!(policy.next_wakeup(&q, now), None, "empty queue: nothing to wake for");
+        // Deadline-free straggler below the size trigger: due now, not
+        // never (next_deadline would say None here — the bug).
+        q.push(ServeRequest::knn(ds(1), trg.clone(), 3), None, now);
+        assert_eq!(q.next_deadline(), None);
+        assert_eq!(policy.next_wakeup(&q, now), Some(now));
+        // A pending deadline becomes the sleep target.
+        q.push(ServeRequest::knn(ds(2), trg.clone(), 3), Some(5_000), now);
+        assert_eq!(policy.next_wakeup(&q, now), Some(5_000));
+        // Size trigger met: due immediately, deadline notwithstanding.
+        q.push(ServeRequest::knn(ds(3), trg.clone(), 3), None, now);
+        assert_eq!(policy.next_wakeup(&q, now), Some(now));
+        // max_batch == 0 disables the size trigger entirely.
+        let unbounded = FlushPolicy { max_batch: 0, default_deadline: None };
+        assert_eq!(unbounded.next_wakeup(&q, now), Some(5_000));
     }
 
     #[test]

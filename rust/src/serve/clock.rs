@@ -17,7 +17,7 @@
 //! stay virtual-clock-clean.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// A point in time: nanoseconds since the owning clock's epoch.
@@ -29,9 +29,31 @@ pub fn ticks(d: Duration) -> Tick {
     d.as_nanos().min(u64::MAX as u128) as Tick
 }
 
+/// Callback a clock invokes whenever its reading jumps (see
+/// [`Clock::register_waker`]).
+pub type ClockWaker = Arc<dyn Fn() + Send + Sync>;
+
 /// A monotonic time source.  `now()` must never decrease.
 pub trait Clock: Send + Sync {
     fn now(&self) -> Tick;
+
+    /// Register a callback fired whenever the clock's reading jumps
+    /// discontinuously — a `VirtualClock` being advanced by a test.
+    /// The always-on `serve::Server` registers its scheduler's wake
+    /// signal here so virtual time drives the loop with zero real
+    /// sleeps.  A continuously-flowing clock has no jumps to report:
+    /// the default implementation drops the waker, and such clocks
+    /// return `false` from [`Clock::wakes_on_advance`] so the server
+    /// falls back to timed waits.
+    fn register_waker(&self, _waker: ClockWaker) {}
+
+    /// Whether registered wakers will actually fire on time jumps —
+    /// i.e. whether a waiter may sleep *indefinitely* and rely on the
+    /// clock to wake it.  `false` (the default) means "use a timed
+    /// wait sized by `now()` arithmetic instead".
+    fn wakes_on_advance(&self) -> bool {
+        false
+    }
 }
 
 /// The production clock: monotonic wall time since construction.
@@ -58,11 +80,12 @@ impl Clock for MonotonicClock {
 }
 
 /// A test-controlled clock: time stands still until the test advances
-/// it.  Clones share the same underlying time, so a test keeps one
-/// handle while the batcher owns another.
+/// it.  Clones share the same underlying time (and waker list), so a
+/// test keeps one handle while the batcher owns another.
 #[derive(Clone, Default)]
 pub struct VirtualClock {
     now: Arc<AtomicU64>,
+    wakers: Arc<Mutex<Vec<ClockWaker>>>,
 }
 
 impl VirtualClock {
@@ -86,6 +109,7 @@ impl VirtualClock {
     /// Advance by raw ticks.
     pub fn advance_ticks(&self, t: Tick) {
         self.now.fetch_add(t, Ordering::SeqCst);
+        self.wake_all();
     }
 
     /// Jump to an absolute tick.  Must never move time backwards
@@ -93,12 +117,28 @@ impl VirtualClock {
     pub fn set(&self, t: Tick) {
         let prev = self.now.swap(t, Ordering::SeqCst);
         assert!(prev <= t, "VirtualClock::set moved time backwards: {prev} -> {t}");
+        self.wake_all();
+    }
+
+    fn wake_all(&self) {
+        let wakers = self.wakers.lock().unwrap();
+        for w in wakers.iter() {
+            w();
+        }
     }
 }
 
 impl Clock for VirtualClock {
     fn now(&self) -> Tick {
         self.now.load(Ordering::SeqCst)
+    }
+
+    fn register_waker(&self, waker: ClockWaker) {
+        self.wakers.lock().unwrap().push(waker);
+    }
+
+    fn wakes_on_advance(&self) -> bool {
+        true
     }
 }
 
@@ -138,5 +178,29 @@ mod tests {
     fn ticks_saturates_instead_of_wrapping() {
         assert_eq!(ticks(Duration::from_nanos(7)), 7);
         assert_eq!(ticks(Duration::MAX), u64::MAX);
+    }
+
+    #[test]
+    fn virtual_clock_fires_wakers_on_every_jump() {
+        use std::sync::atomic::AtomicUsize;
+        let clock = VirtualClock::new();
+        assert!(clock.wakes_on_advance());
+        let fired = Arc::new(AtomicUsize::new(0));
+        let probe = fired.clone();
+        // Registration through a clone must reach the shared list.
+        clock.clone().register_waker(Arc::new(move || {
+            probe.fetch_add(1, Ordering::SeqCst);
+        }));
+        clock.advance(Duration::from_millis(1));
+        clock.advance_ticks(5);
+        clock.set(99_000_000);
+        assert_eq!(fired.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn monotonic_clock_has_no_waker_support() {
+        let clock = MonotonicClock::new();
+        assert!(!clock.wakes_on_advance(), "real time flows; waiters must use timeouts");
+        clock.register_waker(Arc::new(|| {})); // default no-op must not panic
     }
 }

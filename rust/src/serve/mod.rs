@@ -48,6 +48,16 @@
 //!   [`FlushPolicy`] says is due — expired deadlines flush alone, so
 //!   latency-sensitive queries stop waiting for stragglers, while
 //!   under-deadline queries keep coalescing).
+//! * [`Server`] is the always-on front end over the batcher: a
+//!   background scheduler thread owns the batcher, sleeps until
+//!   [`QueryBatcher::next_wakeup`] (deadline, size trigger or
+//!   straggler — never the deadline-only target that stalled on
+//!   deadline-free workloads), and producers `submit` concurrently
+//!   through a bounded intake (`serve.queue_cap`; `serve.overload`
+//!   picks backpressure or shedding), each getting a
+//!   [`ResponseHandle`] that resolves to its response.  Shutdown
+//!   drains: every accepted query is answered before the thread
+//!   exits.
 //! * Compatible KNN queries (same target content + metric) form
 //!   **cohorts** sharing one target grouping and packed target slabs;
 //!   each cohort streams through ONE tagged [`coordinator::pipeline`]
@@ -94,11 +104,13 @@ mod cache;
 mod clock;
 mod exec;
 mod placement;
+mod server;
 
 pub use admission::{FlushPolicy, QueryId, ServeRequest, ServeResponse};
 pub use cache::{GroupingCache, GroupingKey};
-pub use clock::{ticks, Clock, MonotonicClock, Tick, VirtualClock};
+pub use clock::{ticks, Clock, ClockWaker, MonotonicClock, Tick, VirtualClock};
 pub use placement::{EnginePool, ShardPlanner};
+pub use server::{ResponseHandle, Server, DRAIN_RETRY_LIMIT};
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -214,19 +226,69 @@ impl QueryBatcher {
         self.queue.len()
     }
 
-    /// The batcher's current clock reading.  [`QueryBatcher::next_deadline`]
-    /// is on the same timeline, so a serving loop sleeps for
-    /// `next_deadline().map(|d| d.saturating_sub(batcher.now()))`
+    /// Server-internal admission: enqueue with an absolute deadline
+    /// and the producer-observed submission tick.  Latency samples
+    /// must start when the producer handed the query over, not when
+    /// the scheduler got around to transferring it out of the intake
+    /// queue — intake wait is real service latency.
+    pub(crate) fn submit_at(
+        &mut self,
+        req: ServeRequest,
+        deadline: Option<Tick>,
+        submitted_at: Tick,
+    ) -> QueryId {
+        self.queue.push(req, deadline, submitted_at)
+    }
+
+    /// Absolute deadline the configured policy would stamp on a
+    /// deadline-free `submit` at tick `now` (the server stamps at
+    /// producer accept time, not transfer time).
+    pub(crate) fn admission_deadline(&self, now: Tick) -> Option<Tick> {
+        self.policy.admission_deadline(now)
+    }
+
+    /// Admission-time validation of one request against this
+    /// batcher's tile catalogue — exactly the checks a flush performs
+    /// before draining anything.  The server pre-validates at
+    /// transfer so an invalid query fails its own handle instead of
+    /// wedging every subsequent flush attempt.
+    pub(crate) fn validate_request(&self, req: &ServeRequest) -> Result<()> {
+        admission::validate_request(req, &self.pool.primary().runtime.manifest().tile)
+    }
+
+    /// The injected time source (shared with the [`Server`] loop).
+    pub(crate) fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
+    /// The batcher's current clock reading.
+    /// [`QueryBatcher::next_wakeup`] is on the same timeline, so a
+    /// serving loop sleeps for
+    /// `next_wakeup().map(|t| t.saturating_sub(batcher.now()))`
     /// nanoseconds before its next poll.
     pub fn now(&self) -> Tick {
         self.clock.now()
     }
 
     /// Earliest pending deadline, in ticks of the batcher's clock
-    /// (compare with [`QueryBatcher::now`]) — when the next `poll`
-    /// could have work (absent a size trigger).
+    /// (compare with [`QueryBatcher::now`]).  NOT a safe sleep
+    /// target: deadline-free pending queries leave it `None`, and a
+    /// loop sleeping on it stalls forever on size-trigger-only
+    /// workloads — sleep on [`QueryBatcher::next_wakeup`] instead.
     pub fn next_deadline(&self) -> Option<Tick> {
         self.queue.next_deadline()
+    }
+
+    /// The next tick at which pending work could become due — the
+    /// sleep target of a serving loop, accounting for every trigger:
+    /// the earliest pending deadline, the `max_batch` size trigger
+    /// (already met ⇒ due now) and deadline-free stragglers (due now;
+    /// no future trigger would ever fire for them on its own).
+    /// `None` only when nothing is pending — a new `submit` is then
+    /// the only possible wake source, and it wakes the [`Server`]
+    /// loop by itself.
+    pub fn next_wakeup(&self) -> Option<Tick> {
+        self.policy.next_wakeup(&self.queue, self.clock.now())
     }
 
     /// Merged lifetime serving statistics (all shards, all flushes).

@@ -1,0 +1,491 @@
+//! The always-on serving front end: [`Server`].
+//!
+//! [`super::QueryBatcher`] is caller-driven: whoever owns it must keep
+//! calling `poll`/`flush` at the right moments, which makes it a
+//! building block, not a service.  `Server` wraps the batcher in a
+//! background scheduler thread and turns the contract inside out:
+//! producers on any thread `submit` and get a [`ResponseHandle`] back;
+//! the scheduler owns *when* flushes happen.
+//!
+//! **Wake-up semantics.**  The scheduler sleeps until the earliest of:
+//! a new submit, a shutdown request, or the batcher's
+//! [`super::QueryBatcher::next_wakeup`] tick — the trigger-aware sleep
+//! target (earliest deadline, size trigger, or deadline-free
+//! stragglers due immediately).  The deadline-only `next_deadline()`
+//! is NOT used: it returns `None` whenever every pending query is
+//! deadline-free, and a loop sleeping on it stalls forever on
+//! size-trigger-only workloads.  Under a [`super::VirtualClock`] the
+//! scheduler registers a clock waker and waits purely on events, so
+//! tests drive the whole loop with zero wall-clock sleeps; under the
+//! production [`super::MonotonicClock`] it uses timed waits sized by
+//! tick arithmetic.
+//!
+//! **Backpressure & shedding.**  `serve.queue_cap` bounds the number
+//! of accepted-but-unanswered queries (0 = unbounded).  At the bound,
+//! `serve.overload` decides: `"block"` parks the producer until space
+//! frees (or shutdown), `"reject"` fails the submit fast and counts it
+//! in [`ServeStats::shed`].  The high-water mark of the bounded queue
+//! is reported as `ServeStats::queue_depth_watermark`.
+//!
+//! **Failure containment.**  Each query is validated at transfer (the
+//! same checks a flush runs), so an invalid query fails its *own*
+//! handle instead of wedging every later flush.  If execution itself
+//! fails mid-flush, the batcher requeues the drained batch in order
+//! and the scheduler retries at the next event (a submit or a clock
+//! jump) — accepted queries are never dropped on an error.
+//!
+//! **Drain guarantee.**  Shutdown (explicit [`Server::shutdown`] or
+//! `Drop`) stops intake, then flushes until the queue is empty: every
+//! accepted query is answered before the scheduler exits.  Only if a
+//! flush fails [`DRAIN_RETRY_LIMIT`] consecutive times during the
+//! drain (e.g. a corrupted artifact deployment that never recovers)
+//! are the remaining handles failed over with the underlying error —
+//! resolved, not leaked, so no `wait()` can hang.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::clock::{ticks, Clock, Tick};
+use super::{QueryBatcher, QueryId, ServeRequest, ServeResponse};
+use crate::config::{OverloadPolicy, ServeConfig};
+use crate::coordinator::Engine;
+use crate::metrics::ServeStats;
+use crate::{Error, Result};
+
+/// Consecutive failed flushes the shutdown drain tolerates before
+/// failing the remaining handles over with the error.
+pub const DRAIN_RETRY_LIMIT: u32 = 3;
+
+/// One query's response cell, shared between its [`ResponseHandle`]
+/// and the scheduler.
+#[derive(Default)]
+struct Slot {
+    cell: Mutex<Option<Result<ServeResponse>>>,
+    ready: Condvar,
+}
+
+/// A producer's claim on one submitted query's response.
+///
+/// Resolution is one of: the query's [`ServeResponse`], its own
+/// validation error, or a drain fail-over error ([`Error::Serve`])
+/// when the server shut down with a persistently failing engine.  An
+/// accepted query always resolves — dropping the handle merely
+/// discards the answer.
+pub struct ResponseHandle {
+    slot: Arc<Slot>,
+}
+
+impl ResponseHandle {
+    /// Block until the query resolves and take the result.
+    pub fn wait(self) -> Result<ServeResponse> {
+        let mut cell = self.slot.cell.lock().unwrap();
+        loop {
+            if let Some(resolution) = cell.take() {
+                return resolution;
+            }
+            cell = self.slot.ready.wait(cell).unwrap();
+        }
+    }
+
+    /// Take the result if the query has already resolved (`None`
+    /// while still in flight).  A taken result is gone: a later
+    /// `wait()` would block forever, so take-then-wait is a bug.
+    pub fn try_take(&self) -> Option<Result<ServeResponse>> {
+        self.slot.cell.lock().unwrap().take()
+    }
+}
+
+/// One accepted query waiting in the intake for transfer.
+struct Accepted {
+    req: ServeRequest,
+    /// Absolute deadline, stamped at accept time (producer-observed).
+    deadline: Option<Tick>,
+    /// Accept tick: latency runs from here, so time spent waiting in
+    /// the intake is visible service latency, not hidden overhead.
+    submitted_at: Tick,
+    slot: Arc<Slot>,
+}
+
+/// Producer-facing state behind one mutex.
+#[derive(Default)]
+struct Intake {
+    queue: VecDeque<Accepted>,
+    /// Accepted and not yet resolved (intake + transferred pending).
+    accepted: usize,
+    watermark: usize,
+    shed: u64,
+    /// Failed service attempts (the batch was requeued; see
+    /// `ServeStats::flush_failures`).
+    flush_failures: u64,
+    shutdown: bool,
+    /// Bumped by the clock waker so a jump between a sleep decision
+    /// and the wait itself is never lost.
+    clock_events: u64,
+}
+
+struct Shared {
+    intake: Mutex<Intake>,
+    /// Scheduler's wake signal (submits, shutdown, clock jumps).
+    wake: Condvar,
+    /// Blocked producers' signal (space freed, shutdown).
+    space: Condvar,
+    cap: usize,
+    overload: OverloadPolicy,
+    default_deadline: Option<Duration>,
+    clock: Arc<dyn Clock>,
+}
+
+/// The always-on serving front end (see the module docs).
+pub struct Server {
+    shared: Arc<Shared>,
+    batcher: Arc<Mutex<QueryBatcher>>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start a server over `cfg.shards` engine shards on a fresh
+    /// [`super::MonotonicClock`].  Panics on an invalid config; use
+    /// [`Server::try_new`] to handle the error instead.
+    pub fn new(engine: Engine, cfg: ServeConfig) -> Self {
+        match Self::try_new(engine, cfg) {
+            Ok(server) => server,
+            Err(e) => panic!("invalid serve config: {e}"),
+        }
+    }
+
+    /// Fallible construction (invalid knobs, unknown `placement` or
+    /// `overload` policy names).
+    pub fn try_new(engine: Engine, cfg: ServeConfig) -> Result<Self> {
+        let batcher = QueryBatcher::try_new(engine, cfg.clone())?;
+        Self::over(batcher, &cfg)
+    }
+
+    /// Like [`Server::new`] with an injected clock; panics on an
+    /// invalid config.
+    pub fn with_clock(engine: Engine, cfg: ServeConfig, clock: Arc<dyn Clock>) -> Self {
+        match Self::try_new_with_clock(engine, cfg, clock) {
+            Ok(server) => server,
+            Err(e) => panic!("invalid serve config: {e}"),
+        }
+    }
+
+    /// Like [`Server::try_new`], but the scheduler (and every deadline
+    /// decision below it) runs on the given clock — a
+    /// [`super::VirtualClock`] makes the whole loop event-driven and
+    /// sleep-free for tests.
+    pub fn try_new_with_clock(
+        engine: Engine,
+        cfg: ServeConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Self> {
+        let batcher = QueryBatcher::try_new_with_clock(engine, cfg.clone(), clock)?;
+        Self::over(batcher, &cfg)
+    }
+
+    fn over(batcher: QueryBatcher, cfg: &ServeConfig) -> Result<Self> {
+        let overload = cfg.overload_policy()?;
+        let clock = batcher.clock().clone();
+        // The policy's default-deadline span, recovered as the absolute
+        // deadline it would stamp at tick 0 — producers stamp deadlines
+        // at accept time without taking the batcher lock.
+        let default_deadline = batcher.admission_deadline(0).map(Duration::from_nanos);
+        let shared = Arc::new(Shared {
+            intake: Mutex::new(Intake::default()),
+            wake: Condvar::new(),
+            space: Condvar::new(),
+            cap: cfg.queue_cap,
+            overload,
+            default_deadline,
+            clock: clock.clone(),
+        });
+        // The clock waker holds only a Weak: a dropped server leaves a
+        // no-op waker behind, never a Shared-clock reference cycle.
+        let weak: Weak<Shared> = Arc::downgrade(&shared);
+        clock.register_waker(Arc::new(move || {
+            if let Some(shared) = weak.upgrade() {
+                shared.intake.lock().unwrap().clock_events += 1;
+                shared.wake.notify_all();
+            }
+        }));
+        let batcher = Arc::new(Mutex::new(batcher));
+        let thread = {
+            let shared = shared.clone();
+            let batcher = batcher.clone();
+            std::thread::spawn(move || scheduler(&shared, &batcher))
+        };
+        Ok(Self { shared, batcher, thread: Some(thread) })
+    }
+
+    /// Submit under the config's default deadline (none when
+    /// `serve.deadline_ms == 0`).  Errs on overload (`reject` policy)
+    /// or after shutdown; blocks at the bound under `block`.
+    pub fn submit(&self, req: ServeRequest) -> Result<ResponseHandle> {
+        self.accept(req, None)
+    }
+
+    /// Submit a query that becomes due `deadline` from now (on the
+    /// server's clock).
+    pub fn submit_with_deadline(
+        &self,
+        req: ServeRequest,
+        deadline: Duration,
+    ) -> Result<ResponseHandle> {
+        self.accept(req, Some(deadline))
+    }
+
+    fn accept(&self, req: ServeRequest, deadline: Option<Duration>) -> Result<ResponseHandle> {
+        let mut intake = self.shared.intake.lock().unwrap();
+        loop {
+            if intake.shutdown {
+                return Err(Error::Serve("server is shut down".into()));
+            }
+            if self.shared.cap == 0 || intake.accepted < self.shared.cap {
+                break;
+            }
+            match self.shared.overload {
+                OverloadPolicy::Reject => {
+                    intake.shed += 1;
+                    return Err(Error::Serve(format!(
+                        "intake full ({} accepted queries unanswered, cap {}): query shed",
+                        intake.accepted, self.shared.cap
+                    )));
+                }
+                OverloadPolicy::Block => {
+                    intake = self.shared.space.wait(intake).unwrap();
+                }
+            }
+        }
+        let now = self.shared.clock.now();
+        let deadline = deadline
+            .or(self.shared.default_deadline)
+            .map(|d| now.saturating_add(ticks(d)));
+        let slot = Arc::new(Slot::default());
+        intake.queue.push_back(Accepted {
+            req,
+            deadline,
+            submitted_at: now,
+            slot: slot.clone(),
+        });
+        intake.accepted += 1;
+        intake.watermark = intake.watermark.max(intake.accepted);
+        self.shared.wake.notify_all();
+        Ok(ResponseHandle { slot })
+    }
+
+    /// Accepted queries not yet answered (intake + pending).
+    pub fn in_flight(&self) -> usize {
+        self.shared.intake.lock().unwrap().accepted
+    }
+
+    /// Queries already transferred to the batcher and awaiting
+    /// service — a subset of [`Server::in_flight`]; the difference is
+    /// still sitting in the intake.  Tests use this to know when a
+    /// burst has fully landed in one admission queue (and will
+    /// therefore coalesce into one flush) before advancing a virtual
+    /// clock.
+    pub fn pending_len(&self) -> usize {
+        self.batcher.lock().unwrap().pending_len()
+    }
+
+    /// Merged lifetime statistics: the batcher's view plus the
+    /// server-level `shed` / `queue_depth_watermark` fields.
+    pub fn stats(&self) -> ServeStats {
+        let mut stats = self.batcher.lock().unwrap().stats().clone();
+        let intake = self.shared.intake.lock().unwrap();
+        stats.shed = intake.shed;
+        stats.queue_depth_watermark = intake.watermark as u64;
+        stats.flush_failures = intake.flush_failures;
+        stats
+    }
+
+    /// Per-shard lifetime statistics, in shard order.
+    pub fn shard_stats(&self) -> Vec<ServeStats> {
+        self.batcher.lock().unwrap().shard_stats().into_iter().cloned().collect()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.batcher.lock().unwrap().shard_count()
+    }
+
+    /// Stop intake, drain every accepted query, join the scheduler
+    /// and return the final merged statistics.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.begin_shutdown();
+        if let Some(thread) = self.thread.take() {
+            let _ = thread.join();
+        }
+        self.stats()
+    }
+
+    fn begin_shutdown(&self) {
+        let mut intake = self.shared.intake.lock().unwrap();
+        intake.shutdown = true;
+        self.shared.wake.notify_all();
+        self.shared.space.notify_all();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.begin_shutdown();
+        if let Some(thread) = self.thread.take() {
+            let _ = thread.join();
+        }
+    }
+}
+
+/// Release `n` queue slots.  Always called BEFORE the matching
+/// handles resolve, so a producer that saw `wait()` return can rely
+/// on the freed capacity being visible to its next submit.
+fn release_capacity(shared: &Shared, n: usize) {
+    let mut intake = shared.intake.lock().unwrap();
+    intake.accepted = intake.accepted.saturating_sub(n);
+    shared.space.notify_all();
+}
+
+/// Resolve one handle and release its queue slot.
+fn resolve_failure(shared: &Shared, slot: &Arc<Slot>, err: Error) {
+    release_capacity(shared, 1);
+    *slot.cell.lock().unwrap() = Some(Err(err));
+    slot.ready.notify_all();
+}
+
+/// Resolve a successful flush's responses and release their slots.
+fn resolve_responses(
+    shared: &Shared,
+    slots: &mut HashMap<QueryId, Arc<Slot>>,
+    responses: Vec<(QueryId, ServeResponse)>,
+) {
+    release_capacity(shared, responses.len());
+    for (id, resp) in responses {
+        if let Some(slot) = slots.remove(&id) {
+            *slot.cell.lock().unwrap() = Some(Ok(resp));
+            slot.ready.notify_all();
+        }
+    }
+}
+
+/// One service attempt: `poll` what's due; if nothing was due by
+/// deadline or size trigger but the wake target says "now"
+/// (deadline-free stragglers), `flush` the front batch instead.
+fn serve_once(b: &mut QueryBatcher) -> Result<Vec<(QueryId, ServeResponse)>> {
+    let out = b.poll()?;
+    if !out.is_empty() || b.pending_len() == 0 {
+        return Ok(out);
+    }
+    if b.next_wakeup().is_some_and(|t| t <= b.now()) {
+        return b.flush();
+    }
+    Ok(out)
+}
+
+/// Flush until empty; after [`DRAIN_RETRY_LIMIT`] consecutive
+/// failures, fail the remaining handles over with the error so no
+/// `wait()` can hang on a permanently broken engine.
+fn drain(shared: &Shared, b: &mut QueryBatcher, slots: &mut HashMap<QueryId, Arc<Slot>>) {
+    let mut consecutive_failures = 0u32;
+    while b.pending_len() > 0 {
+        match b.flush() {
+            Ok(responses) => {
+                consecutive_failures = 0;
+                resolve_responses(shared, slots, responses);
+            }
+            Err(e) => {
+                consecutive_failures += 1;
+                shared.intake.lock().unwrap().flush_failures += 1;
+                if consecutive_failures >= DRAIN_RETRY_LIMIT {
+                    let msg =
+                        format!("server drain failed {DRAIN_RETRY_LIMIT} consecutive times: {e}");
+                    for (_, slot) in slots.drain() {
+                        resolve_failure(shared, &slot, Error::Serve(msg.clone()));
+                    }
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// The scheduler loop: transfer intake, serve what's due, sleep until
+/// the next wake source.  Runs until shutdown, then drains.
+fn scheduler(shared: &Shared, batcher: &Mutex<QueryBatcher>) {
+    // Transferred-but-unanswered queries' response slots, keyed by the
+    // batcher's QueryId.  Scheduler-local: no lock needed.
+    let mut slots: HashMap<QueryId, Arc<Slot>> = HashMap::new();
+    // After a failed flush the batcher has requeued the batch; retry
+    // only at the next event (submit / clock jump / shutdown) so a
+    // deterministic failure cannot spin the loop hot.
+    let mut backoff = false;
+    loop {
+        // Capture the clock-event counter BEFORE deciding anything,
+        // so a jump racing the decision is seen at the sleep check.
+        let seen = shared.intake.lock().unwrap().clock_events;
+        // Phase 1: transfer the intake into the batcher, validating
+        // each query so a bad one fails its own handle instead of
+        // wedging every later flush.
+        let (items, shutdown) = {
+            let mut intake = shared.intake.lock().unwrap();
+            (std::mem::take(&mut intake.queue), intake.shutdown)
+        };
+        let wake;
+        {
+            let mut b = batcher.lock().unwrap();
+            for a in items {
+                match b.validate_request(&a.req) {
+                    Ok(()) => {
+                        let id = b.submit_at(a.req, a.deadline, a.submitted_at);
+                        slots.insert(id, a.slot);
+                    }
+                    Err(e) => resolve_failure(shared, &a.slot, e),
+                }
+            }
+            if shutdown {
+                drain(shared, &mut b, &mut slots);
+                return;
+            }
+            // Phase 2: serve while due.
+            let now = b.now();
+            wake = b.next_wakeup();
+            if !backoff && wake.is_some_and(|t| t <= now) {
+                match serve_once(&mut b) {
+                    Ok(responses) if !responses.is_empty() => {
+                        resolve_responses(shared, &mut slots, responses);
+                        continue; // re-evaluate triggers immediately
+                    }
+                    // An empty success while due cannot normally
+                    // happen — wait for the next event rather than
+                    // spin.
+                    Ok(_) => backoff = true,
+                    // The failed flush requeued its batch in order;
+                    // retry at the next wake event.
+                    Err(_) => {
+                        backoff = true;
+                        shared.intake.lock().unwrap().flush_failures += 1;
+                    }
+                }
+            }
+        }
+        // Phase 3: sleep until a submit, a shutdown, a clock jump, or
+        // (on a real clock) the wake tick.
+        let mut intake = shared.intake.lock().unwrap();
+        let event_happened = |i: &Intake| {
+            !i.queue.is_empty() || i.shutdown || i.clock_events != seen
+        };
+        if shared.clock.wakes_on_advance() || backoff || wake.is_none() {
+            while !event_happened(&intake) {
+                intake = shared.wake.wait(intake).unwrap();
+            }
+        } else if let Some(t) = wake {
+            let now = shared.clock.now();
+            if t > now && !event_happened(&intake) {
+                let (guard, _) =
+                    shared.wake.wait_timeout(intake, Duration::from_nanos(t - now)).unwrap();
+                intake = guard;
+            }
+        }
+        drop(intake);
+        backoff = false;
+    }
+}

@@ -1,9 +1,17 @@
 //! Failure-injection tests: the runtime must fail loudly and
 //! informatively on corrupted deployments, never start on a broken
-//! artifact directory, and never panic on malformed inputs.
+//! artifact directory, and never panic on malformed inputs — and the
+//! serving runtime above it must requeue, retry and fail over instead
+//! of losing accepted queries.
 
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::synthetic;
 use accd::runtime::Runtime;
+use accd::serve::{QueryBatcher, Server, ServeRequest, VirtualClock, DRAIN_RETRY_LIMIT};
 use std::io::Write;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn tmpdir(name: &str) -> std::path::PathBuf {
     let p = std::env::temp_dir().join(format!("accd_fail_{name}"));
@@ -114,9 +122,172 @@ fn requesting_nonexistent_tile_shape_errors_cleanly() {
     assert!(rt.distance_tile("linf", 4, &a, &b).is_err());
 }
 
+// --- mid-flush failure under the serving runtime ---------------------------
+//
+// A manifest whose single artifact (`distance_l2sq_m64_n64_d4`, the
+// one tile a small d=4 KNN join needs) is malformed HLO: loading
+// succeeds (lazy compilation), the first flush fails mid-execution.
+// Failed compiles are never cached and the HLO file is re-read per
+// attempt, so repairing the file in place makes the retry succeed.
+
+const TILE_HLO: &str = "tile.hlo.txt";
+
+fn broken_knn_deployment(name: &str) -> std::path::PathBuf {
+    let dir = tmpdir(name);
+    write(&dir, TILE_HLO, "this is not an HLO module");
+    write(
+        &dir,
+        "manifest.json",
+        r#"{"version": 1, "tile": {"m": 64, "n": 64, "d_pad": [4], "knn_k": 32,
+            "kmeans_k_pad": [64], "nbody": 64, "variants": [64]},
+            "artifacts": [{"name": "distance_l2sq_m64_n64_d4", "file": "tile.hlo.txt",
+            "kind": "distance", "inputs": [[64, 4], [64, 4]],
+            "meta": {"metric": "l2sq", "bm": 64, "bn": 64, "d": 4}}]}"#,
+    );
+    dir
+}
+
+fn repair_deployment(dir: &std::path::Path) {
+    write(dir, TILE_HLO, "HloModule distance_l2sq_m64_n64_d4");
+}
+
+fn engine_over(dir: &std::path::Path, cfg: &AccdConfig) -> Engine {
+    let rt = Arc::new(Runtime::load(dir).expect("lazy load succeeds"));
+    Engine::with_runtime(cfg.clone(), rt).expect("engine")
+}
+
+/// Two small KNN queries sharing one target cohort (d=4, every
+/// dataset under one 64-point tile, so exactly the broken artifact is
+/// requested).
+fn knn_pair(seed: u64) -> [ServeRequest; 2] {
+    let trg = Arc::new(synthetic::clustered(60, 4, 3, 0.05, seed));
+    let src_a = Arc::new(synthetic::clustered(40, 4, 3, 0.05, seed + 1));
+    let src_b = Arc::new(synthetic::clustered(30, 4, 3, 0.05, seed + 2));
+    [ServeRequest::knn(src_a, trg.clone(), 3), ServeRequest::knn(src_b, trg, 3)]
+}
+
+fn assert_knn_parity(
+    resp: &accd::serve::ServeResponse,
+    req: &ServeRequest,
+    solo: &mut Engine,
+    what: &str,
+) {
+    let ServeRequest::Knn { src, trg, k, metric } = req else {
+        unreachable!("scenario is KNN-only")
+    };
+    let want = solo.knn_join_metric(src, trg, *k, *metric).expect("solo knn");
+    let got = resp.as_knn().unwrap_or_else(|| panic!("{what}: wrong kind"));
+    assert_eq!(got.neighbors, want.neighbors, "{what}: retry must not perturb results");
+}
+
+/// Caller-driven requeue contract, deterministically: a mid-flush
+/// compile failure re-queues the drained batch at the front — in
+/// submission order, deadlines intact — and the retry after repairing
+/// the artifact serves it bit-for-bit like the solo engine.
+#[test]
+fn batcher_requeues_in_order_with_deadlines_after_midflush_failure() {
+    let dir = broken_knn_deployment("batcher_requeue");
+    let cfg = AccdConfig::new();
+    let clock = VirtualClock::new();
+    let mut b = QueryBatcher::with_clock(
+        engine_over(&dir, &cfg),
+        cfg.serve.clone(),
+        Arc::new(clock.clone()),
+    );
+    let reqs = knn_pair(0xF1A5);
+    let id0 = b.submit_with_deadline(reqs[0].clone(), Duration::from_millis(5));
+    let id1 = b.submit_with_deadline(reqs[1].clone(), Duration::from_millis(8));
+
+    clock.advance(Duration::from_millis(8));
+    b.poll().expect_err("malformed HLO must fail the flush");
+    assert_eq!(b.pending_len(), 2, "failed batch requeued, not lost");
+    assert_eq!(b.next_deadline(), Some(5_000_000), "requeued queries keep their deadlines");
+    assert_eq!(b.stats().flushes, 0, "a failed flush commits no stats");
+    assert!(b.stats().latency_ns.is_empty());
+
+    repair_deployment(&dir);
+    let out = b.poll().expect("retry succeeds once the artifact is repaired");
+    let ids: Vec<u64> = out.iter().map(|(id, _)| *id).collect();
+    assert_eq!(ids, vec![id0, id1], "submission order survives the requeue");
+    let stats = b.stats();
+    assert_eq!(stats.flushes, 1);
+    // Served at the 8 ms retry: query 0's 5 ms deadline had expired
+    // (the failure cost it its deadline — counted, not hidden); query
+    // 1's 8 ms deadline was met exactly.
+    assert_eq!((stats.deadline_met, stats.deadline_misses), (1, 1), "{stats:?}");
+    let mut solo = Engine::new(AccdConfig::new()).expect("engine");
+    for (id, resp) in &out {
+        let qi = *id as usize;
+        assert_knn_parity(resp, &reqs[qi], &mut solo, &format!("requeued query {qi}"));
+    }
+}
+
+/// The same failure under the always-on `Server`: the scheduler's
+/// failed attempt is counted in `flush_failures`, the batch is
+/// requeued, and the next wake event after the repair serves every
+/// accepted query — nothing lost, solo-parity intact.
+#[test]
+fn server_recovers_from_midflush_failure_without_losing_queries() {
+    let dir = broken_knn_deployment("server_retry");
+    let cfg = AccdConfig::new();
+    let clock = VirtualClock::new();
+    let server = Server::with_clock(
+        engine_over(&dir, &cfg),
+        cfg.serve.clone(),
+        Arc::new(clock.clone()),
+    );
+    let reqs = knn_pair(0xF1A6);
+    let h0 = server.submit_with_deadline(reqs[0].clone(), Duration::from_millis(5)).unwrap();
+    let h1 = server.submit_with_deadline(reqs[1].clone(), Duration::from_millis(8)).unwrap();
+
+    // Trip the failure and wait (by yielding, not sleeping) until the
+    // scheduler has observably hit it and requeued the batch.
+    clock.advance(Duration::from_millis(5));
+    while server.stats().flush_failures == 0 {
+        std::thread::yield_now();
+    }
+    repair_deployment(&dir);
+    clock.advance(Duration::from_millis(3));
+
+    let r0 = h0.wait().expect("requeued query served after the repair");
+    let r1 = h1.wait().expect("second query served after the repair");
+    let mut solo = Engine::new(AccdConfig::new()).expect("engine");
+    assert_knn_parity(&r0, &reqs[0], &mut solo, "retried query 0");
+    assert_knn_parity(&r1, &reqs[1], &mut solo, "retried query 1");
+    let stats = server.shutdown();
+    assert_eq!(stats.latency_ns.len(), 2, "both queries answered: {stats:?}");
+    assert!(stats.flush_failures >= 1, "the failure is visible to operators: {stats:?}");
+    assert_eq!(stats.shed, 0, "an engine failure is not overload");
+}
+
+/// When the engine never recovers, shutdown must not hang on its
+/// drain: after `DRAIN_RETRY_LIMIT` consecutive failures the
+/// remaining handles are failed over with the underlying error —
+/// resolved, not leaked.
+#[test]
+fn shutdown_drain_fails_over_handles_when_engine_never_recovers() {
+    let dir = broken_knn_deployment("drain_failover");
+    let cfg = AccdConfig::new();
+    let clock = VirtualClock::new();
+    let server = Server::with_clock(
+        engine_over(&dir, &cfg),
+        cfg.serve.clone(),
+        Arc::new(clock.clone()),
+    );
+    let [req, _] = knn_pair(0xF1A7);
+    // A far-future deadline keeps the scheduler idle pre-shutdown, so
+    // the drain's retry budget is observed exactly.
+    let handle = server.submit_with_deadline(req, Duration::from_secs(3_600)).unwrap();
+    let stats = server.shutdown();
+    let err = handle.wait().expect_err("failed over, not leaked");
+    assert!(matches!(err, accd::Error::Serve(_)), "{err}");
+    assert!(err.to_string().contains("drain failed"), "{err}");
+    assert_eq!(stats.flush_failures, DRAIN_RETRY_LIMIT as u64, "{stats:?}");
+    assert!(stats.latency_ns.is_empty(), "nothing was served: {stats:?}");
+}
+
 #[test]
 fn config_loader_rejects_broken_files() {
-    use accd::config::AccdConfig;
     let dir = tmpdir("config");
     write(&dir, "bad.json", "{");
     assert!(AccdConfig::load(dir.join("bad.json").to_str().unwrap()).is_err());

@@ -1,0 +1,148 @@
+//! Property test for the always-on server: for ANY seeded open-loop
+//! arrival schedule — random request mixes, random arrival ticks,
+//! random deadline assignments — every query accepted by
+//! `serve::Server` resolves to a response **bit-for-bit equal** to the
+//! solo engine, across shard counts 1 / 2 / 4.  The schedule runs on a
+//! `VirtualClock` (the scheduler wakes via the registered clock waker),
+//! so arbitrary arrival interleavings are exercised with zero
+//! wall-clock sleeps.  This is the server-level extension of the serve
+//! parity contract: concurrency, intake transfer, wake-up scheduling
+//! and drain-on-shutdown may change *when* queries run, never *what*
+//! they compute.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::synthetic;
+use accd::serve::{Server, ServeRequest, ServeResponse, VirtualClock};
+use accd::util::prop::{self, Config};
+
+/// One scheduled arrival: the request, its arrival tick (ms from
+/// scenario start) and an optional deadline span (ms from arrival).
+#[derive(Debug)]
+struct Arrival {
+    req: ServeRequest,
+    at_ms: u64,
+    deadline_ms: Option<u64>,
+}
+
+/// Exact comparison of one served response against the solo run.
+fn check_against_solo(
+    resp: &ServeResponse,
+    req: &ServeRequest,
+    solo: &mut Engine,
+    what: &str,
+) -> Result<(), String> {
+    match req {
+        ServeRequest::Knn { src, trg, k, metric } => {
+            let want =
+                solo.knn_join_metric(src, trg, *k, *metric).map_err(|e| e.to_string())?;
+            let got = resp.as_knn().ok_or_else(|| format!("{what}: wrong kind"))?;
+            if got.k != want.k || got.neighbors != want.neighbors {
+                return Err(format!("{what}: knn diverged"));
+            }
+        }
+        ServeRequest::Kmeans { ds, k, max_iters } => {
+            let want = solo.kmeans(ds, *k, *max_iters).map_err(|e| e.to_string())?;
+            let got = resp.as_kmeans().ok_or_else(|| format!("{what}: wrong kind"))?;
+            if got.assign != want.assign {
+                return Err(format!("{what}: kmeans assignment diverged"));
+            }
+            if got.sse != want.sse {
+                return Err(format!("{what}: kmeans sse {} != {}", got.sse, want.sse));
+            }
+            if got.iterations != want.iterations {
+                return Err(format!("{what}: iterations {} != {}", got.iterations, want.iterations));
+            }
+            if got.centers.as_slice() != want.centers.as_slice() {
+                return Err(format!("{what}: kmeans centers diverged"));
+            }
+        }
+        ServeRequest::Nbody { .. } => unreachable!("schedule has no N-body queries"),
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_server_matches_solo_for_any_arrival_schedule() {
+    prop::check(
+        &Config { cases: 4, max_size: 60, seed: 0x5E12_4E12, ..Default::default() },
+        |rng, size| {
+            // Shared content pool: one KNN target cohort, two K-means
+            // datasets, a handful of sources (reused, so dedup and the
+            // fingerprint memo stay in play under arrival races).
+            let trg = Arc::new(synthetic::clustered(160 + size, 4, 5, 0.03, 500 + size as u64));
+            let km_a = Arc::new(synthetic::clustered(110 + size, 4, 4, 0.04, 600 + size as u64));
+            let km_b = Arc::new(synthetic::clustered(90 + size / 2, 4, 4, 0.04, 700));
+            let srcs: Vec<_> = (0..3)
+                .map(|s| Arc::new(synthetic::clustered(40 + 10 * s, 4, 3, 0.05, 800 + s as u64)))
+                .collect();
+            let n_queries = 5 + rng.below(5);
+            let mut schedule: Vec<Arrival> = (0..n_queries)
+                .map(|_| {
+                    let req = match rng.below(3) {
+                        0 => ServeRequest::knn(srcs[rng.below(srcs.len())].clone(), trg.clone(), 3),
+                        1 => ServeRequest::kmeans(km_a.clone(), 2 + rng.below(6), rng.below(4)),
+                        _ => ServeRequest::kmeans(km_b.clone(), 2 + rng.below(4), 1 + rng.below(3)),
+                    };
+                    Arrival {
+                        req,
+                        at_ms: rng.below(50) as u64,
+                        deadline_ms: (rng.below(3) != 0).then(|| 1 + rng.below(40) as u64),
+                    }
+                })
+                .collect();
+            schedule.sort_by_key(|a| a.at_ms);
+            schedule
+        },
+        |schedule| {
+            let mut solo = Engine::new(AccdConfig::new()).map_err(|e| e.to_string())?;
+            for shards in [1usize, 2, 4] {
+                let mut cfg = AccdConfig::new();
+                cfg.serve.shards = shards;
+                let engine = Engine::new(cfg.clone()).map_err(|e| e.to_string())?;
+                let clock = VirtualClock::new();
+                let server =
+                    Server::with_clock(engine, cfg.serve.clone(), Arc::new(clock.clone()));
+                let mut handles = Vec::new();
+                for a in schedule {
+                    // Open loop: jump the clock to the arrival tick and
+                    // submit without waiting on any earlier response.
+                    clock.set(a.at_ms * 1_000_000);
+                    let handle = match a.deadline_ms {
+                        Some(ms) => server
+                            .submit_with_deadline(a.req.clone(), Duration::from_millis(ms)),
+                        None => server.submit(a.req.clone()),
+                    };
+                    handles.push(handle.map_err(|e| e.to_string())?);
+                }
+                // Let every deadline expire, then drain the rest.
+                clock.advance(Duration::from_millis(100));
+                let stats = server.shutdown();
+                if stats.latency_ns.len() != schedule.len() {
+                    return Err(format!(
+                        "{shards} shards: {} answered of {}",
+                        stats.latency_ns.len(),
+                        schedule.len()
+                    ));
+                }
+                if stats.shed != 0 {
+                    return Err(format!("{shards} shards: {} shed under default cap", stats.shed));
+                }
+                let with_deadline =
+                    schedule.iter().filter(|a| a.deadline_ms.is_some()).count() as u64;
+                if stats.deadline_met + stats.deadline_misses != with_deadline {
+                    return Err(format!("{shards} shards: deadline accounting: {stats:?}"));
+                }
+                for (i, handle) in handles.into_iter().enumerate() {
+                    let resp = handle.wait().map_err(|e| e.to_string())?;
+                    let what = format!("{shards} shards, arrival {i}");
+                    check_against_solo(&resp, &schedule[i].req, &mut solo, &what)?;
+                }
+            }
+            Ok(())
+        },
+    );
+}

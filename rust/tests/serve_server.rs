@@ -1,0 +1,335 @@
+//! The always-on `serve::Server`, end to end, on a virtual clock.
+//!
+//! Producers submit through the bounded intake; a background scheduler
+//! owns the `QueryBatcher` and flushes when `next_wakeup()` says work
+//! is due.  Everything runs on a `VirtualClock` the tests advance by
+//! hand — the scheduler registers a clock waker, so there is not a
+//! single wall-clock sleep anywhere:
+//!
+//! (a) an open-loop Poisson arrival trace drains clean: every accepted
+//!     query is answered, bit-for-bit equal to the solo engine, across
+//!     shard counts 1 / 2 / 4,
+//! (b) deadline-free queries are served without any clock advance (the
+//!     `next_deadline()`-sleeping loop of old stalled forever here),
+//! (c) deadline queries coalesce into ONE flush at expiry,
+//! (d) `queue_cap` + `overload = "reject"` sheds deterministically and
+//!     counts it; `"block"` parks the producer until space frees,
+//! (e) shutdown drains every accepted query before returning,
+//! (f) an invalid query fails its OWN handle; the server keeps serving.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::synthetic;
+use accd::serve::{ResponseHandle, Server, ServeRequest, ServeResponse, VirtualClock};
+use accd::util::rng::Rng;
+
+fn clocked_server(clock: &VirtualClock, tweak: impl FnOnce(&mut AccdConfig)) -> Server {
+    let mut cfg = AccdConfig::new();
+    tweak(&mut cfg);
+    let engine = Engine::new(cfg.clone()).unwrap();
+    Server::with_clock(engine, cfg.serve.clone(), Arc::new(clock.clone()))
+}
+
+/// Exact parity of one response against the solo engine — the server
+/// must never perturb a result, whatever the arrival interleaving.
+fn assert_solo_parity(resp: &ServeResponse, req: &ServeRequest, solo: &mut Engine, what: &str) {
+    match req {
+        ServeRequest::Knn { src, trg, k, metric } => {
+            let want = solo.knn_join_metric(src, trg, *k, *metric).expect("solo knn");
+            let got = resp.as_knn().unwrap_or_else(|| panic!("{what}: wrong kind"));
+            assert_eq!(got.k, want.k, "{what}: k");
+            assert_eq!(got.neighbors, want.neighbors, "{what}: knn diverged");
+        }
+        ServeRequest::Kmeans { ds, k, max_iters } => {
+            let want = solo.kmeans(ds, *k, *max_iters).expect("solo kmeans");
+            let got = resp.as_kmeans().unwrap_or_else(|| panic!("{what}: wrong kind"));
+            assert_eq!(got.assign, want.assign, "{what}: kmeans diverged");
+            assert_eq!(got.sse, want.sse, "{what}: kmeans sse diverged");
+            assert_eq!(got.iterations, want.iterations, "{what}: iterations diverged");
+            assert_eq!(
+                got.centers.as_slice(),
+                want.centers.as_slice(),
+                "{what}: kmeans centers diverged"
+            );
+        }
+        ServeRequest::Nbody { .. } => unreachable!("workload has no N-body queries"),
+    }
+}
+
+/// The mixed KNN / K-means request pool the open-loop tests draw from:
+/// two KNN cohorts (shared targets), K-means on two datasets with
+/// varying k, plus exact duplicates to keep dedup in the picture.
+fn request_pool(seed: u64) -> Vec<ServeRequest> {
+    let trg_a = Arc::new(synthetic::clustered(240, 4, 5, 0.03, seed));
+    let trg_b = Arc::new(synthetic::clustered(180, 4, 4, 0.03, seed + 1));
+    let km_a = Arc::new(synthetic::clustered(150, 4, 5, 0.04, seed + 2));
+    let km_b = Arc::new(synthetic::clustered(120, 4, 4, 0.04, seed + 3));
+    let src = |s: u64, n: usize| Arc::new(synthetic::clustered(n, 4, 3, 0.05, seed + 10 + s));
+    let dup_src = src(0, 60);
+    vec![
+        ServeRequest::knn(dup_src.clone(), trg_a.clone(), 5),
+        ServeRequest::kmeans(km_a.clone(), 6, 3),
+        ServeRequest::knn(src(1, 70), trg_a.clone(), 5),
+        ServeRequest::kmeans(km_b.clone(), 4, 2),
+        ServeRequest::knn(src(2, 50), trg_b.clone(), 4),
+        ServeRequest::kmeans(km_a.clone(), 9, 2),
+        ServeRequest::knn(dup_src, trg_a.clone(), 5), // exact duplicate of [0]
+        ServeRequest::kmeans(km_b, 4, 2),             // exact duplicate of [3]
+        ServeRequest::knn(src(3, 80), trg_b, 4),
+        ServeRequest::kmeans(km_a, 3, 4),
+        ServeRequest::knn(src(4, 40), trg_a, 5),
+    ]
+}
+
+/// (a) The tentpole contract: a seeded open-loop Poisson arrival trace
+/// (the producer never waits for responses) drains with zero lost and
+/// zero shed queries, and every response equals the solo run —
+/// across shard counts 1 / 2 / 4.
+#[test]
+fn open_loop_poisson_trace_drains_clean_with_solo_parity() {
+    let mut solo = Engine::new(AccdConfig::new()).expect("engine");
+    for shards in [1usize, 2, 4] {
+        let reqs = request_pool(0xACC0);
+        // Seeded Poisson arrivals: exponential inter-arrival times with
+        // a 2 ms mean, precomputed so every run sees the same trace.
+        let mut rng = Rng::new(0x9015_5017 + shards as u64);
+        let mut at = 0u64;
+        let arrivals: Vec<u64> = reqs
+            .iter()
+            .map(|_| {
+                let u = 1.0 - rng.f64(); // (0, 1]: ln is finite
+                at += (-u.ln() * 2_000_000.0) as u64 + 1;
+                at
+            })
+            .collect();
+
+        let clock = VirtualClock::new();
+        let server = clocked_server(&clock, |c| c.serve.shards = shards);
+        let mut handles: Vec<ResponseHandle> = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            clock.set(arrivals[i]);
+            // Open loop: submit at the arrival tick and move on; a mix
+            // of deadline-free and 4 ms-deadline queries exercises both
+            // the straggler and the coalescing path under load.
+            let handle = if i % 3 == 0 {
+                server.submit(req.clone())
+            } else {
+                server.submit_with_deadline(req.clone(), Duration::from_millis(4))
+            };
+            handles.push(handle.expect("accepted"));
+        }
+        // Let the last deadlines expire, then drain via shutdown.
+        clock.advance(Duration::from_millis(4));
+        let stats = server.shutdown();
+
+        assert_eq!(stats.latency_ns.len(), reqs.len(), "{shards} shards: all answered");
+        assert_eq!(stats.shed, 0, "{shards} shards: nothing shed");
+        assert!(stats.flushes >= 1, "{shards} shards: {stats:?}");
+        assert!(stats.queue_depth_watermark >= 1, "{shards} shards: {stats:?}");
+        for (i, handle) in handles.into_iter().enumerate() {
+            let resp = handle.wait().expect("no accepted query may be lost");
+            assert_solo_parity(&resp, &reqs[i], &mut solo, &format!("{shards} shards, query {i}"));
+        }
+    }
+}
+
+/// (b) The wake-up regression: deadline-free queries must be served
+/// without ANY clock advance.  A scheduler sleeping on the
+/// deadline-only `next_deadline()` (always `None` here) would stall
+/// forever and hang this test; `next_wakeup()` reports such stragglers
+/// as due immediately.
+#[test]
+fn deadline_free_queries_are_served_without_any_clock_advance() {
+    let clock = VirtualClock::new();
+    let server = clocked_server(&clock, |c| c.serve.shards = 2);
+    let km = Arc::new(synthetic::clustered(140, 4, 4, 0.04, 77));
+    let reqs = [
+        ServeRequest::kmeans(km.clone(), 4, 3),
+        ServeRequest::kmeans(km.clone(), 6, 2),
+        ServeRequest::kmeans(km, 3, 2),
+    ];
+    let handles: Vec<_> =
+        reqs.iter().map(|r| server.submit(r.clone()).expect("accepted")).collect();
+    let mut solo = Engine::new(AccdConfig::new()).expect("engine");
+    for (i, handle) in handles.into_iter().enumerate() {
+        let resp = handle.wait().expect("straggler served, not stalled");
+        assert_solo_parity(&resp, &reqs[i], &mut solo, &format!("straggler {i}"));
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.latency_ns.len(), reqs.len());
+    assert_eq!((stats.deadline_met, stats.deadline_misses), (0, 0), "no deadlines here");
+}
+
+/// (c) Deadline queries coalesce: with the clock frozen short of the
+/// shared deadline nothing is served, and the expiry tick serves all
+/// of them in ONE flush (met, not missed).
+#[test]
+fn deadline_queries_coalesce_into_one_flush_at_expiry() {
+    let clock = VirtualClock::new();
+    let server = clocked_server(&clock, |c| c.serve.shards = 2);
+    let trg = Arc::new(synthetic::clustered(200, 4, 4, 0.03, 31));
+    let km = Arc::new(synthetic::clustered(130, 4, 4, 0.04, 32));
+    let src = |s: u64| Arc::new(synthetic::clustered(60, 4, 3, 0.05, 40 + s));
+    let reqs = [
+        ServeRequest::knn(src(0), trg.clone(), 5),
+        ServeRequest::knn(src(1), trg, 5),
+        ServeRequest::kmeans(km.clone(), 5, 2),
+        ServeRequest::kmeans(km, 8, 2),
+    ];
+    let deadline = Duration::from_millis(5);
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|r| server.submit_with_deadline(r.clone(), deadline).expect("accepted"))
+        .collect();
+
+    // Wait (yielding, not sleeping) until the scheduler has moved all
+    // four out of the intake: only then is "one coalesced flush" a
+    // deterministic claim — a clock advance racing a half-transferred
+    // burst could legally serve it in two.
+    while server.pending_len() < reqs.len() {
+        std::thread::yield_now();
+    }
+
+    // Frozen clock: nothing is due, nothing may be served.
+    assert_eq!(server.in_flight(), reqs.len());
+    assert!(handles[0].try_take().is_none(), "not resolved before its deadline");
+    let before = server.stats();
+    assert_eq!((before.flushes, before.latency_ns.len()), (0, 0), "{before:?}");
+
+    clock.advance(deadline);
+    let mut solo = Engine::new(AccdConfig::new()).expect("engine");
+    for (i, handle) in handles.into_iter().enumerate() {
+        let resp = handle.wait().expect("served at expiry");
+        assert_solo_parity(&resp, &reqs[i], &mut solo, &format!("wave query {i}"));
+    }
+    assert_eq!(server.in_flight(), 0, "capacity released before handles resolve");
+    let stats = server.shutdown();
+    assert_eq!(stats.flushes, 1, "one coalesced flush, not four: {stats:?}");
+    assert_eq!((stats.deadline_met, stats.deadline_misses), (4, 0), "{stats:?}");
+}
+
+/// (d) `overload = "reject"`: at `queue_cap` accepted-but-unanswered
+/// queries the next submit is shed — deterministically, because the
+/// frozen clock keeps the first two unresolved — and counted.  Space
+/// freed by resolution is visible to the producer as soon as `wait()`
+/// returns.
+#[test]
+fn reject_policy_sheds_at_the_bound_and_counts_it() {
+    let clock = VirtualClock::new();
+    let server = clocked_server(&clock, |c| {
+        c.serve.shards = 1;
+        c.serve.queue_cap = 2;
+        c.serve.overload = "reject".to_string();
+    });
+    let km = Arc::new(synthetic::clustered(120, 4, 4, 0.04, 55));
+    let rush = Duration::from_millis(50);
+    let a = server.submit_with_deadline(ServeRequest::kmeans(km.clone(), 4, 2), rush).unwrap();
+    let b = server.submit_with_deadline(ServeRequest::kmeans(km.clone(), 6, 2), rush).unwrap();
+    let shed_err = server
+        .submit_with_deadline(ServeRequest::kmeans(km.clone(), 8, 2), rush)
+        .expect_err("third query must be shed at cap 2");
+    assert!(matches!(shed_err, accd::Error::Serve(_)), "{shed_err}");
+    assert!(shed_err.to_string().contains("shed"), "{shed_err}");
+    let stats = server.stats();
+    assert_eq!((stats.shed, stats.queue_depth_watermark), (1, 2), "{stats:?}");
+
+    clock.advance(rush);
+    a.wait().expect("served");
+    b.wait().expect("served");
+    // Both resolved => both slots are free again.
+    let c = server
+        .submit_with_deadline(ServeRequest::kmeans(km, 5, 2), rush)
+        .expect("capacity came back after resolution");
+    clock.advance(rush);
+    c.wait().expect("served");
+    let stats = server.shutdown();
+    assert_eq!(stats.shed, 1, "the one rejection, nothing more: {stats:?}");
+    assert_eq!(stats.queue_depth_watermark, 2, "{stats:?}");
+    assert_eq!(stats.latency_ns.len(), 3, "shed queries leave no latency sample");
+}
+
+/// (d) `overload = "block"`: a producer hitting the bound parks until
+/// resolution frees a slot, then its query goes through unharmed.
+#[test]
+fn block_policy_parks_the_producer_until_space_frees() {
+    let clock = VirtualClock::new();
+    let server = clocked_server(&clock, |c| {
+        c.serve.shards = 1;
+        c.serve.queue_cap = 1;
+        c.serve.overload = "block".to_string();
+    });
+    let km = Arc::new(synthetic::clustered(110, 4, 4, 0.04, 66));
+    let first = ServeRequest::kmeans(km.clone(), 4, 2);
+    let second = ServeRequest::kmeans(km, 7, 2);
+    let wait_ms = Duration::from_millis(10);
+    let h1 = server.submit_with_deadline(first.clone(), wait_ms).unwrap();
+    let (r1, r2) = std::thread::scope(|s| {
+        let producer = s.spawn(|| {
+            // Cap 1 and the first query unresolved: this submit blocks
+            // until the scheduler serves it at the 10 ms tick.
+            server.submit_with_deadline(second.clone(), wait_ms).expect("accepted after room")
+        });
+        clock.advance(wait_ms);
+        let r1 = h1.wait().expect("first served");
+        let h2 = producer.join().expect("producer thread");
+        clock.advance(wait_ms);
+        (r1, h2.wait().expect("second served"))
+    });
+    let mut solo = Engine::new(AccdConfig::new()).expect("engine");
+    assert_solo_parity(&r1, &first, &mut solo, "blocked producer, first");
+    assert_solo_parity(&r2, &second, &mut solo, "blocked producer, second");
+    let stats = server.shutdown();
+    assert_eq!((stats.shed, stats.queue_depth_watermark), (0, 1), "{stats:?}");
+    assert_eq!(stats.latency_ns.len(), 2);
+}
+
+/// (e) Shutdown drains: far-future deadlines keep the scheduler idle,
+/// yet `shutdown()` answers every accepted query before returning.
+#[test]
+fn shutdown_drains_every_accepted_query() {
+    let clock = VirtualClock::new();
+    let server = clocked_server(&clock, |c| c.serve.shards = 2);
+    let km = Arc::new(synthetic::clustered(130, 4, 4, 0.04, 88));
+    let patient = Duration::from_secs(3_600);
+    let reqs: Vec<_> = (0..5).map(|i| ServeRequest::kmeans(km.clone(), 3 + i, 2)).collect();
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|r| server.submit_with_deadline(r.clone(), patient).expect("accepted"))
+        .collect();
+    let stats = server.shutdown();
+    assert_eq!(stats.latency_ns.len(), reqs.len(), "drained, not dropped: {stats:?}");
+    assert_eq!(stats.deadline_met, reqs.len() as u64, "served well before the hour");
+    let mut solo = Engine::new(AccdConfig::new()).expect("engine");
+    for (i, handle) in handles.into_iter().enumerate() {
+        let resp = handle.wait().expect("resolved by the drain");
+        assert_solo_parity(&resp, &reqs[i], &mut solo, &format!("drained query {i}"));
+    }
+}
+
+/// (f) A query that fails admission validation fails its OWN handle
+/// with the real error; the server keeps serving everyone else.  (The
+/// caller-driven batcher would instead refuse the whole flush and
+/// leave the bad query queued — poison, under an autonomous loop.)
+#[test]
+fn invalid_query_fails_its_own_handle_not_the_server() {
+    let clock = VirtualClock::new();
+    let server = clocked_server(&clock, |c| c.serve.shards = 2);
+    let trg = Arc::new(synthetic::clustered(150, 4, 4, 0.03, 99));
+    let src = Arc::new(synthetic::clustered(50, 4, 3, 0.05, 100));
+    let km = Arc::new(synthetic::clustered(120, 4, 4, 0.04, 101));
+    let bad = server.submit(ServeRequest::knn(src, trg, 0)).expect("accepted; fails later");
+    let good_req = ServeRequest::kmeans(km, 4, 2);
+    let good = server.submit(good_req.clone()).expect("accepted");
+    let err = bad.wait().expect_err("k = 0 must fail validation");
+    assert!(matches!(err, accd::Error::Data(_)), "{err}");
+    assert!(err.to_string().contains("k=0"), "{err}");
+    let resp = good.wait().expect("the server outlives its poison query");
+    let mut solo = Engine::new(AccdConfig::new()).expect("engine");
+    assert_solo_parity(&resp, &good_req, &mut solo, "query after the poison one");
+    let stats = server.shutdown();
+    assert_eq!(stats.latency_ns.len(), 1, "only the served query samples latency");
+    assert_eq!(stats.shed, 0, "a validation failure is not a shed");
+}

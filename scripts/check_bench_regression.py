@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Gate serving-bench regressions against a committed baseline.
+
+Usage:
+    python3 scripts/check_bench_regression.py BENCH_serve.json BENCH_serve.baseline.json
+
+Compares the scenario rows emitted by `cargo bench --bench
+serve_throughput` (see rust/benches/serve_throughput.rs) against the
+committed baseline and exits non-zero on a regression.  Only
+machine-portable metrics are guarded; raw wall seconds and q/s vary
+with the host and are reported, never judged.
+
+Guarded per scenario (tolerance: >20% worse than baseline fails):
+
+* ``speedup_vs_sequential`` — normalized by the SAME run's sequential
+  engine calls, so host speed divides out.  Fails when it drops more
+  than the tolerance below baseline.
+* ``latency_p99_ms`` — only for the ``*openloop*`` scenarios: those
+  run arrivals and deadlines on a virtual clock, so the p99 is a
+  deterministic property of the schedule, not the host.  Fails when it
+  rises more than the tolerance above baseline.
+
+Hard invariants (any run, no baseline needed):
+
+* ``shed`` and ``flush_failures`` must be 0 — the bench offers loads
+  the default intake bound absorbs, against a healthy engine.
+
+A baseline marked ``"bootstrap": true`` (or with no scenarios)
+records nothing to compare against: the script prints the measured
+values and passes, so the first CI run after adding a scenario is
+green.  Refresh the baseline from a trusted run with:
+
+    ACCD_BENCH_FAST=1 cargo bench --bench serve_throughput
+    cp BENCH_serve.json BENCH_serve.baseline.json
+
+(keep fast mode consistent: CI smoke runs compare fast-mode numbers).
+"""
+
+import json
+import sys
+
+TOLERANCE = 0.20
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"FAIL: cannot read {path}: {e}")
+        sys.exit(1)
+
+
+def rows_by_name(doc):
+    return {row["name"]: row for row in doc.get("scenarios", [])}
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        sys.exit(2)
+    current_path, baseline_path = sys.argv[1], sys.argv[2]
+    current = load(current_path)
+    baseline = load(baseline_path)
+    cur_rows = rows_by_name(current)
+    base_rows = rows_by_name(baseline)
+    failures = []
+    notes = []
+
+    # Hard invariants on the current run.
+    for name, row in sorted(cur_rows.items()):
+        for counter in ("shed", "flush_failures"):
+            value = row.get(counter, 0)
+            if value:
+                failures.append(f"{name}: {counter} = {value:g} (must be 0)")
+
+    print(f"{current_path}: {len(cur_rows)} scenario(s), "
+          f"fast_mode={current.get('fast_mode')}")
+    for name, row in sorted(cur_rows.items()):
+        print(f"  {name}: speedup {row.get('speedup_vs_sequential', 0):.2f}x, "
+              f"qps {row.get('qps', 0):.1f}, p99 {row.get('latency_p99_ms', 0):.3f} ms, "
+              f"shed {row.get('shed', 0):g}, "
+              f"flush_failures {row.get('flush_failures', 0):g}")
+
+    bootstrap = bool(baseline.get("bootstrap")) or not base_rows
+    if bootstrap:
+        print(f"\n{baseline_path} is a bootstrap baseline — nothing to compare "
+              "against; measured values recorded above.  Refresh it from a "
+              "trusted run to arm the gate (see this script's docstring).")
+    else:
+        if baseline.get("fast_mode") != current.get("fast_mode"):
+            notes.append("fast_mode differs from baseline — comparison is "
+                         "apples-to-oranges; refresh the baseline in the "
+                         "mode CI runs")
+        for name, base in sorted(base_rows.items()):
+            cur = cur_rows.get(name)
+            if cur is None:
+                failures.append(f"{name}: scenario present in baseline but "
+                                "missing from the current run")
+                continue
+            base_speedup = base.get("speedup_vs_sequential", 0.0)
+            cur_speedup = cur.get("speedup_vs_sequential", 0.0)
+            if base_speedup > 0 and cur_speedup < base_speedup * (1 - TOLERANCE):
+                failures.append(
+                    f"{name}: speedup_vs_sequential {cur_speedup:.2f}x is "
+                    f">{TOLERANCE:.0%} below baseline {base_speedup:.2f}x")
+            if "openloop" in name:
+                base_p99 = base.get("latency_p99_ms", 0.0)
+                cur_p99 = cur.get("latency_p99_ms", 0.0)
+                if base_p99 > 0 and cur_p99 > base_p99 * (1 + TOLERANCE):
+                    failures.append(
+                        f"{name}: latency_p99_ms {cur_p99:.3f} is "
+                        f">{TOLERANCE:.0%} above baseline {base_p99:.3f}")
+        for name in sorted(set(cur_rows) - set(base_rows)):
+            notes.append(f"{name}: new scenario, not in baseline (unguarded "
+                         "until the baseline is refreshed)")
+
+    for note in notes:
+        print(f"note: {note}")
+    if failures:
+        print(f"\nFAIL: {len(failures)} bench regression(s) vs {baseline_path}:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("\nbench regression check passed")
+
+
+if __name__ == "__main__":
+    main()
