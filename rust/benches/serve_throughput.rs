@@ -4,7 +4,10 @@
 //! repeated-flush scenario that shows the persistent per-shard slab
 //! cache converting packing work into cache hits, plus a
 //! repeated-cohort K-means scenario that shows the lockstep scheduler
-//! sharing packed assignment tiles across same-dataset programs, plus
+//! sharing packed assignment tiles across same-dataset programs AND
+//! the incremental TI bounds pruning device work from iteration 2 on
+//! (the row carries a `prune_rate`; the smoke run FAILS if later
+//! iterations prune nothing), plus
 //! a deadline/latency scenario (EDF-LPT placement, staggered generous
 //! deadlines) that emits p50/p95/p99 latency + deadline met/miss
 //! counts and FAILS the smoke run if the deadline-aware planner
@@ -83,6 +86,9 @@ fn scenario_row(
         ("shed", json::num(stats.shed as f64)),
         ("queue_depth_watermark", json::num(stats.queue_depth_watermark as f64)),
         ("flush_failures", json::num(stats.flush_failures as f64)),
+        ("tiles_skipped", json::num(stats.tiles_skipped as f64)),
+        ("points_pruned", json::num(stats.points_pruned as f64)),
+        ("bound_recomputes", json::num(stats.bound_recomputes as f64)),
     ])
 }
 
@@ -271,18 +277,44 @@ fn main() {
         "lockstep: {} rounds, {} shared tiles | {} units stolen",
         km_stats.lockstep_rounds, km_stats.lockstep_shared_tiles, km_stats.steals
     );
-    scenarios.push(scenario_row(
+    // Incremental TI pruning: fraction of all (point x iteration)
+    // assignment decisions answered by the carried bounds instead of
+    // the device (denominator is the configured iteration cap, so
+    // early convergence only makes the reported rate conservative).
+    let km_prune_rate = km_stats.points_pruned as f64
+        / (n_km * km_iters * km_ks.len()) as f64;
+    println!(
+        "incremental TI: {} tiles skipped, {} points pruned ({:.1}% of point-iterations), \
+         {} bound recomputes",
+        km_stats.tiles_skipped,
+        km_stats.points_pruned,
+        100.0 * km_prune_rate,
+        km_stats.bound_recomputes,
+    );
+    let mut km_row = scenario_row(
         "kmeans_repeated_cohort_2shard",
         km_ks.len(),
         km_secs,
         km_seq_secs / km_secs,
         km_batcher.stats(),
         km_batcher.shard_count(),
-    ));
+    );
+    if let Value::Obj(m) = &mut km_row {
+        m.insert("prune_rate".to_string(), json::num(km_prune_rate));
+    }
+    scenarios.push(km_row);
 
     if km_stats.lockstep_shared_tiles == 0 {
         eprintln!(
             "FAIL: same-dataset kmeans cohort shared no assignment tiles — lockstep regressed"
+        );
+        std::process::exit(1);
+    }
+    if km_stats.points_pruned == 0 || km_stats.tiles_skipped == 0 {
+        eprintln!(
+            "FAIL: multi-iteration kmeans cohort pruned nothing after iteration 1 \
+             ({} points pruned, {} tiles skipped) — incremental TI pruning regressed",
+            km_stats.points_pruned, km_stats.tiles_skipped
         );
         std::process::exit(1);
     }

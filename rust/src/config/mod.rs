@@ -112,6 +112,25 @@ impl OverloadPolicy {
     }
 }
 
+/// K-means program parameters (`coordinator::kmeans`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KmeansConfig {
+    /// Incremental cross-iteration triangle-inequality pruning
+    /// (Elkan/Hamerly-style): carry per-point upper/lower bounds and
+    /// group-pair lower bounds across `step()` calls, widen them O(1)
+    /// per step by per-center drift, and skip device work for points
+    /// (and whole tiles) whose assignment is provably stable.
+    /// `false` restores the per-iteration bound recomputation of the
+    /// pre-incremental engine (the A/B lever for the bench).
+    pub incremental_ti: bool,
+}
+
+impl Default for KmeansConfig {
+    fn default() -> Self {
+        Self { incremental_ti: true }
+    }
+}
+
 /// Serving-runtime parameters (`accd::serve`) — the batched multi-query
 /// layer on top of the engine.
 #[derive(Debug, Clone, PartialEq)]
@@ -233,6 +252,8 @@ impl ServeConfig {
 pub struct AccdConfig {
     pub gti: GtiConfig,
     pub hw: HwConfig,
+    /// K-means program knobs (`coordinator::kmeans`).
+    pub kmeans: KmeansConfig,
     /// Serving-runtime knobs (`accd::serve`).
     pub serve: ServeConfig,
     /// Artifact directory (default "artifacts").
@@ -248,6 +269,7 @@ impl AccdConfig {
         Self {
             gti: GtiConfig::default(),
             hw: HwConfig::default(),
+            kmeans: KmeansConfig::default(),
             serve: ServeConfig::default(),
             artifact_dir: "artifacts".to_string(),
             use_fpga: true,
@@ -273,6 +295,12 @@ impl AccdConfig {
             cfg.hw.simd = h.get("simd").as_usize().unwrap_or(cfg.hw.simd);
             cfg.hw.unroll = h.get("unroll").as_usize().unwrap_or(cfg.hw.unroll);
             cfg.hw.freq_mhz = h.get("freq_mhz").as_f64().unwrap_or(cfg.hw.freq_mhz);
+        }
+        let k = v.get("kmeans");
+        if !matches!(k, Value::Null) {
+            if let Some(b) = k.get("incremental_ti").as_bool() {
+                cfg.kmeans.incremental_ti = b;
+            }
         }
         let s = v.get("serve");
         if !matches!(s, Value::Null) {
@@ -365,6 +393,10 @@ impl AccdConfig {
                 ]),
             ),
             (
+                "kmeans",
+                json::obj(vec![("incremental_ti", Value::Bool(self.kmeans.incremental_ti))]),
+            ),
+            (
                 "serve",
                 json::obj(vec![
                     ("max_batch", json::num(self.serve.max_batch as f64)),
@@ -415,8 +447,19 @@ mod tests {
         cfg.serve.placement = "lpt".to_string();
         cfg.serve.queue_cap = 37;
         cfg.serve.overload = "reject".to_string();
+        cfg.kmeans.incremental_ti = false;
         let re = AccdConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, re);
+    }
+
+    #[test]
+    fn kmeans_incremental_ti_defaults_on_and_parses() {
+        assert!(AccdConfig::new().kmeans.incremental_ti, "incremental TI defaults on");
+        let v = json::parse(r#"{"kmeans": {"incremental_ti": false}}"#).unwrap();
+        assert!(!AccdConfig::from_json(&v).unwrap().kmeans.incremental_ti);
+        // A kmeans section without the knob keeps the default.
+        let v = json::parse(r#"{"kmeans": {}}"#).unwrap();
+        assert!(AccdConfig::from_json(&v).unwrap().kmeans.incremental_ti);
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! AccD K-means: Trace-based + Group-level GTI + fused assignment tiles.
+//! AccD K-means: incremental (Elkan/Hamerly-style) cross-iteration TI
+//! pruning over the stepwise contract, on top of the trace-based +
+//! group-level GTI filter and fused assignment tiles.
 //!
 //! Algorithm outline (paper §IV-B-b/c, the "hierarchy bound" of §VII):
 //!
@@ -6,18 +8,34 @@
 //!    them contiguously (layout §V-A).  Group the k centers into
 //!    `z_trg` center-groups (membership fixed across iterations).
 //! 2. Iteration 0 assigns every point exactly via the fused
-//!    distance+argmin tiles.
-//! 3. Each later iteration: move centers to member means, compute per-
-//!    center drifts; widen every point's upper bound by its assigned
-//!    center's drift (trace-based, Fig. 2c); recompute the cheap Eq. 2
-//!    group-pair lower bounds; a source group whose lb to some center-
-//!    group exceeds its max member ub skips that center-group entirely
-//!    (group-level filter, Fig. 3b).  Surviving (group x center-set)
-//!    rectangles are dense and go to the device.
+//!    distance+argmin tiles.  With `kmeans.incremental_ti` (the
+//!    default) the tiles also return each point's distance to its
+//!    *second*-closest center — the seed of a per-point Hamerly lower
+//!    bound — and the Eq. 2 (source group x center group) lower bounds
+//!    are computed once, exactly, at plan time.
+//! 3. Each later iteration: move centers to member means, compute
+//!    per-center drifts, then *widen* the carried bounds O(1) per
+//!    point/pair (`ub[i] += drift[assign[i]]`,
+//!    `lb[i] -= max_other_drift`, pair lbs by max member drift per
+//!    center group) instead of recomputing them.  A point with
+//!    `ub[i] <= lb[i]` — after one cheap CPU ub-tighten — is provably
+//!    still assigned to the same center and is dropped from the device
+//!    submission (`points_pruned`); a group whose every member is
+//!    stable drops its whole candidate rectangle set (`tiles_skipped`).
+//!    Unstable rows go to the device against the surviving candidate
+//!    center-groups, and come back with fresh exact ub + second-best
+//!    lb (floored by the pruned center-groups' pair lbs).
 //!
-//! Soundness argument for the prune rule is spelled out in
-//! `gti::filter` and exercised by `rust/tests/integration_algorithms.rs`
-//! which checks exact agreement with the naive CPU baseline.
+//! With `kmeans.incremental_ti = false` every iteration instead widens
+//! only the upper bounds, recenters the center grouping and recomputes
+//! the Eq. 2 group-pair bounds from scratch — the pre-incremental
+//! behavior, kept as the A/B lever for the bench.
+//!
+//! Soundness argument for the prune rules is spelled out in
+//! `gti::bounds` / `gti::filter` and exercised by
+//! `rust/tests/integration_algorithms.rs` (exact agreement with the
+//! naive CPU baseline) and `rust/tests/prop_gti_bounds.rs` (the
+//! incremental bound algebra under random drift sequences).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -25,7 +43,7 @@ use std::time::Instant;
 use crate::data::{Dataset, Matrix};
 use crate::fpga::device::DeviceStats;
 use crate::fpga::FpgaDevice;
-use crate::gti::{bounds, Grouping};
+use crate::gti::{bounds, filter, Grouping};
 use crate::layout::{PackedGrouping, PackedSet};
 use crate::metrics::RunReport;
 use crate::runtime::TileInfo;
@@ -79,6 +97,16 @@ pub(crate) struct KmeansProgram {
     /// Assignment + upper bounds in packed-row order.
     assign: Vec<u32>,
     ub: Vec<f32>,
+    /// Incremental TI mode (`kmeans.incremental_ti` at plan time).
+    incremental: bool,
+    /// Per-point Hamerly lower bound to the closest *non-assigned*
+    /// center, packed-row order (incremental mode only; empty in
+    /// legacy mode).
+    lb: Vec<f32>,
+    /// Carried (source group x center group) lower bounds: exact at
+    /// plan time, widened O(1) per step by max member drift per center
+    /// group (incremental mode only; empty in legacy mode).
+    pair_lb: Vec<Vec<f32>>,
     k_pad: usize,
     d_pad: usize,
     tile: TileInfo,
@@ -215,22 +243,51 @@ pub(crate) fn plan(
     });
 
     let centers_slab = pad_centers(&centers, k_pad, d_pad);
+    let incremental = cfg.kmeans.incremental_ti;
     let mut assign = vec![0u32; n]; // packed-row order
     let mut ub = vec![0.0f32; n]; // upper bound on dist to assigned
+    let mut lb = Vec::new(); // Hamerly lb to second-closest (incremental)
     let dev0 = engine.device.stats();
-    assign_full(
-        &engine.device,
-        &points_slab.slab,
-        n,
-        &centers_slab,
-        k,
-        k_pad,
-        d_pad,
-        &mut assign,
-        &mut ub,
-    )?;
+    if incremental {
+        lb = vec![0.0f32; n];
+        assign2_full(
+            &engine.device,
+            &points_slab.slab,
+            n,
+            &centers_slab,
+            k,
+            k_pad,
+            d_pad,
+            &mut assign,
+            &mut ub,
+            &mut lb,
+        )?;
+    } else {
+        assign_full(
+            &engine.device,
+            &points_slab.slab,
+            n,
+            &centers_slab,
+            k,
+            k_pad,
+            d_pad,
+            &mut assign,
+            &mut ub,
+        )?;
+    }
     let mut device = DeviceStats::default();
     program::absorb_device(&mut device, &program::device_delta(&dev0, &engine.device.stats()));
+
+    // Plan-time exact Eq. 2 group-pair lower bounds (incremental mode):
+    // tightened once here, widened O(1) per step thereafter.
+    let mut pair_lb: Vec<Vec<f32>> = Vec::new();
+    if incremental {
+        pair_lb = bounds::group_pair_bounds(&pg.grouping, &center_grouping)
+            .iter()
+            .map(|row| row.iter().map(|b| b.lb).collect())
+            .collect();
+        report.filter.bound_comps += (pg.grouping.num_groups() * z_trg) as u64;
+    }
 
     Ok(KmeansProgram {
         k,
@@ -241,6 +298,9 @@ pub(crate) fn plan(
         z_trg,
         assign,
         ub,
+        incremental,
+        lb,
+        pair_lb,
         k_pad,
         d_pad,
         tile,
@@ -269,32 +329,12 @@ impl CohortProgram for KmeansProgram {
         let k = self.k;
         let grouping = &self.pg.grouping;
         let packed = &self.pg.packed;
+        let num_groups = grouping.num_groups();
 
         // Center update (CPU): means over packed points.
         let filt = Instant::now();
         let drift = update_centers(packed, &self.assign, &mut self.centers, k);
         let max_drift = drift.iter().cloned().fold(0.0f32, f32::max);
-        // Trace-based: widen ubs by assigned center drift.
-        for (i, a) in self.assign.iter().enumerate() {
-            self.ub[i] += drift[*a as usize];
-        }
-        // Center grouping follows its members (recenter + radii).
-        let cg_drift = recenter_center_groups(&mut self.center_grouping, &self.centers);
-        let _ = cg_drift;
-        // Group-level bounds: Eq. 2 on (source group, center group).
-        let pair_bounds = bounds::group_pair_bounds(grouping, &self.center_grouping);
-        self.report.filter.bound_comps += (grouping.num_groups() * self.z_trg) as u64;
-        // Per source group: ub = max member ub.
-        let mut grp_ub = vec![0.0f32; grouping.num_groups()];
-        for g in 0..grouping.num_groups() {
-            let (start, len) = (packed.group_start(g), packed.group_len(g));
-            let mut m = 0.0f32;
-            for i in start..start + len {
-                m = m.max(self.ub[i]);
-            }
-            grp_ub[g] = m;
-        }
-        self.report.filter_secs += filt.elapsed().as_secs_f64();
 
         // Candidate center-groups per source group.  Source groups
         // sharing the same candidate signature are merged into ONE
@@ -305,30 +345,133 @@ impl CohortProgram for KmeansProgram {
         let mut changed = 0usize;
         let mut batches: std::collections::BTreeMap<Vec<u32>, Vec<usize>> =
             std::collections::BTreeMap::new();
-        for g in 0..grouping.num_groups() {
-            let len = packed.group_len(g);
-            if len == 0 {
-                continue;
-            }
-            let mut cand_groups: Vec<u32> = Vec::new();
-            for b in 0..self.z_trg {
-                self.report.filter.group_pairs += 1;
-                if pair_bounds[g][b].lb <= grp_ub[g] {
-                    self.report.filter.surviving_group_pairs += 1;
-                    cand_groups.push(b as u32);
+        // Incremental mode only: per group, the unstable packed rows
+        // that still need a device recompute, and the lb floor over
+        // pruned center-groups (a refreshed per-point lb may not claim
+        // less than the tightest pruned pair bound).
+        let mut rows_of: Vec<Vec<u32>> = Vec::new();
+        let mut lb_floor: Vec<f32> = Vec::new();
+
+        if self.incremental {
+            // O(1) widening of the carried bounds — no recompute, no
+            // recentering (center-group membership is fixed and only
+            // `members`/`assign` are read below).
+            let w = bounds::DriftWidening::from_drifts(&drift);
+            bounds::widen_point_bounds(&mut self.ub, &mut self.lb, &self.assign, &drift, &w);
+            let cg_drift =
+                bounds::center_group_drift(&self.center_grouping.assign, self.z_trg, &drift);
+            bounds::widen_pair_lbs(&mut self.pair_lb, &cg_drift);
+            self.report.filter.bound_comps +=
+                (num_groups * self.z_trg + self.assign.len()) as u64;
+
+            rows_of = vec![Vec::new(); num_groups];
+            lb_floor = vec![f32::INFINITY; num_groups];
+            for g in 0..num_groups {
+                let (start, len) = (packed.group_start(g), packed.group_len(g));
+                if len == 0 {
+                    continue;
+                }
+                self.report.filter.total_pairs += (len * k) as u64;
+                // Point-level stability: a point failing the widened
+                // test gets one cheap exact ub-tighten (CPU distance to
+                // its assigned center) before it is declared unstable.
+                let members: Vec<u32> = (start as u32..(start + len) as u32).collect();
+                for &pi in &members {
+                    let i = pi as usize;
+                    if self.ub[i] > self.lb[i] {
+                        let a = self.assign[i] as usize;
+                        self.ub[i] = packed.points.dist2(i, &self.centers, a).max(0.0).sqrt();
+                        self.report.filter.bound_recomputes += 1;
+                    }
+                }
+                let (unstable, stable) = filter::unstable_members(&members, &self.ub, &self.lb);
+                if unstable.is_empty() {
+                    // Every member provably keeps its assignment: the
+                    // whole candidate rectangle set is dropped.  Count
+                    // the rectangles the legacy filter (full-member ub)
+                    // would have submitted.
+                    let ub_full =
+                        members.iter().fold(0.0f32, |m, &pi| m.max(self.ub[pi as usize]));
+                    for b in 0..self.z_trg {
+                        self.report.filter.group_pairs += 1;
+                        if self.pair_lb[g][b] <= ub_full {
+                            self.report.filter.tiles_skipped += 1;
+                        }
+                    }
+                    continue;
+                }
+                self.report.filter.points_pruned += stable;
+                // Group filter over the unstable members only (their
+                // max ub is tighter and still covers every submitted
+                // row); pruned center-groups feed the lb floor.
+                let ub_unstable =
+                    unstable.iter().fold(0.0f32, |m, &pi| m.max(self.ub[pi as usize]));
+                let mut cand_groups: Vec<u32> = Vec::new();
+                for b in 0..self.z_trg {
+                    self.report.filter.group_pairs += 1;
+                    if self.pair_lb[g][b] <= ub_unstable {
+                        self.report.filter.surviving_group_pairs += 1;
+                        cand_groups.push(b as u32);
+                    } else {
+                        lb_floor[g] = lb_floor[g].min(self.pair_lb[g][b]);
+                    }
+                }
+                if !cand_groups.is_empty() {
+                    rows_of[g] = unstable;
+                    batches.entry(cand_groups).or_default().push(g);
                 }
             }
-            self.report.filter.total_pairs += (len * k) as u64;
-            if !cand_groups.is_empty() {
-                batches.entry(cand_groups).or_default().push(g);
+        } else {
+            // Legacy per-iteration path: widen ubs by assigned center
+            // drift (trace-based), recenter the center grouping and
+            // recompute the Eq. 2 group-pair bounds from scratch.
+            for (i, a) in self.assign.iter().enumerate() {
+                self.ub[i] += drift[*a as usize];
+            }
+            recenter_center_groups(&mut self.center_grouping, &self.centers);
+            let pair_bounds = bounds::group_pair_bounds(grouping, &self.center_grouping);
+            self.report.filter.bound_comps += (num_groups * self.z_trg) as u64;
+            // Per source group: ub = max member ub.
+            let mut grp_ub = vec![0.0f32; num_groups];
+            for g in 0..num_groups {
+                let (start, len) = (packed.group_start(g), packed.group_len(g));
+                let mut m = 0.0f32;
+                for i in start..start + len {
+                    m = m.max(self.ub[i]);
+                }
+                grp_ub[g] = m;
+            }
+            for g in 0..num_groups {
+                let len = packed.group_len(g);
+                if len == 0 {
+                    continue;
+                }
+                let mut cand_groups: Vec<u32> = Vec::new();
+                for b in 0..self.z_trg {
+                    self.report.filter.group_pairs += 1;
+                    if pair_bounds[g][b].lb <= grp_ub[g] {
+                        self.report.filter.surviving_group_pairs += 1;
+                        cand_groups.push(b as u32);
+                    }
+                }
+                self.report.filter.total_pairs += (len * k) as u64;
+                if !cand_groups.is_empty() {
+                    batches.entry(cand_groups).or_default().push(g);
+                }
             }
         }
+        self.report.filter_secs += filt.elapsed().as_secs_f64();
         let jobs: Vec<(Vec<u32>, Vec<usize>)> = batches.into_iter().collect();
 
         // Stream merged batches through the bounded pipeline.
+        let incremental = self.incremental;
         let device = &engine.device;
         let mut job_err: Option<Error> = None;
-        let mut results: Vec<(Vec<u32>, Vec<u32>, Vec<i32>, Vec<f32>)> = Vec::new();
+        // Per job: (rows, candidate centers, best idx, best squared
+        // dist, second-best squared dist, per-row lb floor) — the last
+        // two empty in legacy mode.
+        type JobOut = (Vec<u32>, Vec<u32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>);
+        let mut results: Vec<JobOut> = Vec::new();
         {
             let jobs_ref = &jobs;
             let center_grouping = &self.center_grouping;
@@ -336,6 +479,8 @@ impl CohortProgram for KmeansProgram {
             let report = &mut self.report;
             let tile = &self.tile;
             let d_pad = self.d_pad;
+            let rows_of = &rows_of;
+            let lb_floor = &lb_floor;
             pipeline::run(
                 8,
                 |i| jobs_ref.get(i as usize).cloned(),
@@ -347,27 +492,50 @@ impl CohortProgram for KmeansProgram {
                         .iter()
                         .flat_map(|&b| center_grouping.members[b as usize].iter().copied())
                         .collect();
-                    // Packed-row list of all member points of the batch.
-                    let rows: Vec<u32> = src_groups
-                        .iter()
-                        .flat_map(|&g| {
+                    // Packed-row list of the batch: unstable members
+                    // only (incremental) or whole group ranges (legacy).
+                    let mut rows: Vec<u32> = Vec::new();
+                    let mut floors: Vec<f32> = Vec::new();
+                    for &g in &src_groups {
+                        if incremental {
+                            rows.extend_from_slice(&rows_of[g]);
+                            floors.resize(rows.len(), lb_floor[g]);
+                        } else {
                             let (s, l) = (packed.group_start(g), packed.group_len(g));
-                            (s as u32)..(s + l) as u32
-                        })
-                        .collect();
+                            rows.extend((s as u32)..(s + l) as u32);
+                        }
+                    }
                     report.filter.surviving_pairs +=
                         (rows.len() * cand_centers.len()) as u64;
-                    match assign_rows(
-                        device,
-                        &packed.points,
-                        &rows,
-                        centers,
-                        &cand_centers,
-                        &tile.kmeans_k_pad,
-                        d_pad,
-                    ) {
-                        Ok((idx, dist)) => results.push((rows, cand_centers, idx, dist)),
-                        Err(e) => job_err = Some(e),
+                    if incremental {
+                        match assign_rows2(
+                            device,
+                            &packed.points,
+                            &rows,
+                            centers,
+                            &cand_centers,
+                            &tile.kmeans_k_pad,
+                            d_pad,
+                        ) {
+                            Ok((idx, dist, second)) => {
+                                results.push((rows, cand_centers, idx, dist, second, floors))
+                            }
+                            Err(e) => job_err = Some(e),
+                        }
+                    } else {
+                        match assign_rows(
+                            device,
+                            &packed.points,
+                            &rows,
+                            centers,
+                            &cand_centers,
+                            &tile.kmeans_k_pad,
+                            d_pad,
+                        ) {
+                            Ok((idx, dist)) => results
+                                .push((rows, cand_centers, idx, dist, Vec::new(), Vec::new())),
+                            Err(e) => job_err = Some(e),
+                        }
                     }
                 },
             );
@@ -375,7 +543,7 @@ impl CohortProgram for KmeansProgram {
         if let Some(e) = job_err {
             return Err(e);
         }
-        for (rows, cand, idx, dist) in results {
+        for (rows, cand, idx, dist, second, floors) in results {
             for (r, &packed_row) in rows.iter().enumerate() {
                 let true_center = cand[idx[r] as usize];
                 let i = packed_row as usize;
@@ -384,6 +552,13 @@ impl CohortProgram for KmeansProgram {
                     changed += 1;
                 }
                 self.ub[i] = dist[r].max(0.0).sqrt();
+                if incremental {
+                    // Refresh the Hamerly lb: exact second-best among
+                    // the candidate centers, floored by the pruned
+                    // center-groups' pair lbs (group-filter soundness:
+                    // no pruned center can be closer than that floor).
+                    self.lb[i] = second[r].max(0.0).sqrt().min(floors[r]);
+                }
             }
         }
         program::absorb_device(
@@ -478,6 +653,37 @@ fn assign_full(
     Ok(())
 }
 
+/// Like [`assign_full`], but also seeds the per-point Hamerly lower
+/// bound: the exact distance to the *second*-closest center (the
+/// incremental TI path's plan-time tighten).
+#[allow(clippy::too_many_arguments)]
+fn assign2_full(
+    device: &FpgaDevice,
+    points_slab: &[f32],
+    n: usize,
+    centers_slab: &[f32],
+    k: usize,
+    k_pad: usize,
+    d_pad: usize,
+    assign: &mut [u32],
+    best_dist: &mut [f32],
+    second_dist: &mut [f32],
+) -> Result<()> {
+    let (idx, dist, second) =
+        device.kmeans_assign2_block(points_slab, n, d_pad, centers_slab, k_pad)?;
+    for i in 0..n {
+        let ci = idx[i] as usize;
+        debug_assert!(ci < k, "assignment hit a padded center slot");
+        assign[i] = ci as u32;
+        best_dist[i] = dist[i].max(0.0).sqrt();
+        // With a single real center the second slot holds the padding
+        // sentinel's distance — effectively infinite, which is the
+        // correct "no other center" lower bound.
+        second_dist[i] = second[i].max(0.0).sqrt();
+    }
+    Ok(())
+}
+
 /// Assignment of an arbitrary packed-row batch against a candidate
 /// center list.  Returns per-row (index into candidates, squared
 /// distance).  Candidates are chunked when they exceed the largest
@@ -521,6 +727,58 @@ fn assign_rows(
         off += chunk;
     }
     Ok((best_idx, best_dist))
+}
+
+/// Like [`assign_rows`], but also returns the squared distance to the
+/// *second*-best candidate per row — the incremental TI path's lb
+/// refresh.  The running (best, second) pair merges across candidate
+/// chunks: the combined second-smallest of {old best, old second, new
+/// best, new second}.
+fn assign_rows2(
+    device: &FpgaDevice,
+    points: &Matrix,
+    rows: &[u32],
+    centers: &Matrix,
+    candidates: &[u32],
+    k_pads: &[usize],
+    d_pad: usize,
+) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
+    let len = rows.len();
+    let kc = candidates.len();
+    let max_pad = *k_pads.last().expect("kmeans_k_pad empty");
+    let mut best_idx = vec![0i32; len];
+    let mut best_dist = vec![f32::INFINITY; len];
+    let mut second_dist = vec![f32::INFINITY; len];
+    let tile_m = device.runtime().manifest().tile.m;
+    let rows_pad = crate::util::round_up(len.max(1), tile_m);
+    let slab = FpgaDevice::pad_rows(points, rows, rows_pad, d_pad);
+    let mut off = 0usize;
+    while off < kc {
+        let chunk = (kc - off).min(max_pad);
+        let chunk_ids = &candidates[off..off + chunk];
+        let k_pad = k_pads
+            .iter()
+            .copied()
+            .find(|&p| p >= chunk)
+            .unwrap_or(max_pad);
+        let idx: Vec<usize> = chunk_ids.iter().map(|&c| c as usize).collect();
+        let cand_mat = centers.gather_rows(&idx);
+        let cslab = pad_centers(&cand_mat, k_pad, d_pad);
+        let (ti, td, ts) = device.kmeans_assign2_block(&slab, len, d_pad, &cslab, k_pad)?;
+        for r in 0..len {
+            if td[r] < best_dist[r] {
+                // New chunk's best wins: old best competes for second
+                // with the new chunk's own runner-up.
+                second_dist[r] = best_dist[r].min(ts[r]);
+                best_dist[r] = td[r];
+                best_idx[r] = (off + ti[r] as usize) as i32;
+            } else {
+                second_dist[r] = second_dist[r].min(td[r]);
+            }
+        }
+        off += chunk;
+    }
+    Ok((best_idx, best_dist, second_dist))
 }
 
 /// Pad centers to `(k_pad, d_pad)` with far-away sentinel rows so the
@@ -571,10 +829,16 @@ fn update_centers(packed: &PackedSet, assign: &[u32], centers: &mut Matrix, k: u
     drift
 }
 
-/// Recenter the center-grouping around the moved centers; returns per
-/// center-group drift (max member drift is folded into radii already).
-fn recenter_center_groups(cg: &mut Grouping, centers: &Matrix) -> Vec<f32> {
-    cg.recenter(centers)
+/// Recenter the center-grouping around the moved centers (legacy
+/// per-iteration path only — the incremental path never recenters).
+/// The landmark drift `Grouping::recenter` returns is deliberately
+/// dropped here: it bounds the motion of the group's *centroid*, not
+/// of its farthest member, so folding it into member-pair bounds would
+/// be unsound (a sound widening needs per-center drifts — see
+/// [`bounds::center_group_drift`]); the full Eq. 2 recompute that
+/// follows every legacy recentering makes it redundant anyway.
+fn recenter_center_groups(cg: &mut Grouping, centers: &Matrix) {
+    let _landmark_drift: Vec<f32> = cg.recenter(centers);
 }
 
 #[cfg(test)]
@@ -600,5 +864,76 @@ mod tests {
         // Non-empty centers moved exactly to their member means.
         assert_eq!(centers.row(0).to_vec(), vec![0.0f32, 1.0]);
         assert_eq!(centers.row(1).to_vec(), vec![10.0f32, 11.0]);
+    }
+
+    /// After centers move, BOTH recentering disciplines keep the
+    /// (source group x center group) bounds sound: the incremental
+    /// path's O(1) widening by max member drift per center group, and
+    /// the legacy path's recenter + full Eq. 2 recompute (whose
+    /// landmark drift is deliberately dropped — see
+    /// [`recenter_center_groups`]).
+    #[test]
+    fn center_group_bounds_stay_sound_after_recentering() {
+        use crate::data::synthetic;
+        let pts = synthetic::clustered(240, 4, 5, 0.05, 21).points;
+        let gs = Grouping::build(&pts, 6, 2, 240, 22).unwrap();
+        let mut centers = synthetic::clustered(24, 4, 4, 0.05, 23).points;
+        let mut gc = Grouping::build(&centers, 4, 2, 24, 24).unwrap();
+        let mut pair_lb: Vec<Vec<f32>> = bounds::group_pair_bounds(&gs, &gc)
+            .iter()
+            .map(|row| row.iter().map(|b| b.lb).collect())
+            .collect();
+
+        // Move every center, recording per-center drift distances.
+        let mut rng = Rng::new(25);
+        let d = centers.cols();
+        let mut drift = vec![0.0f32; centers.rows()];
+        for c in 0..centers.rows() {
+            let row = centers.row_mut(c);
+            let mut d2 = 0.0f32;
+            for x in 0..d {
+                let delta = rng.range_f32(-0.1, 0.1);
+                row[x] += delta;
+                d2 += delta * delta;
+            }
+            drift[c] = d2.sqrt();
+        }
+
+        // Incremental discipline: widened pair lbs still lower-bound
+        // every (member point, member center) distance.
+        let cg_drift = bounds::center_group_drift(&gc.assign, gc.num_groups(), &drift);
+        bounds::widen_pair_lbs(&mut pair_lb, &cg_drift);
+        for (g, mem) in gs.members.iter().enumerate() {
+            for &p in mem {
+                for (b, cmem) in gc.members.iter().enumerate() {
+                    for &c in cmem {
+                        let dist =
+                            pts.dist2(p as usize, &centers, c as usize).max(0.0).sqrt();
+                        assert!(
+                            pair_lb[g][b] <= dist + 1e-3,
+                            "widened pair lb {} > dist {dist} for (g={g}, b={b})",
+                            pair_lb[g][b],
+                        );
+                    }
+                }
+            }
+        }
+
+        // Legacy discipline: recenter + fresh Eq. 2 bounds contain
+        // every pair distance on both sides.
+        recenter_center_groups(&mut gc, &centers);
+        let fresh = bounds::group_pair_bounds(&gs, &gc);
+        for (g, mem) in gs.members.iter().enumerate() {
+            for &p in mem {
+                for (b, cmem) in gc.members.iter().enumerate() {
+                    for &c in cmem {
+                        let dist =
+                            pts.dist2(p as usize, &centers, c as usize).max(0.0).sqrt();
+                        assert!(fresh[g][b].lb <= dist + 1e-3);
+                        assert!(dist <= fresh[g][b].ub + 1e-3);
+                    }
+                }
+            }
+        }
     }
 }

@@ -17,7 +17,11 @@
 //! Correctness: a program's state is fully owned (or `Arc`-shared and
 //! immutable), so interleaving steps of independent programs on one
 //! engine cannot perturb any result — the bit-for-bit serving parity
-//! contract extends to any step schedule.
+//! contract extends to any step schedule.  Owned state may span
+//! iterations: `KmeansProgram` carries incremental TI bounds from one
+//! `step` to the next (widened, not recomputed — see
+//! `coordinator::kmeans`), which is only possible because the
+//! contract guarantees no one else mutates the program between steps.
 //!
 //! Device accounting: programs interleave on one engine, so a program
 //! cannot read `engine.device.stats()` as its own.  Instead every

@@ -270,6 +270,60 @@ impl FpgaDevice {
         Ok((idx, dist))
     }
 
+    /// Like [`FpgaDevice::kmeans_assign_block`], but also returns the
+    /// squared distance to the *second*-closest center per valid row —
+    /// the plan-time seed of the incremental TI path's Hamerly lower
+    /// bound.  With a single real center the second slot reports the
+    /// padding sentinel's distance (effectively infinite), which is the
+    /// correct "no other center" lower bound.
+    pub fn kmeans_assign2_block(
+        &self,
+        points_slab: &[f32],
+        valid_rows: usize,
+        d_padded: usize,
+        centers_padded: &[f32],
+        k_padded: usize,
+    ) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
+        let manifest = self.runtime.manifest().clone();
+        let rows_pad = round_up(valid_rows.max(1), manifest.tile.m);
+        debug_assert_eq!(points_slab.len(), rows_pad * d_padded);
+        let mut idx = vec![0i32; valid_rows];
+        let mut dist = vec![0.0f32; valid_rows];
+        let mut second = vec![0.0f32; valid_rows];
+        let wall_start = std::time::Instant::now();
+        let mut tiles = 0u64;
+        let mut mac_rows = 0u64;
+        let mut a_buf: Vec<f32> = Vec::new();
+        for (ro, tm) in manifest.segments(valid_rows) {
+            if ro >= valid_rows {
+                break;
+            }
+            let valid_m = (valid_rows - ro).min(tm);
+            let a = slab_segment(points_slab, rows_pad, d_padded, ro, tm, &mut a_buf);
+            let (ti, td, ts) = self
+                .runtime
+                .kmeans_assign2_tile_sized(tm, k_padded, d_padded, a, centers_padded)?;
+            tiles += 1;
+            mac_rows += tm as u64;
+            idx[ro..ro + valid_m].copy_from_slice(&ti[..valid_m]);
+            dist[ro..ro + valid_m].copy_from_slice(&td[..valid_m]);
+            second[ro..ro + valid_m].copy_from_slice(&ts[..valid_m]);
+        }
+        let wall = wall_start.elapsed().as_secs_f64();
+        let mut s = self.stats.lock().unwrap();
+        s.jobs += 1;
+        s.tiles += tiles;
+        s.padded_pairs += mac_rows * k_padded as u64;
+        s.valid_pairs += (valid_rows * k_padded) as u64;
+        s.wall_secs += wall;
+        s.modeled_secs += self.cost.tile_seconds(1, 1, 1, 1)
+            * (mac_rows * k_padded as u64) as f64
+            * d_padded as f64;
+        s.bytes_moved +=
+            ((rows_pad + k_padded) * d_padded * 4 + valid_rows * 12) as u64;
+        Ok((idx, dist, second))
+    }
+
     /// N-body acceleration of a padded source slab against a padded
     /// target slab (masses zero on padding rows), segmented greedily
     /// over the tile variants on both axes.  Adds into `acc`

@@ -1,10 +1,17 @@
-//! The GTI bound algebra — paper §IV-B, Eqs. 1-3.
+//! The GTI bound algebra — paper §IV-B, Eqs. 1-3 — plus the
+//! *incremental* Elkan/Hamerly extension the K-means program carries
+//! across iterations: per-point upper/lower bounds and group-pair
+//! lower bounds are tightened once (plan time) and then widened O(1)
+//! per step by per-center drift ([`DriftWidening`],
+//! [`widen_point_bounds`], [`widen_pair_lbs`]) instead of recomputed.
 //!
 //! All bounds here are *sound*: `lb <= d(a,b) <= ub` for every point
 //! pair they summarise (property-tested in this module and in
-//! `rust/tests/prop_coordinator.rs`).  Soundness is what lets the
-//! filter discard group pairs without ever being wrong, so these few
-//! lines carry the correctness of the whole optimization.
+//! `rust/tests/prop_coordinator.rs` / `rust/tests/prop_gti_bounds.rs`).
+//! Soundness is what lets the filter discard group pairs — and the
+//! incremental path skip stable points and whole tiles — without ever
+//! being wrong, so these few lines carry the correctness of the whole
+//! optimization.
 
 use super::grouping::Grouping;
 use crate::data::Matrix;
@@ -81,6 +88,107 @@ pub fn group_pair_bounds_metric(
     out
 }
 
+/// Per-step drift summary for the O(1) Hamerly widening rule.
+///
+/// A point assigned to center `a` needs two numbers each iteration:
+/// `drift[a]` (its upper bound loosens by exactly that) and
+/// `max_other(a)` — the largest drift among *all other* centers (its
+/// lower bound to the second-closest center can shrink by at most
+/// that).  Precomputing the global max / argmax / second-max once per
+/// step makes `max_other` O(1) per point instead of O(k).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftWidening {
+    /// Largest per-center drift this step.
+    pub max: f32,
+    /// Center index holding `max` (`usize::MAX` when every drift is 0).
+    pub argmax: usize,
+    /// Second-largest per-center drift (ties with `max` repeat it).
+    pub second: f32,
+}
+
+impl DriftWidening {
+    /// Summarise one step's per-center drifts.
+    #[must_use]
+    pub fn from_drifts(drifts: &[f32]) -> Self {
+        let mut max = 0.0f32;
+        let mut argmax = usize::MAX;
+        let mut second = 0.0f32;
+        for (c, &d) in drifts.iter().enumerate() {
+            if d > max {
+                second = max;
+                max = d;
+                argmax = c;
+            } else if d > second {
+                second = d;
+            }
+        }
+        Self { max, argmax, second }
+    }
+
+    /// Largest drift among centers other than `assigned` — the sound
+    /// per-step shrink of a point's lower bound to its second-closest
+    /// center.
+    #[inline]
+    #[must_use]
+    pub fn max_other(&self, assigned: usize) -> f32 {
+        if assigned == self.argmax {
+            self.second
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Hamerly widening of the per-point bounds after one step of center
+/// motion: `ub[i]` loosens by its own center's drift, `lb[i]` (the
+/// lower bound to the closest *non-assigned* center) shrinks by the
+/// largest drift any other center made.  Assignments are indices into
+/// `drift`; an `INFINITY` lower bound (single real center) stays
+/// infinite.
+pub fn widen_point_bounds(
+    ub: &mut [f32],
+    lb: &mut [f32],
+    assign: &[u32],
+    drift: &[f32],
+    w: &DriftWidening,
+) {
+    for i in 0..assign.len() {
+        let a = assign[i] as usize;
+        ub[i] += drift[a];
+        lb[i] = (lb[i] - w.max_other(a)).max(0.0);
+    }
+}
+
+/// Max *member* drift per center group: the sound widening amount for
+/// a (source group x center group) lower bound when source points are
+/// fixed and only centers move.  Note this is NOT the drift of the
+/// group's landmark (a centroid can move far less than its farthest
+/// member), which is why the group-pair widening must take per-center
+/// drifts, not `Grouping::recenter`'s landmark drift.
+#[must_use]
+pub fn center_group_drift(cg_assign: &[u32], z_trg: usize, drift: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; z_trg];
+    for (c, &d) in drift.iter().enumerate() {
+        let b = cg_assign[c] as usize;
+        if d > out[b] {
+            out[b] = d;
+        }
+    }
+    out
+}
+
+/// Widen a `z_src x z_trg` matrix of group-pair *lower* bounds by the
+/// per-center-group max member drift (source side fixed).  Lower
+/// bounds clamp at zero; there is no upper-bound counterpart because
+/// the incremental filter only ever prunes on `lb > ub_point`.
+pub fn widen_pair_lbs(pair_lb: &mut [Vec<f32>], cg_drift: &[f32]) {
+    for row in pair_lb.iter_mut() {
+        for (b, l) in row.iter_mut().enumerate() {
+            *l = (*l - cg_drift[b]).max(0.0);
+        }
+    }
+}
+
 /// Exact center-pair distance matrix (used by the N-body trace cache).
 pub fn center_distances(src: &Matrix, trg: &Matrix) -> Vec<f32> {
     let (zs, zt) = (src.rows(), trg.rows());
@@ -148,6 +256,70 @@ mod tests {
         let b = one_landmark(7.0, 3.0);
         assert_eq!(b.lb, 4.0);
         assert_eq!(b.ub, 10.0);
+    }
+
+    #[test]
+    fn drift_widening_tracks_max_and_second() {
+        let w = DriftWidening::from_drifts(&[0.1, 0.5, 0.3]);
+        assert_eq!(w.max, 0.5);
+        assert_eq!(w.argmax, 1);
+        assert_eq!(w.second, 0.3);
+        assert_eq!(w.max_other(1), 0.3, "holder of the max sees the second-max");
+        assert_eq!(w.max_other(0), 0.5);
+        assert_eq!(w.max_other(2), 0.5);
+        // Tied maxima: everyone sees the full max.
+        let w = DriftWidening::from_drifts(&[0.5, 0.5]);
+        assert_eq!(w.max_other(0), 0.5);
+        assert_eq!(w.max_other(1), 0.5);
+        // Single center: no other center ever moves.
+        let w = DriftWidening::from_drifts(&[0.7]);
+        assert_eq!(w.max_other(0), 0.0);
+        // All-zero drifts: argmax sentinel, max_other is 0 everywhere.
+        let w = DriftWidening::from_drifts(&[0.0, 0.0]);
+        assert_eq!(w.max_other(0), 0.0);
+        assert_eq!(w.max_other(1), 0.0);
+    }
+
+    #[test]
+    fn widen_point_bounds_applies_hamerly_rule() {
+        let drift = [0.2f32, 0.05];
+        let w = DriftWidening::from_drifts(&drift);
+        let mut ub = vec![1.0f32, 2.0];
+        let mut lb = vec![3.0f32, 0.1];
+        let assign = vec![0u32, 1];
+        widen_point_bounds(&mut ub, &mut lb, &assign, &drift, &w);
+        // Point 0 (center 0): ub += 0.2, lb -= max_other(0) = 0.05.
+        assert!((ub[0] - 1.2).abs() < 1e-6);
+        assert!((lb[0] - 2.95).abs() < 1e-6);
+        // Point 1 (center 1): ub += 0.05, lb -= 0.2 clamped at 0.
+        assert!((ub[1] - 2.05).abs() < 1e-6);
+        assert_eq!(lb[1], 0.0);
+        // INFINITY lower bounds survive widening.
+        let mut lb_inf = vec![f32::INFINITY];
+        let mut ub1 = vec![1.0f32];
+        widen_point_bounds(&mut ub1, &mut lb_inf, &[0], &drift, &w);
+        assert!(lb_inf[0].is_infinite());
+    }
+
+    #[test]
+    fn center_group_drift_is_max_member_drift() {
+        // Centers 0,2 in group 0; center 1 in group 1.
+        let cg_assign = vec![0u32, 1, 0];
+        let m = center_group_drift(&cg_assign, 2, &[0.1, 0.4, 0.3]);
+        assert_eq!(m, vec![0.3, 0.4]);
+        // Empty group keeps zero drift.
+        let m = center_group_drift(&[0u32], 2, &[0.2]);
+        assert_eq!(m, vec![0.2, 0.0]);
+    }
+
+    #[test]
+    fn widen_pair_lbs_shrinks_and_clamps() {
+        let mut pair = vec![vec![1.0f32, 0.2], vec![0.5, 2.0]];
+        widen_pair_lbs(&mut pair, &[0.3, 0.4]);
+        assert!((pair[0][0] - 0.7).abs() < 1e-6);
+        assert_eq!(pair[0][1], 0.0, "lb clamps at zero");
+        assert!((pair[1][0] - 0.2).abs() < 1e-6);
+        assert!((pair[1][1] - 1.6).abs() < 1e-6);
     }
 
     #[test]

@@ -24,6 +24,15 @@ pub struct FilterStats {
     /// Group pairs evaluated / surviving.
     pub group_pairs: u64,
     pub surviving_group_pairs: u64,
+    /// Candidate (source group x center group) rectangles skipped
+    /// entirely because every member was proven stable (incremental TI).
+    pub tiles_skipped: u64,
+    /// Point rows excluded from device submissions because their
+    /// assignment was proven stable (incremental TI).
+    pub points_pruned: u64,
+    /// Per-point exact bound re-tightenings performed on the CPU by the
+    /// incremental TI stability test (its overhead term).
+    pub bound_recomputes: u64,
 }
 
 impl FilterStats {
@@ -47,7 +56,31 @@ impl FilterStats {
         self.bound_comps += other.bound_comps;
         self.group_pairs += other.group_pairs;
         self.surviving_group_pairs += other.surviving_group_pairs;
+        self.tiles_skipped += other.tiles_skipped;
+        self.points_pruned += other.points_pruned;
+        self.bound_recomputes += other.bound_recomputes;
     }
+}
+
+/// Tile-granular stability: split a source group's members into the
+/// rows that still need a device recompute and the count of rows whose
+/// assignment is provably stable (`ub[i] <= lb[i]`).  An empty unstable
+/// list means the whole (group x candidate centers) rectangle can be
+/// dropped from the device submission — the incremental TI path's tile
+/// skip.  Bounds are indexed by *packed* point id, like `members`.
+#[must_use]
+pub fn unstable_members(members: &[u32], ub: &[f32], lb: &[f32]) -> (Vec<u32>, u64) {
+    let mut unstable = Vec::new();
+    let mut stable = 0u64;
+    for &pi in members {
+        let i = pi as usize;
+        if ub[i] <= lb[i] {
+            stable += 1;
+        } else {
+            unstable.push(pi);
+        }
+    }
+    (unstable, stable)
 }
 
 /// Candidate target groups for each source group.
@@ -413,6 +446,38 @@ mod tests {
         f.step(&g, &vec![r; 6], r);
         assert_eq!(f.refreshes, 1);
         assert!(f.accum_drift.iter().all(|&d| d == 0.0));
+    }
+
+    #[test]
+    fn unstable_members_splits_by_stability_rule() {
+        // Packed ids 1,3,4; bounds indexed by packed id.
+        let members = vec![1u32, 3, 4];
+        let ub = vec![9.0f32, 0.5, 9.0, 2.0, 1.0];
+        let lb = vec![0.0f32, 1.0, 0.0, 2.0, 0.5];
+        let (unstable, stable) = unstable_members(&members, &ub, &lb);
+        // id 1: 0.5 <= 1.0 stable; id 3: 2.0 <= 2.0 stable (boundary);
+        // id 4: 1.0 > 0.5 unstable.
+        assert_eq!(unstable, vec![4]);
+        assert_eq!(stable, 2);
+        // Fully-stable group -> empty unstable list (the tile skip).
+        let (unstable, stable) = unstable_members(&[1, 3], &ub, &lb);
+        assert!(unstable.is_empty());
+        assert_eq!(stable, 2);
+    }
+
+    #[test]
+    fn filter_stats_merge_covers_incremental_counters() {
+        let mut a = FilterStats { tiles_skipped: 2, points_pruned: 10, ..Default::default() };
+        let b = FilterStats {
+            tiles_skipped: 3,
+            points_pruned: 5,
+            bound_recomputes: 7,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.tiles_skipped, 5);
+        assert_eq!(a.points_pruned, 15);
+        assert_eq!(a.bound_recomputes, 7);
     }
 
     #[test]

@@ -22,7 +22,10 @@ pub mod filter;
 pub mod grouping;
 pub mod metric;
 
-pub use bounds::{group_pair_bounds, GroupPairBound};
-pub use filter::{FilterStats, KmeansFilter, KnnFilter, NbodyFilter};
+pub use bounds::{
+    center_group_drift, group_pair_bounds, widen_pair_lbs, widen_point_bounds, DriftWidening,
+    GroupPairBound,
+};
+pub use filter::{unstable_members, FilterStats, KmeansFilter, KnnFilter, NbodyFilter};
 pub use grouping::{fingerprint, fingerprint_pair, Grouping};
 pub use metric::Metric;

@@ -113,6 +113,9 @@ impl RunReport {
             ("filter_surviving_pairs", json::num(self.filter.surviving_pairs as f64)),
             ("filter_bound_comps", json::num(self.filter.bound_comps as f64)),
             ("filter_saving_ratio", json::num(self.filter.saving_ratio())),
+            ("filter_tiles_skipped", json::num(self.filter.tiles_skipped as f64)),
+            ("filter_points_pruned", json::num(self.filter.points_pruned as f64)),
+            ("filter_bound_recomputes", json::num(self.filter.bound_recomputes as f64)),
             ("layout_reuse_ratio", json::num(self.layout.reuse_ratio())),
             ("device_tiles", json::num(self.device.tiles as f64)),
             ("device_pad_efficiency", json::num(self.device.pad_efficiency())),
@@ -281,6 +284,20 @@ pub struct ServeStats {
     /// shared-slab batches plus tiles re-served to deduplicated
     /// queries.
     pub tiles_shared: u64,
+    /// Candidate tile rectangles the incremental TI filter dropped
+    /// from device submission because every member point was provably
+    /// stable (`gti::FilterStats::tiles_skipped`, summed over retired
+    /// programs).
+    pub tiles_skipped: u64,
+    /// Points whose K-means assignment was proven unchanged by the
+    /// carried bounds and skipped device recompute
+    /// (`gti::FilterStats::points_pruned`, summed over retired
+    /// programs).
+    pub points_pruned: u64,
+    /// Cheap exact CPU upper-bound tightenings spent deciding
+    /// stability (`gti::FilterStats::bound_recomputes`, summed over
+    /// retired programs) — the CPU price paid for the pruning above.
+    pub bound_recomputes: u64,
     /// Wall-clock seconds spent inside `flush` (merged view) /
     /// executing assigned cohorts (shard view).
     pub wall_secs: f64,
@@ -421,6 +438,9 @@ impl ServeStats {
         self.slabs_shared += d.slabs_shared;
         self.tiles_total += d.tiles_total;
         self.tiles_shared += d.tiles_shared;
+        self.tiles_skipped += d.tiles_skipped;
+        self.points_pruned += d.points_pruned;
+        self.bound_recomputes += d.bound_recomputes;
         self.lockstep_rounds += d.lockstep_rounds;
         self.lockstep_shared_tiles += d.lockstep_shared_tiles;
         self.steals += d.steals;
@@ -461,6 +481,9 @@ impl ServeStats {
             ("tiles_total", json::num(self.tiles_total as f64)),
             ("tiles_shared", json::num(self.tiles_shared as f64)),
             ("tiles_shared_ratio", json::num(self.tiles_shared_ratio())),
+            ("tiles_skipped", json::num(self.tiles_skipped as f64)),
+            ("points_pruned", json::num(self.points_pruned as f64)),
+            ("bound_recomputes", json::num(self.bound_recomputes as f64)),
             ("wall_secs", json::num(self.wall_secs)),
             ("queries_per_sec", json::num(self.queries_per_sec())),
         ])
@@ -477,7 +500,8 @@ impl ServeStats {
              lockstep: {} rounds, {} shared tiles | {} units stolen\n  \
              latency: p50 {:.3} ms / p95 {:.3} ms / p99 {:.3} ms | \
              deadlines: {} met / {} missed | shed {} (depth high-water {})\n  \
-             tiles: {} shared of {} total ({:.1}%) | shared slabs {}",
+             tiles: {} shared of {} total ({:.1}%) | shared slabs {}\n  \
+             incremental TI: {} tiles skipped, {} points pruned, {} bound recomputes",
             self.queries,
             self.flushes,
             self.queries_per_sec(),
@@ -510,6 +534,9 @@ impl ServeStats {
             self.tiles_total,
             100.0 * self.tiles_shared_ratio(),
             self.slabs_shared,
+            self.tiles_skipped,
+            self.points_pruned,
+            self.bound_recomputes,
         )
     }
 }
@@ -715,6 +742,9 @@ mod tests {
             slab_cache_bytes: 999,
             tiles_total: 40,
             tiles_shared: 10,
+            tiles_skipped: 12,
+            points_pruned: 33,
+            bound_recomputes: 21,
             lockstep_rounds: 6,
             lockstep_shared_tiles: 4,
             steals: 2,
@@ -728,11 +758,22 @@ mod tests {
             ..Default::default()
         };
         total.absorb_exec(&delta);
+        // A second delta stacks on top — merged view keeps summing.
+        total.absorb_exec(&ServeStats {
+            tiles_skipped: 3,
+            points_pruned: 7,
+            bound_recomputes: 4,
+            ..Default::default()
+        });
+        total.absorb_exec(&ServeStats::default());
         assert_eq!(total.queries, 4);
         assert_eq!(total.knn_queries, 3);
         assert_eq!(total.dedup_hits, 1);
         assert_eq!(total.slabs_shared, 5);
         assert_eq!(total.tiles_total, 40);
+        assert_eq!(total.tiles_skipped, 15, "prune counters are flush-delta summed");
+        assert_eq!(total.points_pruned, 40);
+        assert_eq!(total.bound_recomputes, 25);
         assert_eq!(total.lockstep_rounds, 6);
         assert_eq!(total.lockstep_shared_tiles, 4);
         assert_eq!(total.steals, 2);

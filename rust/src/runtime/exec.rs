@@ -351,6 +351,60 @@ impl Runtime {
         Ok((idx, dist))
     }
 
+    /// Fused K-means assignment tile that also returns the
+    /// second-closest distance per row: the seed of the Hamerly lower
+    /// bound the incremental TI path carries across iterations.  Same
+    /// kernel resolution and padding contract as
+    /// [`Runtime::kmeans_assign_tile_sized`]; padded sentinel centers
+    /// can win the second slot only when a single real center exists,
+    /// in which case the "lower bound to the second-closest center" is
+    /// effectively infinite — exactly the sentinel's value.
+    pub fn kmeans_assign2_tile_sized(
+        &self,
+        tm: usize,
+        k_padded: usize,
+        d_padded: usize,
+        points: &[f32],
+        centers: &[f32],
+    ) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
+        let name = self.manifest.kmeans_name_sized(tm, k_padded, d_padded);
+        let spec = self.kernel(&name)?;
+        let KernelSpec::KmeansAssign { m, k, d } = spec else {
+            return Err(Error::Artifact(format!("{name:?} is not a kmeans kernel")));
+        };
+        Self::check_len("kmeans points", points.len(), m * d)?;
+        Self::check_len("kmeans centers", centers.len(), k * d)?;
+        let mut idx = vec![0i32; m];
+        let mut dist = vec![0.0f32; m];
+        let mut second = vec![0.0f32; m];
+        for i in 0..m {
+            let row = &points[i * d..(i + 1) * d];
+            let mut best_c = 0usize;
+            let mut best_d = f32::INFINITY;
+            let mut second_d = f32::INFINITY;
+            for c in 0..k {
+                let cr = &centers[c * d..(c + 1) * d];
+                let mut s = 0.0f32;
+                for x in 0..d {
+                    let diff = row[x] - cr[x];
+                    s += diff * diff;
+                }
+                if s < best_d {
+                    second_d = best_d;
+                    best_d = s;
+                    best_c = c;
+                } else if s < second_d {
+                    second_d = s;
+                }
+            }
+            idx[i] = best_c as i32;
+            dist[i] = best_d;
+            second[i] = second_d;
+        }
+        self.stats.record((points.len() + centers.len()) * 4, m * 12);
+        Ok((idx, dist, second))
+    }
+
     /// Base-tile fused K-means assignment.
     pub fn kmeans_assign_tile(
         &self,
@@ -566,6 +620,48 @@ mod tests {
         assert_eq!(rt.compiled_count(), 1);
         let _ = rt.distance_tile("l2sq", d, &a, &b).unwrap();
         assert_eq!(rt.compiled_count(), 1);
+    }
+
+    #[test]
+    fn assign2_second_distance_matches_scalar_oracle() {
+        let rt = Runtime::builtin();
+        let (m, k, d) = (64usize, 64usize, 4usize);
+        // Deterministic pseudo-random points/centers (no RNG dep here).
+        let mut points = vec![0.0f32; m * d];
+        for (i, p) in points.iter_mut().enumerate() {
+            *p = ((i * 2654435761) % 1000) as f32 / 250.0;
+        }
+        let mut centers = vec![0.0f32; k * d];
+        for (i, c) in centers.iter_mut().enumerate() {
+            *c = ((i * 40503 + 7) % 1000) as f32 / 250.0;
+        }
+        let (idx, best, second) =
+            rt.kmeans_assign2_tile_sized(m, k, d, &points, &centers).unwrap();
+        let (idx1, best1) = rt.kmeans_assign_tile_sized(m, k, d, &points, &centers).unwrap();
+        assert_eq!(idx, idx1, "assign2 argmin must match the plain assignment kernel");
+        assert_eq!(best, best1);
+        for i in 0..m {
+            // Oracle: exhaustive two smallest distances.
+            let mut ds: Vec<f32> = (0..k)
+                .map(|c| {
+                    (0..d)
+                        .map(|x| {
+                            let diff = points[i * d + x] - centers[c * d + x];
+                            diff * diff
+                        })
+                        .sum()
+                })
+                .collect();
+            ds.sort_by(f32::total_cmp);
+            assert!((best[i] - ds[0]).abs() <= 1e-5, "row {i}: best {} vs {}", best[i], ds[0]);
+            assert!(
+                (second[i] - ds[1]).abs() <= 1e-5,
+                "row {i}: second {} vs {}",
+                second[i],
+                ds[1]
+            );
+            assert!(second[i] >= best[i]);
+        }
     }
 
     #[test]

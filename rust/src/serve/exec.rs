@@ -511,6 +511,13 @@ fn retire_job<R>(
         // Every tile of a deduplicated job served >1 query.
         delta.stats.tiles_shared += tiles;
     }
+    // Incremental TI pruning counters travel with the program's own
+    // filter stats; fold them into the shard delta so the per-shard
+    // and merged `ServeStats` views both see them (absorb_exec sums).
+    let f = &result.report().filter;
+    delta.stats.tiles_skipped += f.tiles_skipped;
+    delta.stats.points_pruned += f.points_pruned;
+    delta.stats.bound_recomputes += f.bound_recomputes;
     delta.stats.queries += 1 + dups.len() as u64;
     delta.stats.dedup_hits += dups.len() as u64;
     for &p in dups {

@@ -166,6 +166,246 @@ fn prop_kmeans_rule_never_excludes_true_closest_center() {
     );
 }
 
+/// Incremental (Elkan/Hamerly) point-bound widening stays sound over
+/// whole *sequences* of center motion with no recomputation: ub keeps
+/// upper-bounding the distance to the (stale) assigned center and lb
+/// keeps lower-bounding the distance to every other center.
+#[test]
+fn prop_incremental_point_bounds_sound_under_drift_sequences() {
+    prop::check(
+        &Config { cases: 14, max_size: 120, seed: 0xB0025, ..Default::default() },
+        |rng, size| {
+            let n = 20 + size;
+            let d = 1 + rng.below(5);
+            let k = 2 + rng.below(12);
+            let rounds = 2 + rng.below(3);
+            let step = 0.02 + rng.f32() * 0.2;
+            (rand_points(rng, n, d), rand_points(rng, k, d), rounds, step)
+        },
+        |(points, centers, rounds, step)| {
+            let n = points.rows();
+            let k = centers.rows();
+            let mut centers = centers.clone();
+            // Exact seeds: assignment, ub = d to assigned, lb = d to
+            // second-closest (the plan-time assign2 pass).
+            let mut assign = vec![0u32; n];
+            let mut ub = vec![0.0f32; n];
+            let mut lb = vec![0.0f32; n];
+            for i in 0..n {
+                let (mut best, mut second, mut bi) = (f32::INFINITY, f32::INFINITY, 0);
+                for c in 0..k {
+                    let d2 = points.dist2(i, &centers, c);
+                    if d2 < best {
+                        second = best;
+                        best = d2;
+                        bi = c;
+                    } else if d2 < second {
+                        second = d2;
+                    }
+                }
+                assign[i] = bi as u32;
+                ub[i] = best.max(0.0).sqrt();
+                lb[i] = second.max(0.0).sqrt();
+            }
+            let mut rng = Rng::new(0xD01F8);
+            for round in 0..*rounds {
+                // Move every center; record its true displacement.
+                let mut drift = vec![0.0f32; k];
+                for c in 0..k {
+                    let mut d2 = 0.0f32;
+                    for v in centers.row_mut(c) {
+                        let delta = rng.range_f32(-*step, *step);
+                        *v += delta;
+                        d2 += delta * delta;
+                    }
+                    drift[c] = d2.sqrt();
+                }
+                let w = bounds::DriftWidening::from_drifts(&drift);
+                bounds::widen_point_bounds(&mut ub, &mut lb, &assign, &drift, &w);
+                for i in 0..n {
+                    let a = assign[i] as usize;
+                    let d_assigned = points.dist2(i, &centers, a).max(0.0).sqrt();
+                    if d_assigned > ub[i] + 1e-3 {
+                        return Err(format!(
+                            "round {round}: point {i}: d(assigned)={d_assigned} \
+                             above widened ub {}",
+                            ub[i]
+                        ));
+                    }
+                    let mut d_other = f32::INFINITY;
+                    for c in 0..k {
+                        if c != a {
+                            d_other = d_other.min(points.dist2(i, &centers, c));
+                        }
+                    }
+                    let d_other = d_other.max(0.0).sqrt();
+                    if lb[i] > d_other + 1e-3 {
+                        return Err(format!(
+                            "round {round}: point {i}: widened lb {} above \
+                             closest-other distance {d_other}",
+                            lb[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The stability rule `ub[i] <= lb[i]` (after the engine's cheap exact
+/// ub-tighten) never certifies a point whose closest center actually
+/// changed — across rounds with the real carry discipline: certified
+/// points keep widened bounds, unstable points get the device-style
+/// exact refresh.
+#[test]
+fn prop_stability_rule_never_changes_assignment() {
+    prop::check(
+        &Config { cases: 14, max_size: 100, seed: 0xB0026, ..Default::default() },
+        |rng, size| {
+            let n = 20 + size;
+            let d = 1 + rng.below(4);
+            let k = 2 + rng.below(10);
+            let rounds = 2 + rng.below(3);
+            let step = 0.01 + rng.f32() * 0.15;
+            (rand_points(rng, n, d), rand_points(rng, k, d), rounds, step)
+        },
+        |(points, centers, rounds, step)| {
+            let n = points.rows();
+            let k = centers.rows();
+            let mut centers = centers.clone();
+            // (closest center, d to it, d to second-closest) by scan.
+            let exact = |centers: &Matrix, i: usize| {
+                let (mut best, mut second, mut bi) = (f32::INFINITY, f32::INFINITY, 0usize);
+                for c in 0..k {
+                    let d2 = points.dist2(i, centers, c);
+                    if d2 < best {
+                        second = best;
+                        best = d2;
+                        bi = c;
+                    } else if d2 < second {
+                        second = d2;
+                    }
+                }
+                (bi, best.max(0.0).sqrt(), second.max(0.0).sqrt())
+            };
+            let mut assign = vec![0u32; n];
+            let mut ub = vec![0.0f32; n];
+            let mut lb = vec![0.0f32; n];
+            for i in 0..n {
+                let (bi, b, s) = exact(&centers, i);
+                assign[i] = bi as u32;
+                ub[i] = b;
+                lb[i] = s;
+            }
+            let mut rng = Rng::new(0xD01F9);
+            for round in 0..*rounds {
+                let mut drift = vec![0.0f32; k];
+                for c in 0..k {
+                    let mut d2 = 0.0f32;
+                    for v in centers.row_mut(c) {
+                        let delta = rng.range_f32(-*step, *step);
+                        *v += delta;
+                        d2 += delta * delta;
+                    }
+                    drift[c] = d2.sqrt();
+                }
+                let w = bounds::DriftWidening::from_drifts(&drift);
+                bounds::widen_point_bounds(&mut ub, &mut lb, &assign, &drift, &w);
+                for i in 0..n {
+                    let a = assign[i] as usize;
+                    if ub[i] > lb[i] {
+                        // Cheap exact ub-tighten before deciding.
+                        ub[i] = points.dist2(i, &centers, a).max(0.0).sqrt();
+                    }
+                    let (bi, b, s) = exact(&centers, i);
+                    if ub[i] <= lb[i] {
+                        // Certified stable: the stale assignment must
+                        // still be a true closest center (ties allowed).
+                        let d_assigned = points.dist2(i, &centers, a).max(0.0).sqrt();
+                        if d_assigned > b + 1e-4 {
+                            return Err(format!(
+                                "round {round}: point {i} certified stable on \
+                                 center {a} (d={d_assigned}) but center {bi} is \
+                                 closer (d={b})"
+                            ));
+                        }
+                    } else {
+                        assign[i] = bi as u32;
+                        ub[i] = b;
+                        lb[i] = s;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The carried (source group x center group) lower bounds, widened per
+/// round by max member drift per center group, keep lower-bounding
+/// every (member point, member center) distance — the incremental
+/// group-filter's soundness (center-group membership fixed, as in the
+/// engine).
+#[test]
+fn prop_incremental_pair_lbs_stay_sound() {
+    prop::check(
+        &Config { cases: 12, max_size: 100, seed: 0xB0027, ..Default::default() },
+        |rng, size| {
+            let n = 20 + size;
+            let d = 1 + rng.below(4);
+            let k = 4 + rng.below(16);
+            let zs = 2 + rng.below(5);
+            let zt = 2 + rng.below(4);
+            let rounds = 2 + rng.below(3);
+            let step = 0.02 + rng.f32() * 0.2;
+            (rand_points(rng, n, d), rand_points(rng, k, d), zs, zt, rounds, step)
+        },
+        |(points, centers, zs, zt, rounds, step)| {
+            let k = centers.rows();
+            let mut centers = centers.clone();
+            let gs = Grouping::build(points, *zs, 2, 4096, 8).map_err(|e| e.to_string())?;
+            let gc = Grouping::build(&centers, (*zt).min(k), 2, 4096, 9)
+                .map_err(|e| e.to_string())?;
+            let mut pair_lb: Vec<Vec<f32>> = bounds::group_pair_bounds(&gs, &gc)
+                .iter()
+                .map(|row| row.iter().map(|b| b.lb).collect())
+                .collect();
+            let mut rng = Rng::new(0xD01FA);
+            for round in 0..*rounds {
+                let mut drift = vec![0.0f32; k];
+                for c in 0..k {
+                    let mut d2 = 0.0f32;
+                    for v in centers.row_mut(c) {
+                        let delta = rng.range_f32(-*step, *step);
+                        *v += delta;
+                        d2 += delta * delta;
+                    }
+                    drift[c] = d2.sqrt();
+                }
+                let cg_drift =
+                    bounds::center_group_drift(&gc.assign, gc.num_groups(), &drift);
+                bounds::widen_pair_lbs(&mut pair_lb, &cg_drift);
+                for i in 0..points.rows() {
+                    let g = gs.assign[i] as usize;
+                    for c in 0..k {
+                        let b = gc.assign[c] as usize;
+                        let d_true = points.dist2(i, &centers, c).max(0.0).sqrt();
+                        if pair_lb[g][b] > d_true + 1e-3 {
+                            return Err(format!(
+                                "round {round}: pair lb[{g}][{b}]={} above \
+                                 d({i},{c})={d_true}",
+                                pair_lb[g][b]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Trace-based widening stays sound: bounds computed from *stale*
 /// center distances, widened by the per-group drifts that recentering
 /// reports, still contain every true pair distance of the *moved*

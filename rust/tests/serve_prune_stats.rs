@@ -1,0 +1,113 @@
+//! Incremental TI pruning: stats plumbing and the A/B config lever.
+//!
+//! Covers the counters' full path — `gti::FilterStats` inside a
+//! K-means program, folded into the shard delta at retirement
+//! (`serve::exec::retire_job`), summed into the merged and per-shard
+//! `ServeStats` views through `absorb_exec` — plus the
+//! `kmeans.incremental_ti = false` escape hatch (counters must stay
+//! exactly zero and results must be unchanged).
+
+use std::sync::Arc;
+
+use accd::config::AccdConfig;
+use accd::coordinator::Engine;
+use accd::data::{synthetic, Dataset};
+use accd::serve::{QueryBatcher, ServeRequest};
+
+fn km_dataset(seed: u64) -> Arc<Dataset> {
+    // Tight clusters: after the first couple of Lloyd iterations the
+    // centers barely move, so the carried bounds certify most points.
+    Arc::new(synthetic::clustered(600, 5, 8, 0.02, seed))
+}
+
+fn sharded_batcher(cfg: &AccdConfig) -> QueryBatcher {
+    QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), cfg.serve.clone())
+}
+
+/// Default config (incremental on): repeated-iteration K-means prunes
+/// points, and the counters agree between the merged view and the sum
+/// of the per-shard views.
+#[test]
+fn incremental_counters_flow_to_merged_and_shard_views() {
+    let mut cfg = AccdConfig::new();
+    cfg.serve.shards = 2;
+    assert!(cfg.kmeans.incremental_ti, "incremental TI must default on");
+    let mut batcher = sharded_batcher(&cfg);
+    for i in 0..4u64 {
+        batcher.submit(ServeRequest::kmeans(km_dataset(900 + i), 8, 6));
+    }
+    let responses = batcher.flush().expect("flush");
+    assert_eq!(responses.len(), 4);
+
+    let merged = batcher.stats().clone();
+    assert!(
+        merged.points_pruned > 0,
+        "multi-iteration clustered K-means must prune points: {merged:?}"
+    );
+    assert!(
+        merged.bound_recomputes > 0,
+        "pruning implies cheap ub-tightens were spent: {merged:?}"
+    );
+
+    let shard_points: u64 = batcher.shard_stats().iter().map(|s| s.points_pruned).sum();
+    let shard_tiles: u64 = batcher.shard_stats().iter().map(|s| s.tiles_skipped).sum();
+    let shard_recomp: u64 = batcher.shard_stats().iter().map(|s| s.bound_recomputes).sum();
+    assert_eq!(shard_points, merged.points_pruned, "shard views must sum to merged");
+    assert_eq!(shard_tiles, merged.tiles_skipped, "shard views must sum to merged");
+    assert_eq!(shard_recomp, merged.bound_recomputes, "shard views must sum to merged");
+}
+
+/// `kmeans.incremental_ti = false` restores the recompute-every-
+/// iteration path: all three counters stay exactly zero, merged and
+/// per shard.
+#[test]
+fn incremental_off_keeps_counters_zero() {
+    let mut cfg = AccdConfig::new();
+    cfg.serve.shards = 2;
+    cfg.kmeans.incremental_ti = false;
+    let mut batcher = sharded_batcher(&cfg);
+    for i in 0..3u64 {
+        batcher.submit(ServeRequest::kmeans(km_dataset(950 + i), 8, 6));
+    }
+    batcher.flush().expect("flush");
+
+    let merged = batcher.stats().clone();
+    assert_eq!(merged.points_pruned, 0, "legacy path must not prune: {merged:?}");
+    assert_eq!(merged.tiles_skipped, 0, "legacy path must not skip tiles: {merged:?}");
+    assert_eq!(merged.bound_recomputes, 0, "legacy path spends no ub-tightens: {merged:?}");
+    for (i, s) in batcher.shard_stats().iter().enumerate() {
+        assert_eq!(s.points_pruned, 0, "shard {i}");
+        assert_eq!(s.tiles_skipped, 0, "shard {i}");
+        assert_eq!(s.bound_recomputes, 0, "shard {i}");
+    }
+}
+
+/// The pruning is an optimization, not an approximation: solo runs
+/// with incremental TI on and off produce identical assignments,
+/// centers, SSE and iteration counts, and only the incremental run
+/// reports prune counters.
+#[test]
+fn incremental_and_legacy_paths_agree_exactly() {
+    let ds = km_dataset(971);
+    let mut cfg_on = AccdConfig::new();
+    cfg_on.kmeans.incremental_ti = true;
+    let mut cfg_off = cfg_on.clone();
+    cfg_off.kmeans.incremental_ti = false;
+
+    let on = Engine::new(cfg_on).unwrap().kmeans(&ds, 8, 6).expect("incremental run");
+    let off = Engine::new(cfg_off).unwrap().kmeans(&ds, 8, 6).expect("legacy run");
+
+    assert_eq!(on.assign, off.assign, "assignments must agree");
+    assert_eq!(on.sse, off.sse, "SSE must agree exactly");
+    assert_eq!(on.iterations, off.iterations, "iteration counts must agree");
+    assert_eq!(on.centers.as_slice(), off.centers.as_slice(), "centers must agree");
+
+    assert!(
+        on.report.filter.points_pruned > 0,
+        "incremental run must prune: {:?}",
+        on.report.filter
+    );
+    assert_eq!(off.report.filter.points_pruned, 0);
+    assert_eq!(off.report.filter.tiles_skipped, 0);
+    assert_eq!(off.report.filter.bound_recomputes, 0);
+}

@@ -19,21 +19,32 @@ Guarded per scenario (tolerance: >20% worse than baseline fails):
   run arrivals and deadlines on a virtual clock, so the p99 is a
   deterministic property of the schedule, not the host.  Fails when it
   rises more than the tolerance above baseline.
+* ``prune_rate`` — K-means scenarios only: the fraction of
+  point-iterations the incremental TI bounds answered without device
+  work.  Deterministic (seeded data, exact bound algebra).  Fails when
+  it drops more than the tolerance below baseline.
 
 Hard invariants (any run, no baseline needed):
 
 * ``shed`` and ``flush_failures`` must be 0 — the bench offers loads
   the default intake bound absorbs, against a healthy engine.
+* every ``kmeans*`` scenario must report ``prune_rate`` > 0 — later
+  iterations of a repeated cohort must prune SOMETHING, or the
+  incremental TI path has silently died.
 
-A baseline marked ``"bootstrap": true`` (or with no scenarios)
-records nothing to compare against: the script prints the measured
-values and passes, so the first CI run after adding a scenario is
-green.  Refresh the baseline from a trusted run with:
+A baseline value of ``null`` is record-only: the metric is printed but
+not judged for that scenario (used for host-dependent values in an
+otherwise armed baseline).  A baseline marked ``"bootstrap": true``
+(or with no scenarios) records nothing to compare against: the script
+prints the measured values and passes, so the first CI run after
+adding a scenario is green.  Refresh the baseline from a trusted run
+with:
 
     ACCD_BENCH_FAST=1 cargo bench --bench serve_throughput
     cp BENCH_serve.json BENCH_serve.baseline.json
 
-(keep fast mode consistent: CI smoke runs compare fast-mode numbers).
+(keep fast mode consistent: CI smoke runs compare fast-mode numbers;
+re-null any value you want to leave unguarded).
 """
 
 import json
@@ -55,6 +66,12 @@ def rows_by_name(doc):
     return {row["name"]: row for row in doc.get("scenarios", [])}
 
 
+def metric(row, key):
+    """Numeric metric or None (absent or null = record-only)."""
+    value = row.get(key)
+    return value if isinstance(value, (int, float)) else None
+
+
 def main():
     if len(sys.argv) != 3:
         print(__doc__)
@@ -73,14 +90,23 @@ def main():
             value = row.get(counter, 0)
             if value:
                 failures.append(f"{name}: {counter} = {value:g} (must be 0)")
+        if "kmeans" in name:
+            prune = metric(row, "prune_rate")
+            if not prune or prune <= 0:
+                failures.append(
+                    f"{name}: prune_rate = {prune} (must be > 0 — incremental "
+                    "TI pruning produced nothing after iteration 1)")
 
     print(f"{current_path}: {len(cur_rows)} scenario(s), "
           f"fast_mode={current.get('fast_mode')}")
     for name, row in sorted(cur_rows.items()):
+        extra = ""
+        if metric(row, "prune_rate") is not None:
+            extra = f", prune_rate {row['prune_rate']:.3f}"
         print(f"  {name}: speedup {row.get('speedup_vs_sequential', 0):.2f}x, "
               f"qps {row.get('qps', 0):.1f}, p99 {row.get('latency_p99_ms', 0):.3f} ms, "
               f"shed {row.get('shed', 0):g}, "
-              f"flush_failures {row.get('flush_failures', 0):g}")
+              f"flush_failures {row.get('flush_failures', 0):g}{extra}")
 
     bootstrap = bool(baseline.get("bootstrap")) or not base_rows
     if bootstrap:
@@ -98,19 +124,28 @@ def main():
                 failures.append(f"{name}: scenario present in baseline but "
                                 "missing from the current run")
                 continue
-            base_speedup = base.get("speedup_vs_sequential", 0.0)
+            base_speedup = metric(base, "speedup_vs_sequential")
             cur_speedup = cur.get("speedup_vs_sequential", 0.0)
-            if base_speedup > 0 and cur_speedup < base_speedup * (1 - TOLERANCE):
+            if (base_speedup is not None and base_speedup > 0
+                    and cur_speedup < base_speedup * (1 - TOLERANCE)):
                 failures.append(
                     f"{name}: speedup_vs_sequential {cur_speedup:.2f}x is "
                     f">{TOLERANCE:.0%} below baseline {base_speedup:.2f}x")
             if "openloop" in name:
-                base_p99 = base.get("latency_p99_ms", 0.0)
+                base_p99 = metric(base, "latency_p99_ms")
                 cur_p99 = cur.get("latency_p99_ms", 0.0)
-                if base_p99 > 0 and cur_p99 > base_p99 * (1 + TOLERANCE):
+                if (base_p99 is not None and base_p99 > 0
+                        and cur_p99 > base_p99 * (1 + TOLERANCE)):
                     failures.append(
                         f"{name}: latency_p99_ms {cur_p99:.3f} is "
                         f">{TOLERANCE:.0%} above baseline {base_p99:.3f}")
+            base_prune = metric(base, "prune_rate")
+            if base_prune is not None and base_prune > 0:
+                cur_prune = metric(cur, "prune_rate") or 0.0
+                if cur_prune < base_prune * (1 - TOLERANCE):
+                    failures.append(
+                        f"{name}: prune_rate {cur_prune:.3f} is "
+                        f">{TOLERANCE:.0%} below baseline {base_prune:.3f}")
         for name in sorted(set(cur_rows) - set(base_rows)):
             notes.append(f"{name}: new scenario, not in baseline (unguarded "
                          "until the baseline is refreshed)")
