@@ -24,10 +24,20 @@ use accd::data::synthetic;
 use accd::serve::{QueryBatcher, Server, ServeRequest, ServeResponse};
 
 fn main() -> anyhow::Result<()> {
-    let cfg = AccdConfig::new();
+    let mut cfg = AccdConfig::new();
+    // ACCD_SERVE_DEVICES=N runs the same tour on N emulated devices
+    // (CI smokes the 2-device configuration this way).
+    if let Ok(devices) = std::env::var("ACCD_SERVE_DEVICES") {
+        cfg.serve.devices =
+            devices.parse().expect("ACCD_SERVE_DEVICES must be a positive integer");
+    }
     let engine = Engine::new(cfg.clone())?;
     let mut batcher = QueryBatcher::new(engine, cfg.serve.clone());
-    println!("serving on {} engine shard(s)\n", batcher.shard_count());
+    println!(
+        "serving on {} engine shard(s) across {} emulated device(s)\n",
+        batcher.shard_count(),
+        batcher.device_count()
+    );
 
     // Two hot datasets every user queries against.
     let catalog = Arc::new(synthetic::clustered(8_000, 8, 40, 0.02, 7));
@@ -113,6 +123,28 @@ fn main() -> anyhow::Result<()> {
             shard.deadline_misses,
         );
     }
+    // Per-device modeled timeline: shard counters folded onto the
+    // device each shard is pinned to.
+    let device_count = batcher.device_count();
+    let mut dev_ns = vec![[0u64; 3]; device_count];
+    for (s, shard) in batcher.shard_stats().iter().enumerate() {
+        let d = batcher.device_of(s);
+        dev_ns[d][0] += shard.transfer_ns;
+        dev_ns[d][1] += shard.compute_ns;
+        dev_ns[d][2] += shard.overlap_ns;
+    }
+    for (d, [transfer, compute, overlap]) in dev_ns.iter().enumerate() {
+        println!(
+            "  device {d}: modeled {:.3} ms transfer / {:.3} ms compute, {:.3} ms overlapped",
+            *transfer as f64 / 1e6,
+            *compute as f64 / 1e6,
+            *overlap as f64 / 1e6,
+        );
+    }
+    anyhow::ensure!(
+        batcher.stats().transfer_ns > 0,
+        "cold slab uploads must appear in the modeled device timeline"
+    );
     anyhow::ensure!(
         batcher.stats().tiles_shared > 0,
         "coalescible burst shared no tiles"

@@ -16,7 +16,17 @@
 //! the always-on `serve::Server` on a `VirtualClock` — producers
 //! submit on the arrival schedule without waiting for responses, the
 //! scheduler thread wakes on the registered clock waker, and the rows
-//! record q/s, latency percentiles and shed/backpressure counters.
+//! record q/s, latency percentiles and shed/backpressure counters,
+//! plus three emulated multi-device scenarios: a 2-device/2-shard
+//! cold flush whose second cohort per shard streams its slab upload
+//! under the first cohort's compute (FAILS if the double-buffered
+//! overlap accounting records nothing), a warmth A/B that runs the
+//! same repeating two-cohort workload under blind LPT and under
+//! movement-aware LPT on devices too small to hold both working sets
+//! (FAILS if the movement-aware planner is slower), and a sustained
+//! overload burst against a tiny `queue_cap` under the `reject`
+//! policy (FAILS if nothing is shed — the backpressure path
+//! regressed).
 //!
 //! The batched path amortizes exactly what a serving deployment
 //! amortizes: the target grouping is built once per cohort instead of
@@ -78,6 +88,9 @@ fn scenario_row(
         ("lockstep_shared_tiles", json::num(stats.lockstep_shared_tiles as f64)),
         ("lockstep_shared_tile_rate", json::num(shared_tile_rate)),
         ("steals", json::num(stats.steals as f64)),
+        ("transfer_ns", json::num(stats.transfer_ns as f64)),
+        ("compute_ns", json::num(stats.compute_ns as f64)),
+        ("overlap_ns", json::num(stats.overlap_ns as f64)),
         ("latency_p50_ms", json::num(lat_p50)),
         ("latency_p95_ms", json::num(lat_p95)),
         ("latency_p99_ms", json::num(lat_p99)),
@@ -463,6 +476,276 @@ fn main() {
         ));
     }
     open_table.print("Open-loop arrival traces (always-on Server, 2 shards, virtual clock)");
+
+    // --- Emulated multi-device: double-buffered transfer/compute overlap ---
+    // Four distinct cold targets, two shards pinned round-robin onto
+    // two emulated devices: each shard plans two cohorts per flush, so
+    // the second cohort's cold slab upload is modeled on the device's
+    // DMA channel while the first cohort's tiles are still computing
+    // (`serve.overlap`).  Results must stay bit-identical to solo
+    // calls — the device model only changes the timeline counters.
+    let trg_c = Arc::new(synthetic::clustered(n_trg, 8, 40, 0.02, 3));
+    let trg_d = Arc::new(synthetic::clustered(n_trg / 2, 8, 20, 0.02, 4));
+    let md_targets = [trg_a.clone(), trg_b.clone(), trg_c, trg_d];
+    let md_queries: Vec<(Arc<Dataset>, Arc<Dataset>)> = (0..12)
+        .map(|i| (srcs[i % 6].clone(), md_targets[i % 4].clone()))
+        .collect();
+    let mut engine = Engine::new(cfg.clone()).expect("engine");
+    let t = Instant::now();
+    let mut md_seq = Vec::new();
+    for (src, trg) in &md_queries {
+        md_seq.push(engine.knn_join(src, trg, k).expect("solo knn"));
+    }
+    let md_seq_secs = t.elapsed().as_secs_f64();
+
+    let mut serve_cfg = cfg.serve.clone();
+    serve_cfg.shards = 2;
+    serve_cfg.devices = 2;
+    let mut md_batcher =
+        QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), serve_cfg);
+    for (src, trg) in &md_queries {
+        md_batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), k));
+    }
+    let t = Instant::now();
+    let md_out = md_batcher.flush().expect("multi-device flush");
+    let md_secs = t.elapsed().as_secs_f64();
+    for (i, (_, resp)) in md_out.iter().enumerate() {
+        let got = resp.as_knn().expect("knn response");
+        assert_eq!(
+            got.neighbors, md_seq[i].neighbors,
+            "multi-device serving diverged from sequential on query {i}"
+        );
+    }
+    let md_stats = md_batcher.stats();
+    println!(
+        "\nmulti-device scenario ({} devices, {} shards): modeled {:.3} ms transfer / \
+         {:.3} ms compute, {:.3} ms overlapped",
+        md_batcher.device_count(),
+        md_batcher.shard_count(),
+        md_stats.transfer_ns as f64 / 1e6,
+        md_stats.compute_ns as f64 / 1e6,
+        md_stats.overlap_ns as f64 / 1e6,
+    );
+    scenarios.push(scenario_row(
+        "knn_multidevice_2dev_2shard",
+        md_queries.len(),
+        md_secs,
+        md_seq_secs / md_secs.max(1e-12),
+        md_batcher.stats(),
+        md_batcher.shard_count(),
+    ));
+    if md_stats.transfer_ns == 0 || md_stats.overlap_ns == 0 {
+        eprintln!(
+            "FAIL: 2-device flush with two cold cohorts per shard modeled {} ns transfer / \
+             {} ns overlap — double-buffered transfer/compute overlap regressed",
+            md_stats.transfer_ns, md_stats.overlap_ns
+        );
+        std::process::exit(1);
+    }
+
+    // --- Movement-aware LPT vs blind LPT on a warm repeating workload ------
+    // Two equal-cost cohorts (same-size targets, identical source)
+    // repeat over several flushes with their submission order
+    // alternating.  Blind LPT breaks the cost tie by submission order,
+    // so each cohort bounces between shards every flush; the
+    // movement-aware planner charges the bounce its modeled DMA cost
+    // and keeps each cohort on the shard that already holds its slabs.
+    // Each emulated device is sized to ~1.5x ONE cohort's working set,
+    // so a bounce is a real slab rebuild, not a cache hit.  Stealing
+    // is disabled so the comparison isolates placement.
+    let trg_w: Vec<Arc<Dataset>> = (0..2u64)
+        .map(|i| Arc::new(synthetic::clustered(n_trg * 2, 32, 50, 0.02, 11 + i)))
+        .collect();
+    let w_src = Arc::new(synthetic::clustered(n_src / 4, 32, 10, 0.03, 200));
+    let w_queries: Vec<(Arc<Dataset>, Arc<Dataset>)> =
+        (0..2).map(|i| (w_src.clone(), trg_w[i].clone())).collect();
+    let mut engine = Engine::new(cfg.clone()).expect("engine");
+    let t = Instant::now();
+    let mut w_seq = Vec::new();
+    for (src, trg) in &w_queries {
+        w_seq.push(engine.knn_join(src, trg, k).expect("solo knn"));
+    }
+    let w_seq_secs = t.elapsed().as_secs_f64();
+
+    // Probe one cohort's resident slab footprint so the A/B runs can
+    // size the emulated device memory around it.
+    let mut probe_cfg = cfg.serve.clone();
+    probe_cfg.shards = 1;
+    probe_cfg.slab_cache_bytes = 1 << 30;
+    let mut probe = QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), probe_cfg);
+    probe.submit(ServeRequest::knn(w_queries[0].0.clone(), w_queries[0].1.clone(), k));
+    probe.flush().expect("probe flush");
+    let one_cohort_bytes = probe.stats().slab_cache_bytes as usize;
+
+    let w_rounds = if fast { 5 } else { 8 };
+    let mut w_qps = [0.0f64; 2]; // [blind LPT, movement-aware LPT]
+    let mut w_miss = [0u64; 2]; // warm-round slab misses
+    for (slot, movement_aware) in [(0usize, false), (1usize, true)] {
+        let mut serve_cfg = cfg.serve.clone();
+        serve_cfg.shards = 2;
+        serve_cfg.devices = 2;
+        serve_cfg.placement = "lpt".to_string();
+        serve_cfg.movement_aware = movement_aware;
+        serve_cfg.steal_threshold = 0;
+        serve_cfg.slab_cache_bytes = 1 << 30;
+        serve_cfg.device_mem_bytes = one_cohort_bytes + one_cohort_bytes / 2;
+        let mut b = QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), serve_cfg);
+        let mut warm_secs = 0.0f64;
+        let mut warm_queries = 0usize;
+        let mut miss0 = 0u64;
+        for round in 0..w_rounds {
+            // Alternate submission order so blind LPT's tie-break flips.
+            let order: Vec<usize> = if round % 2 == 0 { vec![0, 1] } else { vec![1, 0] };
+            for &qi in &order {
+                let (src, trg) = &w_queries[qi];
+                b.submit(ServeRequest::knn(src.clone(), trg.clone(), k));
+            }
+            let t = Instant::now();
+            let out = b.flush().expect("warmth flush");
+            let secs = t.elapsed().as_secs_f64();
+            for (j, (_, resp)) in out.iter().enumerate() {
+                let got = resp.as_knn().expect("knn response");
+                assert_eq!(
+                    got.neighbors,
+                    w_seq[order[j]].neighbors,
+                    "warmth A/B (movement_aware={movement_aware}) diverged on round {round}"
+                );
+            }
+            if round == 0 {
+                miss0 = b.stats().slab_cache_misses;
+            } else {
+                warm_secs += secs;
+                warm_queries += order.len();
+            }
+        }
+        w_qps[slot] = warm_queries as f64 / warm_secs.max(1e-12);
+        w_miss[slot] = b.stats().slab_cache_misses - miss0;
+        scenarios.push(scenario_row(
+            if movement_aware {
+                "knn_warmth_lpt_2dev_2shard"
+            } else {
+                "knn_movement_blind_lpt_2dev_2shard"
+            },
+            warm_queries,
+            warm_secs,
+            (w_seq_secs * (w_rounds - 1) as f64) / warm_secs.max(1e-12),
+            b.stats(),
+            b.shard_count(),
+        ));
+    }
+    let mut w_table = Table::new(&["placement", "warm q/s", "warm slab misses"]);
+    w_table.row(vec![
+        "blind LPT".into(),
+        format!("{:.1}", w_qps[0]),
+        format!("{}", w_miss[0]),
+    ]);
+    w_table.row(vec![
+        "movement-aware LPT".into(),
+        format!("{:.1}", w_qps[1]),
+        format!("{}", w_miss[1]),
+    ]);
+    w_table.print("Warmth A/B: repeating cohorts on memory-constrained devices");
+    if w_miss[1] >= w_miss[0] {
+        eprintln!(
+            "FAIL: movement-aware LPT rebuilt as many slabs as blind LPT on warm rounds \
+             ({} vs {}) — warmth-aware placement regressed",
+            w_miss[1], w_miss[0]
+        );
+        std::process::exit(1);
+    }
+    if w_qps[1] < w_qps[0] {
+        eprintln!(
+            "FAIL: movement-aware LPT slower than movement-blind LPT on the slab-heavy \
+             repeated-cohort workload ({:.1} vs {:.1} warm q/s)",
+            w_qps[1], w_qps[0]
+        );
+        std::process::exit(1);
+    }
+
+    // --- Sustained overload: reject policy at a tiny queue_cap -------------
+    // 12 queries burst in at one virtual instant against queue_cap=4
+    // under `overload="reject"`: the first four are accepted, the
+    // rest are shed at submit with an error (no silent drops), and
+    // the shed count lands in the stats row the regression guard
+    // checks.  Accepted queries must still answer bit-identically.
+    let mut serve_cfg = cfg.serve.clone();
+    serve_cfg.shards = 2;
+    serve_cfg.queue_cap = 4;
+    serve_cfg.overload = "reject".to_string();
+    let clock = VirtualClock::new();
+    let server = Server::with_clock(
+        Engine::new(cfg.clone()).expect("engine"),
+        serve_cfg,
+        Arc::new(clock.clone()),
+    );
+    let t = Instant::now();
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for (i, (src, trg)) in queries.iter().enumerate() {
+        match server.submit_with_deadline(
+            ServeRequest::knn(src.clone(), trg.clone(), k),
+            Duration::from_millis(50),
+        ) {
+            Ok(handle) => accepted.push((i, handle)),
+            Err(_) => rejected += 1,
+        }
+    }
+    clock.advance(Duration::from_millis(100));
+    let answered: Vec<_> = accepted
+        .into_iter()
+        .map(|(i, h)| (i, h.wait().expect("accepted query served")))
+        .collect();
+    let ov_secs = t.elapsed().as_secs_f64();
+    let ov_shards = server.shard_count();
+    let ov_stats = server.shutdown();
+    for (i, resp) in &answered {
+        let got = resp.as_knn().expect("knn response");
+        assert_eq!(
+            got.neighbors, seq_results[*i].neighbors,
+            "overload scenario diverged from sequential on accepted query {i}"
+        );
+    }
+    println!(
+        "\noverload scenario (reject @ queue_cap=4): {} offered, {} answered, {} shed \
+         ({:.0}% shed rate)",
+        queries.len(),
+        answered.len(),
+        ov_stats.shed,
+        100.0 * ov_stats.shed as f64 / queries.len() as f64,
+    );
+    let mut ov_row = scenario_row(
+        "knn_overload_reject_2shard",
+        queries.len(),
+        ov_secs,
+        0.0,
+        &ov_stats,
+        ov_shards,
+    );
+    if let Value::Obj(m) = &mut ov_row {
+        m.insert(
+            "shed_rate".to_string(),
+            json::num(ov_stats.shed as f64 / queries.len() as f64),
+        );
+    }
+    scenarios.push(ov_row);
+    if ov_stats.shed == 0 || rejected == 0 || ov_stats.shed != rejected as u64 {
+        eprintln!(
+            "FAIL: overload burst past queue_cap shed nothing (or stats disagree with \
+             submit errors: {} shed vs {} rejected) — reject backpressure regressed",
+            ov_stats.shed, rejected
+        );
+        std::process::exit(1);
+    }
+    if ov_stats.flush_failures != 0 || ov_stats.latency_ns.len() != answered.len() {
+        eprintln!(
+            "FAIL: overload scenario lost accepted queries ({} answered of {} accepted, \
+             {} flush failures)",
+            ov_stats.latency_ns.len(),
+            answered.len(),
+            ov_stats.flush_failures
+        );
+        std::process::exit(1);
+    }
 
     // --- Machine-readable output ------------------------------------------
     let out_path = std::env::var("ACCD_BENCH_JSON")

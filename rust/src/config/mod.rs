@@ -186,6 +186,38 @@ pub struct ServeConfig {
     /// `"block"` (the default: backpressure the producer) or
     /// `"reject"` (fail fast; counted in `ServeStats::shed`).
     pub overload: String,
+    /// Emulated devices in the pool.  Shards are pinned round-robin
+    /// (`shard % devices`); each device carries its own memory budget
+    /// and modeled DMA link.  Must be ≥ 1.  Compute is still executed
+    /// by the shared reference runtime — the devices model *where data
+    /// lives and what moving it costs*, so results are bit-identical
+    /// for any device count (serve parity contract).
+    pub devices: usize,
+    /// Modeled memory per emulated device in bytes.  **0 = unlimited**:
+    /// per-shard slab budgets fall back to `slab_cache_bytes` alone.
+    /// Otherwise each shard's slab budget is clamped to its share of
+    /// its device's memory (device memory / shards pinned to it).
+    pub device_mem_bytes: usize,
+    /// Modeled DMA link rate per device, decimal GB/s.  Feeds the
+    /// movement term of placement/stealing and the transfer half of
+    /// the double-buffered overlap accounting.  Must be > 0.
+    pub dma_gbps: f64,
+    /// Double-buffered transfer/compute overlap in the shard exec
+    /// loop: with it on (default), a shard's modeled slab uploads
+    /// proceed on a second DMA channel while resident programs
+    /// compute (ping-pong buffers); off, transfer and compute
+    /// serialize on one timeline.  Pure accounting — results are
+    /// bit-identical; only `transfer_ns`/`compute_ns`/`overlap_ns`
+    /// change.
+    pub overlap: bool,
+    /// Data-movement-aware placement and stealing: charge each
+    /// (unit, shard) pair the modeled DMA cost of the unit's cold
+    /// slab bytes, so units land where their slabs are already warm
+    /// and an idle thief prefers a warm unit over a slightly bigger
+    /// cold one.  `false` restores movement-blind cost balancing (the
+    /// A/B lever for the bench).  Results are bit-identical either
+    /// way (serve parity contract); only placement changes.
+    pub movement_aware: bool,
 }
 
 impl Default for ServeConfig {
@@ -203,6 +235,11 @@ impl Default for ServeConfig {
             placement: "edf-lpt".to_string(),
             queue_cap: 1024,
             overload: "block".to_string(),
+            devices: 1,
+            device_mem_bytes: 0,
+            dma_gbps: 16.0,
+            overlap: true,
+            movement_aware: true,
         }
     }
 }
@@ -226,6 +263,12 @@ impl ServeConfig {
         }
         if self.grouping_cache_cap == 0 {
             return Err(Error::Config("serve.grouping_cache_cap must be positive".into()));
+        }
+        if self.devices == 0 {
+            return Err(Error::Config("serve.devices must be positive".into()));
+        }
+        if !self.dma_gbps.is_finite() || self.dma_gbps <= 0.0 {
+            return Err(Error::Config("serve.dma_gbps must be positive".into()));
         }
         self.placement_mode()?;
         self.overload_policy()?;
@@ -334,6 +377,16 @@ impl AccdConfig {
             if let Some(p) = s.get("overload").as_str() {
                 cfg.serve.overload = p.to_string();
             }
+            cfg.serve.devices = s.get("devices").as_usize().unwrap_or(cfg.serve.devices);
+            cfg.serve.device_mem_bytes =
+                s.get("device_mem_bytes").as_usize().unwrap_or(cfg.serve.device_mem_bytes);
+            cfg.serve.dma_gbps = s.get("dma_gbps").as_f64().unwrap_or(cfg.serve.dma_gbps);
+            if let Some(b) = s.get("overlap").as_bool() {
+                cfg.serve.overlap = b;
+            }
+            if let Some(b) = s.get("movement_aware").as_bool() {
+                cfg.serve.movement_aware = b;
+            }
         }
         if let Some(s) = v.get("artifact_dir").as_str() {
             cfg.artifact_dir = s.to_string();
@@ -411,6 +464,11 @@ impl AccdConfig {
                     ("placement", json::s(self.serve.placement.clone())),
                     ("queue_cap", json::num(self.serve.queue_cap as f64)),
                     ("overload", json::s(self.serve.overload.clone())),
+                    ("devices", json::num(self.serve.devices as f64)),
+                    ("device_mem_bytes", json::num(self.serve.device_mem_bytes as f64)),
+                    ("dma_gbps", json::num(self.serve.dma_gbps)),
+                    ("overlap", Value::Bool(self.serve.overlap)),
+                    ("movement_aware", Value::Bool(self.serve.movement_aware)),
                 ]),
             ),
             ("artifact_dir", json::s(self.artifact_dir.clone())),
@@ -447,9 +505,43 @@ mod tests {
         cfg.serve.placement = "lpt".to_string();
         cfg.serve.queue_cap = 37;
         cfg.serve.overload = "reject".to_string();
+        cfg.serve.devices = 4;
+        cfg.serve.device_mem_bytes = 8 << 20;
+        cfg.serve.dma_gbps = 3.5;
+        cfg.serve.overlap = false;
+        cfg.serve.movement_aware = false;
         cfg.kmeans.incremental_ti = false;
         let re = AccdConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, re);
+    }
+
+    #[test]
+    fn device_knobs_default_validated_and_parse() {
+        let d = ServeConfig::default();
+        assert_eq!(d.devices, 1, "one emulated device by default");
+        assert_eq!(d.device_mem_bytes, 0, "0 = unlimited device memory");
+        assert_eq!(d.dma_gbps, 16.0);
+        assert!(d.overlap, "transfer/compute overlap defaults on");
+        assert!(d.movement_aware, "movement-aware placement defaults on");
+        let bad = ServeConfig { devices: 0, ..ServeConfig::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("devices"));
+        let bad = ServeConfig { dma_gbps: 0.0, ..ServeConfig::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("dma_gbps"));
+        let bad = ServeConfig { dma_gbps: -1.0, ..ServeConfig::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("dma_gbps"));
+        let v = json::parse(
+            r#"{"serve": {"devices": 2, "device_mem_bytes": 1048576,
+                "dma_gbps": 8.0, "overlap": false, "movement_aware": false}}"#,
+        )
+        .unwrap();
+        let cfg = AccdConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.serve.devices, 2);
+        assert_eq!(cfg.serve.device_mem_bytes, 1 << 20);
+        assert_eq!(cfg.serve.dma_gbps, 8.0);
+        assert!(!cfg.serve.overlap);
+        assert!(!cfg.serve.movement_aware);
+        let v = json::parse(r#"{"serve": {"devices": 0}}"#).unwrap();
+        assert!(AccdConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -313,6 +313,22 @@ pub(crate) fn plan(
     })
 }
 
+impl KmeansProgram {
+    /// Observed prune rate so far, in permille of point-iterations:
+    /// `1000 * points_pruned / (n * iterations)`.  0 before the first
+    /// step.  The lockstep scheduler uses this to step high-pruning
+    /// programs first among equal deadlines — their steps are cheap
+    /// and their bounds tighten fastest, so the shard's expensive work
+    /// sees the freshest center positions.
+    pub(crate) fn observed_prune_permille(&self) -> u64 {
+        let denom = self.assign.len() as u64 * self.iterations as u64;
+        if denom == 0 {
+            return 0;
+        }
+        (1000 * self.report.filter.points_pruned) / denom
+    }
+}
+
 impl CohortProgram for KmeansProgram {
     type Output = KmeansResult;
 

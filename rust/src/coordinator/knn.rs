@@ -155,6 +155,11 @@ pub struct SlabCache {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Total bytes of slabs *built* on misses — the modeled DMA upload
+    /// traffic of this cache's device (a hit is device-resident, a
+    /// miss must cross the link).  Accumulates even when disabled:
+    /// disabled means nothing is retained, not that uploads are free.
+    pub miss_bytes: u64,
 }
 
 impl SlabCache {
@@ -174,6 +179,7 @@ impl SlabCache {
             hits: 0,
             misses: 0,
             evictions: 0,
+            miss_bytes: 0,
         }
     }
 
@@ -197,6 +203,22 @@ impl SlabCache {
         self.bytes
     }
 
+    /// Resident bytes belonging to dataset `fingerprint` — the warmth
+    /// signal of the movement-aware planner: a work unit whose
+    /// dataset's slabs are resident here would skip (up to) this many
+    /// bytes of modeled DMA upload by running on this cache's shard.
+    /// All `SlabScope`s key `fingerprint` to the *content* fingerprint
+    /// of the slab's source dataset (KNN target / K-means points), so
+    /// one u64 addresses every slab family at once.
+    pub fn warm_bytes_for(&self, fingerprint: u64) -> u64 {
+        self.map
+            .iter()
+            .filter(|(scope, _)| scope.fingerprint == fingerprint)
+            .flat_map(|(_, inner)| inner.values())
+            .map(|e| e.bytes as u64)
+            .sum()
+    }
+
     /// Fetch the slab for `(scope, cand)`, building it on a miss.
     /// Returns the slab and whether it was served from cache.  A hit
     /// allocates nothing; keys are cloned only on insert.
@@ -208,7 +230,9 @@ impl SlabCache {
     ) -> (SharedSlab, bool) {
         if self.disabled {
             self.misses += 1;
-            return (build(), false);
+            let slab = build();
+            self.miss_bytes += (slab.slab.len() * 4 + slab.col_ids.len() * 4) as u64;
+            return (slab, false);
         }
         self.tick += 1;
         if let Some(entry) = self.map.get_mut(scope).and_then(|inner| inner.get_mut(cand)) {
@@ -219,6 +243,7 @@ impl SlabCache {
         self.misses += 1;
         let slab = build();
         let bytes = slab.slab.len() * 4 + slab.col_ids.len() * 4;
+        self.miss_bytes += bytes as u64;
         self.map
             .entry(scope.clone())
             .or_default()

@@ -118,6 +118,83 @@ impl CostModel {
         let lanes = (self.hw.simd * self.hw.unroll) as f64;
         macs / lanes / (self.hw.freq_mhz * 1e6)
     }
+
+    /// Modeled accelerator throughput in *pairs* per second for
+    /// dimensionality `d` — the inverse of `tile_seconds(1, 1, 1, d)`.
+    /// This is the bridge between the planner's abstract cost units
+    /// (pair counts, see `WorkUnit::cost_estimate`) and time.
+    pub fn pairs_per_sec(&self, d: usize) -> f64 {
+        let lanes = (self.hw.simd * self.hw.unroll) as f64;
+        lanes * self.hw.freq_mhz * 1e6 / d.max(1) as f64
+    }
+
+    /// Convert cold bytes that would have to cross the DMA link into
+    /// the planner's cost units: the pairs the accelerator could have
+    /// computed in the time the transfer takes.  This makes the
+    /// movement term directly comparable to `WorkUnit::cost_estimate`,
+    /// so a warm shard wins exactly when staying saves more modeled
+    /// time than the compute imbalance costs.
+    pub fn move_penalty_units(&self, dma: &DmaModel, bytes: u64, d: usize) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let secs = dma.transfer_ns(bytes) as f64 * 1e-9;
+        (secs * self.pairs_per_sec(d)).round() as u64
+    }
+
+    /// Eq. 5 extended over an emulated multi-device pool: `devices`
+    /// devices split the surviving tiles evenly, each re-paying the
+    /// DMA upload of its input partition (the filter term stays on the
+    /// one host CPU).  The DSE machinery uses this to rank device
+    /// counts the same way it ranks tile shapes.
+    pub fn latency_multi_device(
+        &self,
+        w: &WorkloadModel,
+        dma: &DmaModel,
+        devices: usize,
+    ) -> LatencyBreakdown {
+        let n = devices.max(1) as f64;
+        let filt = self.latency_filt(w);
+        let comp = self.latency_comp(w) / n;
+        let bytes = ((w.src_size + w.trg_size) * w.d * w.dtype_bytes) as f64;
+        // Each device uploads its own 1/n slice plus pays the fixed
+        // per-transfer latency; uploads run concurrently across
+        // devices, so the wall term is one slice, not n.
+        let xfer = dma.transfer_ns((bytes / n).ceil() as u64) as f64 * 1e-9;
+        LatencyBreakdown { filt_secs: filt, comp_secs: comp, xfer_secs: xfer }
+    }
+}
+
+/// The modeled host<->device DMA link of one emulated device: a fixed
+/// per-transfer setup latency plus per-byte streaming at `gbps`
+/// (decimal GB/s, matching how PCIe/DMA link specs are quoted).  The
+/// shape mirrors the AWS F1 `fpga_dma` burst-write discipline: every
+/// transfer pays the doorbell/descriptor setup once, then streams.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DmaModel {
+    /// Link streaming rate in decimal gigabytes per second.
+    pub gbps: f64,
+    /// Fixed per-transfer setup cost (descriptor + doorbell), ns.
+    pub latency_ns: u64,
+}
+
+impl DmaModel {
+    /// Typical PCIe gen3 x8 DMA setup cost.
+    pub const DEFAULT_LATENCY_NS: u64 = 2_000;
+
+    pub fn new(gbps: f64) -> Self {
+        Self { gbps, latency_ns: Self::DEFAULT_LATENCY_NS }
+    }
+
+    /// Modeled nanoseconds to move `bytes` across the link.  Zero
+    /// bytes is free: no transfer is issued at all, so no setup cost.
+    pub fn transfer_ns(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let stream_ns = (bytes as f64 / self.gbps.max(1e-9)).ceil() as u64;
+        self.latency_ns + stream_ns
+    }
 }
 
 #[cfg(test)]
@@ -177,5 +254,46 @@ mod tests {
         let one = m.tile_seconds(1, 64, 64, 32);
         let ten = m.tile_seconds(10, 64, 64, 32);
         assert!((ten - 10.0 * one).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dma_transfer_is_latency_plus_stream_and_zero_is_free() {
+        let dma = DmaModel::new(16.0); // 16 GB/s = 16 bytes/ns
+        assert_eq!(dma.transfer_ns(0), 0);
+        // 16 KiB at 16 B/ns = 1024 ns of streaming + setup.
+        assert_eq!(dma.transfer_ns(16 * 1024), DmaModel::DEFAULT_LATENCY_NS + 1024);
+        // The fixed latency dominates tiny transfers: 1 byte != free.
+        assert!(dma.transfer_ns(1) > DmaModel::DEFAULT_LATENCY_NS);
+        // A faster link strictly shrinks the streaming term.
+        let fast = DmaModel::new(32.0);
+        assert!(fast.transfer_ns(1 << 20) < dma.transfer_ns(1 << 20));
+    }
+
+    #[test]
+    fn move_penalty_is_zero_for_warm_and_monotonic_in_bytes() {
+        let m = CostModel::new(HwConfig::default());
+        let dma = DmaModel::new(16.0);
+        assert_eq!(m.move_penalty_units(&dma, 0, 8), 0);
+        let small = m.move_penalty_units(&dma, 64 * 1024, 8);
+        let big = m.move_penalty_units(&dma, 4 << 20, 8);
+        assert!(small > 0, "a cold slab must cost something");
+        assert!(big > small, "more cold bytes must cost more");
+        // Sanity of scale: penalty equals transfer time re-expressed
+        // as pairs the accelerator could have computed meanwhile.
+        let secs = dma.transfer_ns(4 << 20) as f64 * 1e-9;
+        assert_eq!(big, (secs * m.pairs_per_sec(8)).round() as u64);
+    }
+
+    #[test]
+    fn multi_device_latency_splits_comp_and_xfer_not_filt() {
+        let m = CostModel::new(HwConfig::default());
+        let dma = DmaModel::new(16.0);
+        let w = wl();
+        let one = m.latency_multi_device(&w, &dma, 1);
+        let four = m.latency_multi_device(&w, &dma, 4);
+        assert_eq!(one.filt_secs, four.filt_secs, "filter stays on the host CPU");
+        assert!((four.comp_secs - one.comp_secs / 4.0).abs() < 1e-12);
+        assert!(four.xfer_secs < one.xfer_secs, "each device uploads a slice");
+        assert!(four.total() < one.total(), "DSE must see more devices as faster here");
     }
 }

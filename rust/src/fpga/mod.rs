@@ -20,7 +20,7 @@ pub mod device;
 pub mod power;
 pub mod resource;
 
-pub use cost::{CostModel, LatencyBreakdown};
+pub use cost::{CostModel, DmaModel, LatencyBreakdown};
 pub use device::{FpgaDevice, TileJob, TileResult};
 pub use power::{PowerModel, Platform};
 pub use resource::{ResourceEstimate, ResourceModel, StratixBudget};

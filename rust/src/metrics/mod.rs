@@ -240,6 +240,18 @@ pub struct ServeStats {
     /// Not-yet-started work units an idle shard stole from a busy one
     /// after the LPT placement's cost estimates misfired.
     pub steals: u64,
+    /// Modeled host→device DMA nanoseconds spent uploading cold slabs
+    /// (per the shard's device [`DmaModel`](crate::fpga::DmaModel);
+    /// warm slabs transfer nothing).
+    pub transfer_ns: u64,
+    /// Modeled device compute nanoseconds (the cost model's tile time,
+    /// summed over the shard's plans/steps).
+    pub compute_ns: u64,
+    /// Modeled nanoseconds the double-buffered second DMA channel
+    /// saved by hiding uploads under compute: total transfer + compute
+    /// work minus the overlapped timeline's makespan.  Exactly 0 when
+    /// `serve.overlap` is off (the timeline is serialized).
+    pub overlap_ns: u64,
     /// Queries that carried a deadline and whose service STARTED at or
     /// before it (the flush that answered them was selected by the
     /// deadline — a deadline-triggered `poll` fires exactly at expiry
@@ -444,6 +456,9 @@ impl ServeStats {
         self.lockstep_rounds += d.lockstep_rounds;
         self.lockstep_shared_tiles += d.lockstep_shared_tiles;
         self.steals += d.steals;
+        self.transfer_ns += d.transfer_ns;
+        self.compute_ns += d.compute_ns;
+        self.overlap_ns += d.overlap_ns;
     }
 
     pub fn to_json(&self) -> Value {
@@ -470,6 +485,9 @@ impl ServeStats {
             ("lockstep_rounds", json::num(self.lockstep_rounds as f64)),
             ("lockstep_shared_tiles", json::num(self.lockstep_shared_tiles as f64)),
             ("steals", json::num(self.steals as f64)),
+            ("transfer_ns", json::num(self.transfer_ns as f64)),
+            ("compute_ns", json::num(self.compute_ns as f64)),
+            ("overlap_ns", json::num(self.overlap_ns as f64)),
             ("deadline_met", json::num(self.deadline_met as f64)),
             ("deadline_misses", json::num(self.deadline_misses as f64)),
             ("shed", json::num(self.shed as f64)),
@@ -498,6 +516,7 @@ impl ServeStats {
              grouping cache: {} hits / {} misses ({:.1}% hit rate, {} probe collisions)\n  \
              slab cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, {:.1} MB resident\n  \
              lockstep: {} rounds, {} shared tiles | {} units stolen\n  \
+             device timeline: {:.3} ms transfer / {:.3} ms compute, {:.3} ms overlapped\n  \
              latency: p50 {:.3} ms / p95 {:.3} ms / p99 {:.3} ms | \
              deadlines: {} met / {} missed | shed {} (depth high-water {})\n  \
              tiles: {} shared of {} total ({:.1}%) | shared slabs {}\n  \
@@ -523,6 +542,9 @@ impl ServeStats {
             self.lockstep_rounds,
             self.lockstep_shared_tiles,
             self.steals,
+            self.transfer_ns as f64 / 1e6,
+            self.compute_ns as f64 / 1e6,
+            self.overlap_ns as f64 / 1e6,
             p50,
             p95,
             p99,
@@ -748,6 +770,9 @@ mod tests {
             lockstep_rounds: 6,
             lockstep_shared_tiles: 4,
             steals: 2,
+            transfer_ns: 1_000,
+            compute_ns: 2_000,
+            overlap_ns: 500,
             flushes: 7,
             wall_secs: 9.0,
             deadline_met: 5,
@@ -777,6 +802,10 @@ mod tests {
         assert_eq!(total.lockstep_rounds, 6);
         assert_eq!(total.lockstep_shared_tiles, 4);
         assert_eq!(total.steals, 2);
+        // Modeled device-timeline counters are flush-delta summed too.
+        assert_eq!(total.transfer_ns, 1_000);
+        assert_eq!(total.compute_ns, 2_000);
+        assert_eq!(total.overlap_ns, 500);
         // Batcher-level fields and cache gauges untouched (gauges are
         // re-published absolutely from the caches, not delta-summed).
         assert_eq!(total.flushes, 2);

@@ -1,0 +1,175 @@
+//! Emulated multi-device topology: N deterministic devices behind the
+//! one shared reference [`Runtime`](crate::runtime::Runtime).
+//!
+//! The paper's platform is a CPU+FPGA pair where the PCIe/DMA link is
+//! a first-class cost (§VI-B); production multi-accelerator hosts are
+//! the same picture N times.  The reference backend computes every
+//! tile on the host, so the emulation models the part that actually
+//! changes results *placement* decisions: **where data lives and what
+//! moving it costs**.  Each [`EmulatedDevice`] carries a memory budget
+//! (which clamps the slab budgets of the shards pinned to it) and a
+//! [`DmaModel`] link (which prices cold-slab uploads for the
+//! movement-aware planner/stealer and drives the double-buffered
+//! transfer/compute overlap accounting in `serve::exec`).
+//!
+//! Compute itself still runs through the shared `Runtime`, so results
+//! stay bit-for-bit identical for any device count — the serve parity
+//! contract extends over the device axis for free, and the manifest
+//! contract is untouched: a real PJRT/FPGA backend slots in by giving
+//! each [`EmulatedDevice`] a real runtime instead of a model.
+
+use crate::config::ServeConfig;
+use crate::fpga::cost::DmaModel;
+
+/// One emulated accelerator: an identity, a memory budget and a DMA
+/// link.  Deterministic by construction — it holds no state, only
+/// model parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EmulatedDevice {
+    pub id: usize,
+    /// Modeled device memory in bytes; 0 = unlimited.
+    pub mem_bytes: usize,
+    /// Modeled host<->device DMA link.
+    pub dma: DmaModel,
+}
+
+/// The device pool shards are pinned onto: `shard % device_count()`.
+///
+/// Round-robin pinning is deterministic and independent of load, so
+/// the shard→device map is a pure function of the config — a
+/// prerequisite for the parity contract (placement may consult the
+/// topology, execution may account against it, neither may let it
+/// perturb results).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceTopology {
+    devices: Vec<EmulatedDevice>,
+}
+
+impl DeviceTopology {
+    /// `devices` identical devices of `mem_bytes` memory behind
+    /// `gbps` DMA links.  `devices` is clamped to ≥ 1 (a pool with no
+    /// devices cannot execute anything).
+    pub fn new(devices: usize, mem_bytes: usize, gbps: f64) -> Self {
+        let dma = DmaModel::new(gbps);
+        Self {
+            devices: (0..devices.max(1))
+                .map(|id| EmulatedDevice { id, mem_bytes, dma })
+                .collect(),
+        }
+    }
+
+    /// The topology the serving knobs describe (`serve.devices`,
+    /// `serve.device_mem_bytes`, `serve.dma_gbps`).
+    pub fn from_serve(cfg: &ServeConfig) -> Self {
+        Self::new(cfg.devices, cfg.device_mem_bytes, cfg.dma_gbps)
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn devices(&self) -> &[EmulatedDevice] {
+        &self.devices
+    }
+
+    /// The device shard `shard` is pinned to (round-robin).
+    pub fn device_for_shard(&self, shard: usize) -> usize {
+        shard % self.devices.len()
+    }
+
+    /// How many of `total_shards` shards are pinned to `device`.
+    pub fn shards_on_device(&self, device: usize, total_shards: usize) -> usize {
+        let n = self.devices.len();
+        if device >= n {
+            return 0;
+        }
+        total_shards / n + usize::from(device < total_shards % n)
+    }
+
+    /// The DMA link of the device `shard` is pinned to.
+    pub fn dma_for_shard(&self, shard: usize) -> &DmaModel {
+        &self.devices[self.device_for_shard(shard)].dma
+    }
+
+    /// The slab-cache byte budget of one shard: the configured
+    /// per-shard budget (`cfg_bytes`, 0 = the cache is DISABLED and
+    /// stays disabled) clamped to the shard's even share of its
+    /// device's memory (device `mem_bytes` 0 = unlimited, no clamp).
+    /// Residency is therefore tracked against real device capacity:
+    /// two shards on one 8 MiB device get 4 MiB of slab residency
+    /// each, however generous `serve.slab_cache_bytes` is.
+    pub fn shard_slab_budget(&self, shard: usize, total_shards: usize, cfg_bytes: usize) -> usize {
+        if cfg_bytes == 0 {
+            return 0; // disabled stays disabled
+        }
+        let dev = self.device_for_shard(shard);
+        let mem = self.devices[dev].mem_bytes;
+        if mem == 0 {
+            return cfg_bytes;
+        }
+        let tenants = self.shards_on_device(dev, total_shards).max(1);
+        cfg_bytes.min(mem / tenants)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_pinning_is_deterministic() {
+        let topo = DeviceTopology::new(2, 0, 16.0);
+        assert_eq!(topo.device_count(), 2);
+        assert_eq!(
+            (0..5).map(|s| topo.device_for_shard(s)).collect::<Vec<_>>(),
+            vec![0, 1, 0, 1, 0]
+        );
+        // Zero devices is clamped up, never a division by zero.
+        assert_eq!(DeviceTopology::new(0, 0, 16.0).device_count(), 1);
+    }
+
+    #[test]
+    fn shards_on_device_counts_the_round_robin() {
+        let topo = DeviceTopology::new(2, 0, 16.0);
+        // 3 shards over 2 devices: device 0 gets shards {0, 2}.
+        assert_eq!(topo.shards_on_device(0, 3), 2);
+        assert_eq!(topo.shards_on_device(1, 3), 1);
+        assert_eq!(topo.shards_on_device(7, 3), 0, "unknown device hosts nothing");
+        let even = DeviceTopology::new(4, 0, 16.0);
+        assert_eq!(even.shards_on_device(3, 8), 2);
+    }
+
+    #[test]
+    fn slab_budget_clamps_to_the_device_share() {
+        // 8 MiB device, 2 shards pinned to it -> 4 MiB each, even
+        // though the config asks for 64 MiB.
+        let topo = DeviceTopology::new(1, 8 << 20, 16.0);
+        assert_eq!(topo.shard_slab_budget(0, 2, 64 << 20), 4 << 20);
+        assert_eq!(topo.shard_slab_budget(1, 2, 64 << 20), 4 << 20);
+        // A small config budget is NOT inflated to the device share.
+        assert_eq!(topo.shard_slab_budget(0, 2, 1 << 20), 1 << 20);
+        // Unlimited device memory -> the config budget passes through.
+        let unlimited = DeviceTopology::new(2, 0, 16.0);
+        assert_eq!(unlimited.shard_slab_budget(1, 4, 64 << 20), 64 << 20);
+        // Disabled stays disabled regardless of device memory.
+        assert_eq!(topo.shard_slab_budget(0, 2, 0), 0);
+    }
+
+    #[test]
+    fn from_serve_reads_the_knobs() {
+        let cfg = ServeConfig {
+            devices: 3,
+            device_mem_bytes: 123,
+            dma_gbps: 4.0,
+            ..ServeConfig::default()
+        };
+        let topo = DeviceTopology::from_serve(&cfg);
+        assert_eq!(topo.device_count(), 3);
+        assert_eq!(topo.devices()[2], EmulatedDevice {
+            id: 2,
+            mem_bytes: 123,
+            dma: DmaModel::new(4.0)
+        });
+        assert_eq!(topo.dma_for_shard(5), &DmaModel::new(4.0));
+    }
+}

@@ -16,7 +16,9 @@
 //! Python never runs here.
 
 mod artifacts;
+mod devices;
 mod exec;
 
 pub use artifacts::{ArtifactEntry, ArtifactKind, Manifest, TileInfo};
+pub use devices::{DeviceTopology, EmulatedDevice};
 pub use exec::{KnnTileOut, Runtime};

@@ -623,6 +623,33 @@ impl WorkUnit {
             }
         }
     }
+
+    /// The unit's dominant slab footprint for the movement term: the
+    /// content fingerprint its packed slabs are scoped under (the
+    /// `SlabScope::fingerprint` every shard cache keys warmth by) and
+    /// the raw bytes of the dataset behind them — what a shard without
+    /// resident slabs would have to upload.  KNN cohorts move their
+    /// target slab, K-means its packed points slab, N-body its packed
+    /// positions; padding is ignored (a consistent under-estimate).
+    pub fn movement_footprint(&self) -> (u64, u64) {
+        match self {
+            WorkUnit::Knn(c) => (c.trg_fp.0, (c.trg.n() * c.trg.d() * 4) as u64),
+            WorkUnit::Kmeans(j) => (j.ds_fp.0, (j.ds.n() * j.ds.d() * 4) as u64),
+            WorkUnit::Nbody(j) => (j.ds_fp.0, (j.ds.n() * j.ds.d() * 4) as u64),
+        }
+    }
+
+    /// Dimensionality of the unit's distance pairs — converts the
+    /// movement footprint's transfer time into the same pairs-per-`d`
+    /// units as [`WorkUnit::cost_estimate`] (see
+    /// `CostModel::move_penalty_units`).
+    pub fn dim(&self) -> usize {
+        match self {
+            WorkUnit::Knn(c) => c.trg.d(),
+            WorkUnit::Kmeans(j) => j.ds.d(),
+            WorkUnit::Nbody(j) => j.ds.d(),
+        }
+    }
 }
 
 /// Partition a drained batch into work units: coalesce KNN queries

@@ -50,7 +50,7 @@ use crate::coordinator::{kmeans, knn, nbody, pipeline};
 use crate::coordinator::{Engine, SlabCache, SlabScope};
 use crate::data::Dataset;
 use crate::fpga::device::DeviceStats;
-use crate::fpga::TileResult;
+use crate::fpga::{DmaModel, TileResult};
 use crate::gti::Metric;
 use crate::layout::PackedGrouping;
 use crate::metrics::{RunReport, ServeStats};
@@ -72,15 +72,22 @@ pub(crate) struct ShardState {
 
 impl ShardState {
     pub fn new(cfg: &ServeConfig) -> Self {
+        Self::with_budget(cfg, cfg.slab_cache_bytes)
+    }
+
+    /// Like [`ShardState::new`] but with the slab budget already
+    /// clamped to the shard's share of its device's memory
+    /// ([`DeviceTopology::shard_slab_budget`](crate::runtime::DeviceTopology::shard_slab_budget)).
+    pub fn with_budget(cfg: &ServeConfig, slab_budget: usize) -> Self {
         Self {
             grouping_cache: GroupingCache::new(cfg.grouping_cache_cap),
             // slab_cache_bytes == 0 means DISABLED (build fresh every
             // time), not unbounded — `ServeConfig::validate` documents
             // the zero semantics.
-            slab_cache: if cfg.slab_cache_bytes == 0 {
+            slab_cache: if slab_budget == 0 {
                 SlabCache::disabled()
             } else {
-                SlabCache::with_budget(cfg.slab_cache_bytes)
+                SlabCache::with_budget(slab_budget)
             },
             stats: ServeStats::default(),
         }
@@ -100,11 +107,14 @@ pub(crate) struct ShardDelta {
 /// more than one shard has (or can steal) work.  `costs` and
 /// `deadlines` are the same per-unit values the planner balanced on
 /// (computed once per flush; the steal threshold compares against the
-/// costs, claim order and at-risk steals against the deadlines); `now`
-/// is the flush's clock reading.  Returns the filled response slots,
-/// which shard answered each slot (latency attribution), and one delta
-/// per shard (empty for idle shards); `Err` aborts the whole flush
-/// (first erroring shard in shard order).
+/// costs, claim order and at-risk steals against the deadlines);
+/// `move_units` is the same per-unit x per-shard movement table the
+/// planner placed with (empty when movement-awareness is off) so
+/// steals are discounted by the thief's cold bytes; `now` is the
+/// flush's clock reading.  Returns the filled response slots, which
+/// shard answered each slot (latency attribution), and one delta per
+/// shard (empty for idle shards); `Err` aborts the whole flush (first
+/// erroring shard in shard order).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn execute_plan(
     pool: &mut EnginePool,
@@ -112,6 +122,7 @@ pub(crate) fn execute_plan(
     units: Vec<WorkUnit>,
     costs: Vec<u64>,
     deadlines: Vec<Option<Tick>>,
+    move_units: Vec<Vec<u64>>,
     assignments: &[Vec<usize>],
     n_slots: usize,
     cfg: &ServeConfig,
@@ -119,7 +130,8 @@ pub(crate) fn execute_plan(
 ) -> Result<(Vec<Option<ServeResponse>>, Vec<Option<usize>>, Vec<ShardDelta>)> {
     debug_assert_eq!(pool.shard_count(), assignments.len());
     let n_shards = pool.shard_count();
-    let work_pool = WorkPool::new(units, costs, deadlines, assignments);
+    let topology = pool.topology().clone();
+    let work_pool = WorkPool::with_movement(units, costs, deadlines, move_units, assignments);
     // Idle shards spawn as thieves only when stealing could ever fire
     // this flush (the eligibility policy lives in WorkPool).
     let thieves = cfg.steal_threshold > 0
@@ -135,7 +147,8 @@ pub(crate) fn execute_plan(
         // Inline fast path: nothing to overlap, so skip thread spawn.
         for (s, (engine, state)) in engines.iter_mut().zip(states.iter_mut()).enumerate() {
             outcomes.push(if workers[s] {
-                run_shard(engine, state, &work, s, cfg, now)
+                let dma = *topology.dma_for_shard(s);
+                run_shard(engine, state, &work, s, cfg, now, dma)
             } else {
                 Ok(ShardDelta::default())
             });
@@ -146,7 +159,8 @@ pub(crate) fn execute_plan(
             let work_ref = &work;
             for (s, (engine, state)) in engines.iter_mut().zip(states.iter_mut()).enumerate() {
                 handles.push(if workers[s] {
-                    Some(scope.spawn(move || run_shard(engine, state, work_ref, s, cfg, now)))
+                    let dma = *topology.dma_for_shard(s);
+                    Some(scope.spawn(move || run_shard(engine, state, work_ref, s, cfg, now, dma)))
                 } else {
                     None
                 });
@@ -224,8 +238,75 @@ pub(crate) fn commit_deltas(
 
 // --- the per-shard schedulers ----------------------------------------------
 
+/// Flush-scoped modeled transfer/compute timeline of one shard's
+/// emulated device: double-buffered (ping-pong) uploads on a second
+/// DMA channel when `serve.overlap` is on, fully serialized when off.
+///
+/// Pure accounting over the same modeled quantities the cost model and
+/// the slab cache already produce — `upload_bytes` is the shard's
+/// cold-slab DMA traffic (the SlabCache miss-bytes delta around a
+/// plan), `compute_ns` the device's modeled tile time — so turning
+/// overlap on or off can only change the three counters it feeds into
+/// [`ServeStats`], never a result (the parity property test pins
+/// this).
+struct XferClock {
+    dma: DmaModel,
+    overlap: bool,
+    /// When the (second) DMA channel frees up, ns since flush start.
+    dma_free: u64,
+    /// When the compute engine frees up, ns since flush start.
+    compute_free: u64,
+    transfer_ns: u64,
+    compute_ns: u64,
+}
+
+impl XferClock {
+    fn new(dma: DmaModel, overlap: bool) -> Self {
+        Self { dma, overlap, dma_free: 0, compute_free: 0, transfer_ns: 0, compute_ns: 0 }
+    }
+
+    /// One plan-or-step's worth of modeled work: upload its cold bytes,
+    /// then compute.  With overlap the upload streams on the dedicated
+    /// channel while the previous compute still runs (ping-pong
+    /// buffers); compute of THIS work still waits for its own upload —
+    /// data dependencies are never violated, only inter-unit transfer
+    /// time hides.
+    fn record(&mut self, upload_bytes: u64, compute_ns: u64) {
+        let t = self.dma.transfer_ns(upload_bytes);
+        if self.overlap {
+            let upload_done = self.dma_free + t;
+            self.dma_free = upload_done;
+            self.compute_free = upload_done.max(self.compute_free) + compute_ns;
+        } else {
+            // Single serialized timeline: the link and the engine never
+            // run at the same time.
+            self.compute_free += t + compute_ns;
+            self.dma_free = self.compute_free;
+        }
+        self.transfer_ns += t;
+        self.compute_ns += compute_ns;
+    }
+
+    /// Fold the flush's timeline into the shard delta.  `overlap_ns`
+    /// is the modeled time double-buffering saved: total work minus
+    /// makespan — exactly 0 when overlap is off.
+    fn flush_into(&self, stats: &mut ServeStats) {
+        stats.transfer_ns += self.transfer_ns;
+        stats.compute_ns += self.compute_ns;
+        let makespan = self.dma_free.max(self.compute_free);
+        stats.overlap_ns += (self.transfer_ns + self.compute_ns).saturating_sub(makespan);
+    }
+}
+
+/// Modeled device-nanoseconds consumed since snapshot `secs0` (the
+/// XferClock's compute currency).
+fn modeled_ns_since(engine: &Engine, secs0: f64) -> u64 {
+    ((engine.device.stats().modeled_secs - secs0).max(0.0) * 1e9).round() as u64
+}
+
 /// Run one shard's share of a flush — lockstep rounds or serial
 /// run-to-completion — collecting the delta.
+#[allow(clippy::too_many_arguments)]
 fn run_shard(
     engine: &mut Engine,
     state: &mut ShardState,
@@ -233,14 +314,17 @@ fn run_shard(
     shard: usize,
     cfg: &ServeConfig,
     now: Tick,
+    dma: DmaModel,
 ) -> Result<ShardDelta> {
     let t0 = Instant::now();
     let mut delta = ShardDelta::default();
+    let mut xfer = XferClock::new(dma, cfg.overlap);
     if cfg.lockstep {
-        run_lockstep(engine, state, work, shard, cfg, now, &mut delta)?;
+        run_lockstep(engine, state, work, shard, cfg, now, &mut delta, &mut xfer)?;
     } else {
-        run_serial(engine, state, work, shard, cfg, now, &mut delta)?;
+        run_serial(engine, state, work, shard, cfg, now, &mut delta, &mut xfer)?;
     }
+    xfer.flush_into(&mut delta.stats);
     delta.stats.wall_secs = t0.elapsed().as_secs_f64();
     Ok(delta)
 }
@@ -282,17 +366,37 @@ fn steal_prospect(work: &Mutex<WorkPool<WorkUnit>>, shard: usize, cfg: &ServeCon
             .stealable_prospect(shard, cfg.steal_threshold)
 }
 
+/// Per-round step priority of one resident program: earliest inherited
+/// deadline first; among equal deadlines (and the deadline-free),
+/// highest observed prune rate first — a high-pruning K-means step is
+/// cheap and tightens its bounds further, so running it early retires
+/// it (and frees its slab residency) soonest; admission order breaks
+/// the remaining ties.  Pure function of scheduler-visible metadata:
+/// it reorders steps of independent programs only, so it can never
+/// perturb a result.
+fn step_priority(
+    deadline: Option<Tick>,
+    prune_permille: u64,
+    admitted: usize,
+) -> (Tick, u64, usize) {
+    (
+        deadline.unwrap_or(Tick::MAX),
+        1000u64.saturating_sub(prune_permille.min(1000)),
+        admitted,
+    )
+}
+
 /// The lockstep step scheduler: one round = claim at most one new own
 /// unit (most urgent deadline first; plan it against the shard
 /// caches), then advance every resident program by one step in
-/// deadline-slack order — earliest inherited deadline first,
-/// admission order among equals and for deadline-free programs — so
-/// the program whose deadline is tightest is also the first to make
-/// progress (and to retire) each round.  Claiming one unit per round
-/// keeps the tail of the queue stealable while co-residency (and the
-/// persistent caches) still shares packed tiles across same-dataset
-/// programs.  The step order cannot perturb results (programs own
-/// their state); it only decides which response exists earliest.
+/// [`step_priority`] order — earliest inherited deadline first, then
+/// observed prune rate, then admission order — so the program whose
+/// deadline is tightest is also the first to make progress (and to
+/// retire) each round.  Claiming one unit per round keeps the tail of
+/// the queue stealable while co-residency (and the persistent caches)
+/// still shares packed tiles across same-dataset programs.  The step
+/// order cannot perturb results (programs own their state); it only
+/// decides which response exists earliest.
 #[allow(clippy::too_many_arguments)]
 fn run_lockstep(
     engine: &mut Engine,
@@ -302,9 +406,11 @@ fn run_lockstep(
     cfg: &ServeConfig,
     now: Tick,
     delta: &mut ShardDelta,
+    xfer: &mut XferClock,
 ) -> Result<()> {
     // (inherited deadline, admission sequence, program): the first two
-    // are the per-round step priority.
+    // plus the program's own prune rate are the per-round step
+    // priority.
     let mut resident: Vec<Option<(Option<Tick>, usize, Resident)>> = Vec::new();
     let mut admitted = 0usize;
     loop {
@@ -312,7 +418,16 @@ fn run_lockstep(
         if let Some(unit) = claim(work, shard, cfg, idle, now, delta) {
             let deadline = unit.deadline();
             let hits0 = state.slab_cache.hits;
+            let miss_bytes0 = state.slab_cache.miss_bytes;
+            let secs0 = engine.device.stats().modeled_secs;
             let planned = plan_unit(engine, state, unit, cfg)?;
+            // Plan-time slab builds are this unit's cold DMA traffic;
+            // plan-time device work (e.g. K-means iteration 0) is its
+            // first compute burst.
+            xfer.record(
+                state.slab_cache.miss_bytes.saturating_sub(miss_bytes0),
+                modeled_ns_since(engine, secs0),
+            );
             // Slab-cache hits while planning ALONGSIDE resident
             // programs are the lockstep scheduler's own cross-program
             // sharing; hits on an idle shard are the persistent
@@ -339,19 +454,24 @@ fn run_lockstep(
         let mut order: Vec<usize> = (0..resident.len()).collect();
         order.sort_by_key(|&i| {
             let entry = resident[i].as_ref().expect("resident before stepping");
-            (entry.0.unwrap_or(Tick::MAX), entry.1)
+            step_priority(entry.0, entry.2.prune_permille(), entry.1)
         });
         for i in order {
             let slot = &mut resident[i];
             let converged = match slot.as_mut() {
                 Some((_, _, prog)) => {
-                    matches!(step_resident(engine, prog)?, StepOutcome::Converged)
+                    let secs0 = engine.device.stats().modeled_secs;
+                    let outcome = step_resident(engine, prog)?;
+                    xfer.record(0, modeled_ns_since(engine, secs0));
+                    matches!(outcome, StepOutcome::Converged)
                 }
                 None => false,
             };
             if converged {
                 let (_, _, prog) = slot.take().expect("stepped program present");
+                let secs0 = engine.device.stats().modeled_secs;
                 finish_resident(engine, prog, delta)?;
+                xfer.record(0, modeled_ns_since(engine, secs0));
             }
         }
         resident.retain(|slot| slot.is_some());
@@ -371,6 +491,7 @@ fn run_serial(
     cfg: &ServeConfig,
     now: Tick,
     delta: &mut ShardDelta,
+    xfer: &mut XferClock,
 ) -> Result<()> {
     loop {
         let Some(unit) = claim(work, shard, cfg, true, now, delta) else {
@@ -380,13 +501,24 @@ fn run_serial(
             }
             return Ok(());
         };
+        let miss_bytes0 = state.slab_cache.miss_bytes;
+        let secs0 = engine.device.stats().modeled_secs;
         let mut prog = plan_unit(engine, state, unit, cfg)?;
+        xfer.record(
+            state.slab_cache.miss_bytes.saturating_sub(miss_bytes0),
+            modeled_ns_since(engine, secs0),
+        );
         loop {
-            if let StepOutcome::Converged = step_resident(engine, &mut prog)? {
+            let secs0 = engine.device.stats().modeled_secs;
+            let outcome = step_resident(engine, &mut prog)?;
+            xfer.record(0, modeled_ns_since(engine, secs0));
+            if let StepOutcome::Converged = outcome {
                 break;
             }
         }
+        let secs0 = engine.device.stats().modeled_secs;
         finish_resident(engine, prog, delta)?;
+        xfer.record(0, modeled_ns_since(engine, secs0));
     }
 }
 
@@ -400,6 +532,19 @@ enum Resident {
     Knn(Box<KnnCohortProgram>),
     Kmeans { prog: Box<kmeans::KmeansProgram>, pos: usize, dups: Vec<usize> },
     Nbody { prog: Box<nbody::NbodyProgram>, pos: usize, dups: Vec<usize> },
+}
+
+impl Resident {
+    /// Observed prune rate of the program, permille of
+    /// point-iterations — the [`step_priority`] tiebreaker.  Only
+    /// K-means carries a cross-iteration prune signal today; one-shot
+    /// KNN cohorts and N-body (dense per step) report 0.
+    fn prune_permille(&self) -> u64 {
+        match self {
+            Resident::Kmeans { prog, .. } => prog.observed_prune_permille(),
+            Resident::Knn(_) | Resident::Nbody { .. } => 0,
+        }
+    }
 }
 
 /// Plan one work unit into a resident program against this shard's
@@ -834,5 +979,61 @@ impl KnnCohortProgram {
             delta.responses.push((u.q.pos, ServeResponse::Knn(result)));
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_priority_orders_deadline_then_prune_then_admission() {
+        // Deadline dominates: an urgent low-pruner beats a lazy
+        // high-pruner.
+        assert!(step_priority(Some(10), 0, 5) < step_priority(Some(20), 999, 0));
+        // Equal deadlines: higher prune rate steps first.
+        assert!(step_priority(Some(10), 800, 5) < step_priority(Some(10), 100, 0));
+        // Deadline-free programs rank behind any deadline and among
+        // themselves by prune rate, then admission order.
+        assert!(step_priority(Some(u64::MAX - 1), 0, 9) < step_priority(None, 1000, 0));
+        assert!(step_priority(None, 500, 3) < step_priority(None, 500, 4));
+        // Out-of-range prune rates clamp instead of underflowing.
+        assert_eq!(step_priority(None, 5000, 0).1, 0);
+    }
+
+    #[test]
+    fn xfer_clock_overlap_hides_transfers_and_off_serializes() {
+        let dma = DmaModel::new(16.0); // 16 bytes/ns
+        // Two units: unit A uploads then computes long; unit B's
+        // upload fits entirely under A's compute.
+        let mut on = XferClock::new(dma, true);
+        on.record(16 * 1024, 500_000); // t = 2000 + 1024 = 3024 ns
+        on.record(16 * 1024, 500_000);
+        let mut stats_on = ServeStats::default();
+        on.flush_into(&mut stats_on);
+        assert_eq!(stats_on.transfer_ns, 2 * 3024);
+        assert_eq!(stats_on.compute_ns, 1_000_000);
+        // B's whole upload hides under A's compute.
+        assert_eq!(stats_on.overlap_ns, 3024);
+
+        let mut off = XferClock::new(dma, false);
+        off.record(16 * 1024, 500_000);
+        off.record(16 * 1024, 500_000);
+        let mut stats_off = ServeStats::default();
+        off.flush_into(&mut stats_off);
+        assert_eq!(stats_off.transfer_ns, stats_on.transfer_ns);
+        assert_eq!(stats_off.compute_ns, stats_on.compute_ns);
+        assert_eq!(stats_off.overlap_ns, 0, "serialized timeline saves nothing");
+    }
+
+    #[test]
+    fn xfer_clock_warm_units_transfer_nothing() {
+        let mut clk = XferClock::new(DmaModel::new(16.0), true);
+        clk.record(0, 250_000); // warm slab: no transfer issued at all
+        let mut stats = ServeStats::default();
+        clk.flush_into(&mut stats);
+        assert_eq!(stats.transfer_ns, 0);
+        assert_eq!(stats.compute_ns, 250_000);
+        assert_eq!(stats.overlap_ns, 0);
     }
 }

@@ -118,9 +118,12 @@ use std::time::{Duration, Instant};
 use admission::{AdmissionQueue, FingerprintMemo};
 use exec::ShardState;
 
+use admission::WorkUnit;
+
 use crate::config::{PlacementMode, ServeConfig};
 use crate::coordinator::Engine;
 use crate::metrics::ServeStats;
+use crate::runtime::DeviceTopology;
 use crate::Result;
 
 /// The batched query-serving front end: submit many, flush what's due.
@@ -188,8 +191,18 @@ impl QueryBatcher {
     ) -> Result<Self> {
         cfg.validate()?;
         let placement = cfg.placement_mode().expect("validated above");
-        let pool = EnginePool::new(engine, cfg.shards)?;
-        let shards = (0..pool.shard_count()).map(|_| ShardState::new(&cfg)).collect();
+        let topology = DeviceTopology::from_serve(&cfg);
+        let pool = EnginePool::with_topology(engine, cfg.shards, topology)?;
+        // Each shard's slab budget is clamped to its share of its
+        // device's memory — residency is bounded by modeled capacity,
+        // not just the per-shard knob.
+        let shards = (0..pool.shard_count())
+            .map(|s| {
+                let budget =
+                    pool.topology().shard_slab_budget(s, cfg.shards, cfg.slab_cache_bytes);
+                ShardState::with_budget(&cfg, budget)
+            })
+            .collect();
         let policy = FlushPolicy::from_config(&cfg);
         Ok(Self {
             pool,
@@ -305,6 +318,18 @@ impl QueryBatcher {
         self.pool.shard_count()
     }
 
+    /// Number of emulated devices the shards are pinned onto
+    /// (`serve.devices`).
+    pub fn device_count(&self) -> usize {
+        self.pool.topology().device_count()
+    }
+
+    /// The emulated device shard `shard` is pinned to (round-robin,
+    /// deterministic — see [`crate::runtime::DeviceTopology`]).
+    pub fn device_of(&self, shard: usize) -> usize {
+        self.pool.device_of(shard)
+    }
+
     /// Borrow the primary shard's engine (e.g. for config inspection).
     pub fn engine(&self) -> &Engine {
         self.pool.primary()
@@ -339,6 +364,38 @@ impl QueryBatcher {
         self.run_selected(sel, deadline_driven, now)
     }
 
+    /// The per-unit x per-shard movement table: what placing each unit
+    /// on each shard would cost in *data movement*, in the same cost
+    /// units as [`WorkUnit::cost_estimate`].  A shard whose slab cache
+    /// already holds the unit's packed slabs (matched by content
+    /// fingerprint) is cheap; a cold shard pays the modeled DMA upload
+    /// of the unit's footprint, converted to equivalent compute via
+    /// the device cost model.  Empty when movement-awareness is off or
+    /// trivially irrelevant (one shard) — the planner and the stealer
+    /// then behave exactly as before.
+    fn movement_table(&self, units: &[WorkUnit]) -> Vec<Vec<u64>> {
+        if !self.cfg.movement_aware || self.pool.shard_count() <= 1 {
+            return Vec::new();
+        }
+        let topo = self.pool.topology();
+        let cost = self.pool.primary().device.cost_model();
+        units
+            .iter()
+            .map(|u| {
+                let (fp, bytes) = u.movement_footprint();
+                let d = u.dim();
+                self.shards
+                    .iter()
+                    .enumerate()
+                    .map(|(s, state)| {
+                        let warm = state.slab_cache.warm_bytes_for(fp).min(bytes);
+                        cost.move_penalty_units(topo.dma_for_shard(s), bytes - warm, d)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
     /// Shared flush core: validate, drain, partition, place (deadline
     /// aware under `edf-lpt`), execute, commit stats + latency / miss
     /// accounting (only on full success), prune the memo.
@@ -367,14 +424,21 @@ impl QueryBatcher {
         let units = admission::partition(&batch, self.cfg.dedup, &mut self.memo);
         let costs: Vec<u64> = units.iter().map(|u| u.cost_estimate(self.cfg.dedup)).collect();
         let deadlines: Vec<Option<Tick>> = units.iter().map(|u| u.deadline()).collect();
-        let assignments =
-            ShardPlanner::plan(&costs, &deadlines, self.pool.shard_count(), self.placement);
+        let move_units = self.movement_table(&units);
+        let assignments = ShardPlanner::plan_with_movement(
+            &costs,
+            &deadlines,
+            &move_units,
+            self.pool.shard_count(),
+            self.placement,
+        );
         let executed = exec::execute_plan(
             &mut self.pool,
             &mut self.shards,
             units,
             costs,
             deadlines,
+            move_units,
             &assignments,
             batch.len(),
             &self.cfg,

@@ -41,20 +41,37 @@ use std::collections::VecDeque;
 
 use crate::config::PlacementMode;
 use crate::coordinator::Engine;
+use crate::runtime::DeviceTopology;
 use crate::Result;
 
 use super::clock::Tick;
 
-/// A pool of independent engine shards sharing one runtime.
+/// A pool of independent engine shards sharing one runtime, each
+/// pinned to one emulated device of a [`DeviceTopology`] (round-robin:
+/// `shard % devices`).  The pinning decides whose memory budget clamps
+/// the shard's slab cache and whose DMA link prices its data movement;
+/// compute still runs through the one shared runtime, so the device
+/// count cannot change results (serve parity contract).
 pub struct EnginePool {
     engines: Vec<Engine>,
+    topology: DeviceTopology,
 }
 
 impl EnginePool {
     /// Build a pool of `shards` engines (>= 1): the given engine plus
     /// `shards - 1` clones of its configuration over the same shared
-    /// runtime.
+    /// runtime, all pinned to a single-device topology.
     pub fn new(primary: Engine, shards: usize) -> Result<Self> {
+        Self::with_topology(primary, shards, DeviceTopology::new(1, 0, 16.0))
+    }
+
+    /// Build a pool of `shards` engines pinned round-robin onto
+    /// `topology`'s devices.
+    pub fn with_topology(
+        primary: Engine,
+        shards: usize,
+        topology: DeviceTopology,
+    ) -> Result<Self> {
         let shards = shards.max(1);
         let mut engines = Vec::with_capacity(shards);
         let cfg = primary.config.clone();
@@ -63,7 +80,7 @@ impl EnginePool {
         for _ in 1..shards {
             engines.push(Engine::with_runtime(cfg.clone(), runtime.clone())?);
         }
-        Ok(Self { engines })
+        Ok(Self { engines, topology })
     }
 
     pub fn shard_count(&self) -> usize {
@@ -78,6 +95,16 @@ impl EnginePool {
 
     pub(crate) fn engines_mut(&mut self) -> &mut [Engine] {
         &mut self.engines
+    }
+
+    /// The emulated device topology the shards are pinned onto.
+    pub fn topology(&self) -> &DeviceTopology {
+        &self.topology
+    }
+
+    /// The emulated device shard `shard` is pinned to.
+    pub fn device_of(&self, shard: usize) -> usize {
+        self.topology.device_for_shard(shard)
     }
 }
 
@@ -111,7 +138,35 @@ impl ShardPlanner {
         shards: usize,
         mode: PlacementMode,
     ) -> Vec<Vec<usize>> {
+        Self::plan_with_movement(costs, deadlines, &[], shards, mode)
+    }
+
+    /// [`ShardPlanner::plan`] with a data-movement term: `move_units[i][s]`
+    /// is the modeled cost (in the same units as `costs`) of the cold
+    /// slab bytes unit `i` would have to upload to run on shard `s` —
+    /// zero where the unit's slabs are already warm (see
+    /// `CostModel::move_penalty_units`).  Each ordered unit goes to the
+    /// shard minimizing `load + movement`, so a unit warm on shard A is
+    /// cheaper there exactly by what the re-transfer would have cost.
+    ///
+    /// Movement rows are normalized by their row minimum before use:
+    /// only *differences* between shards can steer placement, so a
+    /// uniformly cold (or uniformly warm) unit places identically to
+    /// the movement-blind planner — which also makes an empty
+    /// `move_units` (or an all-equal table) behave exactly like
+    /// [`ShardPlanner::plan`], preserving every existing balance and
+    /// determinism property.  The accepted movement is charged to the
+    /// shard's load (data transfer occupies the shard), keeping the
+    /// greedy consistent with what it just decided.
+    pub fn plan_with_movement(
+        costs: &[u64],
+        deadlines: &[Option<Tick>],
+        move_units: &[Vec<u64>],
+        shards: usize,
+        mode: PlacementMode,
+    ) -> Vec<Vec<usize>> {
         debug_assert_eq!(costs.len(), deadlines.len());
+        debug_assert!(move_units.is_empty() || move_units.len() == costs.len());
         let shards = shards.max(1);
         let mut order: Vec<usize> = (0..costs.len()).collect();
         let tier = |i: usize| match mode {
@@ -122,15 +177,20 @@ impl ShardPlanner {
         order.sort_by(|&a, &b| {
             tier(a).cmp(&tier(b)).then(costs[b].cmp(&costs[a])).then(a.cmp(&b))
         });
+        let movement = |i: usize, s: usize| -> u64 {
+            let Some(row) = move_units.get(i) else { return 0 };
+            let min = row.iter().copied().min().unwrap_or(0);
+            row.get(s).map_or(0, |&m| m - min)
+        };
         let mut load = vec![0u64; shards];
         let mut out = vec![Vec::new(); shards];
         for i in order {
             let s = (0..shards)
-                .min_by_key(|&s| (load[s], s))
+                .min_by_key(|&s| (load[s].saturating_add(movement(i, s)), s))
                 .expect("at least one shard");
             // Even zero-cost units occupy a slot, so they still
             // spread instead of all landing on shard 0.
-            load[s] += costs[i].max(1);
+            load[s] += costs[i].max(1) + movement(i, s);
             out[s].push(i);
         }
         for units in &mut out {
@@ -168,6 +228,12 @@ pub(crate) struct WorkPool<T> {
     slots: Vec<Option<T>>,
     costs: Vec<u64>,
     deadlines: Vec<Option<Tick>>,
+    /// `move_units[i][s]`: modeled cost of the cold bytes unit `i`
+    /// would re-transfer to run on shard `s` (empty = movement-blind).
+    /// Stealing discounts a candidate's value by the *thief's* entry —
+    /// absolute, not row-normalized: the thief pays exactly its own
+    /// cold bytes, wherever the unit was planned.
+    move_units: Vec<Vec<u64>>,
     pending: Vec<VecDeque<usize>>,
     claimed: Vec<usize>,
 }
@@ -175,21 +241,50 @@ pub(crate) struct WorkPool<T> {
 impl<T> WorkPool<T> {
     /// `assignments[s]` lists the unit indices the planner gave shard
     /// `s` (each index in `0..units.len()` at most once).
+    /// Movement-blind: every steal values candidates at raw cost.
     pub fn new(
         units: Vec<T>,
         costs: Vec<u64>,
         deadlines: Vec<Option<Tick>>,
         assignments: &[Vec<usize>],
     ) -> Self {
+        Self::with_movement(units, costs, deadlines, Vec::new(), assignments)
+    }
+
+    /// [`WorkPool::new`] plus the movement table the planner used (see
+    /// [`ShardPlanner::plan_with_movement`]), enabling warmth-aware
+    /// stealing.
+    pub fn with_movement(
+        units: Vec<T>,
+        costs: Vec<u64>,
+        deadlines: Vec<Option<Tick>>,
+        move_units: Vec<Vec<u64>>,
+        assignments: &[Vec<usize>],
+    ) -> Self {
         debug_assert_eq!(units.len(), costs.len());
         debug_assert_eq!(units.len(), deadlines.len());
+        debug_assert!(move_units.is_empty() || move_units.len() == units.len());
         Self {
             slots: units.into_iter().map(Some).collect(),
             costs,
             deadlines,
+            move_units,
             pending: assignments.iter().map(|idxs| idxs.iter().copied().collect()).collect(),
             claimed: vec![0; assignments.len()],
         }
+    }
+
+    /// What stealing unit `i` is worth to `thief`: the unit's cost
+    /// (the compute the steal offloads) minus the modeled cost of the
+    /// cold bytes the thief's device would have to upload first.  A
+    /// warm unit keeps its full value; a unit whose re-transfer
+    /// outweighs its compute discounts to zero — below any positive
+    /// `steal_threshold`, so it is never worth migrating.  With no
+    /// movement table this IS the raw cost.
+    fn steal_value(&self, i: usize, thief: usize) -> u64 {
+        let penalty =
+            self.move_units.get(i).and_then(|row| row.get(thief)).copied().unwrap_or(0);
+        self.costs[i].max(1).saturating_sub(penalty)
     }
 
     /// Queue position `claim_own` would take next for `shard`: the
@@ -217,10 +312,15 @@ impl<T> WorkPool<T> {
     /// whose `steal` came up empty uses this to decide between
     /// retrying (the victim merely has not started yet) and exiting
     /// (nothing will ever qualify).
+    ///
+    /// Judged on the SAME movement-discounted value as [`WorkPool::steal`]:
+    /// a unit whose re-transfer cost eats its compute value is no
+    /// prospect for this thief — otherwise the thief would spin
+    /// forever waiting for a steal that can never fire.
     pub fn stealable_prospect(&self, thief: usize, min_cost: u64) -> bool {
         (0..self.pending.len()).any(|victim| {
             victim != thief
-                && self.pending[victim].iter().any(|&i| self.costs[i].max(1) >= min_cost)
+                && self.pending[victim].iter().any(|&i| self.steal_value(i, thief) >= min_cost)
         })
     }
 
@@ -242,9 +342,13 @@ impl<T> WorkPool<T> {
 
     /// Steal the best eligible unit for `thief` at time `now` (see
     /// type docs for the rules), or `None` when nothing qualifies.
+    /// Candidates are valued (and the `min_cost` bar applied) through
+    /// the movement discount of [`WorkPool::steal_value`]: a slightly
+    /// smaller unit whose slabs are warm on the thief beats a bigger
+    /// one that would force a full slab re-transfer.
     pub fn steal(&mut self, thief: usize, min_cost: u64, now: Tick) -> Option<T> {
-        // (at-risk deadline or MAX, cost, unit, victim); at-risk units
-        // dominate, then urgency, then the plain max-cost rule.
+        // (at-risk deadline or MAX, value, unit, victim); at-risk
+        // units dominate, then urgency, then the max-value rule.
         let mut best: Option<(Tick, u64, usize, usize)> = None;
         for victim in 0..self.pending.len() {
             if victim == thief || self.claimed[victim] == 0 {
@@ -253,8 +357,10 @@ impl<T> WorkPool<T> {
             for &i in &self.pending[victim] {
                 // Zero-cost units still occupy a slot (mirrors the
                 // planner's load accounting), so they stay stealable
-                // at the default threshold of 1.
-                let cost = self.costs[i].max(1);
+                // at the default threshold of 1 — unless the movement
+                // discount says the migration costs more than it
+                // saves.
+                let cost = self.steal_value(i, thief);
                 if cost < min_cost {
                     continue;
                 }
@@ -531,5 +637,136 @@ mod tests {
         );
         assert_eq!(p.claim_own(0), Some("urgent-later"));
         assert_eq!(p.steal(1, 1, 0), Some("heavy"), "nothing at risk at tick 0");
+    }
+
+    // --- movement-aware placement & stealing ---------------------------
+
+    #[test]
+    fn movement_term_steers_equal_costs_to_the_warm_shard() {
+        // Two equal-cost units; unit 0 is warm on shard 1, unit 1 on
+        // shard 0.  Movement-blind LPT places by index (0 -> s0,
+        // 1 -> s1); the movement term flips both to their warm shard.
+        let costs = [100u64, 100];
+        let none = [None, None];
+        let moves = vec![vec![40u64, 0], vec![0, 40]];
+        let parts = ShardPlanner::plan_with_movement(
+            &costs,
+            &none,
+            &moves,
+            2,
+            PlacementMode::Lpt,
+        );
+        assert_eq!(parts, vec![vec![1], vec![0]], "each unit lands where it is warm");
+        // Blind placement differs — the term did the steering.
+        let blind = ShardPlanner::plan(&costs, &none, 2, PlacementMode::Lpt);
+        assert_eq!(blind, vec![vec![0], vec![1]]);
+    }
+
+    #[test]
+    fn uniform_or_empty_movement_is_exactly_the_blind_plan() {
+        let costs = [5u64, 1, 9, 3, 3, 7];
+        let deadlines = [Some(9u64), None, Some(3), Some(9), None, Some(3)];
+        for mode in [PlacementMode::Lpt, PlacementMode::EdfLpt] {
+            let blind = ShardPlanner::plan(&costs, &deadlines, 3, mode);
+            // All-cold: every shard costs the same re-transfer.
+            let cold = vec![vec![77u64; 3]; costs.len()];
+            assert_eq!(
+                ShardPlanner::plan_with_movement(&costs, &deadlines, &cold, 3, mode),
+                blind,
+                "uniform movement rows must not steer anything"
+            );
+            // Rows of different uniform heights: still no steering.
+            let mixed: Vec<Vec<u64>> =
+                (0..costs.len()).map(|i| vec![i as u64 * 13; 3]).collect();
+            assert_eq!(
+                ShardPlanner::plan_with_movement(&costs, &deadlines, &mixed, 3, mode),
+                blind
+            );
+        }
+    }
+
+    #[test]
+    fn movement_beats_load_only_when_it_outweighs_the_imbalance() {
+        // Unit 1 is warm on shard 0, but shard 0 already carries unit
+        // 0's 100-cost load.  A small warmth edge (10) loses to the
+        // imbalance; a big one (200) wins.
+        let costs = [100u64, 50];
+        let none = [None, None];
+        let small = vec![vec![0u64, 0], vec![0, 10]];
+        let parts =
+            ShardPlanner::plan_with_movement(&costs, &none, &small, 2, PlacementMode::Lpt);
+        assert_eq!(parts, vec![vec![0], vec![1]], "10 cold units < 100 load imbalance");
+        let big = vec![vec![0u64, 0], vec![0, 200]];
+        let parts =
+            ShardPlanner::plan_with_movement(&costs, &none, &big, 2, PlacementMode::Lpt);
+        assert_eq!(parts, vec![vec![0, 1], vec![]], "200 cold units > 100 load imbalance");
+    }
+
+    #[test]
+    fn steal_discounts_candidates_by_the_thiefs_cold_bytes() {
+        // Victim backlog after its first claim: "cold-big" (cost 50,
+        // 45 cold units for thief 1) vs "warm-small" (cost 40, warm).
+        // Raw max-cost would take cold-big; the discount (50-45=5 vs
+        // 40) takes the warm unit — the ISSUE's acceptance example.
+        let mut p: WorkPool<&'static str> = WorkPool::with_movement(
+            vec!["first", "cold-big", "warm-small"],
+            vec![60, 50, 40],
+            vec![None; 3],
+            vec![vec![0, 0], vec![0, 45], vec![0, 0]],
+            &[vec![0, 1, 2], vec![]],
+        );
+        assert_eq!(p.claim_own(0), Some("first"));
+        assert_eq!(p.steal(1, 1, 0), Some("warm-small"), "warmth beats raw size");
+        // The cold unit is still worth 5 > threshold 1: stolen next.
+        assert_eq!(p.steal(1, 1, 0), Some("cold-big"));
+    }
+
+    #[test]
+    fn prospect_uses_the_same_discounted_bar_as_steal() {
+        // Regression: one pending unit, raw cost 50 but fully cold for
+        // thief 1 (penalty 49 -> value 1 < threshold 5).  The old
+        // raw-cost prospect said "wait for it" while steal() rejected
+        // it forever — an idle thief spun.  Both must now agree.
+        let mut p: WorkPool<&'static str> = WorkPool::with_movement(
+            vec!["own", "cold"],
+            vec![10, 50],
+            vec![None; 2],
+            vec![vec![0, 0], vec![0, 49]],
+            &[vec![0, 1], vec![]],
+        );
+        assert_eq!(p.claim_own(0), Some("own"));
+        assert!(p.steal(1, 5, 0).is_none(), "discounted value 1 misses the bar of 5");
+        assert!(
+            !p.stealable_prospect(1, 5),
+            "prospect must agree with steal, or the thief spins"
+        );
+        // At a bar the discounted value does meet, both agree again.
+        assert!(p.stealable_prospect(1, 1));
+        assert_eq!(p.steal(1, 1, 0), Some("cold"));
+        // And the discount is per-thief: the same unit would have been
+        // a full-value prospect for a warm shard 2 (if one existed).
+        let p2: WorkPool<&'static str> = WorkPool::with_movement(
+            vec!["cold"],
+            vec![50],
+            vec![None],
+            vec![vec![0, 49, 0]],
+            &[vec![0], vec![], vec![]],
+        );
+        assert!(!p2.stealable_prospect(1, 5));
+        assert!(p2.stealable_prospect(2, 5), "shard 2 is warm: full value 50");
+    }
+
+    #[test]
+    fn engine_pool_pins_shards_round_robin() {
+        use crate::config::AccdConfig;
+        let engine = Engine::new(AccdConfig::new()).expect("engine");
+        let pool =
+            EnginePool::with_topology(engine, 4, DeviceTopology::new(2, 0, 16.0)).unwrap();
+        assert_eq!(pool.shard_count(), 4);
+        assert_eq!(pool.topology().device_count(), 2);
+        assert_eq!(
+            (0..4).map(|s| pool.device_of(s)).collect::<Vec<_>>(),
+            vec![0, 1, 0, 1]
+        );
     }
 }

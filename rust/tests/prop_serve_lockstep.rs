@@ -3,7 +3,12 @@
 //! solo runs **bit-for-bit** across random iteration caps, random
 //! cohort mixes, random *deadline permutations*, both placement modes
 //! (`lpt` / `edf-lpt`) and shard counts 1 / 2 / 4 — with lockstep
-//! stepping and work stealing at their defaults (on).  Deadlines run
+//! stepping and work stealing at their defaults (on).  Each shard
+//! count is paired with a different emulated-device count (with a
+//! tiny per-device memory budget and the transfer/compute overlap
+//! knob alternating), so device pinning, per-device slab budgets,
+//! movement-aware placement and the overlap accounting all run under
+//! the property without growing the sweep.  Deadlines run
 //! on a `VirtualClock` the property advances in waves, so the
 //! deadline-driven flush order, EDF placement tiers, urgent-first
 //! claims and step priority are all exercised without a single sleep
@@ -114,10 +119,15 @@ fn prop_lockstep_batched_iterative_cohorts_equal_sequential() {
         |cases| {
             let mut solo = Engine::new(AccdConfig::new()).map_err(|e| e.to_string())?;
             for placement in ["lpt", "edf-lpt"] {
-                for shards in [1usize, 2, 4] {
+                for (shards, devices) in [(1usize, 1usize), (2, 2), (4, 3)] {
                     let mut cfg = AccdConfig::new();
                     cfg.serve.shards = shards;
                     cfg.serve.placement = placement.to_string();
+                    cfg.serve.devices = devices;
+                    cfg.serve.overlap = shards % 2 == 0;
+                    if devices > 1 {
+                        cfg.serve.device_mem_bytes = 1 << 16;
+                    }
                     if !cfg.serve.lockstep || cfg.serve.steal_threshold == 0 {
                         return Err("lockstep + stealing must default on".into());
                     }
@@ -159,7 +169,9 @@ fn prop_lockstep_batched_iterative_cohorts_equal_sequential() {
                     }
                     for (id, resp) in &out {
                         let qi = *id as usize;
-                        let what = format!("{placement}, {shards} shards, query {qi}");
+                        let what = format!(
+                            "{placement}, {shards} shards, {devices} devices, query {qi}"
+                        );
                         check_against_solo(resp, &cases[qi].0, &mut solo, &what)?;
                     }
                 }

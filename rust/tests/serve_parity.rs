@@ -506,6 +506,116 @@ fn placement_modes_and_stealing_are_bit_transparent() {
     }
 }
 
+/// The emulated multi-device contract: device pinning, per-device slab
+/// budgets, movement-aware placement, warmth-discounted stealing and
+/// double-buffered transfer/compute overlap are modeled ACCOUNTING
+/// layered over the same shared CPU runtime — results must stay
+/// bit-identical to solo runs across device counts 1 / 2 / 4, shard
+/// counts 1 / 2 / 4, stealing off/on and overlap off/on.  Multi-device
+/// configs get a deliberately tiny per-device memory budget so the
+/// slab-budget clamp and LRU evictions are exercised under the sweep.
+#[test]
+fn multi_device_sweep_is_bit_transparent() {
+    let queries = mixed_workload();
+    let mut solo = fresh_engine();
+    let want: Vec<ServeResponse> =
+        queries.iter().map(|q| solo_response(&mut solo, q)).collect();
+    for devices in [1usize, 2, 4] {
+        for shards in [1usize, 2, 4] {
+            for steal in [0u64, 1] {
+                let overlap = (devices + shards + steal as usize) % 2 == 0;
+                let mut cfg = AccdConfig::new();
+                cfg.serve.shards = shards;
+                cfg.serve.devices = devices;
+                cfg.serve.steal_threshold = steal;
+                cfg.serve.overlap = overlap;
+                cfg.serve.device_mem_bytes = if devices > 1 { 1 << 16 } else { 0 };
+                let mut batcher =
+                    QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), cfg.serve);
+                assert_eq!(batcher.device_count(), devices);
+                for s in 0..batcher.shard_count() {
+                    assert_eq!(batcher.device_of(s), s % devices, "round-robin pinning");
+                }
+                for q in &queries {
+                    batcher.submit(q.clone());
+                }
+                let out = batcher.flush().expect("flush");
+                assert_eq!(out.len(), queries.len());
+                for (i, (_, resp)) in out.iter().enumerate() {
+                    let what = format!(
+                        "{devices} devices, {shards} shards, steal={steal}, \
+                         overlap={overlap}, query {i}"
+                    );
+                    assert_same_response(resp, &want[i], &what);
+                }
+                let stats = batcher.stats();
+                assert_eq!(stats.queries, queries.len() as u64);
+                if !overlap {
+                    assert_eq!(
+                        stats.overlap_ns, 0,
+                        "overlap accounting must be zero when the knob is off: {stats:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `serve.overlap` and `serve.movement_aware` are modeling knobs: they
+/// may change the modeled device-timeline counters, never a result
+/// bit.  All four toggle combinations answer identically, the overlap
+/// accounting is zero exactly when the knob is off and never claims to
+/// hide more than the total modeled transfer time, and flipping the
+/// overlap knob alone must not change placement (the modeled upload
+/// bytes, hence `transfer_ns`, stay the same).
+#[test]
+fn overlap_and_movement_knobs_change_only_counters() {
+    let queries = mixed_workload();
+    let mut solo = fresh_engine();
+    let want: Vec<ServeResponse> =
+        queries.iter().map(|q| solo_response(&mut solo, q)).collect();
+    let mut transfer_by_movement: [Vec<u64>; 2] = [Vec::new(), Vec::new()];
+    for movement_aware in [false, true] {
+        for overlap in [false, true] {
+            let mut cfg = AccdConfig::new();
+            cfg.serve.shards = 2;
+            cfg.serve.devices = 2;
+            cfg.serve.steal_threshold = 0; // deterministic placement
+            cfg.serve.movement_aware = movement_aware;
+            cfg.serve.overlap = overlap;
+            let mut batcher =
+                QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), cfg.serve);
+            for q in &queries {
+                batcher.submit(q.clone());
+            }
+            let out = batcher.flush().expect("flush");
+            for (i, (_, resp)) in out.iter().enumerate() {
+                let what = format!(
+                    "movement_aware={movement_aware}, overlap={overlap}, query {i}"
+                );
+                assert_same_response(resp, &want[i], &what);
+            }
+            let stats = batcher.stats();
+            assert!(stats.transfer_ns > 0, "cold slabs must model uploads: {stats:?}");
+            if overlap {
+                assert!(
+                    stats.overlap_ns <= stats.transfer_ns,
+                    "cannot hide more than the total transfer: {stats:?}"
+                );
+            } else {
+                assert_eq!(stats.overlap_ns, 0, "overlap off must record zero: {stats:?}");
+            }
+            transfer_by_movement[movement_aware as usize].push(stats.transfer_ns);
+        }
+    }
+    for pair in &transfer_by_movement {
+        assert_eq!(
+            pair[0], pair[1],
+            "the overlap knob must not change placement or upload bytes"
+        );
+    }
+}
+
 #[test]
 fn deadline_driven_flush_order_preserves_parity() {
     let queries = mixed_workload();

@@ -26,8 +26,12 @@ Guarded per scenario (tolerance: >20% worse than baseline fails):
 
 Hard invariants (any run, no baseline needed):
 
-* ``shed`` and ``flush_failures`` must be 0 — the bench offers loads
-  the default intake bound absorbs, against a healthy engine.
+* ``flush_failures`` must be 0 everywhere — every scenario runs
+  against a healthy engine.
+* ``shed`` must be 0 everywhere EXCEPT scenarios with ``overload`` in
+  the name, which deliberately offer more than ``queue_cap`` under the
+  ``reject`` policy and must report ``shed`` > 0 — a zero there means
+  the backpressure path silently stopped rejecting.
 * every ``kmeans*`` scenario must report ``prune_rate`` > 0 — later
   iterations of a repeated cohort must prune SOMETHING, or the
   incremental TI path has silently died.
@@ -86,10 +90,17 @@ def main():
 
     # Hard invariants on the current run.
     for name, row in sorted(cur_rows.items()):
-        for counter in ("shed", "flush_failures"):
-            value = row.get(counter, 0)
-            if value:
-                failures.append(f"{name}: {counter} = {value:g} (must be 0)")
+        if row.get("flush_failures", 0):
+            failures.append(
+                f"{name}: flush_failures = {row['flush_failures']:g} (must be 0)")
+        shed = row.get("shed", 0)
+        if "overload" in name:
+            if not shed:
+                failures.append(
+                    f"{name}: shed = 0 (overload scenario must shed — the "
+                    "reject backpressure path produced nothing)")
+        elif shed:
+            failures.append(f"{name}: shed = {shed:g} (must be 0)")
         if "kmeans" in name:
             prune = metric(row, "prune_rate")
             if not prune or prune <= 0:
