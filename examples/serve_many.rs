@@ -163,6 +163,25 @@ fn main() -> anyhow::Result<()> {
         stats.deadline_met + stats.deadline_misses > 0,
         "deadline queries must be accounted met or missed"
     );
+    // Calibration telemetry: every retired unit compares the cost
+    // calibrator's predicted service time against the modeled actual,
+    // whether or not predictive scheduling is enabled.
+    println!(
+        "  calibration: predict error p50 {}\u{2030} / p95 {}\u{2030} over {} sample(s), \
+         {} predictive sheds",
+        stats.predict_err_p50_permille(),
+        stats.predict_err_p95_permille(),
+        stats.predict_err_permille.len(),
+        stats.predicted_sheds,
+    );
+    anyhow::ensure!(
+        !stats.predict_err_permille.is_empty(),
+        "every flush must record predicted-vs-actual error samples"
+    );
+    anyhow::ensure!(
+        stats.predicted_sheds == 0,
+        "predictive shedding is off by default; nothing may be shed"
+    );
 
     // --- The always-on Server: same runtime, no manual polling ------------
     // `serve::Server` owns the loop the code above drove by hand: a

@@ -26,7 +26,16 @@
 //! (FAILS if the movement-aware planner is slower), and a sustained
 //! overload burst against a tiny `queue_cap` under the `reject`
 //! policy (FAILS if nothing is shed — the backpressure path
-//! regressed).
+//! regressed), plus two calibration scenarios: the repeated-flush row
+//! gates the self-calibrating cost-to-time model (FAILS if the final
+//! warm flush's predicted-vs-actual error p95 exceeds 500‰), and a
+//! saturated diurnal arrival trace runs twice — reactive vs
+//! `predictive_shed` — and FAILS unless the predictive run sheds the
+//! already-doomed peak-tail queries and finishes with strictly fewer
+//! deadline misses than the reactive baseline, plus a purely modeled
+//! `serve.devices` × `serve.dma_gbps` frontier row ranking device
+//! counts and link speeds through the Eq. 5 multi-device latency
+//! model.
 //!
 //! The batched path amortizes exactly what a serving deployment
 //! amortizes: the target grouping is built once per cohort instead of
@@ -50,6 +59,7 @@ use std::time::{Duration, Instant};
 use accd::config::AccdConfig;
 use accd::coordinator::Engine;
 use accd::data::{synthetic, Dataset};
+use accd::dse::{DesignConfig, Explorer, Workload as DseWorkload};
 use accd::metrics::ServeStats;
 use accd::serve::{QueryBatcher, ServeRequest, Server, VirtualClock};
 use accd::util::bench::{fmt_x, Table};
@@ -97,12 +107,27 @@ fn scenario_row(
         ("deadline_met", json::num(stats.deadline_met as f64)),
         ("deadline_misses", json::num(stats.deadline_misses as f64)),
         ("shed", json::num(stats.shed as f64)),
+        ("predicted_sheds", json::num(stats.predicted_sheds as f64)),
+        ("predict_err_p50_permille", json::num(stats.predict_err_p50_permille() as f64)),
+        ("predict_err_p95_permille", json::num(stats.predict_err_p95_permille() as f64)),
         ("queue_depth_watermark", json::num(stats.queue_depth_watermark as f64)),
         ("flush_failures", json::num(stats.flush_failures as f64)),
         ("tiles_skipped", json::num(stats.tiles_skipped as f64)),
         ("points_pruned", json::num(stats.points_pruned as f64)),
         ("bound_recomputes", json::num(stats.bound_recomputes as f64)),
     ])
+}
+
+/// Nearest-rank p95 over one flush's raw permille error samples (the
+/// `ServeStats` accessors cover the whole run; the calibration gate
+/// judges only the final, warmed-up flush).
+fn p95_permille(samples: &[u64]) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    sorted[(sorted.len() * 95).div_ceil(100) - 1]
 }
 
 fn main() {
@@ -196,9 +221,13 @@ fn main() {
     let mut batcher = QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), serve_cfg);
     let mut round_rows = Table::new(&["flush", "wall (s)", "q/s", "slab hit rate"]);
     let mut warm_secs = 0.0f64;
+    let mut final_err0 = 0usize;
     for round in 0..rounds {
         for (src, trg) in &queries {
             batcher.submit(ServeRequest::knn(src.clone(), trg.clone(), k));
+        }
+        if round + 1 == rounds {
+            final_err0 = batcher.stats().predict_err_permille.len();
         }
         let hits0 = batcher.stats().slab_cache_hits;
         let misses0 = batcher.stats().slab_cache_misses;
@@ -236,6 +265,28 @@ fn main() {
     }
     if stats.slab_cache_hits == 0 {
         eprintln!("FAIL: repeated flushes hit no cached slabs — persistence regressed");
+        std::process::exit(1);
+    }
+    // Calibration gate: by the final flush the cost-to-time model has
+    // observed every cohort on its home shard at least twice, so its
+    // service-time predictions must land within 50% (500‰) of the
+    // observed modeled time at p95 — the self-calibrating model
+    // earning its keep on a steady workload.
+    let final_errs = &stats.predict_err_permille[final_err0..];
+    let final_p95 = p95_permille(final_errs);
+    println!(
+        "calibration: final-flush predict error p95 {final_p95}\u{2030} \
+         over {} unit(s) ({} predicted sheds)",
+        final_errs.len(),
+        stats.predicted_sheds,
+    );
+    if final_errs.is_empty() || final_p95 > 500 {
+        eprintln!(
+            "FAIL: calibrated service-time predictions off by {final_p95}\u{2030} (p95) on \
+             the final warm flush across {} unit(s) (limit 500\u{2030}) — the cost \
+             calibrator regressed",
+            final_errs.len()
+        );
         std::process::exit(1);
     }
 
@@ -746,6 +797,168 @@ fn main() {
         );
         std::process::exit(1);
     }
+
+    // --- Saturated diurnal arrivals: predictive shedding vs reactive -------
+    // A diurnal load curve on the virtual clock: peak phases offer
+    // twice the trough arrivals (Poisson-jittered inter-arrival gaps),
+    // and each peak's tail arrivals carry deadlines that have already
+    // expired by the time the saturated service point flushes (1 ms
+    // later).  The reactive baseline executes those queries anyway and
+    // serves them late — deadline misses that burn device time for
+    // nothing.  With `serve.predictive_shed` the calibrated admission
+    // check sheds exactly the already-doomed queries before
+    // partitioning, so the predictive row must shed > 0 and miss
+    // strictly less than the reactive row while every served response
+    // stays bit-identical to the solo engine.
+    let di_rounds = if fast { 4 } else { 8 };
+    let mut di_met = [0u64; 2]; // [reactive, predictive]
+    let mut di_misses = [0u64; 2];
+    let mut di_sheds = [0u64; 2];
+    for (slot, predictive) in [(0usize, false), (1usize, true)] {
+        let mut serve_cfg = cfg.serve.clone();
+        serve_cfg.shards = 2;
+        serve_cfg.predictive_shed = predictive;
+        let clock = VirtualClock::new();
+        let mut b = QueryBatcher::with_clock(
+            Engine::new(cfg.clone()).expect("engine"),
+            serve_cfg,
+            Arc::new(clock.clone()),
+        );
+        let mut rng = Rng::new(0xD1_0C4A);
+        let mut offered = 0usize;
+        let mut served = 0usize;
+        let mut wall = 0.0f64;
+        for round in 0..di_rounds {
+            let peak = round % 2 == 0;
+            let arrivals: &[usize] = if peak { &[0, 1, 2, 3, 4, 5] } else { &[0, 2, 4] };
+            let mut expected: Vec<usize> = Vec::new();
+            let mut tight_count = 0usize;
+            for (j, &qi) in arrivals.iter().enumerate() {
+                let gap = (-(1.0 - rng.f64()).ln() * 150_000.0) as u64 + 1;
+                clock.advance(Duration::from_nanos(gap));
+                // Peak tails are already hopeless: their deadline
+                // expires before the flush below even starts.
+                let tight = peak && j >= arrivals.len() / 2;
+                let deadline = if tight {
+                    tight_count += 1;
+                    Duration::from_micros(100)
+                } else {
+                    expected.push(qi);
+                    Duration::from_millis(20)
+                };
+                let (src, trg) = &queries[qi];
+                b.submit_with_deadline(ServeRequest::knn(src.clone(), trg.clone(), k), deadline);
+                offered += 1;
+            }
+            clock.advance(Duration::from_millis(1));
+            let t = Instant::now();
+            let out = b.flush().expect("diurnal flush");
+            wall += t.elapsed().as_secs_f64();
+            let shed_ids = b.take_predicted_sheds();
+            let want: &[usize] = if predictive { expected.as_slice() } else { arrivals };
+            assert_eq!(
+                (out.len(), shed_ids.len()),
+                (want.len(), if predictive { tight_count } else { 0 }),
+                "diurnal round {round} (predictive={predictive}) lost or duplicated queries"
+            );
+            for ((_, resp), &qi) in out.iter().zip(want) {
+                let got = resp.as_knn().expect("knn response");
+                assert_eq!(
+                    got.neighbors, seq_results[qi].neighbors,
+                    "diurnal trace (predictive={predictive}) diverged from sequential on \
+                     query {qi}"
+                );
+            }
+            served += out.len();
+        }
+        di_met[slot] = b.stats().deadline_met;
+        di_misses[slot] = b.stats().deadline_misses;
+        di_sheds[slot] = b.stats().predicted_sheds;
+        scenarios.push(scenario_row(
+            if predictive {
+                "knn_diurnal_predictive_2shard"
+            } else {
+                "knn_diurnal_reactive_2shard"
+            },
+            offered,
+            wall,
+            (seq_secs / q * served as f64) / wall.max(1e-12),
+            b.stats(),
+            b.shard_count(),
+        ));
+    }
+    println!(
+        "\ndiurnal scenario (2 shards): reactive {} met / {} missed / {} shed; \
+         predictive {} met / {} missed / {} shed",
+        di_met[0], di_misses[0], di_sheds[0], di_met[1], di_misses[1], di_sheds[1],
+    );
+    if di_sheds[1] == 0 || di_sheds[0] != 0 {
+        eprintln!(
+            "FAIL: predictive shedding misfired on the saturated diurnal trace \
+             ({} predictive-run sheds, {} reactive-run sheds; expected > 0 and 0) — \
+             early deadline shedding regressed",
+            di_sheds[1], di_sheds[0]
+        );
+        std::process::exit(1);
+    }
+    if di_misses[1] >= di_misses[0] {
+        eprintln!(
+            "FAIL: predictive shedding did not reduce deadline misses on the saturated \
+             diurnal trace ({} vs reactive {}) — predictive admission regressed",
+            di_misses[1], di_misses[0]
+        );
+        std::process::exit(1);
+    }
+
+    // --- Devices x DMA-bandwidth frontier (modeled) -------------------------
+    // Sweep `serve.devices` x `serve.dma_gbps` through the same Eq. 5
+    // multi-device latency model the serving timeline charges, so the
+    // JSON artifact records which device count / link speed the
+    // analytical model would buy next for this bench's workload shape.
+    // Purely modeled: deterministic, host-independent, record-only in
+    // the regression baseline.
+    let frontier = Explorer::default().device_frontier(
+        &DseWorkload { src_size: n_src, trg_size: n_trg, d: 8, n_iteration: 1, alpha: 10.0 },
+        &DesignConfig { n_src_grp: 10, n_trg_grp: 8, block: 64, simd: 4, unroll: 4 },
+        &[1, 2, 4],
+        &[4.0, 16.0],
+    );
+    let mut fr_table = Table::new(&["devices", "dma (gbps)", "modeled latency (ms)", "wkld/s"]);
+    for p in &frontier {
+        fr_table.row(vec![
+            format!("{}", p.devices),
+            format!("{:.0}", p.dma_gbps),
+            format!("{:.3}", p.latency_secs * 1e3),
+            format!("{:.1}", p.throughput),
+        ]);
+    }
+    fr_table.print("Modeled devices x DMA-bandwidth frontier (Eq. 5 multi-device)");
+    let fr_best = frontier
+        .iter()
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).expect("finite model"))
+        .expect("non-empty sweep");
+    scenarios.push(json::obj(vec![
+        ("name", json::s("devices_vs_throughput_frontier".to_string())),
+        (
+            "frontier",
+            Value::Arr(
+                frontier
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("devices", json::num(p.devices as f64)),
+                            ("dma_gbps", json::num(p.dma_gbps)),
+                            ("latency_secs", json::num(p.latency_secs)),
+                            ("throughput", json::num(p.throughput)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("best_devices", json::num(fr_best.devices as f64)),
+        ("best_dma_gbps", json::num(fr_best.dma_gbps)),
+        ("best_throughput", json::num(fr_best.throughput)),
+    ]));
 
     // --- Machine-readable output ------------------------------------------
     let out_path = std::env::var("ACCD_BENCH_JSON")

@@ -60,6 +60,14 @@ pub enum PlacementMode {
     /// lightest shards; deadline-free units sort last.  Degenerates to
     /// pure LPT when no unit carries a deadline.
     EdfLpt,
+    /// Calibrated tail-bounding placement: units are converted to
+    /// predicted nanoseconds through the `serve::calibrate` layer and
+    /// greedily assigned to the shard that keeps every predicted
+    /// finish time inside its deadline — minimizing the predicted
+    /// per-shard tail rather than abstract-cost makespan.  Falls back
+    /// to EDF-LPT behaviour while the calibrator is still cold (seed
+    /// rates only).
+    PredictedP99,
 }
 
 impl PlacementMode {
@@ -67,8 +75,10 @@ impl PlacementMode {
         match s {
             "lpt" => Ok(Self::Lpt),
             "edf-lpt" => Ok(Self::EdfLpt),
+            "predicted-p99" => Ok(Self::PredictedP99),
             other => Err(Error::Config(format!(
-                "serve.placement must be \"lpt\" or \"edf-lpt\", got \"{other}\""
+                "serve.placement must be \"lpt\", \"edf-lpt\" or \"predicted-p99\", \
+                 got \"{other}\""
             ))),
         }
     }
@@ -77,6 +87,7 @@ impl PlacementMode {
         match self {
             Self::Lpt => "lpt",
             Self::EdfLpt => "edf-lpt",
+            Self::PredictedP99 => "predicted-p99",
         }
     }
 }
@@ -218,6 +229,15 @@ pub struct ServeConfig {
     /// A/B lever for the bench).  Results are bit-identical either
     /// way (serve parity contract); only placement changes.
     pub movement_aware: bool,
+    /// Predictive early deadline shedding: at flush selection, a query
+    /// whose calibrated predicted completion already overshoots its
+    /// (already-expired) deadline is shed instead of executed, counted
+    /// in `ServeStats::predicted_sheds` (distinct from the server's
+    /// overload `shed`).  Shedding is strictly order-only: only
+    /// queries the reactive path would have *missed* anyway are ever
+    /// shed, so every served result stays bit-identical to solo runs.
+    /// Defaults off.
+    pub predictive_shed: bool,
 }
 
 impl Default for ServeConfig {
@@ -240,6 +260,7 @@ impl Default for ServeConfig {
             dma_gbps: 16.0,
             overlap: true,
             movement_aware: true,
+            predictive_shed: false,
         }
     }
 }
@@ -387,6 +408,9 @@ impl AccdConfig {
             if let Some(b) = s.get("movement_aware").as_bool() {
                 cfg.serve.movement_aware = b;
             }
+            if let Some(b) = s.get("predictive_shed").as_bool() {
+                cfg.serve.predictive_shed = b;
+            }
         }
         if let Some(s) = v.get("artifact_dir").as_str() {
             cfg.artifact_dir = s.to_string();
@@ -469,6 +493,7 @@ impl AccdConfig {
                     ("dma_gbps", json::num(self.serve.dma_gbps)),
                     ("overlap", Value::Bool(self.serve.overlap)),
                     ("movement_aware", Value::Bool(self.serve.movement_aware)),
+                    ("predictive_shed", Value::Bool(self.serve.predictive_shed)),
                 ]),
             ),
             ("artifact_dir", json::s(self.artifact_dir.clone())),
@@ -510,6 +535,7 @@ mod tests {
         cfg.serve.dma_gbps = 3.5;
         cfg.serve.overlap = false;
         cfg.serve.movement_aware = false;
+        cfg.serve.predictive_shed = true;
         cfg.kmeans.incremental_ti = false;
         let re = AccdConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, re);
@@ -575,6 +601,9 @@ mod tests {
         assert_eq!(cfg.serve.placement, "edf-lpt", "deadline-aware placement defaults on");
         assert_eq!(cfg.serve.queue_cap, 1024, "server intake bounded by default");
         assert_eq!(cfg.serve.overload, "block", "backpressure is the default overload policy");
+        assert!(!cfg.serve.predictive_shed, "predictive shedding defaults off");
+        let v = json::parse(r#"{"serve": {"predictive_shed": true}}"#).unwrap();
+        assert!(AccdConfig::from_json(&v).unwrap().serve.predictive_shed);
     }
 
     #[test]
@@ -601,8 +630,10 @@ mod tests {
     fn placement_mode_parses_and_rejects_unknown_names() {
         assert_eq!(PlacementMode::parse("lpt").unwrap(), PlacementMode::Lpt);
         assert_eq!(PlacementMode::parse("edf-lpt").unwrap(), PlacementMode::EdfLpt);
+        assert_eq!(PlacementMode::parse("predicted-p99").unwrap(), PlacementMode::PredictedP99);
         assert_eq!(PlacementMode::Lpt.as_str(), "lpt");
         assert_eq!(PlacementMode::EdfLpt.as_str(), "edf-lpt");
+        assert_eq!(PlacementMode::PredictedP99.as_str(), "predicted-p99");
         let msg = PlacementMode::parse("sjf").unwrap_err().to_string();
         assert!(msg.contains("placement"), "{msg}");
         // ...and validate() gates it, so QueryBatcher::try_new rejects it.

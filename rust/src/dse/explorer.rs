@@ -1,6 +1,6 @@
 //! The genetic-algorithm explorer loop (paper Fig. 7).
 
-use crate::fpga::cost::{CostModel, WorkloadModel};
+use crate::fpga::cost::{CostModel, DmaModel, WorkloadModel};
 use crate::fpga::resource::{ResourceModel, StratixBudget};
 use crate::util::rng::Rng;
 use crate::{Error, Result};
@@ -69,12 +69,24 @@ pub struct Workload {
     pub alpha: f64,
 }
 
+/// One point of the serving-oriented devices × DMA-bandwidth
+/// frontier: the modeled multi-device Eq. 5 latency (and its
+/// reciprocal throughput) of one design replicated over `devices`
+/// emulated devices on a `dma_gbps` link.
+#[derive(Debug, Clone)]
+pub struct FrontierPoint {
+    pub devices: usize,
+    pub dma_gbps: f64,
+    /// Modeled end-to-end latency, seconds ([`CostModel::latency_multi_device`]).
+    pub latency_secs: f64,
+    /// Modeled workloads per second (`1 / latency_secs`).
+    pub throughput: f64,
+}
+
 impl Explorer {
-    /// Modeled fitness (latency; lower = better) of one configuration,
-    /// or None if it violates Eq. 10.
-    pub fn evaluate(&self, w: &Workload, c: &Config) -> Option<f64> {
-        let hw = c.to_hw(self.freq_mhz);
-        let cost = CostModel::new(hw.clone());
+    /// The Eq. 5–7 workload model of `w` under configuration `c` (the
+    /// surviving ratio already folded in via Eq. 7).
+    fn workload_model(&self, w: &Workload, c: &Config) -> WorkloadModel {
         let mut wm = WorkloadModel {
             src_size: w.src_size,
             trg_size: w.trg_size,
@@ -86,6 +98,43 @@ impl Explorer {
             dtype_bytes: 4,
         };
         wm.ratio_surviving = wm.eq7_surviving_ratio(w.alpha);
+        wm
+    }
+
+    /// Sweep device count × DMA link speed through
+    /// [`CostModel::latency_multi_device`] for one design point — the
+    /// serving-dimension counterpart of the tile-shape search, ranking
+    /// `serve.devices` / `serve.dma_gbps` settings the same analytical
+    /// way the GA ranks tile shapes.  Rows come out in sweep order
+    /// (devices-major), deterministically.
+    pub fn device_frontier(
+        &self,
+        w: &Workload,
+        c: &Config,
+        devices: &[usize],
+        dma_gbps: &[f64],
+    ) -> Vec<FrontierPoint> {
+        let cost = CostModel::new(c.to_hw(self.freq_mhz));
+        let wm = self.workload_model(w, c);
+        let mut out = Vec::with_capacity(devices.len() * dma_gbps.len());
+        for &n in devices {
+            for &gbps in dma_gbps {
+                let dma = DmaModel::new(gbps);
+                let latency_secs = cost.latency_multi_device(&wm, &dma, n).total();
+                let throughput =
+                    if latency_secs > 0.0 { 1.0 / latency_secs } else { f64::INFINITY };
+                out.push(FrontierPoint { devices: n, dma_gbps: gbps, latency_secs, throughput });
+            }
+        }
+        out
+    }
+
+    /// Modeled fitness (latency; lower = better) of one configuration,
+    /// or None if it violates Eq. 10.
+    pub fn evaluate(&self, w: &Workload, c: &Config) -> Option<f64> {
+        let hw = c.to_hw(self.freq_mhz);
+        let cost = CostModel::new(hw.clone());
+        let wm = self.workload_model(w, c);
         let lat = cost.latency(&wm);
         let total = lat.total();
         let bw = cost.bandwidth(&wm, total);
@@ -232,6 +281,31 @@ mod tests {
                 assert!(ex.evaluate(&workload(), &out.best).is_some());
             }
             Err(e) => assert!(e.to_string().contains("no feasible")),
+        }
+    }
+
+    #[test]
+    fn device_frontier_ranks_devices_and_links_sanely() {
+        let ex = Explorer::default();
+        let c = Config { n_src_grp: 130, n_trg_grp: 8, block: 64, simd: 4, unroll: 4 };
+        let pts = ex.device_frontier(&workload(), &c, &[1, 2, 4], &[4.0, 16.0]);
+        assert_eq!(pts.len(), 6, "devices-major sweep order, all points present");
+        // More devices at the same link never models slower; strictly
+        // faster here (comp and xfer both shrink).
+        let at = |n: usize, g: f64| {
+            pts.iter().find(|p| p.devices == n && p.dma_gbps == g).unwrap().latency_secs
+        };
+        assert!(at(2, 16.0) < at(1, 16.0));
+        assert!(at(4, 16.0) < at(2, 16.0));
+        // A faster link at the same device count never models slower.
+        assert!(at(2, 16.0) <= at(2, 4.0));
+        // Throughput is the reciprocal and the rows are deterministic.
+        for p in &pts {
+            assert!((p.throughput - 1.0 / p.latency_secs).abs() < 1e-9);
+        }
+        let again = ex.device_frontier(&workload(), &c, &[1, 2, 4], &[4.0, 16.0]);
+        for (a, b) in pts.iter().zip(&again) {
+            assert_eq!(a.latency_secs.to_bits(), b.latency_secs.to_bits());
         }
     }
 

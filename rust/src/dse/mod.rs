@@ -18,5 +18,5 @@
 pub mod explorer;
 pub mod space;
 
-pub use explorer::{ExploreOutcome, Explorer};
+pub use explorer::{ExploreOutcome, Explorer, FrontierPoint, Workload};
 pub use space::{Config as DesignConfig, DesignSpace};

@@ -172,6 +172,13 @@ pub const LATENCY_SAMPLE_CAP: usize = 65_536;
 /// defining inequality exactly).  The ceil estimate is kept as the
 /// starting point and corrected against the inequality itself.
 fn percentile_of_sorted_ms(sorted: &[u64], q: f64) -> f64 {
+    percentile_of_sorted(sorted, q) as f64 / 1e6
+}
+
+/// Nearest-rank percentile over ascending-sorted samples, in the
+/// samples' own unit (see [`percentile_of_sorted_ms`] for the rank
+/// arithmetic rationale).
+fn percentile_of_sorted(sorted: &[u64], q: f64) -> u64 {
     let n = sorted.len();
     let target = q * n as f64;
     let mut rank = (((q / 100.0) * n as f64).ceil() as usize).clamp(1, n);
@@ -181,7 +188,7 @@ fn percentile_of_sorted_ms(sorted: &[u64], q: f64) -> f64 {
     while rank < n && ((rank as f64) * 100.0) < target {
         rank += 1;
     }
-    sorted[rank - 1] as f64 / 1e6
+    sorted[rank - 1]
 }
 
 /// Accounting of the batched serving runtime (`accd::serve`).
@@ -269,6 +276,24 @@ pub struct ServeStats {
     /// this counter is its only trace.  Server-level (merged view
     /// only); shard views stay 0.
     pub shed: u64,
+    /// Queries shed by predictive early deadline shedding
+    /// (`serve.predictive_shed`): at flush selection their calibrated
+    /// predicted completion already overshot an expired deadline, so
+    /// no device time was spent on a guaranteed miss.  A predicted
+    /// shed gets no response, no latency sample and no met/miss count
+    /// — distinct from the server's overload `shed` (never admitted)
+    /// and from `deadline_misses` (served late).  Batcher-level
+    /// (merged view only); shard views stay 0.
+    pub predicted_sheds: u64,
+    /// Predicted-vs-actual service-time error per retired program, in
+    /// permille of the actual modeled nanoseconds
+    /// (`|predicted - actual| * 1000 / actual`).  Bounded ring like
+    /// `latency_ns`; the `predict_err_p*_permille` accessors report
+    /// percentiles over the most recent window — the calibrator's
+    /// observable quality gauge, merged and per shard.
+    pub predict_err_permille: Vec<u64>,
+    /// Ring write position within `predict_err_permille` past the cap.
+    predict_err_cursor: usize,
     /// High-water mark of accepted-but-unanswered queries (intake
     /// backlog + admitted pending) observed by the server — how close
     /// the bounded queue came to `serve.queue_cap`.  Server-level
@@ -377,6 +402,36 @@ impl ServeStats {
         }
     }
 
+    /// Record one retired program's predicted-vs-actual error sample
+    /// (permille of actual).  Ring-bounded like `record_latency`.
+    pub fn record_predict_error(&mut self, err_permille: u64) {
+        if self.predict_err_permille.len() < LATENCY_SAMPLE_CAP {
+            self.predict_err_permille.push(err_permille);
+        } else {
+            self.predict_err_permille[self.predict_err_cursor] = err_permille;
+            self.predict_err_cursor = (self.predict_err_cursor + 1) % LATENCY_SAMPLE_CAP;
+        }
+    }
+
+    /// Nearest-rank percentile of the predicted-vs-actual error window
+    /// (permille of actual); 0 with no samples.
+    pub fn predict_err_permille_at(&self, q: f64) -> u64 {
+        if self.predict_err_permille.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.predict_err_permille.clone();
+        sorted.sort_unstable();
+        percentile_of_sorted(&sorted, q)
+    }
+
+    pub fn predict_err_p50_permille(&self) -> u64 {
+        self.predict_err_permille_at(50.0)
+    }
+
+    pub fn predict_err_p95_permille(&self) -> u64 {
+        self.predict_err_permille_at(95.0)
+    }
+
     /// The sorted latency window, or `None` when no samples exist —
     /// the one place the clone+sort happens.
     fn sorted_latencies(&self) -> Option<Vec<u64>> {
@@ -459,6 +514,12 @@ impl ServeStats {
         self.transfer_ns += d.transfer_ns;
         self.compute_ns += d.compute_ns;
         self.overlap_ns += d.overlap_ns;
+        // Error samples ARE absorbed (the shard's exec loop is where
+        // predictions meet actuals); `predicted_sheds` is not — like
+        // `shed`, the admission side owns it.
+        for &e in &d.predict_err_permille {
+            self.record_predict_error(e);
+        }
     }
 
     pub fn to_json(&self) -> Value {
@@ -491,6 +552,10 @@ impl ServeStats {
             ("deadline_met", json::num(self.deadline_met as f64)),
             ("deadline_misses", json::num(self.deadline_misses as f64)),
             ("shed", json::num(self.shed as f64)),
+            ("predicted_sheds", json::num(self.predicted_sheds as f64)),
+            ("predict_err_p50_permille", json::num(self.predict_err_p50_permille() as f64)),
+            ("predict_err_p95_permille", json::num(self.predict_err_p95_permille() as f64)),
+            ("predict_err_samples", json::num(self.predict_err_permille.len() as f64)),
             ("queue_depth_watermark", json::num(self.queue_depth_watermark as f64)),
             ("flush_failures", json::num(self.flush_failures as f64)),
             ("latency_p50_ms", json::num(p50)),
@@ -519,6 +584,7 @@ impl ServeStats {
              device timeline: {:.3} ms transfer / {:.3} ms compute, {:.3} ms overlapped\n  \
              latency: p50 {:.3} ms / p95 {:.3} ms / p99 {:.3} ms | \
              deadlines: {} met / {} missed | shed {} (depth high-water {})\n  \
+             calibration: {} predicted sheds | predict error p50 {}‰ / p95 {}‰ ({} samples)\n  \
              tiles: {} shared of {} total ({:.1}%) | shared slabs {}\n  \
              incremental TI: {} tiles skipped, {} points pruned, {} bound recomputes",
             self.queries,
@@ -552,6 +618,10 @@ impl ServeStats {
             self.deadline_misses,
             self.shed,
             self.queue_depth_watermark,
+            self.predicted_sheds,
+            self.predict_err_p50_permille(),
+            self.predict_err_p95_permille(),
+            self.predict_err_permille.len(),
             self.tiles_shared,
             self.tiles_total,
             100.0 * self.tiles_shared_ratio(),
@@ -778,8 +848,10 @@ mod tests {
             deadline_met: 5,
             deadline_misses: 6,
             shed: 3,
+            predicted_sheds: 9,
             queue_depth_watermark: 11,
             latency_ns: vec![1, 2, 3],
+            predict_err_permille: vec![100, 300],
             ..Default::default()
         };
         total.absorb_exec(&delta);
@@ -822,6 +894,35 @@ mod tests {
         // Server-level fields: the admission front end owns them.
         assert_eq!(total.shed, 0);
         assert_eq!(total.queue_depth_watermark, 0);
+        // Predicted sheds are batcher-level too; error samples travel
+        // with the exec delta.
+        assert_eq!(total.predicted_sheds, 0);
+        assert_eq!(total.predict_err_permille, vec![100, 300]);
+    }
+
+    #[test]
+    fn predict_error_ring_and_percentiles() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.predict_err_p95_permille(), 0, "no samples -> 0");
+        for e in [10u64, 20, 30, 40, 1_000] {
+            s.record_predict_error(e);
+        }
+        assert_eq!(s.predict_err_p50_permille(), 30);
+        assert_eq!(s.predict_err_p95_permille(), 1_000);
+        s.predicted_sheds = 4;
+        let v = s.to_json();
+        assert_eq!(v.get("predicted_sheds").as_usize(), Some(4));
+        assert_eq!(v.get("predict_err_p50_permille").as_usize(), Some(30));
+        assert_eq!(v.get("predict_err_p95_permille").as_usize(), Some(1_000));
+        assert_eq!(v.get("predict_err_samples").as_usize(), Some(5));
+        assert!(s.summary().contains("4 predicted sheds"));
+        // Ring-bounded like the latency window.
+        let mut s = ServeStats::default();
+        for i in 0..(LATENCY_SAMPLE_CAP + 10) {
+            s.record_predict_error(i as u64);
+        }
+        assert_eq!(s.predict_err_permille.len(), LATENCY_SAMPLE_CAP);
+        assert_eq!(s.predict_err_permille[0], LATENCY_SAMPLE_CAP as u64);
     }
 
     #[test]

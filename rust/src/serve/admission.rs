@@ -35,6 +35,7 @@ use crate::gti::{self, Metric};
 use crate::runtime::TileInfo;
 use crate::Result;
 
+use super::calibrate::AlgoKind;
 use super::clock::{ticks, Tick};
 
 /// Ticket handed back by `QueryBatcher::submit`.
@@ -79,6 +80,43 @@ impl ServeRequest {
         radius: f32,
     ) -> Self {
         Self::Nbody { ds, masses, steps, dt, radius }
+    }
+
+    /// Calibrator kind axis of this request.
+    pub(crate) fn kind(&self) -> AlgoKind {
+        match self {
+            Self::Knn { .. } => AlgoKind::Knn,
+            Self::Kmeans { .. } => AlgoKind::Kmeans,
+            Self::Nbody { .. } => AlgoKind::Nbody,
+        }
+    }
+
+    /// Dimensionality of the request's distance pairs (the calibrator
+    /// seed rate's `d`).
+    pub(crate) fn dim(&self) -> usize {
+        match self {
+            Self::Knn { trg, .. } => trg.d(),
+            Self::Kmeans { ds, .. } | Self::Nbody { ds, .. } => ds.d(),
+        }
+    }
+
+    /// Abstract cost of serving this request alone — the single-query
+    /// analogue of [`WorkUnit::cost_estimate`], used by predictive
+    /// shedding to price a query before it is partitioned into units.
+    pub(crate) fn solo_cost_units(&self) -> u64 {
+        match self {
+            Self::Knn { src, trg, .. } => {
+                let t = trg.n() as u64;
+                t + src.n() as u64 * t
+            }
+            Self::Kmeans { ds, k, max_iters } => {
+                ds.n() as u64 * *k as u64 * (*max_iters as u64 + 1)
+            }
+            Self::Nbody { ds, steps, .. } => {
+                let n = ds.n() as u64;
+                n * n * *steps as u64
+            }
+        }
     }
 }
 
@@ -648,6 +686,16 @@ impl WorkUnit {
             WorkUnit::Knn(c) => c.trg.d(),
             WorkUnit::Kmeans(j) => j.ds.d(),
             WorkUnit::Nbody(j) => j.ds.d(),
+        }
+    }
+
+    /// Calibrator kind axis of this unit (`CostCalibrator` learns one
+    /// ns-per-unit rate per shard × kind).
+    pub fn kind(&self) -> AlgoKind {
+        match self {
+            WorkUnit::Knn(_) => AlgoKind::Knn,
+            WorkUnit::Kmeans(_) => AlgoKind::Kmeans,
+            WorkUnit::Nbody(_) => AlgoKind::Nbody,
         }
     }
 }

@@ -1,0 +1,228 @@
+//! Cost calibration layer: abstract planner cost → predicted time.
+//!
+//! The `ShardPlanner` balances *abstract* cost units (dominant
+//! distance-pair counts, [`super::admission::WorkUnit::cost_estimate`]);
+//! deadlines live in clock nanoseconds.  The [`CostCalibrator`] bridges
+//! the two: an online EWMA of observed nanoseconds-per-cost-unit, kept
+//! per (shard × algorithm kind), seeded from the analytical
+//! `CostModel::pairs_per_sec` rate (AccD Eq. 5's throughput term) and
+//! corrected from the per-program modeled compute deltas the execution
+//! layer already snapshot-diffs for its `XferClock` accounting.
+//!
+//! Predictions drive three order-only mechanisms (none may change
+//! result bits — the serve parity contract):
+//!
+//! * **admission** — `serve.predictive_shed` sheds a selected query
+//!   whose calibrated completion estimate already overshoots an
+//!   expired deadline instead of spending device time on a guaranteed
+//!   miss (`ServeStats::predicted_sheds`);
+//! * **placement** — the `predicted-p99` mode bounds per-shard
+//!   predicted finish-time tails, and `WorkPool::steal` treats a unit
+//!   as at-risk on *predicted* slack deficit before its deadline
+//!   expires;
+//! * **exec** — every retired program records predicted-vs-actual
+//!   error permille into `ServeStats`, so the calibrator's quality is
+//!   observable and the EWMA self-corrects.
+//!
+//! Determinism: the calibrator is a pure fold over its observation
+//! sequence (no wall clock, no randomness).  Identical observation
+//! sequences yield bit-identical rates and hence identical
+//! predictions — which is what keeps predictive scheduling
+//! reproducible on a `VirtualClock`.
+
+use crate::fpga::cost::CostModel;
+
+/// Algorithm kind axis of the calibrator: each kind has its own
+/// ns-per-unit behaviour (KNN pairs stream through the filter, K-means
+/// iterations prune, N-body tiles are dense), so their rates are
+/// learned independently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoKind {
+    Knn,
+    Kmeans,
+    Nbody,
+}
+
+impl AlgoKind {
+    pub const COUNT: usize = 3;
+
+    fn index(self) -> usize {
+        match self {
+            AlgoKind::Knn => 0,
+            AlgoKind::Kmeans => 1,
+            AlgoKind::Nbody => 2,
+        }
+    }
+}
+
+/// One retired-program measurement fed back into the calibrator: the
+/// shard that ran the unit, its kind/dimensionality, the abstract cost
+/// the planner balanced, and the modeled nanoseconds the device
+/// accounting actually charged (plan + steps + finish).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Observation {
+    pub kind: AlgoKind,
+    pub cost_units: u64,
+    pub actual_ns: u64,
+}
+
+/// EWMA weight of a new observation.  Low enough to ride out one
+/// outlier (a cold-cache flush), high enough that a handful of
+/// flushes converge; the *first* observation replaces the analytical
+/// seed outright, so a steady workload is calibrated after one flush.
+const EWMA_ALPHA: f64 = 0.25;
+
+/// Online cost-units → nanoseconds calibrator, per (shard × kind).
+///
+/// Until a (shard, kind) cell has seen an observation, predictions
+/// fall back to the analytical seed rate `1e9 / pairs_per_sec(d)` —
+/// the same Eq. 5 throughput the DSE explorer ranks designs by — so a
+/// cold calibrator is exactly the cost model, and a warm one is the
+/// cost model corrected by what this shard actually measured.
+pub struct CostCalibrator {
+    cost: CostModel,
+    /// `rates[shard][kind]`: learned ns per cost unit; `None` = cold
+    /// (use the analytical seed).
+    rates: Vec<[Option<f64>; AlgoKind::COUNT]>,
+    /// Observations folded in, total (calibration-coverage gauge).
+    observations: u64,
+}
+
+impl CostCalibrator {
+    pub fn new(cost: CostModel, shards: usize) -> Self {
+        Self { cost, rates: vec![[None; AlgoKind::COUNT]; shards.max(1)], observations: 0 }
+    }
+
+    /// Analytical ns-per-unit seed for dimensionality `d`: the inverse
+    /// of the cost model's pair throughput.
+    fn seed_rate(&self, d: usize) -> f64 {
+        1e9 / self.cost.pairs_per_sec(d).max(1.0)
+    }
+
+    /// The rate used for a prediction: learned if warm, seed if cold.
+    fn rate(&self, shard: usize, kind: AlgoKind, d: usize) -> f64 {
+        self.rates
+            .get(shard)
+            .and_then(|r| r[kind.index()])
+            .unwrap_or_else(|| self.seed_rate(d))
+    }
+
+    /// Whether the (shard, kind) cell has folded in at least one
+    /// observation (predictions no longer ride the analytical seed).
+    pub fn is_warm(&self, shard: usize, kind: AlgoKind) -> bool {
+        self.rates.get(shard).is_some_and(|r| r[kind.index()].is_some())
+    }
+
+    /// Total observations folded in across all cells.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Predicted service nanoseconds of `cost_units` abstract units of
+    /// kind `kind` on `shard`, at dimensionality `d`.
+    pub fn predict_ns(&self, shard: usize, kind: AlgoKind, cost_units: u64, d: usize) -> u64 {
+        (self.rate(shard, kind, d) * cost_units as f64).round().max(0.0) as u64
+    }
+
+    /// Fold one retired-program measurement into the (shard, kind)
+    /// cell.  The first observation replaces the analytical seed
+    /// outright; later ones blend by [`EWMA_ALPHA`].  Zero-cost units
+    /// and zero-ns measurements are skipped (neither defines a usable
+    /// rate, and a zero rate would predict instant service forever).
+    pub fn observe(&mut self, shard: usize, kind: AlgoKind, cost_units: u64, actual_ns: u64) {
+        if cost_units == 0 || actual_ns == 0 {
+            return;
+        }
+        let Some(row) = self.rates.get_mut(shard) else { return };
+        let observed = actual_ns as f64 / cost_units as f64;
+        let cell = &mut row[kind.index()];
+        *cell = Some(match *cell {
+            None => observed,
+            Some(prev) => prev + EWMA_ALPHA * (observed - prev),
+        });
+        self.observations += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+
+    fn calibrator(shards: usize) -> CostCalibrator {
+        CostCalibrator::new(CostModel::new(HwConfig::default()), shards)
+    }
+
+    #[test]
+    fn cold_prediction_is_the_analytical_seed() {
+        let c = calibrator(2);
+        let cost = CostModel::new(HwConfig::default());
+        let want = (1e9 / cost.pairs_per_sec(8) * 1_000.0).round() as u64;
+        assert_eq!(c.predict_ns(0, AlgoKind::Knn, 1_000, 8), want);
+        assert!(!c.is_warm(0, AlgoKind::Knn));
+        // Every shard and kind shares the same cold seed at equal d.
+        assert_eq!(
+            c.predict_ns(0, AlgoKind::Knn, 1_000, 8),
+            c.predict_ns(1, AlgoKind::Nbody, 1_000, 8)
+        );
+    }
+
+    #[test]
+    fn first_observation_replaces_the_seed_exactly() {
+        let mut c = calibrator(1);
+        // 500 units took 2_000 ns -> 4 ns/unit, adopted outright.
+        c.observe(0, AlgoKind::Kmeans, 500, 2_000);
+        assert!(c.is_warm(0, AlgoKind::Kmeans));
+        assert_eq!(c.predict_ns(0, AlgoKind::Kmeans, 700, 8), 2_800);
+        // A steady workload is perfectly predicted after round one.
+        assert_eq!(c.predict_ns(0, AlgoKind::Kmeans, 500, 8), 2_000);
+    }
+
+    #[test]
+    fn ewma_tracks_drift_without_jumping() {
+        let mut c = calibrator(1);
+        c.observe(0, AlgoKind::Knn, 100, 1_000); // 10 ns/unit
+        c.observe(0, AlgoKind::Knn, 100, 2_000); // observed 20 -> 12.5
+        assert_eq!(c.predict_ns(0, AlgoKind::Knn, 100, 8), 1_250);
+        // Kinds and shards are independent cells.
+        assert!(!c.is_warm(0, AlgoKind::Kmeans));
+    }
+
+    #[test]
+    fn identical_observation_sequences_yield_identical_predictions() {
+        let obs = [
+            (0usize, AlgoKind::Knn, 120u64, 1_440u64),
+            (1, AlgoKind::Kmeans, 77, 900),
+            (0, AlgoKind::Knn, 130, 1_100),
+            (1, AlgoKind::Nbody, 999, 12_345),
+            (0, AlgoKind::Kmeans, 10, 55),
+        ];
+        let mut a = calibrator(2);
+        let mut b = calibrator(2);
+        for &(s, k, u, ns) in &obs {
+            a.observe(s, k, u, ns);
+            b.observe(s, k, u, ns);
+        }
+        for s in 0..2 {
+            for k in [AlgoKind::Knn, AlgoKind::Kmeans, AlgoKind::Nbody] {
+                for units in [1u64, 50, 1_000, 123_456] {
+                    assert_eq!(a.predict_ns(s, k, units, 8), b.predict_ns(s, k, units, 8));
+                }
+            }
+        }
+        assert_eq!(a.observations(), 5);
+    }
+
+    #[test]
+    fn zero_cost_and_out_of_range_observations_are_ignored() {
+        let mut c = calibrator(1);
+        c.observe(0, AlgoKind::Knn, 0, 999);
+        assert!(!c.is_warm(0, AlgoKind::Knn), "zero-cost unit defines no rate");
+        c.observe(0, AlgoKind::Knn, 10, 0);
+        assert!(!c.is_warm(0, AlgoKind::Knn), "zero-ns measurement defines no rate");
+        c.observe(5, AlgoKind::Knn, 10, 100); // shard out of range
+        assert_eq!(c.observations(), 0);
+        // Out-of-range predictions fall back to the seed, not panic.
+        let _ = c.predict_ns(9, AlgoKind::Knn, 10, 8);
+    }
+}

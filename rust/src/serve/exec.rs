@@ -30,8 +30,9 @@
 //! (nothing resident, own queue empty) steals whole not-yet-started
 //! units from a busy victim ([`WorkPool::steal`];
 //! `serve.steal_threshold` gates it) — preferring the most urgent
-//! at-risk unit (deadline expired at the flush's clock reading) over
-//! the max-cost one.  [`execute_plan`] fans the shards out on scoped
+//! at-risk unit (deadline inside its calibrated predicted service
+//! window at the flush's clock reading; expired, absent predictions)
+//! over the max-cost one.  [`execute_plan`] fans the shards out on scoped
 //! OS threads and joins them in shard order, so result assembly stays
 //! deterministic (responses carry their submission slots; stats and
 //! latency attribution follow the executing shard).
@@ -59,6 +60,7 @@ use crate::{Error, Result};
 
 use super::admission::{KnnCohort, KnnQ, ServeResponse, WorkUnit};
 use super::cache::{GroupingCache, GroupingKey};
+use super::calibrate::{AlgoKind, Observation};
 use super::clock::Tick;
 use super::placement::{EnginePool, WorkPool};
 
@@ -101,6 +103,11 @@ impl ShardState {
 pub(crate) struct ShardDelta {
     pub stats: ServeStats,
     pub responses: Vec<(usize, ServeResponse)>,
+    /// One entry per unit this shard retired: the calibrator feedback
+    /// (kind, planner cost, actual modeled ns) the batcher folds into
+    /// its [`super::calibrate::CostCalibrator`] after a successful
+    /// commit — in retirement order, so the fold is deterministic.
+    pub observations: Vec<Observation>,
 }
 
 /// Execute one flush's placed units across the pool, concurrently when
@@ -110,11 +117,14 @@ pub(crate) struct ShardDelta {
 /// costs, claim order and at-risk steals against the deadlines);
 /// `move_units` is the same per-unit x per-shard movement table the
 /// planner placed with (empty when movement-awareness is off) so
-/// steals are discounted by the thief's cold bytes; `now` is the
-/// flush's clock reading.  Returns the filled response slots, which
-/// shard answered each slot (latency attribution), and one delta per
-/// shard (empty for idle shards); `Err` aborts the whole flush (first
-/// erroring shard in shard order).
+/// steals are discounted by the thief's cold bytes; `pred_ns` is the
+/// calibrator's per-unit predicted service time (empty when no
+/// predictions were made) driving predicted-slack steals and the
+/// predicted-vs-actual error telemetry; `now` is the flush's clock
+/// reading.  Returns the filled response slots, which shard answered
+/// each slot (latency attribution), and one delta per shard (empty for
+/// idle shards); `Err` aborts the whole flush (first erroring shard in
+/// shard order).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn execute_plan(
     pool: &mut EnginePool,
@@ -123,6 +133,7 @@ pub(crate) fn execute_plan(
     costs: Vec<u64>,
     deadlines: Vec<Option<Tick>>,
     move_units: Vec<Vec<u64>>,
+    pred_ns: Vec<u64>,
     assignments: &[Vec<usize>],
     n_slots: usize,
     cfg: &ServeConfig,
@@ -131,7 +142,10 @@ pub(crate) fn execute_plan(
     debug_assert_eq!(pool.shard_count(), assignments.len());
     let n_shards = pool.shard_count();
     let topology = pool.topology().clone();
-    let work_pool = WorkPool::with_movement(units, costs, deadlines, move_units, assignments);
+    let costs_by_unit = costs.clone();
+    let mut work_pool = WorkPool::with_movement(units, costs, deadlines, move_units, assignments);
+    work_pool.set_predictions(pred_ns.clone());
+    let tables = UnitTables { costs: &costs_by_unit, pred_ns: &pred_ns };
     // Idle shards spawn as thieves only when stealing could ever fire
     // this flush (the eligibility policy lives in WorkPool).
     let thieves = cfg.steal_threshold > 0
@@ -148,7 +162,7 @@ pub(crate) fn execute_plan(
         for (s, (engine, state)) in engines.iter_mut().zip(states.iter_mut()).enumerate() {
             outcomes.push(if workers[s] {
                 let dma = *topology.dma_for_shard(s);
-                run_shard(engine, state, &work, s, cfg, now, dma)
+                run_shard(engine, state, &work, s, cfg, now, dma, tables)
             } else {
                 Ok(ShardDelta::default())
             });
@@ -160,7 +174,9 @@ pub(crate) fn execute_plan(
             for (s, (engine, state)) in engines.iter_mut().zip(states.iter_mut()).enumerate() {
                 handles.push(if workers[s] {
                     let dma = *topology.dma_for_shard(s);
-                    Some(scope.spawn(move || run_shard(engine, state, work_ref, s, cfg, now, dma)))
+                    Some(scope.spawn(move || {
+                        run_shard(engine, state, work_ref, s, cfg, now, dma, tables)
+                    }))
                 } else {
                     None
                 });
@@ -304,6 +320,57 @@ fn modeled_ns_since(engine: &Engine, secs0: f64) -> u64 {
     ((engine.device.stats().modeled_secs - secs0).max(0.0) * 1e9).round() as u64
 }
 
+/// Flush-scoped per-unit lookup tables shared (read-only) by every
+/// shard: the planner costs and the calibrated service-time
+/// predictions, keyed by the flush index `claim` returns alongside the
+/// unit.  `pred_ns` is empty when the flush made no predictions.
+#[derive(Clone, Copy)]
+struct UnitTables<'a> {
+    costs: &'a [u64],
+    pred_ns: &'a [u64],
+}
+
+/// Predicted-vs-actual bookkeeping of one resident unit, carried from
+/// claim to retirement: what the calibrator predicted for the unit and
+/// the modeled nanoseconds its plan + steps + finish actually charged
+/// (the same deltas the [`XferClock`] records).
+struct UnitTally {
+    kind: AlgoKind,
+    cost_units: u64,
+    pred_ns: u64,
+    /// Whether a prediction existed for this flush at all — separates
+    /// "predicted 0 ns" from "nothing was predicted".
+    predicted: bool,
+    actual_ns: u64,
+}
+
+impl UnitTally {
+    fn new(kind: AlgoKind, unit_index: usize, tables: UnitTables<'_>) -> Self {
+        Self {
+            kind,
+            cost_units: tables.costs.get(unit_index).copied().unwrap_or(0),
+            pred_ns: tables.pred_ns.get(unit_index).copied().unwrap_or(0),
+            predicted: !tables.pred_ns.is_empty(),
+            actual_ns: 0,
+        }
+    }
+}
+
+/// Retire one unit's tally: the prediction-error sample (permille of
+/// actual, so over- and under-prediction weigh alike) and the
+/// calibrator observation.
+fn retire_tally(delta: &mut ShardDelta, t: UnitTally) {
+    if t.predicted {
+        let err = t.pred_ns.abs_diff(t.actual_ns).saturating_mul(1000) / t.actual_ns.max(1);
+        delta.stats.record_predict_error(err);
+    }
+    delta.observations.push(Observation {
+        kind: t.kind,
+        cost_units: t.cost_units,
+        actual_ns: t.actual_ns,
+    });
+}
+
 /// Run one shard's share of a flush — lockstep rounds or serial
 /// run-to-completion — collecting the delta.
 #[allow(clippy::too_many_arguments)]
@@ -315,22 +382,24 @@ fn run_shard(
     cfg: &ServeConfig,
     now: Tick,
     dma: DmaModel,
+    tables: UnitTables<'_>,
 ) -> Result<ShardDelta> {
     let t0 = Instant::now();
     let mut delta = ShardDelta::default();
     let mut xfer = XferClock::new(dma, cfg.overlap);
     if cfg.lockstep {
-        run_lockstep(engine, state, work, shard, cfg, now, &mut delta, &mut xfer)?;
+        run_lockstep(engine, state, work, shard, cfg, now, &mut delta, &mut xfer, tables)?;
     } else {
-        run_serial(engine, state, work, shard, cfg, now, &mut delta, &mut xfer)?;
+        run_serial(engine, state, work, shard, cfg, now, &mut delta, &mut xfer, tables)?;
     }
     xfer.flush_into(&mut delta.stats);
     delta.stats.wall_secs = t0.elapsed().as_secs_f64();
     Ok(delta)
 }
 
-/// Pull one unit from the pool: own queue first (most urgent
-/// deadline), then — only when the shard is otherwise idle — a steal.
+/// Pull one unit from the pool — own queue first (most urgent
+/// deadline), then — only when the shard is otherwise idle — a steal —
+/// together with its flush index (the tally/prediction key).
 fn claim(
     work: &Mutex<WorkPool<WorkUnit>>,
     shard: usize,
@@ -338,15 +407,15 @@ fn claim(
     idle: bool,
     now: Tick,
     delta: &mut ShardDelta,
-) -> Option<WorkUnit> {
+) -> Option<(usize, WorkUnit)> {
     let mut pool = work.lock().expect("work pool poisoned");
-    if let Some(unit) = pool.claim_own(shard) {
-        return Some(unit);
+    if let Some(hit) = pool.claim_own_indexed(shard) {
+        return Some(hit);
     }
     if idle && cfg.steal_threshold > 0 {
-        if let Some(unit) = pool.steal(shard, cfg.steal_threshold, now) {
+        if let Some(hit) = pool.steal_indexed(shard, cfg.steal_threshold, now) {
             delta.stats.steals += 1;
-            return Some(unit);
+            return Some(hit);
         }
     }
     None
@@ -407,16 +476,19 @@ fn run_lockstep(
     now: Tick,
     delta: &mut ShardDelta,
     xfer: &mut XferClock,
+    tables: UnitTables<'_>,
 ) -> Result<()> {
-    // (inherited deadline, admission sequence, program): the first two
-    // plus the program's own prune rate are the per-round step
-    // priority.
-    let mut resident: Vec<Option<(Option<Tick>, usize, Resident)>> = Vec::new();
+    // (inherited deadline, admission sequence, program, tally): the
+    // first two plus the program's own prune rate are the per-round
+    // step priority; the tally carries the predicted-vs-actual
+    // bookkeeping to retirement.
+    let mut resident: Vec<Option<(Option<Tick>, usize, Resident, UnitTally)>> = Vec::new();
     let mut admitted = 0usize;
     loop {
         let idle = resident.is_empty();
-        if let Some(unit) = claim(work, shard, cfg, idle, now, delta) {
+        if let Some((ui, unit)) = claim(work, shard, cfg, idle, now, delta) {
             let deadline = unit.deadline();
+            let mut tally = UnitTally::new(unit.kind(), ui, tables);
             let hits0 = state.slab_cache.hits;
             let miss_bytes0 = state.slab_cache.miss_bytes;
             let secs0 = engine.device.stats().modeled_secs;
@@ -424,10 +496,9 @@ fn run_lockstep(
             // Plan-time slab builds are this unit's cold DMA traffic;
             // plan-time device work (e.g. K-means iteration 0) is its
             // first compute burst.
-            xfer.record(
-                state.slab_cache.miss_bytes.saturating_sub(miss_bytes0),
-                modeled_ns_since(engine, secs0),
-            );
+            let plan_ns = modeled_ns_since(engine, secs0);
+            xfer.record(state.slab_cache.miss_bytes.saturating_sub(miss_bytes0), plan_ns);
+            tally.actual_ns += plan_ns;
             // Slab-cache hits while planning ALONGSIDE resident
             // programs are the lockstep scheduler's own cross-program
             // sharing; hits on an idle shard are the persistent
@@ -437,7 +508,7 @@ fn run_lockstep(
                 delta.stats.lockstep_shared_tiles +=
                     state.slab_cache.hits.saturating_sub(hits0);
             }
-            resident.push(Some((deadline, admitted, planned)));
+            resident.push(Some((deadline, admitted, planned, tally)));
             admitted += 1;
         } else if resident.is_empty() {
             // Nothing to run and nothing stealable *yet*: if a victim
@@ -459,19 +530,24 @@ fn run_lockstep(
         for i in order {
             let slot = &mut resident[i];
             let converged = match slot.as_mut() {
-                Some((_, _, prog)) => {
+                Some((_, _, prog, tally)) => {
                     let secs0 = engine.device.stats().modeled_secs;
                     let outcome = step_resident(engine, prog)?;
-                    xfer.record(0, modeled_ns_since(engine, secs0));
+                    let step_ns = modeled_ns_since(engine, secs0);
+                    xfer.record(0, step_ns);
+                    tally.actual_ns += step_ns;
                     matches!(outcome, StepOutcome::Converged)
                 }
                 None => false,
             };
             if converged {
-                let (_, _, prog) = slot.take().expect("stepped program present");
+                let (_, _, prog, mut tally) = slot.take().expect("stepped program present");
                 let secs0 = engine.device.stats().modeled_secs;
                 finish_resident(engine, prog, delta)?;
-                xfer.record(0, modeled_ns_since(engine, secs0));
+                let finish_ns = modeled_ns_since(engine, secs0);
+                xfer.record(0, finish_ns);
+                tally.actual_ns += finish_ns;
+                retire_tally(delta, tally);
             }
         }
         resident.retain(|slot| slot.is_some());
@@ -492,33 +568,39 @@ fn run_serial(
     now: Tick,
     delta: &mut ShardDelta,
     xfer: &mut XferClock,
+    tables: UnitTables<'_>,
 ) -> Result<()> {
     loop {
-        let Some(unit) = claim(work, shard, cfg, true, now, delta) else {
+        let Some((ui, unit)) = claim(work, shard, cfg, true, now, delta) else {
             if steal_prospect(work, shard, cfg) {
                 std::thread::yield_now();
                 continue;
             }
             return Ok(());
         };
+        let mut tally = UnitTally::new(unit.kind(), ui, tables);
         let miss_bytes0 = state.slab_cache.miss_bytes;
         let secs0 = engine.device.stats().modeled_secs;
         let mut prog = plan_unit(engine, state, unit, cfg)?;
-        xfer.record(
-            state.slab_cache.miss_bytes.saturating_sub(miss_bytes0),
-            modeled_ns_since(engine, secs0),
-        );
+        let plan_ns = modeled_ns_since(engine, secs0);
+        xfer.record(state.slab_cache.miss_bytes.saturating_sub(miss_bytes0), plan_ns);
+        tally.actual_ns += plan_ns;
         loop {
             let secs0 = engine.device.stats().modeled_secs;
             let outcome = step_resident(engine, &mut prog)?;
-            xfer.record(0, modeled_ns_since(engine, secs0));
+            let step_ns = modeled_ns_since(engine, secs0);
+            xfer.record(0, step_ns);
+            tally.actual_ns += step_ns;
             if let StepOutcome::Converged = outcome {
                 break;
             }
         }
         let secs0 = engine.device.stats().modeled_secs;
         finish_resident(engine, prog, delta)?;
-        xfer.record(0, modeled_ns_since(engine, secs0));
+        let finish_ns = modeled_ns_since(engine, secs0);
+        xfer.record(0, finish_ns);
+        tally.actual_ns += finish_ns;
+        retire_tally(delta, tally);
     }
 }
 

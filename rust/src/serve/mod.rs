@@ -21,7 +21,8 @@
 //!   +-- placement -----------------------------------------+
 //!   | ShardPlanner: EDF-tiered LPT partition by inherited  |
 //!   |   unit deadline + cohort cost (serve.placement:      |
-//!   |   "edf-lpt" default | "lpt")                         |
+//!   |   "edf-lpt" default | "lpt" | "predicted-p99" via    |
+//!   |   the CostCalibrator's service-time predictions)     |
 //!   | EnginePool: N engine shards over one shared Runtime  |
 //!   | WorkPool: shared queue of not-yet-started units;     |
 //!   |   urgent-first claims; idle shards STEAL from busy   |
@@ -101,6 +102,7 @@
 
 mod admission;
 mod cache;
+mod calibrate;
 mod clock;
 mod exec;
 mod placement;
@@ -108,6 +110,7 @@ mod server;
 
 pub use admission::{FlushPolicy, QueryId, ServeRequest, ServeResponse};
 pub use cache::{GroupingCache, GroupingKey};
+pub use calibrate::{AlgoKind, CostCalibrator};
 pub use clock::{ticks, Clock, ClockWaker, MonotonicClock, Tick, VirtualClock};
 pub use placement::{EnginePool, ShardPlanner};
 pub use server::{ResponseHandle, Server, DRAIN_RETRY_LIMIT};
@@ -140,6 +143,21 @@ pub struct QueryBatcher {
     memo: FingerprintMemo,
     shards: Vec<ShardState>,
     stats: ServeStats,
+    /// Online cost-units → nanoseconds model (per shard × algorithm
+    /// kind), seeded analytically and corrected from every retired
+    /// unit's modeled compute — see [`CostCalibrator`].  Drives
+    /// `predicted-p99` placement, predicted-slack steals, the
+    /// predictive shed check and the predicted-vs-actual telemetry.
+    calibrator: CostCalibrator,
+    /// Per shard: measured (modeled) DMA transfer ns of the previous
+    /// flush, fed back into the movement penalties as a congestion
+    /// surcharge — a shard that just re-uploaded everything is briefly
+    /// dearer to place cold work on; a warm shard's surcharge decays
+    /// to zero after one quiet flush.
+    prev_transfer_ns: Vec<u64>,
+    /// Queries predictively shed by flushes since the last
+    /// [`QueryBatcher::take_predicted_sheds`] drain.
+    pending_sheds: Vec<QueryId>,
     /// The injected time source every deadline decision reads
     /// ([`MonotonicClock`] by default; tests inject a
     /// [`VirtualClock`]).
@@ -204,6 +222,9 @@ impl QueryBatcher {
             })
             .collect();
         let policy = FlushPolicy::from_config(&cfg);
+        let calibrator =
+            CostCalibrator::new(pool.primary().device.cost_model().clone(), pool.shard_count());
+        let prev_transfer_ns = vec![0; pool.shard_count()];
         Ok(Self {
             pool,
             cfg,
@@ -213,6 +234,9 @@ impl QueryBatcher {
             memo: FingerprintMemo::new(),
             shards,
             stats: ServeStats::default(),
+            calibrator,
+            prev_transfer_ns,
+            pending_sheds: Vec::new(),
             clock,
         })
     }
@@ -314,6 +338,20 @@ impl QueryBatcher {
         self.shards.iter().map(|s| &s.stats).collect()
     }
 
+    /// The batcher's online cost calibrator (read-only: coverage and
+    /// prediction introspection).
+    pub fn calibrator(&self) -> &CostCalibrator {
+        &self.calibrator
+    }
+
+    /// Drain the IDs of queries predictively shed by flushes since the
+    /// last call.  Shed queries are never executed and produce no
+    /// response pair; a front end (the [`Server`]) resolves their
+    /// handles with an error from this list.
+    pub fn take_predicted_sheds(&mut self) -> Vec<QueryId> {
+        std::mem::take(&mut self.pending_sheds)
+    }
+
     pub fn shard_count(&self) -> usize {
         self.pool.shard_count()
     }
@@ -370,9 +408,17 @@ impl QueryBatcher {
     /// already holds the unit's packed slabs (matched by content
     /// fingerprint) is cheap; a cold shard pays the modeled DMA upload
     /// of the unit's footprint, converted to equivalent compute via
-    /// the device cost model.  Empty when movement-awareness is off or
-    /// trivially irrelevant (one shard) — the planner and the stealer
-    /// then behave exactly as before.
+    /// the device cost model.  On top of the analytical upload cost,
+    /// each shard pays a **measured congestion surcharge**: half of
+    /// the previous flush's observed transfer time on that shard
+    /// (converted back to cost units), so the overlap timeline the
+    /// exec layer already measures feeds placement — a shard that just
+    /// re-uploaded everything is briefly dearer, and a warm shard's
+    /// penalty drops after one flush (warm bytes cancel the upload
+    /// term, and a quiet flush decays the surcharge to zero).  Empty
+    /// when movement-awareness is off or trivially irrelevant (one
+    /// shard) — the planner and the stealer then behave exactly as
+    /// before.
     fn movement_table(&self, units: &[WorkUnit]) -> Vec<Vec<u64>> {
         if !self.cfg.movement_aware || self.pool.shard_count() <= 1 {
             return Vec::new();
@@ -389,7 +435,13 @@ impl QueryBatcher {
                     .enumerate()
                     .map(|(s, state)| {
                         let warm = state.slab_cache.warm_bytes_for(fp).min(bytes);
-                        cost.move_penalty_units(topo.dma_for_shard(s), bytes - warm, d)
+                        let upload =
+                            cost.move_penalty_units(topo.dma_for_shard(s), bytes - warm, d);
+                        let congestion = xfer_feedback_units(
+                            self.prev_transfer_ns.get(s).copied().unwrap_or(0),
+                            cost.pairs_per_sec(d),
+                        );
+                        upload.saturating_add(congestion)
                     })
                     .collect()
             })
@@ -420,18 +472,83 @@ impl QueryBatcher {
         for &i in &sel {
             admission::validate_request(&self.queue.get(i).req, &tile)?;
         }
-        let batch = self.queue.remove_selected(&sel);
+        let mut batch = self.queue.remove_selected(&sel);
+        if self.cfg.predictive_shed {
+            // Early deadline shedding: drop a selected query only when
+            // its OWN deadline already expired at selection time — a
+            // certain reactive miss (met/missed is judged at service
+            // START, so the reactive path would count it missed too) —
+            // AND the calibrated completion estimate overshoots it.
+            // The second condition is implied by the first (predicted
+            // service time is never negative), which is exactly what
+            // makes the shed safe: no query the reactive path would
+            // have served within deadline is ever shed.
+            let shard0_kind_pred = |p: &admission::Pending| {
+                self.calibrator.predict_ns(0, p.req.kind(), p.req.solo_cost_units(), p.req.dim())
+            };
+            let mut kept = Vec::with_capacity(batch.len());
+            for p in batch {
+                let doomed = p.deadline.is_some_and(|d| {
+                    d < flush_now && flush_now.saturating_add(shard0_kind_pred(&p)) > d
+                });
+                if doomed {
+                    self.stats.predicted_sheds += 1;
+                    self.pending_sheds.push(p.id);
+                } else {
+                    kept.push(p);
+                }
+            }
+            batch = kept;
+            if batch.is_empty() {
+                self.memo.prune(&self.queue);
+                return Ok(Vec::new());
+            }
+        }
         let units = admission::partition(&batch, self.cfg.dedup, &mut self.memo);
         let costs: Vec<u64> = units.iter().map(|u| u.cost_estimate(self.cfg.dedup)).collect();
         let deadlines: Vec<Option<Tick>> = units.iter().map(|u| u.deadline()).collect();
         let move_units = self.movement_table(&units);
-        let assignments = ShardPlanner::plan_with_movement(
-            &costs,
-            &deadlines,
-            &move_units,
-            self.pool.shard_count(),
-            self.placement,
-        );
+        let n_shards = self.pool.shard_count();
+        // Calibrated per-unit × per-shard predicted service ns:
+        // compute (calibrated rate × planner cost) plus the unit's
+        // movement penalty on that shard, both in the same cost
+        // currency the rate was learned on.  Always computed — the
+        // predicted-vs-actual telemetry is on for every flush.
+        let pred_table: Vec<Vec<u64>> = units
+            .iter()
+            .enumerate()
+            .map(|(i, u)| {
+                let (kind, d) = (u.kind(), u.dim());
+                (0..n_shards)
+                    .map(|s| {
+                        let move_cost =
+                            move_units.get(i).and_then(|row| row.get(s)).copied().unwrap_or(0);
+                        self.calibrator.predict_ns(s, kind, costs[i].saturating_add(move_cost), d)
+                    })
+                    .collect()
+            })
+            .collect();
+        let assignments = match self.placement {
+            PlacementMode::PredictedP99 => {
+                ShardPlanner::plan_predicted_p99(&pred_table, &deadlines, n_shards, flush_now)
+            }
+            _ => ShardPlanner::plan_with_movement(
+                &costs,
+                &deadlines,
+                &move_units,
+                n_shards,
+                self.placement,
+            ),
+        };
+        // Each unit's prediction on the shard it was actually placed
+        // on: the predicted-slack steal horizon and the error baseline.
+        let mut home = vec![0usize; units.len()];
+        for (s, list) in assignments.iter().enumerate() {
+            for &i in list {
+                home[i] = s;
+            }
+        }
+        let pred_ns: Vec<u64> = (0..units.len()).map(|i| pred_table[i][home[i]]).collect();
         let executed = exec::execute_plan(
             &mut self.pool,
             &mut self.shards,
@@ -439,6 +556,7 @@ impl QueryBatcher {
             costs,
             deadlines,
             move_units,
+            pred_ns,
             &assignments,
             batch.len(),
             &self.cfg,
@@ -454,6 +572,17 @@ impl QueryBatcher {
                 self.stats.content_full_scans = self.memo.full_scans;
                 self.stats.wall_secs += t0.elapsed().as_secs_f64();
                 exec::commit_deltas(&mut self.shards, &deltas, &mut self.stats);
+                // Calibrator feedback (shard order, retirement order
+                // within a shard — deterministic) and the measured
+                // transfer feedback for the next flush's movement
+                // penalties.  Only committed flushes teach the model:
+                // a failed flush's deltas are dropped wholesale.
+                for (s, delta) in deltas.iter().enumerate() {
+                    for o in &delta.observations {
+                        self.calibrator.observe(s, o.kind, o.cost_units, o.actual_ns);
+                    }
+                    self.prev_transfer_ns[s] = delta.stats.transfer_ns;
+                }
                 // Latency / deadline accounting: one sample per
                 // answered query, on the merged view and on the
                 // executing shard's.  Latency runs submit -> response
@@ -488,5 +617,34 @@ impl QueryBatcher {
         };
         self.memo.prune(&self.queue);
         out
+    }
+}
+
+/// Measured-transfer congestion surcharge, in planner cost units: half
+/// of the shard's previous-flush transfer time converted through the
+/// same pair-throughput the analytical movement penalty uses.  Half,
+/// not all: the feedback is a hint layered on a model that already
+/// charges the upload itself — full weight would double-count a cold
+/// upload, half keeps the surcharge strictly below the analytical
+/// penalty it echoes, so one quiet flush always drops a warm shard's
+/// total penalty.
+fn xfer_feedback_units(prev_transfer_ns: u64, pairs_per_sec: f64) -> u64 {
+    ((prev_transfer_ns as f64 * 1e-9 * pairs_per_sec) as u64) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xfer_feedback_is_half_the_equivalent_compute_and_decays_to_zero() {
+        // 1 ms of measured transfer at 2e9 pairs/sec == 2_000_000
+        // equivalent units; the surcharge is half that.
+        assert_eq!(xfer_feedback_units(1_000_000, 2.0e9), 1_000_000);
+        // A quiet previous flush charges nothing.
+        assert_eq!(xfer_feedback_units(0, 2.0e9), 0);
+        // Strictly below the full equivalent, so warm-shard penalties
+        // can only drop once the upload term is cancelled by warmth.
+        assert!(xfer_feedback_units(123_456, 3.7e9) * 2 <= (123_456f64 * 1e-9 * 3.7e9) as u64);
     }
 }

@@ -25,6 +25,12 @@
 //!   deadline-ordered claims, are claimed first on their shard.  With
 //!   no deadlines (or one shared deadline) the tier structure
 //!   collapses and `edf-lpt` IS pure LPT.
+//! * **`predicted-p99`** — the calibrated tail-bounder
+//!   ([`ShardPlanner::plan_predicted_p99`]): units are priced in
+//!   predicted nanoseconds through `serve::calibrate` and each goes to
+//!   the shard whose predicted finish time keeps it inside its
+//!   deadline, bounding per-shard predicted tails instead of abstract
+//!   makespan.
 //!
 //! The planner balances *a-priori estimates*; when they misfire
 //! (skewed filter survival, a cohort converging early), the
@@ -198,6 +204,60 @@ impl ShardPlanner {
         }
         out
     }
+
+    /// Calibrated tail-bounding assignment ([`PlacementMode::PredictedP99`]):
+    /// `pred_ns[i][s]` is the calibrated predicted service time of unit
+    /// `i` on shard `s` in clock nanoseconds (compute plus the shard's
+    /// modeled cold-transfer time), on the same timeline as
+    /// `deadlines`.  Units are ordered EDF-first (predicted size
+    /// descending within a tier), and each goes to the shard whose
+    /// predicted finish time keeps the unit inside its deadline —
+    /// preferring (1) shards where the unit would NOT miss, then
+    /// (2) the earliest predicted finish, then (3) the lowest shard
+    /// index.  Minimizing each unit's predicted finish bounds the
+    /// per-shard tail directly instead of balancing abstract makespan:
+    /// a shard predicted to be slow for a kind (learned rate) absorbs
+    /// less of that kind even when raw cost balancing would load it.
+    ///
+    /// `now` anchors the timeline: every shard's first unit starts at
+    /// `now`, so `deadlines` (absolute ticks) compare directly.
+    /// Deterministic for fixed inputs; order-only by construction
+    /// (every unit still runs — placement never drops work).
+    pub fn plan_predicted_p99(
+        pred_ns: &[Vec<u64>],
+        deadlines: &[Option<Tick>],
+        shards: usize,
+        now: Tick,
+    ) -> Vec<Vec<usize>> {
+        debug_assert_eq!(pred_ns.len(), deadlines.len());
+        let shards = shards.max(1);
+        let n = pred_ns.len();
+        // Tier-first order mirrors EDF-LPT; within a tier, the unit's
+        // best-case (min over shards) prediction stands in for cost.
+        let size = |i: usize| pred_ns[i].iter().copied().min().unwrap_or(0);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            let tier = |i: usize| deadlines[i].unwrap_or(Tick::MAX);
+            tier(a).cmp(&tier(b)).then(size(b).cmp(&size(a))).then(a.cmp(&b))
+        });
+        let mut finish = vec![now; shards];
+        let mut out = vec![Vec::new(); shards];
+        for i in order {
+            let deadline = deadlines[i].unwrap_or(Tick::MAX);
+            let s = (0..shards)
+                .min_by_key(|&s| {
+                    let done = finish[s].saturating_add(pred_ns[i].get(s).copied().unwrap_or(0));
+                    (done > deadline, done, s)
+                })
+                .expect("at least one shard");
+            finish[s] = finish[s].saturating_add(pred_ns[i].get(s).copied().unwrap_or(0).max(1));
+            out[s].push(i);
+        }
+        for units in &mut out {
+            units.sort_unstable();
+        }
+        out
+    }
 }
 
 /// Flush-scoped shared queue of not-yet-started work units, one
@@ -216,11 +276,14 @@ impl ShardPlanner {
 ///   robbing it would merely relocate work and its cache warm-up);
 /// * every candidate must cost at least `min_cost` — tiny units are
 ///   not worth migrating;
-/// * when any candidate's deadline is **at risk** (expired at `now`),
-///   the most urgent such unit wins (ties: higher cost, then lowest
-///   unit index) — an idle thief rescues the deadline instead of
-///   grabbing bulk; otherwise the most expensive candidate wins
-///   (ties: lowest unit index), the classic makespan correction.
+/// * when any candidate's deadline is **at risk** — its deadline lands
+///   inside the unit's calibrated predicted service window starting
+///   `now` ([`WorkPool::set_predictions`]), or, without predictions,
+///   has already expired — the most urgent such unit wins (ties:
+///   higher cost, then lowest unit index) — an idle thief rescues the
+///   deadline *before* it expires instead of after; otherwise the most
+///   expensive candidate wins (ties: lowest unit index), the classic
+///   makespan correction.
 ///
 /// Generic over the unit type so the policy is testable without
 /// constructing real cohorts.
@@ -234,6 +297,13 @@ pub(crate) struct WorkPool<T> {
     /// absolute, not row-normalized: the thief pays exactly its own
     /// cold bytes, wherever the unit was planned.
     move_units: Vec<Vec<u64>>,
+    /// `pred_ns[i]`: calibrated predicted service nanoseconds of unit
+    /// `i` (empty = no calibration).  Stealing judges a unit at-risk
+    /// on *predicted* slack deficit — its deadline lands inside
+    /// `now + pred_ns[i]` — instead of waiting for the deadline to
+    /// expire outright, so an idle thief rescues the unit while the
+    /// rescue can still succeed.
+    pred_ns: Vec<u64>,
     pending: Vec<VecDeque<usize>>,
     claimed: Vec<usize>,
 }
@@ -269,9 +339,18 @@ impl<T> WorkPool<T> {
             costs,
             deadlines,
             move_units,
+            pred_ns: Vec::new(),
             pending: assignments.iter().map(|idxs| idxs.iter().copied().collect()).collect(),
             claimed: vec![0; assignments.len()],
         }
+    }
+
+    /// Attach calibrated per-unit service-time predictions (see the
+    /// `pred_ns` field docs).  Empty (the default) keeps the legacy
+    /// expired-only at-risk rule.
+    pub fn set_predictions(&mut self, pred_ns: Vec<u64>) {
+        debug_assert!(pred_ns.is_empty() || pred_ns.len() == self.slots.len());
+        self.pred_ns = pred_ns;
     }
 
     /// What stealing unit `i` is worth to `thief`: the unit's cost
@@ -300,10 +379,16 @@ impl<T> WorkPool<T> {
     /// deadline first (placement order among equals and for
     /// deadline-free units).
     pub fn claim_own(&mut self, shard: usize) -> Option<T> {
+        self.claim_own_indexed(shard).map(|(_, unit)| unit)
+    }
+
+    /// [`WorkPool::claim_own`] plus the claimed unit's flush-scoped
+    /// index (the key into the per-unit cost/prediction tables).
+    pub fn claim_own_indexed(&mut self, shard: usize) -> Option<(usize, T)> {
         let pos = self.claim_pos(shard)?;
         let i = self.pending[shard].remove(pos).expect("claim position in range");
         self.claimed[shard] += 1;
-        Some(self.slots[i].take().expect("unit claimed twice"))
+        Some((i, self.slots[i].take().expect("unit claimed twice")))
     }
 
     /// Whether some OTHER shard still holds a pending unit that meets
@@ -347,6 +432,12 @@ impl<T> WorkPool<T> {
     /// smaller unit whose slabs are warm on the thief beats a bigger
     /// one that would force a full slab re-transfer.
     pub fn steal(&mut self, thief: usize, min_cost: u64, now: Tick) -> Option<T> {
+        self.steal_indexed(thief, min_cost, now).map(|(_, unit)| unit)
+    }
+
+    /// [`WorkPool::steal`] plus the stolen unit's flush-scoped index
+    /// (the key into the per-unit cost/prediction tables).
+    pub fn steal_indexed(&mut self, thief: usize, min_cost: u64, now: Tick) -> Option<(usize, T)> {
         // (at-risk deadline or MAX, value, unit, victim); at-risk
         // units dominate, then urgency, then the max-value rule.
         let mut best: Option<(Tick, u64, usize, usize)> = None;
@@ -364,8 +455,14 @@ impl<T> WorkPool<T> {
                 if cost < min_cost {
                     continue;
                 }
+                // At-risk: the deadline falls inside the unit's
+                // predicted service window starting now — i.e. even an
+                // immediate start is predicted to (or did) run past it.
+                // Without predictions this degrades to "expired".
+                let horizon =
+                    now.saturating_add(self.pred_ns.get(i).copied().unwrap_or(0));
                 let risk = match self.deadlines[i] {
-                    Some(d) if d <= now => d,
+                    Some(d) if d <= horizon => d,
                     _ => Tick::MAX,
                 };
                 let better = match best {
@@ -384,7 +481,7 @@ impl<T> WorkPool<T> {
         let (_, _, i, victim) = best?;
         self.pending[victim].retain(|&x| x != i);
         self.claimed[thief] += 1;
-        Some(self.slots[i].take().expect("unit stolen twice"))
+        Some((i, self.slots[i].take().expect("unit stolen twice")))
     }
 }
 
@@ -754,6 +851,108 @@ mod tests {
         );
         assert!(!p2.stealable_prospect(1, 5));
         assert!(p2.stealable_prospect(2, 5), "shard 2 is warm: full value 50");
+    }
+
+    // --- predicted-p99 placement & predicted-slack stealing ------------
+
+    #[test]
+    fn predicted_p99_avoids_the_shard_predicted_to_miss() {
+        // Unit 0 (deadline 100) is predicted at 50 ns on shard 0 but
+        // 150 ns on shard 1 (say shard 1's learned rate is slow for
+        // its kind).  Makespan balancing is indifferent when loads tie
+        // — the tail-bounder must pick the shard that meets the
+        // deadline.
+        let pred = vec![vec![50u64, 150]];
+        let parts =
+            ShardPlanner::plan_predicted_p99(&pred, &[Some(100u64)], 2, 0);
+        assert_eq!(parts, vec![vec![0], vec![]]);
+        // Anchored at now=80 even shard 0 is predicted to miss (done
+        // 130 > 100): it still wins on earliest predicted finish.
+        let parts =
+            ShardPlanner::plan_predicted_p99(&pred, &[Some(100u64)], 2, 80);
+        assert_eq!(parts, vec![vec![0], vec![]]);
+    }
+
+    #[test]
+    fn predicted_p99_bounds_tails_rather_than_makespan() {
+        // Three urgent units (deadline 100) of 60 ns each, one patient
+        // 200 ns unit.  Tail-bounding packs at most one urgent unit
+        // per shard before any shard's finish exceeds 100, and the
+        // patient unit lands wherever it finishes earliest.
+        let pred: Vec<Vec<u64>> = vec![
+            vec![60, 60],
+            vec![60, 60],
+            vec![60, 60],
+            vec![200, 200],
+        ];
+        let deadlines = [Some(100u64), Some(100), Some(100), None];
+        let parts = ShardPlanner::plan_predicted_p99(&pred, &deadlines, 2, 0);
+        // Units 0,1 land on distinct shards (both meet the deadline);
+        // unit 2 must miss somewhere — earliest finish breaks the tie.
+        let all: Vec<usize> = flatten(parts.clone());
+        assert_eq!(all, vec![0, 1, 2, 3], "every unit assigned exactly once");
+        assert!(
+            !parts[0].contains(&0) || !parts[0].contains(&1),
+            "two urgent units never stack while the other shard is free: {parts:?}"
+        );
+        // Deterministic.
+        assert_eq!(parts, ShardPlanner::plan_predicted_p99(&pred, &deadlines, 2, 0));
+    }
+
+    #[test]
+    fn predicted_p99_single_shard_and_empty_are_trivial() {
+        assert_eq!(
+            ShardPlanner::plan_predicted_p99(&[vec![10], vec![20]], &[None, None], 1, 0),
+            vec![vec![0, 1]]
+        );
+        let empty: Vec<Vec<u64>> = Vec::new();
+        assert_eq!(
+            ShardPlanner::plan_predicted_p99(&empty, &[], 3, 0),
+            vec![Vec::<usize>::new(); 3]
+        );
+    }
+
+    #[test]
+    fn steal_fires_on_predicted_slack_deficit_before_expiry() {
+        // Victim backlog: "doomed" has deadline 1_000 and a predicted
+        // service time of 900 ns.  At now=200 the old rule sees
+        // nothing at risk (1_000 > 200); the predicted rule sees
+        // 1_000 <= 200 + 900 and rescues it ahead of the heavy unit.
+        let build = || -> WorkPool<&'static str> {
+            WorkPool::new(
+                vec!["first", "heavy", "doomed"],
+                vec![60, 50, 10],
+                vec![None, None, Some(1_000)],
+                &[vec![0, 1, 2], vec![]],
+            )
+        };
+        let mut blind = build();
+        assert_eq!(blind.claim_own(0), Some("doomed"), "owner claims most urgent first");
+        assert_eq!(blind.steal(1, 1, 200), Some("heavy"), "expired-only rule grabs bulk");
+        // "doomed" goes first to its owner above — probe the thief's
+        // choice with it still pending behind another urgent unit.
+        let mut p: WorkPool<&'static str> = WorkPool::new(
+            vec!["urgent-now", "heavy", "doomed"],
+            vec![10, 50, 10],
+            vec![Some(150), None, Some(1_000)],
+            &[vec![0, 1, 2], vec![]],
+        );
+        p.set_predictions(vec![0, 0, 900]);
+        assert_eq!(p.claim_own(0), Some("urgent-now"));
+        assert_eq!(
+            p.steal(1, 1, 200),
+            Some("doomed"),
+            "predicted slack deficit beats the max-cost rule before expiry"
+        );
+        // Without predictions the same state steals the heavy unit.
+        let mut q: WorkPool<&'static str> = WorkPool::new(
+            vec!["urgent-now", "heavy", "doomed"],
+            vec![10, 50, 10],
+            vec![Some(150), None, Some(1_000)],
+            &[vec![0, 1, 2], vec![]],
+        );
+        assert_eq!(q.claim_own(0), Some("urgent-now"));
+        assert_eq!(q.steal(1, 1, 200), Some("heavy"));
     }
 
     #[test]

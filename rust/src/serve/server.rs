@@ -352,6 +352,25 @@ fn resolve_failure(shared: &Shared, slot: &Arc<Slot>, err: Error) {
     slot.ready.notify_all();
 }
 
+/// Resolve predictively shed queries' handles
+/// ([`QueryBatcher::take_predicted_sheds`]): the query was never
+/// executed — its deadline had already expired at selection time and
+/// the calibrated completion estimate overshot it — so its handle
+/// fails with a recognizable error instead of hanging.
+fn resolve_sheds(shared: &Shared, slots: &mut HashMap<QueryId, Arc<Slot>>, sheds: Vec<QueryId>) {
+    for id in sheds {
+        if let Some(slot) = slots.remove(&id) {
+            resolve_failure(
+                shared,
+                &slot,
+                Error::Serve(
+                    "query predictively shed: deadline expired before service began".into(),
+                ),
+            );
+        }
+    }
+}
+
 /// Resolve a successful flush's responses and release their slots.
 fn resolve_responses(
     shared: &Shared,
@@ -390,6 +409,7 @@ fn drain(shared: &Shared, b: &mut QueryBatcher, slots: &mut HashMap<QueryId, Arc
         match b.flush() {
             Ok(responses) => {
                 consecutive_failures = 0;
+                resolve_sheds(shared, slots, b.take_predicted_sheds());
                 resolve_responses(shared, slots, responses);
             }
             Err(e) => {
@@ -450,14 +470,22 @@ fn scheduler(shared: &Shared, batcher: &Mutex<QueryBatcher>) {
             wake = b.next_wakeup();
             if !backoff && wake.is_some_and(|t| t <= now) {
                 match serve_once(&mut b) {
-                    Ok(responses) if !responses.is_empty() => {
+                    Ok(responses) => {
+                        // Predictive sheds resolve their own handles
+                        // (no response pair exists for them) and count
+                        // as progress: re-evaluate triggers.
+                        let sheds = b.take_predicted_sheds();
+                        let progressed = !responses.is_empty() || !sheds.is_empty();
+                        resolve_sheds(shared, &mut slots, sheds);
                         resolve_responses(shared, &mut slots, responses);
-                        continue; // re-evaluate triggers immediately
+                        if progressed {
+                            continue; // re-evaluate triggers immediately
+                        }
+                        // An empty success while due cannot normally
+                        // happen — wait for the next event rather than
+                        // spin.
+                        backoff = true;
                     }
-                    // An empty success while due cannot normally
-                    // happen — wait for the next event rather than
-                    // spin.
-                    Ok(_) => backoff = true,
                     // The failed flush requeued its batch in order;
                     // retry at the next wake event.
                     Err(_) => {

@@ -13,7 +13,8 @@ use accd::config::AccdConfig;
 use accd::coordinator::Engine;
 use accd::data::{synthetic, Dataset, Matrix};
 use accd::gti::Metric;
-use accd::serve::{QueryBatcher, ServeRequest, ServeResponse};
+use accd::serve::{AlgoKind, QueryBatcher, ServeRequest, ServeResponse, VirtualClock};
+use accd::util::rng::Rng;
 
 fn fresh_engine() -> Engine {
     Engine::new(AccdConfig::new()).expect("engine")
@@ -614,6 +615,225 @@ fn overlap_and_movement_knobs_change_only_counters() {
             "the overlap knob must not change placement or upload bytes"
         );
     }
+}
+
+/// The calibration acceptance sweep: `predictive_shed` and the
+/// `predicted-p99` placement mode are order-only knobs — bit-for-bit
+/// against solo runs across devices × shards × stealing × placement.
+/// The clock is a frozen `VirtualClock`, so no deadline ever expires:
+/// predictive admission must shed nothing and full parity must hold
+/// even while the calibrated predictions steer placement and steals.
+#[test]
+fn predictive_scheduling_sweep_is_bit_transparent() {
+    let queries = mixed_workload();
+    let mut solo = fresh_engine();
+    let want: Vec<ServeResponse> =
+        queries.iter().map(|q| solo_response(&mut solo, q)).collect();
+    for placement in ["edf-lpt", "predicted-p99"] {
+        for devices in [1usize, 2] {
+            for shards in [1usize, 2] {
+                for steal in [0u64, 1] {
+                    let mut cfg = AccdConfig::new();
+                    cfg.serve.shards = shards;
+                    cfg.serve.devices = devices;
+                    cfg.serve.steal_threshold = steal;
+                    cfg.serve.placement = placement.to_string();
+                    cfg.serve.predictive_shed = true;
+                    cfg.serve.device_mem_bytes = if devices > 1 { 1 << 16 } else { 0 };
+                    let mut batcher = QueryBatcher::with_clock(
+                        Engine::new(cfg.clone()).expect("engine"),
+                        cfg.serve,
+                        Arc::new(VirtualClock::new()),
+                    );
+                    for (i, q) in queries.iter().enumerate() {
+                        if i % 2 == 0 {
+                            batcher.submit_with_deadline(q.clone(), Duration::ZERO);
+                        } else {
+                            batcher
+                                .submit_with_deadline(q.clone(), Duration::from_secs(3600));
+                        }
+                    }
+                    let out = batcher.flush().expect("flush");
+                    assert_eq!(out.len(), queries.len());
+                    for (i, (_, resp)) in out.iter().enumerate() {
+                        let what = format!(
+                            "{placement}, predictive, {devices} devices, {shards} shards, \
+                             steal={steal}, query {i}"
+                        );
+                        assert_same_response(resp, &want[i], &what);
+                    }
+                    assert!(
+                        batcher.take_predicted_sheds().is_empty(),
+                        "frozen clock: no deadline expired, nothing may shed"
+                    );
+                    let stats = batcher.stats();
+                    assert_eq!(stats.predicted_sheds, 0, "{stats:?}");
+                    assert_eq!(
+                        stats.deadline_met + stats.deadline_misses,
+                        queries.len() as u64,
+                        "{stats:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Early deadline shedding, the accounting contract: exactly the
+/// expired query is shed (reported via `take_predicted_sheds`, counted
+/// in `predicted_sheds`, NOT in `deadline_misses`), every survivor is
+/// served bit-identically, and the shed id never appears in the
+/// response stream.
+#[test]
+fn predictive_shed_drops_only_expired_queries_and_reports_them() {
+    let queries = mixed_workload();
+    let mut solo = fresh_engine();
+    let mut cfg = AccdConfig::new();
+    cfg.serve.shards = 2;
+    cfg.serve.predictive_shed = true;
+    let clock = VirtualClock::new();
+    let mut batcher = QueryBatcher::with_clock(
+        Engine::new(cfg.clone()).expect("engine"),
+        cfg.serve,
+        Arc::new(clock.clone()),
+    );
+    // The first query's deadline expires before the flush; the rest
+    // stay serviceable (including query 3, a duplicate of the doomed
+    // request under its own generous deadline — it must still run).
+    let doomed = batcher.submit_with_deadline(queries[0].clone(), Duration::from_millis(1));
+    for q in &queries[1..] {
+        batcher.submit_with_deadline(q.clone(), Duration::from_secs(3600));
+    }
+    clock.advance(Duration::from_millis(5));
+    let out = batcher.flush().expect("flush");
+    let sheds = batcher.take_predicted_sheds();
+    assert_eq!(sheds, vec![doomed], "exactly the expired query is shed");
+    assert_eq!(out.len(), queries.len() - 1);
+    for (j, (id, resp)) in out.iter().enumerate() {
+        assert_ne!(*id, doomed, "shed query must produce no response");
+        assert_matches_solo(resp, &queries[j + 1], &mut solo, &format!("survivor {}", j + 1));
+    }
+    let stats = batcher.stats();
+    assert_eq!(stats.predicted_sheds, 1, "{stats:?}");
+    assert_eq!(stats.deadline_misses, 0, "a shed query is not a miss: {stats:?}");
+    assert_eq!(stats.deadline_met, (queries.len() - 1) as u64, "{stats:?}");
+}
+
+/// The shedding safety property, end to end: across seeded arrival /
+/// deadline traces, a query the reactive path would have served
+/// within its deadline (service start <= deadline) is NEVER
+/// predictively shed — shedding only converts certain reactive misses
+/// into early rejections, never creates a new one.
+#[test]
+fn predictive_shedding_never_drops_a_reactively_met_query() {
+    let queries = mixed_workload();
+    let mut solo = fresh_engine();
+    let want: Vec<ServeResponse> =
+        queries.iter().map(|q| solo_response(&mut solo, q)).collect();
+    for seed in 0..6u64 {
+        // One deterministic trace per seed: arrival gap + deadline
+        // budget per query, shared verbatim by both runs.
+        let mut rng = Rng::new(0x5EED_0000 + seed);
+        let trace: Vec<(u64, u64)> = queries
+            .iter()
+            .map(|_| (rng.below(2_000_000) as u64 + 1, rng.below(4_000_000) as u64 + 1))
+            .collect();
+        let mut reactive_misses = 0u64;
+        for predictive in [false, true] {
+            let mut cfg = AccdConfig::new();
+            cfg.serve.shards = 2;
+            cfg.serve.predictive_shed = predictive;
+            let clock = VirtualClock::new();
+            let mut batcher = QueryBatcher::with_clock(
+                Engine::new(cfg.clone()).expect("engine"),
+                cfg.serve,
+                Arc::new(clock.clone()),
+            );
+            let mut now = 0u64;
+            let mut ids = Vec::new();
+            let mut deadline_at = Vec::new();
+            for (q, &(gap, budget)) in queries.iter().zip(&trace) {
+                clock.advance(Duration::from_nanos(gap));
+                now += gap;
+                ids.push(
+                    batcher.submit_with_deadline(q.clone(), Duration::from_nanos(budget)),
+                );
+                deadline_at.push(now + budget);
+            }
+            clock.advance(Duration::from_millis(1));
+            let flush_at = now + 1_000_000;
+            let out = batcher.flush().expect("flush");
+            let sheds = batcher.take_predicted_sheds();
+            assert_eq!(out.len() + sheds.len(), queries.len(), "seed {seed}: lost queries");
+            for id in &sheds {
+                let qi = ids.iter().position(|x| x == id).expect("known id");
+                assert!(
+                    deadline_at[qi] < flush_at,
+                    "seed {seed}: query {qi} was shed although the reactive path would \
+                     have started serving it before its deadline"
+                );
+            }
+            for (id, resp) in &out {
+                let qi = ids.iter().position(|x| x == id).expect("known id");
+                assert_same_response(resp, &want[qi], &format!("seed {seed}, query {qi}"));
+            }
+            let stats = batcher.stats();
+            if predictive {
+                assert_eq!(
+                    stats.deadline_misses + stats.predicted_sheds,
+                    reactive_misses,
+                    "seed {seed}: shedding must only reclassify reactive misses"
+                );
+            } else {
+                assert!(sheds.is_empty(), "seed {seed}: reactive run must never shed");
+                reactive_misses = stats.deadline_misses;
+            }
+        }
+    }
+}
+
+/// The calibrator is a pure fold over the flush sequence: two
+/// batchers fed the identical workload in the identical order learn
+/// bit-identical rates, and every algorithm kind in the workload
+/// warms at least one (shard, kind) cell.
+#[test]
+fn calibrator_warms_deterministically_across_identical_runs() {
+    let queries = mixed_workload();
+    let kinds = [AlgoKind::Knn, AlgoKind::Kmeans, AlgoKind::Nbody];
+    let run = || {
+        let mut cfg = AccdConfig::new();
+        cfg.serve.shards = 2;
+        let mut batcher = QueryBatcher::with_clock(
+            Engine::new(cfg.clone()).expect("engine"),
+            cfg.serve,
+            Arc::new(VirtualClock::new()),
+        );
+        for _round in 0..2 {
+            for q in &queries {
+                batcher.submit(q.clone());
+            }
+            batcher.flush().expect("flush");
+        }
+        let calib = batcher.calibrator();
+        assert!(calib.observations() > 0, "flushes must feed the calibrator");
+        for kind in kinds {
+            assert!(
+                (0..2).any(|s| calib.is_warm(s, kind)),
+                "every kind in the workload must warm some shard cell"
+            );
+        }
+        let mut probes = Vec::new();
+        for shard in 0..2 {
+            for kind in kinds {
+                for units in [1_000u64, 50_000, 2_000_000] {
+                    probes.push(calib.predict_ns(shard, kind, units, 6));
+                }
+            }
+        }
+        probes
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a, b, "same workload, same flush order => identical learned rates");
 }
 
 #[test]

@@ -35,6 +35,14 @@ Hard invariants (any run, no baseline needed):
 * every ``kmeans*`` scenario must report ``prune_rate`` > 0 — later
   iterations of a repeated cohort must prune SOMETHING, or the
   incremental TI path has silently died.
+* ``predicted_sheds`` must be 0 everywhere EXCEPT scenarios with
+  ``predictive`` in the name (the only rows that enable
+  ``serve.predictive_shed``), which must report ``predicted_sheds``
+  > 0 under their deliberate saturation.
+* paired diurnal rows from the SAME run: the ``*_predictive_*`` row
+  must not report more ``deadline_misses`` than its ``*_reactive_*``
+  twin — predictive early shedding exists to convert certain misses
+  into cheap rejections, never to create new misses.
 
 A baseline value of ``null`` is record-only: the metric is printed but
 not judged for that scenario (used for host-dependent values in an
@@ -107,6 +115,33 @@ def main():
                 failures.append(
                     f"{name}: prune_rate = {prune} (must be > 0 — incremental "
                     "TI pruning produced nothing after iteration 1)")
+        psheds = row.get("predicted_sheds", 0)
+        if "predictive" in name:
+            if not psheds:
+                failures.append(
+                    f"{name}: predicted_sheds = 0 (saturated predictive "
+                    "scenario must shed — early deadline shedding produced "
+                    "nothing)")
+        elif psheds:
+            failures.append(
+                f"{name}: predicted_sheds = {psheds:g} (must be 0 — "
+                "predictive_shed is off for this scenario)")
+
+    # Paired same-run rule: predictive shedding must never cost misses
+    # relative to its reactive twin (identical trace, same run).
+    for name, row in sorted(cur_rows.items()):
+        if "_predictive_" not in name:
+            continue
+        twin = cur_rows.get(name.replace("_predictive_", "_reactive_"))
+        if twin is None:
+            continue
+        pred_miss = row.get("deadline_misses", 0)
+        react_miss = twin.get("deadline_misses", 0)
+        if pred_miss > react_miss:
+            failures.append(
+                f"{name}: deadline_misses {pred_miss:g} exceeds the reactive "
+                f"twin's {react_miss:g} — predictive shedding created misses "
+                "instead of absorbing them")
 
     print(f"{current_path}: {len(cur_rows)} scenario(s), "
           f"fast_mode={current.get('fast_mode')}")
