@@ -7,7 +7,12 @@
 //! sharing packed assignment tiles across same-dataset programs AND
 //! the incremental TI bounds pruning device work from iteration 2 on
 //! (the row carries a `prune_rate`; the smoke run FAILS if later
-//! iterations prune nothing), plus
+//! iterations prune nothing), plus a deduplicated range-join cohort
+//! (radius queries whose sources share the target's cluster centers,
+//! so the group-level lower bounds prove most group pairs outside the
+//! threshold; the row carries a group-pair `prune_rate` and the smoke
+//! run FAILS if the bounds prune nothing or no within-threshold pair
+//! is ever emitted), plus
 //! a deadline/latency scenario (EDF-LPT placement, staggered generous
 //! deadlines) that emits p50/p95/p99 latency + deadline met/miss
 //! counts and FAILS the smoke run if the deadline-aware planner
@@ -379,6 +384,104 @@ fn main() {
             "FAIL: multi-iteration kmeans cohort pruned nothing after iteration 1 \
              ({} points pruned, {} tiles skipped) — incremental TI pruning regressed",
             km_stats.points_pruned, km_stats.tiles_skipped
+        );
+        std::process::exit(1);
+    }
+
+    // --- Range-join cohort: GTI group-level pruning on radius queries ------
+    // Four radius queries, each submitted twice (dedup answers the
+    // repeat from the same execution), against one clustered target.
+    // The sources are drawn with the target's generator seed, so they
+    // share its cluster centers: every query has real within-threshold
+    // matches, while almost every cross-cluster group pair is provably
+    // outside the threshold — the group-level lower bound prunes it
+    // without touching the device.  Results must stay bit-identical to
+    // solo engine calls; the row carries the group-pair prune rate.
+    let (n_rj_trg, n_rj_src) = if fast { (4_000, 300) } else { (16_000, 1_200) };
+    let rj_t = 0.25f32;
+    let rj_trg = Arc::new(synthetic::clustered(n_rj_trg, 8, 32, 0.02, 42));
+    let rj_srcs: Vec<Arc<Dataset>> = (0..4)
+        .map(|i| Arc::new(synthetic::clustered(n_rj_src + 37 * i, 8, 32, 0.02, 42)))
+        .collect();
+
+    let mut engine = Engine::new(cfg.clone()).expect("engine");
+    let t = Instant::now();
+    let mut rj_seq = Vec::new();
+    for src in &rj_srcs {
+        rj_seq.push(engine.range_join(src, &rj_trg, rj_t).expect("solo range join"));
+    }
+    let rj_seq_secs = t.elapsed().as_secs_f64();
+
+    let mut serve_cfg = cfg.serve.clone();
+    serve_cfg.shards = 2;
+    let mut rj_batcher =
+        QueryBatcher::new(Engine::new(cfg.clone()).expect("engine"), serve_cfg);
+    for src in rj_srcs.iter().chain(rj_srcs.iter()) {
+        rj_batcher.submit(ServeRequest::rangejoin(src.clone(), rj_trg.clone(), rj_t));
+    }
+    let t = Instant::now();
+    let rj_out = rj_batcher.flush().expect("range-join flush");
+    let rj_secs = t.elapsed().as_secs_f64();
+    let (mut rj_pairs, mut rj_surviving, mut rj_matches) = (0u64, 0u64, 0usize);
+    for (i, (_, resp)) in rj_out.iter().enumerate() {
+        let got = resp.as_rangejoin().expect("range-join response");
+        assert_eq!(
+            got.neighbors,
+            rj_seq[i % rj_srcs.len()].neighbors,
+            "batched range join diverged from sequential on query {i}"
+        );
+        rj_pairs += got.report.filter.group_pairs;
+        rj_surviving += got.report.filter.surviving_group_pairs;
+        rj_matches += got.neighbors.iter().map(Vec::len).sum::<usize>();
+    }
+    let rj_stats = rj_batcher.stats();
+    let mut rj_table = Table::new(&["path", "wall (s)", "q/s", "speedup"]);
+    rj_table.row(vec![
+        "sequential range-join calls".into(),
+        format!("{rj_seq_secs:.3}"),
+        format!("{:.1}", rj_srcs.len() as f64 / rj_seq_secs),
+        fmt_x(1.0),
+    ]);
+    rj_table.row(vec![
+        "serve, 2 shards, dedup".into(),
+        format!("{rj_secs:.3}"),
+        format!("{:.1}", rj_out.len() as f64 / rj_secs),
+        fmt_x((rj_seq_secs * 2.0) / rj_secs),
+    ]);
+    rj_table.print("Range-join cohort (radius queries, duplicates deduplicated)");
+    let rj_prune_rate =
+        if rj_pairs == 0 { 0.0 } else { 1.0 - rj_surviving as f64 / rj_pairs as f64 };
+    println!(
+        "range join: {} answered ({} deduplicated), {:.1}% of group pairs pruned by \
+         bounds, {} within-threshold matches",
+        rj_out.len(),
+        rj_stats.dedup_hits,
+        100.0 * rj_prune_rate,
+        rj_matches,
+    );
+    let mut rj_row = scenario_row(
+        "rangejoin_dedup_2shard",
+        rj_out.len(),
+        rj_secs,
+        (rj_seq_secs * 2.0) / rj_secs.max(1e-12),
+        rj_batcher.stats(),
+        rj_batcher.shard_count(),
+    );
+    if let Value::Obj(m) = &mut rj_row {
+        m.insert("prune_rate".to_string(), json::num(rj_prune_rate));
+    }
+    scenarios.push(rj_row);
+    if rj_pairs == 0 || rj_surviving >= rj_pairs {
+        eprintln!(
+            "FAIL: range-join cohort pruned no group pairs ({rj_surviving} of {rj_pairs} \
+             survived) — group-level threshold pruning regressed"
+        );
+        std::process::exit(1);
+    }
+    if rj_matches == 0 {
+        eprintln!(
+            "FAIL: range-join cohort emitted no within-threshold pairs — the scenario no \
+             longer exercises emission"
         );
         std::process::exit(1);
     }

@@ -8,7 +8,9 @@ use crate::fpga::{FpgaDevice, PowerModel};
 use crate::runtime::Runtime;
 use crate::Result;
 
-use super::{kmeans, knn, nbody, KmeansResult, KnnResult, NbodyResult};
+use super::{
+    kmeans, knn, nbody, rangejoin, KmeansResult, KnnResult, NbodyResult, RangeJoinResult,
+};
 
 /// AccD execution engine (one per process).
 ///
@@ -60,6 +62,32 @@ impl Engine {
         metric: crate::gti::Metric,
     ) -> Result<KnnResult> {
         knn::run_metric(self, src, trg, k, metric)
+    }
+
+    /// Range join (radius query) with Two-landmark + Group-level GTI
+    /// (Euclidean): for each source point, every target point within
+    /// `threshold` of it.
+    pub fn range_join(
+        &mut self,
+        src: &Dataset,
+        trg: &Dataset,
+        threshold: f32,
+    ) -> Result<RangeJoinResult> {
+        rangejoin::run(self, src, trg, threshold)
+    }
+
+    /// Metric-aware range join: neighbor values are in device space —
+    /// squared distances for [`crate::gti::Metric::L2`] and plain sums
+    /// for [`crate::gti::Metric::L1`] — while `threshold` stays in
+    /// metric units.
+    pub fn range_join_metric(
+        &mut self,
+        src: &Dataset,
+        trg: &Dataset,
+        threshold: f32,
+        metric: crate::gti::Metric,
+    ) -> Result<RangeJoinResult> {
+        rangejoin::run_metric(self, src, trg, threshold, metric)
     }
 
     /// N-body simulation with the full hybrid GTI.

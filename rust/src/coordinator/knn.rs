@@ -576,8 +576,10 @@ pub(crate) fn plan_metric(
     })
 }
 
-/// Pack the candidate target groups into one padded slab.
-fn build_trg_slab(
+/// Pack the candidate target groups into one padded slab.  Shared with
+/// the range-join planner (`super::rangejoin`), which batches its
+/// straddling rectangles through the same slab cache.
+pub(crate) fn build_trg_slab(
     trg_pg: &PackedGrouping,
     cand: &[u32],
     d: usize,

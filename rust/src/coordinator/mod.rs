@@ -7,6 +7,8 @@
 //!
 //! * [`kmeans`] — Trace-based + Group-level GTI (paper's K-means).
 //! * [`knn`] — Two-landmark + Group-level GTI (paper's KNN-join).
+//! * [`rangejoin`] — Two-landmark + Group-level GTI against a fixed
+//!   threshold (radius query / range join).
 //! * [`nbody`] — Two-landmark + Trace-based + Group-level (N-body).
 //! * [`pipeline`] — bounded-queue dataflow executor used to stream
 //!   jobs between the filter stage and the device stage.
@@ -24,8 +26,10 @@ pub mod knn;
 pub mod nbody;
 pub mod pipeline;
 pub(crate) mod program;
+pub mod rangejoin;
 
 pub use engine::Engine;
 pub use kmeans::KmeansResult;
 pub use knn::{KnnResult, SlabCache, SlabKind, SlabScope};
 pub use nbody::NbodyResult;
+pub use rangejoin::RangeJoinResult;

@@ -1,0 +1,463 @@
+//! AccD range join (radius query): Two-landmark + Group-level GTI with
+//! a *fixed* threshold, reusing the KNN plan/execute/merge seam.
+//!
+//! Semantics: for every source point, all target points whose metric
+//! distance is within `threshold`, as `(device-space value, id)` pairs
+//! sorted ascending by `(value, id)` — the same value space as the KNN
+//! join (squared distances for L2, plain sums for L1).
+//!
+//! The group-level filter classifies every (source group, target
+//! group) pair against the threshold T using the Eq. 2 bounds:
+//!
+//! * `lb > T` — **pruned**: no member pair can be within T, the pair
+//!   is discarded without touching point data.
+//! * `ub <= T` — **sure-within**: every member pair is within T; the
+//!   rectangle is emitted on the CPU ([`Metric::device_dist`], the
+//!   tile's accumulation order) with *no device work*, counted as a
+//!   skipped tile.
+//! * otherwise — **straddling**: the rectangle goes to the device as a
+//!   dense tile (through the same slab cache / dispatch merging /
+//!   bounded pipeline as KNN) and results are filtered by
+//!   `v <= to_device(T)` on merge.
+//!
+//! The final per-point sort makes the output order canonical, so
+//! batched serving is bit-identical to the solo path regardless of
+//! emission or tile arrival order.  NaN distances (corrupt rows) are
+//! never within any threshold — `NaN <= T` is false — so range-join
+//! output is always NaN-free.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::fpga::device::DeviceStats;
+use crate::fpga::TileJob;
+use crate::gti::{bounds, FilterStats, Metric};
+use crate::layout::{self, LayoutStats, PackedGrouping};
+use crate::metrics::RunReport;
+use crate::runtime::TileInfo;
+use crate::{Error, Result};
+
+use super::engine::Engine;
+use super::knn::{build_trg_slab, KnnBatch, SlabCache, SlabScope};
+use super::pipeline;
+use super::program::{self, CohortProgram, StepCtx, StepOutcome};
+
+/// Result of a range join: for each source point, every target point
+/// within the threshold.
+#[derive(Debug, Clone)]
+pub struct RangeJoinResult {
+    /// `neighbors[i]` = (device-space value, target id) pairs with
+    /// metric distance <= threshold, ascending by (value, id).
+    pub neighbors: Vec<Vec<(f32, u32)>>,
+    /// The metric-space threshold the join ran with.
+    pub threshold: f32,
+    pub report: RunReport,
+}
+
+/// The CPU filter stage's output: straddling dispatch batches for the
+/// device plus the sure-within pairs already answered on the CPU.
+#[derive(Debug, Clone)]
+pub(crate) struct RangeJoinPlan {
+    pub threshold: f32,
+    pub n_src: usize,
+    pub d: usize,
+    pub d_pad: usize,
+    pub metric: Metric,
+    /// Straddling rectangles, merged + slab-shared like KNN batches.
+    pub batches: Vec<KnnBatch>,
+    /// Per original source id: pairs emitted from sure-within group
+    /// rectangles (unsorted; the merge sorts canonically).
+    pub sure: Vec<Vec<(f32, u32)>>,
+    pub filter_stats: FilterStats,
+    pub layout_stats: LayoutStats,
+}
+
+/// Validate a range-join request (shared by solo and batched paths).
+pub(crate) fn validate(src: &Dataset, trg: &Dataset, threshold: f32) -> Result<()> {
+    if !(threshold.is_finite() && threshold > 0.0) {
+        return Err(Error::Data(format!(
+            "range join: threshold {threshold} must be finite and positive"
+        )));
+    }
+    if src.d() != trg.d() {
+        return Err(Error::Shape(format!(
+            "range join: dim mismatch {} vs {}",
+            src.d(),
+            trg.d()
+        )));
+    }
+    Ok(())
+}
+
+pub(super) fn run(
+    engine: &mut Engine,
+    src: &Dataset,
+    trg: &Dataset,
+    threshold: f32,
+) -> Result<RangeJoinResult> {
+    run_metric(engine, src, trg, threshold, Metric::L2)
+}
+
+/// Metric-aware range join.  Drives the one-shot [`RangeJoinProgram`]
+/// to completion — plan / execute / merge as a single-step
+/// [`CohortProgram`].
+pub(super) fn run_metric(
+    engine: &mut Engine,
+    src: &Dataset,
+    trg: &Dataset,
+    threshold: f32,
+    metric: Metric,
+) -> Result<RangeJoinResult> {
+    validate(src, trg, threshold)?;
+    engine.device.reset_stats();
+    let program = plan_program(&*engine, src, trg, threshold, metric)?;
+    let mut ctx = StepCtx { engine: &*engine };
+    program::run_to_completion(program, &mut ctx)
+}
+
+/// One solo range-join query as a stepwise program, mirroring
+/// `knn::KnnProgram`: plan is the CPU filter stage, the single step is
+/// the device stage over the straddling batches, finish merges.
+pub(crate) struct RangeJoinProgram {
+    plan: RangeJoinPlan,
+    src_pg: Arc<PackedGrouping>,
+    tile: TileInfo,
+    results: Vec<(usize, crate::fpga::TileResult)>,
+    report: RunReport,
+    device: DeviceStats,
+    t0: Instant,
+    executed: bool,
+}
+
+/// CPU filter stage of one solo range-join query.  Groupings use the
+/// same seeds as the KNN path (`cfg.seed` / `cfg.seed ^ 0x7267`), so
+/// serving cohorts over the same target set share slabs with KNN.
+pub(crate) fn plan_program(
+    engine: &Engine,
+    src: &Dataset,
+    trg: &Dataset,
+    threshold: f32,
+    metric: Metric,
+) -> Result<RangeJoinProgram> {
+    validate(src, trg, threshold)?;
+    let t0 = Instant::now();
+    let mut report = RunReport::new("range_join", &src.name, "accd");
+    let cfg = engine.config.clone();
+    let tile = engine.runtime.manifest().tile.clone();
+
+    let filt0 = Instant::now();
+    let src_pg = PackedGrouping::build(
+        &src.points,
+        engine.src_groups(src.n()),
+        cfg.gti.grouping_iters,
+        cfg.gti.grouping_sample,
+        cfg.seed,
+        metric,
+        8,
+    )?;
+    let trg_pg = PackedGrouping::build(
+        &trg.points,
+        engine.trg_groups(trg.n()),
+        cfg.gti.grouping_iters,
+        cfg.gti.grouping_sample,
+        cfg.seed ^ 0x7267, // "tg"
+        metric,
+        8,
+    )?;
+    let mut slab_cache = SlabCache::unbounded();
+    let scope = SlabScope::transient(metric);
+    let plan =
+        plan_metric(&tile, src, threshold, metric, &src_pg, &trg_pg, &scope, &mut slab_cache)?;
+    report.filter.merge(&plan.filter_stats);
+    report.layout = plan.layout_stats.clone();
+    report.filter_secs += filt0.elapsed().as_secs_f64();
+
+    Ok(RangeJoinProgram {
+        plan,
+        src_pg: Arc::new(src_pg),
+        tile,
+        results: Vec::new(),
+        report,
+        device: DeviceStats::default(),
+        t0,
+        executed: false,
+    })
+}
+
+impl CohortProgram for RangeJoinProgram {
+    type Output = RangeJoinResult;
+
+    /// The device stage: every straddling dispatch batch through the
+    /// bounded pipeline.  One-shot — converges on the first call.
+    fn step(&mut self, ctx: &mut StepCtx<'_>) -> Result<StepOutcome> {
+        if self.executed {
+            return Ok(StepOutcome::Converged);
+        }
+        self.executed = true;
+        let engine = ctx.engine;
+        let dev0 = engine.device.stats();
+        let device = &engine.device;
+        let mut job_err: Option<Error> = None;
+        {
+            let plan_ref = &self.plan;
+            let src_pg_ref = &self.src_pg;
+            let tile = &self.tile;
+            let results = &mut self.results;
+            pipeline::run(
+                4,
+                |i| -> Option<(usize, TileJob)> {
+                    let bi = i as usize;
+                    let batch = plan_ref.batches.get(bi)?;
+                    Some((bi, build_job_range(batch, src_pg_ref, plan_ref, tile)))
+                },
+                |(bi, job): (usize, TileJob)| {
+                    if job_err.is_some() {
+                        return;
+                    }
+                    if job.src_rows == 0 || job.trg_rows == 0 {
+                        return;
+                    }
+                    match device.distance_block(&job) {
+                        Ok(res) => results.push((bi, res)),
+                        Err(e) => job_err = Some(e),
+                    }
+                },
+            );
+        }
+        if let Some(e) = job_err {
+            return Err(e);
+        }
+        program::absorb_device(
+            &mut self.device,
+            &program::device_delta(&dev0, &engine.device.stats()),
+        );
+        Ok(StepOutcome::Converged)
+    }
+
+    /// Merge stage (CPU): threshold filter + canonical sort + report.
+    fn finish(mut self, ctx: &mut StepCtx<'_>) -> Result<RangeJoinResult> {
+        let engine = ctx.engine;
+        let results = std::mem::take(&mut self.results);
+        let neighbors = merge_results(&self.plan, results.into_iter());
+
+        let mut report = self.report;
+        report.wall_secs = self.t0.elapsed().as_secs_f64();
+        report.device = self.device.clone();
+        report.device_wall_secs = report.device.wall_secs;
+        report.device_modeled_secs = report.device.modeled_secs;
+        report.iterations = 1;
+        report.quality = quality_of(&neighbors);
+        report.energy_j = engine.power.accd_joules(
+            report.wall_secs,
+            report.filter_secs,
+            1.0,
+            report.device.wall_secs,
+        );
+        report.avg_watts = report.energy_j / report.wall_secs.max(1e-9);
+
+        Ok(RangeJoinResult { neighbors, threshold: self.plan.threshold, report })
+    }
+}
+
+/// CPU filter stage: classify every group pair against the threshold,
+/// emit sure-within rectangles on the CPU, and build the straddling
+/// dispatch batches through the caller's [`SlabCache`] (the same
+/// `SlabKind::KnnTarget` scope family, so rangejoin and KNN cohorts
+/// over one target set share packed slabs).  Deterministic in all
+/// inputs; the canonical per-point sort at merge makes results
+/// independent of emission order.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn plan_metric(
+    tile: &TileInfo,
+    src: &Dataset,
+    threshold: f32,
+    metric: Metric,
+    src_pg: &PackedGrouping,
+    trg_pg: &PackedGrouping,
+    scope: &SlabScope,
+    slab_cache: &mut SlabCache,
+) -> Result<RangeJoinPlan> {
+    let d = src.d();
+    let d_pad = tile.pad_d(d)?;
+    let t_dev = metric.to_device(threshold);
+
+    let pair_bounds =
+        bounds::group_pair_bounds_metric(&src_pg.grouping, &trg_pg.grouping, metric);
+    let zs = src_pg.grouping.num_groups();
+    let zt = trg_pg.grouping.num_groups();
+    let mut stats = FilterStats { bound_comps: (zs * zt) as u64, ..Default::default() };
+    let trg_sizes: Vec<usize> = (0..zt).map(|b| trg_pg.packed.group_len(b)).collect();
+    let n_trg_total: usize = trg_sizes.iter().sum();
+
+    let mut sure: Vec<Vec<(f32, u32)>> = vec![Vec::new(); src.n()];
+    let mut candidates: Vec<Vec<u32>> = Vec::with_capacity(zs);
+    for a in 0..zs {
+        let src_len = src_pg.packed.group_len(a);
+        let mut cand: Vec<u32> = Vec::new();
+        for b in 0..zt {
+            stats.group_pairs += 1;
+            let bd = pair_bounds[a][b];
+            if bd.lb > threshold {
+                // Pruned: no member pair of (a, b) can be within T.
+                continue;
+            }
+            stats.surviving_group_pairs += 1;
+            stats.surviving_pairs += (src_len * trg_sizes[b]) as u64;
+            if bd.ub <= threshold {
+                // Sure-within: the whole rectangle is inside T; answer
+                // it on the CPU with the tile's own accumulation order
+                // and skip the device entirely.
+                stats.tiles_skipped += 1;
+                emit_rectangle(src_pg, a, trg_pg, b, metric, t_dev, &mut sure);
+            } else {
+                cand.push(b as u32);
+            }
+        }
+        stats.total_pairs += (src_len * n_trg_total) as u64;
+        candidates.push(cand);
+    }
+
+    // Straddling rectangles ride the KNN dispatch seam: Fig. 4b
+    // schedule, adjacent same-candidate-set merging, shared slabs.
+    let order = layout::schedule_source_groups(&candidates);
+    let layout_stats = layout::measure_reuse(&order, &candidates);
+    let mut merged: Vec<(Vec<usize>, Vec<u32>)> = Vec::new();
+    for &g in &order {
+        let g = g as usize;
+        if candidates[g].is_empty() {
+            continue;
+        }
+        match merged.last_mut() {
+            Some((groups, cand)) if *cand == candidates[g] => groups.push(g),
+            _ => merged.push((vec![g], candidates[g].clone())),
+        }
+    }
+
+    let mut batches = Vec::with_capacity(merged.len());
+    for (groups, cand) in merged {
+        let row_ids: Vec<u32> = groups
+            .iter()
+            .flat_map(|&g| {
+                let (s, l) = (src_pg.packed.group_start(g), src_pg.packed.group_len(g));
+                src_pg.packed.new2old[s..s + l].iter().copied()
+            })
+            .collect();
+        let (trg, shared) = slab_cache
+            .get_or_build(scope, &cand, || build_trg_slab(trg_pg, &cand, d, d_pad, tile.n));
+        batches.push(KnnBatch { groups, row_ids, trg, shared });
+    }
+
+    Ok(RangeJoinPlan {
+        threshold,
+        n_src: src.n(),
+        d,
+        d_pad,
+        metric,
+        batches,
+        sure,
+        filter_stats: stats,
+        layout_stats,
+    })
+}
+
+/// CPU emission of one sure-within rectangle: every (member of source
+/// group `a`, member of target group `b`) pair, valued with the
+/// device's accumulation order.  The `v <= t_dev` check keeps the
+/// output exactly equal to a brute-force scan even when the float
+/// bound was marginally loose.
+fn emit_rectangle(
+    src_pg: &PackedGrouping,
+    a: usize,
+    trg_pg: &PackedGrouping,
+    b: usize,
+    metric: Metric,
+    t_dev: f32,
+    sure: &mut [Vec<(f32, u32)>],
+) {
+    let d = src_pg.packed.points.cols();
+    let (ss, sl) = (src_pg.packed.group_start(a), src_pg.packed.group_len(a));
+    let (ts, tl) = (trg_pg.packed.group_start(b), trg_pg.packed.group_len(b));
+    let src_rows = src_pg.packed.group_rows(a);
+    let trg_rows = trg_pg.packed.group_rows(b);
+    let src_ids = &src_pg.packed.new2old[ss..ss + sl];
+    let trg_ids = &trg_pg.packed.new2old[ts..ts + tl];
+    for (r, &sid) in src_ids.iter().enumerate() {
+        let srow = &src_rows[r * d..(r + 1) * d];
+        let out = &mut sure[sid as usize];
+        for (c, &tid) in trg_ids.iter().enumerate() {
+            let v = metric.device_dist(srow, &trg_rows[c * d..(c + 1) * d]);
+            if v <= t_dev {
+                out.push((v, tid));
+            }
+        }
+    }
+}
+
+/// Build the dense rectangle job for one straddling dispatch batch
+/// (same layout as the KNN job builder).
+pub(crate) fn build_job_range(
+    batch: &KnnBatch,
+    src_pg: &PackedGrouping,
+    plan: &RangeJoinPlan,
+    tile: &TileInfo,
+) -> TileJob {
+    use crate::util::round_up;
+    let (d, d_pad) = (plan.d, plan.d_pad);
+    let len: usize = batch.groups.iter().map(|&g| src_pg.packed.group_len(g)).sum();
+    let rows_pad = round_up(len.max(1), tile.m);
+    let mut src_slab = vec![0.0f32; rows_pad * d_pad];
+    let mut row = 0usize;
+    for &g in &batch.groups {
+        let rows = src_pg.packed.group_len(g);
+        let slab = src_pg.packed.group_rows(g);
+        for r in 0..rows {
+            src_slab[(row + r) * d_pad..(row + r) * d_pad + d]
+                .copy_from_slice(&slab[r * d..(r + 1) * d]);
+        }
+        row += rows;
+    }
+    TileJob {
+        src: src_slab,
+        src_rows: len,
+        trg: batch.trg.slab.clone(),
+        trg_rows: batch.trg.rows,
+        d,
+        d_padded: d_pad,
+        metric: plan.metric.device_name(),
+    }
+}
+
+/// Merge stage: seed each point with its sure-within emissions, filter
+/// device tiles by `v <= to_device(T)`, then sort canonically by
+/// `(total_cmp value, id)` — the output is identical for any tile
+/// arrival or emission order, which is what makes batched serving
+/// bit-for-bit equal to the solo path.
+pub(crate) fn merge_results(
+    plan: &RangeJoinPlan,
+    results: impl Iterator<Item = (usize, crate::fpga::TileResult)>,
+) -> Vec<Vec<(f32, u32)>> {
+    let t_dev = plan.metric.to_device(plan.threshold);
+    let mut out: Vec<Vec<(f32, u32)>> = plan.sure.clone();
+    for (bi, res) in results {
+        let batch = &plan.batches[bi];
+        for (r, &orig_src) in batch.row_ids.iter().enumerate() {
+            let row = &res.dist[r * res.trg_rows..(r + 1) * res.trg_rows];
+            let nb = &mut out[orig_src as usize];
+            for (c, &v) in row.iter().enumerate() {
+                if v <= t_dev {
+                    nb.push((v, batch.trg.col_ids[c]));
+                }
+            }
+        }
+    }
+    for nb in &mut out {
+        nb.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    }
+    out
+}
+
+/// Headline quality number: mean within-threshold neighbor count.
+pub(crate) fn quality_of(neighbors: &[Vec<(f32, u32)>]) -> f64 {
+    neighbors.iter().map(|nb| nb.len() as f64).sum::<f64>() / neighbors.len().max(1) as f64
+}

@@ -54,6 +54,8 @@ pub enum PlanKind {
     },
     /// One-shot Top-K join.
     KnnJoinLike { src: String, trg: String, k: usize },
+    /// One-shot radius query: all target points within `threshold`.
+    RangeJoinLike { src: String, trg: String, threshold: f64 },
     /// Iterative self-join with radius selection.
     NbodyLike { particles: String, radius_expr: usize, max_iters: usize },
 }
@@ -102,16 +104,45 @@ pub fn lower(tp: &TypedProgram) -> Result<ExecutionPlan> {
 
     let src_info = tp.set(src)?;
     let trg_info = tp.set(trg)?;
-    let range_val = match range {
-        SizeExpr::Lit(n) => *n,
+    // Weighted metrics survive parsing and typecheck (the weight
+    // matrix is shape-checked there) but no execution path applies
+    // weights yet — reject here instead of silently computing
+    // unweighted distances.
+    if metric.weighted {
+        return Err(Error::Ddsl(format!(
+            "weighted metric \"{}\" is not yet implemented — the engine would \
+             silently compute unweighted distances; use an unweighted metric",
+            metric.norm
+        )));
+    }
+    // The selection range is kept as f64 here: "within" thresholds are
+    // legitimately fractional, while Top-K counts and N-body radii
+    // must be exact non-negative integers (validated per branch below,
+    // naming the variable).
+    let (range_val, range_name): (f64, Option<&str>) = match range {
+        SizeExpr::Lit(n) => (*n as f64, None),
         SizeExpr::Var(name) => match tp.vars.get(name).and_then(|v| v.init.clone()) {
-            Some(super::ast::Value::Num(n)) => n as usize,
+            Some(super::ast::Value::Num(n)) => (n, Some(name.as_str())),
             _ => {
                 return Err(Error::Ddsl(format!(
-                    "selection range {name:?} has no integer value"
+                    "selection range {name:?} has no numeric value"
                 )))
             }
         },
+    };
+    // Exact non-negative integer selection count/radius, or an error
+    // naming the offending variable (fractional and negative values
+    // used to be silently truncated by `as usize`).
+    let integer_range = |what: &str| -> Result<usize> {
+        if range_val < 0.0 || range_val.fract() != 0.0 || !range_val.is_finite() {
+            let source = range_name
+                .map(|n| format!("variable {n:?}"))
+                .unwrap_or_else(|| "literal".to_string());
+            return Err(Error::Ddsl(format!(
+                "{what} must be a non-negative integer, but {source} is {range_val}"
+            )));
+        }
+        Ok(range_val as usize)
     };
     let max_iters = match iter {
         Some(IterCond::MaxIters(n)) => *n,
@@ -124,13 +155,22 @@ pub fn lower(tp: &TypedProgram) -> Result<ExecutionPlan> {
         (trg_info.name.clone(), trg_info.size, trg_info.dim),
     ];
 
-    // Strategy selection (the paper's table).
+    // Strategy selection (the paper's table).  Every branch validates
+    // the selection *scope* — a program whose scope does not fit its
+    // structure is an error, never a silent re-interpretation.
     let plan = if iter.is_some() && src == trg {
-        // Self-join, iterative: N-body family.
+        // Self-join, iterative: N-body family — a radius interaction,
+        // so the selection must be "within".
+        if scope != "within" {
+            return Err(Error::Ddsl(format!(
+                "iterative self-join requires \"within\" selection (interaction \
+                 radius), got {scope:?}"
+            )));
+        }
         ExecutionPlan {
             kind: PlanKind::NbodyLike {
                 particles: src.clone(),
-                radius_expr: range_val,
+                radius_expr: integer_range("N-body interaction radius")?,
                 max_iters,
             },
             strategy: GtiStrategy { two_landmark: true, trace_based: true, group_level: true },
@@ -156,18 +196,61 @@ pub fn lower(tp: &TypedProgram) -> Result<ExecutionPlan> {
             bindings,
         }
     } else if iter.is_none() {
-        // One-shot Top-K: KNN-join family.
-        if range_val == 0 || range_val > trg_info.size {
-            return Err(Error::Ddsl(format!(
-                "Top-K range {range_val} out of bounds for target size {}",
-                trg_info.size
-            )));
-        }
-        ExecutionPlan {
-            kind: PlanKind::KnnJoinLike { src: src.clone(), trg: trg.clone(), k: range_val },
-            strategy: GtiStrategy { two_landmark: true, trace_based: false, group_level: true },
-            metric: metric.clone(),
-            bindings,
+        // One-shot join: dispatch on the selection scope.  "smallest"
+        // is Top-K (KNN family); "within" is a radius query (range
+        // join) — it used to fall into the Top-K branch and silently
+        // lower to KnnJoinLike { k: threshold }.
+        match scope.as_str() {
+            "smallest" => {
+                let k = integer_range("Top-K selection count")?;
+                if k == 0 || k > trg_info.size {
+                    return Err(Error::Ddsl(format!(
+                        "Top-K range {k} out of bounds for target size {}",
+                        trg_info.size
+                    )));
+                }
+                ExecutionPlan {
+                    kind: PlanKind::KnnJoinLike { src: src.clone(), trg: trg.clone(), k },
+                    strategy: GtiStrategy {
+                        two_landmark: true,
+                        trace_based: false,
+                        group_level: true,
+                    },
+                    metric: metric.clone(),
+                    bindings,
+                }
+            }
+            "within" => {
+                if !(range_val.is_finite() && range_val > 0.0) {
+                    let source = range_name
+                        .map(|n| format!("variable {n:?}"))
+                        .unwrap_or_else(|| "literal".to_string());
+                    return Err(Error::Ddsl(format!(
+                        "range-join threshold must be finite and positive, but \
+                         {source} is {range_val}"
+                    )));
+                }
+                ExecutionPlan {
+                    kind: PlanKind::RangeJoinLike {
+                        src: src.clone(),
+                        trg: trg.clone(),
+                        threshold: range_val,
+                    },
+                    strategy: GtiStrategy {
+                        two_landmark: true,
+                        trace_based: false,
+                        group_level: true,
+                    },
+                    metric: metric.clone(),
+                    bindings,
+                }
+            }
+            other => {
+                return Err(Error::Ddsl(format!(
+                    "one-shot join supports \"smallest\" (Top-K) or \"within\" \
+                     (range join) selection; {other:?} is not supported"
+                )))
+            }
         }
     } else {
         return Err(Error::Ddsl(
@@ -277,5 +360,147 @@ mod tests {
             AccD_Dist_Select(dm, im, 9, "smallest", o);
         "#;
         assert!(compile_program(src).is_err());
+    }
+
+    /// The exact program shape that used to miscompile: a one-shot
+    /// `"within"` selection fell into the Top-K branch (scope was never
+    /// checked there) and lowered to `KnnJoinLike { k: T }` — the T
+    /// nearest neighbors instead of all neighbors within distance T.
+    const ONESHOT_WITHIN: &str = r#"
+        DVar T float 0.5;
+        DSet q float 100 4;
+        DSet t float 300 4;
+        DSet dm float 100 300;
+        DSet im int 100 300;
+        DSet outM int 100 300;
+        AccD_Comp_Dist(q, t, dm, im, 4, "L2", 0);
+        AccD_Dist_Select(dm, im, T, "within", outM);
+    "#;
+
+    #[test]
+    fn oneshot_within_lowers_to_range_join_not_topk() {
+        let plan = compile_program(ONESHOT_WITHIN).unwrap();
+        assert!(
+            !matches!(plan.kind, PlanKind::KnnJoinLike { .. }),
+            "one-shot \"within\" must never silently lower to Top-K"
+        );
+        match &plan.kind {
+            PlanKind::RangeJoinLike { src, trg, threshold } => {
+                assert_eq!(src, "q");
+                assert_eq!(trg, "t");
+                assert_eq!(*threshold, 0.5);
+            }
+            other => panic!("expected RangeJoinLike, got {other:?}"),
+        }
+        assert_eq!(
+            plan.strategy,
+            GtiStrategy { two_landmark: true, trace_based: false, group_level: true }
+        );
+    }
+
+    #[test]
+    fn oneshot_largest_is_rejected_not_reinterpreted() {
+        let src = r#"
+            DSet q float 10 2;
+            DSet t float 5 2;
+            DSet dm float 10 5;
+            DSet im int 10 5;
+            DSet o int 10 3;
+            AccD_Comp_Dist(q, t, dm, im, 2, "L2", 0);
+            AccD_Dist_Select(dm, im, 3, "largest", o);
+        "#;
+        let err = compile_program(src).unwrap_err();
+        assert!(err.to_string().contains("largest"), "{err}");
+    }
+
+    #[test]
+    fn nbody_branch_requires_within_scope() {
+        let src = r#"
+            DVar R int 2;
+            DVar S int;
+            DSet p float 500 3;
+            DSet dm float 500 500;
+            DSet im int 500 500;
+            DSet nb int 500 R;
+            AccD_Iter(30) {
+                AccD_Comp_Dist(p, p, dm, im, 3, "L2", 0);
+                AccD_Dist_Select(dm, im, R, "smallest", nb);
+                AccD_Update(p, nb, S)
+            }
+        "#;
+        let err = compile_program(src).unwrap_err();
+        assert!(err.to_string().contains("within"), "{err}");
+    }
+
+    #[test]
+    fn weighted_metric_rejected_at_plan_time() {
+        // Weighted metrics parse and typecheck (the weight matrix is
+        // shape-checked) but no execution path applies weights; the
+        // planner must say so instead of computing unweighted
+        // distances silently.
+        let src = r#"
+            DSet a float 50 6;
+            DSet b float 90 6;
+            DSet w float 1 6;
+            DSet dm float 50 90;
+            DSet im int 50 90;
+            DSet sel int 50 10;
+            AccD_Comp_Dist(a, b, dm, im, 6, "Weighted L1", w);
+            AccD_Dist_Select(dm, im, 10, "smallest", sel);
+        "#;
+        let err = compile_program(src).unwrap_err();
+        assert!(err.to_string().contains("not yet implemented"), "{err}");
+    }
+
+    #[test]
+    fn fractional_topk_range_rejected_naming_the_variable() {
+        // `DVar K int 2.9` used to silently truncate to K=2.
+        let src = r#"
+            DVar K int 2.9;
+            DSet q float 10 2;
+            DSet t float 5 2;
+            DSet dm float 10 5;
+            DSet im int 10 5;
+            DSet o int 10 2;
+            AccD_Comp_Dist(q, t, dm, im, 2, "L2", 0);
+            AccD_Dist_Select(dm, im, K, "smallest", o);
+        "#;
+        let err = compile_program(src).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("\"K\"") && msg.contains("2.9"), "{msg}");
+    }
+
+    #[test]
+    fn negative_selection_range_rejected_naming_the_variable() {
+        // Negative values used to saturate to 0 via `as usize`.
+        let src = r#"
+            DVar K int -3;
+            DSet q float 10 2;
+            DSet t float 5 2;
+            DSet dm float 10 5;
+            DSet im int 10 5;
+            DSet o int 10 5;
+            AccD_Comp_Dist(q, t, dm, im, 2, "L2", 0);
+            AccD_Dist_Select(dm, im, K, "smallest", o);
+        "#;
+        let err = compile_program(src).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("\"K\"") && msg.contains("-3"), "{msg}");
+    }
+
+    #[test]
+    fn nonpositive_within_threshold_rejected() {
+        let src = r#"
+            DVar T float 0.0;
+            DSet q float 10 2;
+            DSet t float 5 2;
+            DSet dm float 10 5;
+            DSet im int 10 5;
+            DSet o int 10 5;
+            AccD_Comp_Dist(q, t, dm, im, 2, "L2", 0);
+            AccD_Dist_Select(dm, im, T, "within", o);
+        "#;
+        let err = compile_program(src).unwrap_err();
+        assert!(err.to_string().contains("finite and positive"), "{err}");
     }
 }

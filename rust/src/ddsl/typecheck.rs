@@ -152,7 +152,20 @@ pub fn check(program: &Program) -> Result<TypedProgram> {
                             return Err(Error::Ddsl(format!("undeclared matrix {m:?}")));
                         }
                     }
-                    let _ = resolve(vars, range)?;
+                    // The selection range may be a Top-K count OR a
+                    // fractional "within" threshold, so only name
+                    // resolution and numeric-ness are checked here;
+                    // the planner validates integer-ness per scope.
+                    if let SizeExpr::Var(name) = range {
+                        let v = vars.get(name).ok_or_else(|| {
+                            Error::Ddsl(format!("undeclared selection range {name:?}"))
+                        })?;
+                        if !matches!(v.init, Some(Value::Num(_))) {
+                            return Err(Error::Ddsl(format!(
+                                "selection range {name:?} has no numeric initializer"
+                            )));
+                        }
+                    }
                 }
                 Stmt::Update { target, inputs, status } => {
                     if !sets.contains_key(target) {

@@ -84,6 +84,39 @@ impl Metric {
             Metric::L1 => d,
         }
     }
+
+    /// Device-space distance between two vectors, computed on the CPU
+    /// with the same accumulation order the emulated tile uses (sum of
+    /// squared differences for L2 — no sqrt — and sum of absolute
+    /// differences for L1).  Lets a CPU path emit values bit-identical
+    /// to what a device tile would have produced for the same pair.
+    #[inline]
+    pub fn device_dist(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Metric::L2 => {
+                let mut s = 0.0f32;
+                for k in 0..a.len() {
+                    let d = a[k] - b[k];
+                    s += d * d;
+                }
+                s
+            }
+            Metric::L1 => {
+                let mut s = 0.0f32;
+                for k in 0..a.len() {
+                    s += (a[k] - b[k]).abs();
+                }
+                s
+            }
+        }
+    }
+
+    /// [`Metric::device_dist`] between matrix rows.
+    #[inline]
+    pub fn device_dist_rows(&self, a: &Matrix, i: usize, b: &Matrix, j: usize) -> f32 {
+        self.device_dist(a.row(i), b.row(j))
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +159,13 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn device_dist_matches_device_space_of_metric_dist() {
+        let a = Matrix::from_vec(vec![0.0, 0.0, 3.0, 4.0], 2, 2).unwrap();
+        assert_eq!(Metric::L2.device_dist_rows(&a, 0, &a, 1), 25.0);
+        assert_eq!(Metric::L1.device_dist_rows(&a, 0, &a, 1), 7.0);
     }
 
     #[test]

@@ -207,6 +207,7 @@ pub struct ServeStats {
     /// Flushes triggered by an expired admission deadline (`poll`).
     pub deadline_flushes: u64,
     pub knn_queries: u64,
+    pub rangejoin_queries: u64,
     pub kmeans_queries: u64,
     pub nbody_queries: u64,
     /// Queries answered from an identical in-flight query's result.
@@ -499,6 +500,7 @@ impl ServeStats {
     pub fn absorb_exec(&mut self, d: &ServeStats) {
         self.queries += d.queries;
         self.knn_queries += d.knn_queries;
+        self.rangejoin_queries += d.rangejoin_queries;
         self.kmeans_queries += d.kmeans_queries;
         self.nbody_queries += d.nbody_queries;
         self.dedup_hits += d.dedup_hits;
@@ -529,6 +531,7 @@ impl ServeStats {
             ("flushes", json::num(self.flushes as f64)),
             ("deadline_flushes", json::num(self.deadline_flushes as f64)),
             ("knn_queries", json::num(self.knn_queries as f64)),
+            ("rangejoin_queries", json::num(self.rangejoin_queries as f64)),
             ("kmeans_queries", json::num(self.kmeans_queries as f64)),
             ("nbody_queries", json::num(self.nbody_queries as f64)),
             ("dedup_hits", json::num(self.dedup_hits as f64)),
@@ -577,7 +580,7 @@ impl ServeStats {
         let (p50, p95, p99) = self.latency_percentiles_ms();
         format!(
             "serve: {} queries in {} flushes ({:.1} q/s, {} deadline-driven)\n  \
-             mix: {} knn / {} kmeans / {} nbody | dedup {} ({} full scans)\n  \
+             mix: {} knn / {} rangejoin / {} kmeans / {} nbody | dedup {} ({} full scans)\n  \
              grouping cache: {} hits / {} misses ({:.1}% hit rate, {} probe collisions)\n  \
              slab cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, {:.1} MB resident\n  \
              lockstep: {} rounds, {} shared tiles | {} units stolen\n  \
@@ -592,6 +595,7 @@ impl ServeStats {
             self.queries_per_sec(),
             self.deadline_flushes,
             self.knn_queries,
+            self.rangejoin_queries,
             self.kmeans_queries,
             self.nbody_queries,
             self.dedup_hits,
@@ -821,7 +825,8 @@ mod tests {
         let mut total = ServeStats { flushes: 2, wall_secs: 1.5, ..Default::default() };
         let delta = ServeStats {
             queries: 4,
-            knn_queries: 3,
+            knn_queries: 2,
+            rangejoin_queries: 1,
             kmeans_queries: 1,
             dedup_hits: 1,
             grouping_cache_hits: 2,
@@ -864,7 +869,8 @@ mod tests {
         });
         total.absorb_exec(&ServeStats::default());
         assert_eq!(total.queries, 4);
-        assert_eq!(total.knn_queries, 3);
+        assert_eq!(total.knn_queries, 2);
+        assert_eq!(total.rangejoin_queries, 1);
         assert_eq!(total.dedup_hits, 1);
         assert_eq!(total.slabs_shared, 5);
         assert_eq!(total.tiles_total, 40);

@@ -28,8 +28,8 @@ use std::sync::{Arc, Weak};
 use std::time::Duration;
 
 use crate::config::ServeConfig;
-use crate::coordinator::{kmeans, knn, nbody};
-use crate::coordinator::{KmeansResult, KnnResult, NbodyResult};
+use crate::coordinator::{kmeans, knn, nbody, rangejoin};
+use crate::coordinator::{KmeansResult, KnnResult, NbodyResult, RangeJoinResult};
 use crate::data::Dataset;
 use crate::gti::{self, Metric};
 use crate::runtime::TileInfo;
@@ -46,6 +46,9 @@ pub type QueryId = u64;
 pub enum ServeRequest {
     /// K nearest targets for every source point.
     Knn { src: Arc<Dataset>, trg: Arc<Dataset>, k: usize, metric: Metric },
+    /// Every target within `threshold` of every source point (radius
+    /// query / range join).  `threshold` is in metric units.
+    RangeJoin { src: Arc<Dataset>, trg: Arc<Dataset>, threshold: f32, metric: Metric },
     /// Lloyd clustering of `ds` into `k` clusters.
     Kmeans { ds: Arc<Dataset>, k: usize, max_iters: usize },
     /// Radius-limited gravitational integration.
@@ -68,6 +71,20 @@ impl ServeRequest {
         Self::Knn { src, trg, k, metric }
     }
 
+    /// Euclidean range-join request.
+    pub fn rangejoin(src: Arc<Dataset>, trg: Arc<Dataset>, threshold: f32) -> Self {
+        Self::rangejoin_metric(src, trg, threshold, Metric::L2)
+    }
+
+    pub fn rangejoin_metric(
+        src: Arc<Dataset>,
+        trg: Arc<Dataset>,
+        threshold: f32,
+        metric: Metric,
+    ) -> Self {
+        Self::RangeJoin { src, trg, threshold, metric }
+    }
+
     pub fn kmeans(ds: Arc<Dataset>, k: usize, max_iters: usize) -> Self {
         Self::Kmeans { ds, k, max_iters }
     }
@@ -86,6 +103,7 @@ impl ServeRequest {
     pub(crate) fn kind(&self) -> AlgoKind {
         match self {
             Self::Knn { .. } => AlgoKind::Knn,
+            Self::RangeJoin { .. } => AlgoKind::RangeJoin,
             Self::Kmeans { .. } => AlgoKind::Kmeans,
             Self::Nbody { .. } => AlgoKind::Nbody,
         }
@@ -95,7 +113,7 @@ impl ServeRequest {
     /// seed rate's `d`).
     pub(crate) fn dim(&self) -> usize {
         match self {
-            Self::Knn { trg, .. } => trg.d(),
+            Self::Knn { trg, .. } | Self::RangeJoin { trg, .. } => trg.d(),
             Self::Kmeans { ds, .. } | Self::Nbody { ds, .. } => ds.d(),
         }
     }
@@ -105,7 +123,7 @@ impl ServeRequest {
     /// shedding to price a query before it is partitioned into units.
     pub(crate) fn solo_cost_units(&self) -> u64 {
         match self {
-            Self::Knn { src, trg, .. } => {
+            Self::Knn { src, trg, .. } | Self::RangeJoin { src, trg, .. } => {
                 let t = trg.n() as u64;
                 t + src.n() as u64 * t
             }
@@ -125,6 +143,7 @@ impl ServeRequest {
 #[derive(Debug, Clone)]
 pub enum ServeResponse {
     Knn(KnnResult),
+    RangeJoin(RangeJoinResult),
     Kmeans(KmeansResult),
     Nbody(NbodyResult),
 }
@@ -133,6 +152,13 @@ impl ServeResponse {
     pub fn as_knn(&self) -> Option<&KnnResult> {
         match self {
             Self::Knn(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn as_rangejoin(&self) -> Option<&RangeJoinResult> {
+        match self {
+            Self::RangeJoin(r) => Some(r),
             _ => None,
         }
     }
@@ -231,7 +257,8 @@ impl FingerprintMemo {
         let mut pending = std::collections::HashSet::new();
         for p in &queue.pending {
             match &p.req {
-                ServeRequest::Knn { src, trg, .. } => {
+                ServeRequest::Knn { src, trg, .. }
+                | ServeRequest::RangeJoin { src, trg, .. } => {
                     pending.insert(Arc::as_ptr(src) as usize);
                     pending.insert(Arc::as_ptr(trg) as usize);
                 }
@@ -270,6 +297,16 @@ impl FingerprintMemo {
                 ServeRequest::Knn { src: sb, trg: tb, k: kb, metric: mb },
             ) => {
                 ka == kb
+                    && ma == mb
+                    && sa.name == sb.name
+                    && self.same_dataset(sa, sb)
+                    && self.same_dataset(ta, tb)
+            }
+            (
+                ServeRequest::RangeJoin { src: sa, trg: ta, threshold: ha, metric: ma },
+                ServeRequest::RangeJoin { src: sb, trg: tb, threshold: hb, metric: mb },
+            ) => {
+                ha.to_bits() == hb.to_bits()
                     && ma == mb
                     && sa.name == sb.name
                     && self.same_dataset(sa, sb)
@@ -520,6 +557,11 @@ pub(crate) fn validate_request(req: &ServeRequest, tile: &TileInfo) -> Result<()
             tile.pad_d(src.d())?;
             Ok(())
         }
+        ServeRequest::RangeJoin { src, trg, threshold, .. } => {
+            rangejoin::validate(src, trg, *threshold)?;
+            tile.pad_d(src.d())?;
+            Ok(())
+        }
         ServeRequest::Kmeans { ds, k, .. } => {
             kmeans::validate(ds, *k)?;
             tile.pad_d(ds.d())?;
@@ -568,6 +610,41 @@ pub(crate) struct KnnCohort {
     pub deadline: Option<Tick>,
 }
 
+/// One range-join query inside a cohort.
+pub(crate) struct RangeJoinQ {
+    /// Index into the drained batch (response slot).
+    pub pos: usize,
+    pub src: Arc<Dataset>,
+    pub src_fp: (u64, u64),
+    /// Metric-space radius (the cohort fixes the metric itself).
+    pub threshold: f32,
+}
+
+impl RangeJoinQ {
+    /// Dedup identity within one cohort (which already fixes target
+    /// content and metric): threshold bits + source name + source
+    /// content — the range-join analogue of [`KnnQ::same_query`].
+    pub fn same_query(&self, other: &RangeJoinQ) -> bool {
+        self.threshold.to_bits() == other.threshold.to_bits()
+            && self.src.name == other.src.name
+            && (Arc::ptr_eq(&self.src, &other.src) || self.src_fp == other.src_fp)
+    }
+}
+
+/// Coalesced range-join queries sharing one target set + metric — the
+/// same coalescing axis as [`KnnCohort`], so a shard serving both
+/// workloads over one target set shares its grouping *and* its packed
+/// slabs between them.
+pub(crate) struct RangeJoinCohort {
+    pub trg: Arc<Dataset>,
+    pub trg_fp: (u64, u64),
+    pub metric: Metric,
+    pub queries: Vec<RangeJoinQ>,
+    /// Inherited deadline: the earliest across the cohort's member
+    /// queries (`None` when no member carries one).
+    pub deadline: Option<Tick>,
+}
+
 pub(crate) struct KmeansJob {
     pub pos: usize,
     pub ds: Arc<Dataset>,
@@ -608,6 +685,7 @@ pub(crate) fn earliest(a: Option<Tick>, b: Option<Tick>) -> Option<Tick> {
 /// (persistent caches excepted, and those are per shard).
 pub(crate) enum WorkUnit {
     Knn(KnnCohort),
+    RangeJoin(RangeJoinCohort),
     Kmeans(KmeansJob),
     Nbody(NbodyJob),
 }
@@ -620,6 +698,7 @@ impl WorkUnit {
     pub fn deadline(&self) -> Option<Tick> {
         match self {
             WorkUnit::Knn(c) => c.deadline,
+            WorkUnit::RangeJoin(c) => c.deadline,
             WorkUnit::Kmeans(j) => j.deadline,
             WorkUnit::Nbody(j) => j.deadline,
         }
@@ -636,6 +715,27 @@ impl WorkUnit {
             WorkUnit::Knn(c) => {
                 let trg = c.trg.n() as u64;
                 let mut seen: Vec<&KnnQ> = Vec::new();
+                let src_total: u64 = c
+                    .queries
+                    .iter()
+                    .filter(|q| {
+                        if !dedup {
+                            return true;
+                        }
+                        if seen.iter().any(|s| s.same_query(q)) {
+                            false
+                        } else {
+                            seen.push(q);
+                            true
+                        }
+                    })
+                    .map(|q| q.src.n() as u64)
+                    .sum();
+                trg + src_total * trg
+            }
+            WorkUnit::RangeJoin(c) => {
+                let trg = c.trg.n() as u64;
+                let mut seen: Vec<&RangeJoinQ> = Vec::new();
                 let src_total: u64 = c
                     .queries
                     .iter()
@@ -672,6 +772,7 @@ impl WorkUnit {
     pub fn movement_footprint(&self) -> (u64, u64) {
         match self {
             WorkUnit::Knn(c) => (c.trg_fp.0, (c.trg.n() * c.trg.d() * 4) as u64),
+            WorkUnit::RangeJoin(c) => (c.trg_fp.0, (c.trg.n() * c.trg.d() * 4) as u64),
             WorkUnit::Kmeans(j) => (j.ds_fp.0, (j.ds.n() * j.ds.d() * 4) as u64),
             WorkUnit::Nbody(j) => (j.ds_fp.0, (j.ds.n() * j.ds.d() * 4) as u64),
         }
@@ -684,6 +785,7 @@ impl WorkUnit {
     pub fn dim(&self) -> usize {
         match self {
             WorkUnit::Knn(c) => c.trg.d(),
+            WorkUnit::RangeJoin(c) => c.trg.d(),
             WorkUnit::Kmeans(j) => j.ds.d(),
             WorkUnit::Nbody(j) => j.ds.d(),
         }
@@ -694,24 +796,26 @@ impl WorkUnit {
     pub fn kind(&self) -> AlgoKind {
         match self {
             WorkUnit::Knn(_) => AlgoKind::Knn,
+            WorkUnit::RangeJoin(_) => AlgoKind::RangeJoin,
             WorkUnit::Kmeans(_) => AlgoKind::Kmeans,
             WorkUnit::Nbody(_) => AlgoKind::Nbody,
         }
     }
 }
 
-/// Partition a drained batch into work units: coalesce KNN queries
-/// into cohorts by (target content, metric); deduplicate identical
-/// K-means / N-body queries (KNN dedup happens inside cohort
-/// execution, where the per-query plans are built).  Every unit
-/// inherits the earliest deadline of its member queries.
-/// Deterministic in the batch order.
+/// Partition a drained batch into work units: coalesce KNN and
+/// range-join queries into cohorts by (target content, metric);
+/// deduplicate identical K-means / N-body queries (KNN / range-join
+/// dedup happens inside cohort execution, where the per-query plans
+/// are built).  Every unit inherits the earliest deadline of its
+/// member queries.  Deterministic in the batch order.
 pub(crate) fn partition(
     batch: &[Pending],
     dedup: bool,
     memo: &mut FingerprintMemo,
 ) -> Vec<WorkUnit> {
     let mut cohorts: Vec<KnnCohort> = Vec::new();
+    let mut rj_cohorts: Vec<RangeJoinCohort> = Vec::new();
     let mut kmeans_jobs: Vec<KmeansJob> = Vec::new();
     let mut nbody_jobs: Vec<NbodyJob> = Vec::new();
     for (pos, p) in batch.iter().enumerate() {
@@ -727,6 +831,30 @@ pub(crate) fn partition(
                         cohorts[ci].deadline = earliest(cohorts[ci].deadline, p.deadline);
                     }
                     None => cohorts.push(KnnCohort {
+                        trg: trg.clone(),
+                        trg_fp: memo.fingerprint(trg),
+                        metric: *metric,
+                        queries: vec![q],
+                        deadline: p.deadline,
+                    }),
+                }
+            }
+            ServeRequest::RangeJoin { src, trg, threshold, metric } => {
+                let found = rj_cohorts
+                    .iter()
+                    .position(|c| c.metric == *metric && memo.same_dataset(&c.trg, trg));
+                let q = RangeJoinQ {
+                    pos,
+                    src: src.clone(),
+                    src_fp: memo.fingerprint(src),
+                    threshold: *threshold,
+                };
+                match found {
+                    Some(ci) => {
+                        rj_cohorts[ci].queries.push(q);
+                        rj_cohorts[ci].deadline = earliest(rj_cohorts[ci].deadline, p.deadline);
+                    }
+                    None => rj_cohorts.push(RangeJoinCohort {
                         trg: trg.clone(),
                         trg_fp: memo.fingerprint(trg),
                         metric: *metric,
@@ -793,6 +921,7 @@ pub(crate) fn partition(
     cohorts
         .into_iter()
         .map(WorkUnit::Knn)
+        .chain(rj_cohorts.into_iter().map(WorkUnit::RangeJoin))
         .chain(kmeans_jobs.into_iter().map(WorkUnit::Kmeans))
         .chain(nbody_jobs.into_iter().map(WorkUnit::Nbody))
         .collect()

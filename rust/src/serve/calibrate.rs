@@ -41,16 +41,21 @@ pub enum AlgoKind {
     Knn,
     Kmeans,
     Nbody,
+    /// Fixed-threshold radius query.  Shares KNN's cost-unit shape
+    /// (`trg + src*trg` pairs) but not its rate: the threshold filter
+    /// prunes and CPU-emits differently, so it learns its own cell.
+    RangeJoin,
 }
 
 impl AlgoKind {
-    pub const COUNT: usize = 3;
+    pub const COUNT: usize = 4;
 
     fn index(self) -> usize {
         match self {
             AlgoKind::Knn => 0,
             AlgoKind::Kmeans => 1,
             AlgoKind::Nbody => 2,
+            AlgoKind::RangeJoin => 3,
         }
     }
 }
@@ -196,6 +201,7 @@ mod tests {
             (0, AlgoKind::Knn, 130, 1_100),
             (1, AlgoKind::Nbody, 999, 12_345),
             (0, AlgoKind::Kmeans, 10, 55),
+            (0, AlgoKind::RangeJoin, 64, 800),
         ];
         let mut a = calibrator(2);
         let mut b = calibrator(2);
@@ -204,13 +210,13 @@ mod tests {
             b.observe(s, k, u, ns);
         }
         for s in 0..2 {
-            for k in [AlgoKind::Knn, AlgoKind::Kmeans, AlgoKind::Nbody] {
+            for k in [AlgoKind::Knn, AlgoKind::Kmeans, AlgoKind::Nbody, AlgoKind::RangeJoin] {
                 for units in [1u64, 50, 1_000, 123_456] {
                     assert_eq!(a.predict_ns(s, k, units, 8), b.predict_ns(s, k, units, 8));
                 }
             }
         }
-        assert_eq!(a.observations(), 5);
+        assert_eq!(a.observations(), 6);
     }
 
     #[test]

@@ -47,7 +47,7 @@ use std::time::Instant;
 use crate::config::ServeConfig;
 use crate::coordinator::knn::SlabKind;
 use crate::coordinator::program::{self, CohortProgram, StepCtx, StepOutcome};
-use crate::coordinator::{kmeans, knn, nbody, pipeline};
+use crate::coordinator::{kmeans, knn, nbody, pipeline, rangejoin};
 use crate::coordinator::{Engine, SlabCache, SlabScope};
 use crate::data::Dataset;
 use crate::fpga::device::DeviceStats;
@@ -58,7 +58,7 @@ use crate::metrics::{RunReport, ServeStats};
 use crate::runtime::TileInfo;
 use crate::{Error, Result};
 
-use super::admission::{KnnCohort, KnnQ, ServeResponse, WorkUnit};
+use super::admission::{KnnCohort, KnnQ, RangeJoinCohort, RangeJoinQ, ServeResponse, WorkUnit};
 use super::cache::{GroupingCache, GroupingKey};
 use super::calibrate::{AlgoKind, Observation};
 use super::clock::Tick;
@@ -612,6 +612,7 @@ fn run_serial(
 /// keep the moves pointer-sized.
 enum Resident {
     Knn(Box<KnnCohortProgram>),
+    RangeJoin(Box<RangeJoinCohortProgram>),
     Kmeans { prog: Box<kmeans::KmeansProgram>, pos: usize, dups: Vec<usize> },
     Nbody { prog: Box<nbody::NbodyProgram>, pos: usize, dups: Vec<usize> },
 }
@@ -620,11 +621,11 @@ impl Resident {
     /// Observed prune rate of the program, permille of
     /// point-iterations — the [`step_priority`] tiebreaker.  Only
     /// K-means carries a cross-iteration prune signal today; one-shot
-    /// KNN cohorts and N-body (dense per step) report 0.
+    /// KNN / range-join cohorts and N-body (dense per step) report 0.
     fn prune_permille(&self) -> u64 {
         match self {
             Resident::Kmeans { prog, .. } => prog.observed_prune_permille(),
-            Resident::Knn(_) | Resident::Nbody { .. } => 0,
+            Resident::Knn(_) | Resident::RangeJoin(_) | Resident::Nbody { .. } => 0,
         }
     }
 }
@@ -641,6 +642,9 @@ fn plan_unit(
         WorkUnit::Knn(cohort) => {
             Ok(Resident::Knn(Box::new(plan_knn_cohort(engine, state, cohort, cfg)?)))
         }
+        WorkUnit::RangeJoin(cohort) => Ok(Resident::RangeJoin(Box::new(plan_rangejoin_cohort(
+            engine, state, cohort, cfg,
+        )?))),
         WorkUnit::Kmeans(job) => {
             let seed = engine.config.seed;
             let groups = engine.src_groups(job.ds.n());
@@ -694,6 +698,7 @@ fn step_resident(engine: &Engine, resident: &mut Resident) -> Result<StepOutcome
     let mut ctx = StepCtx { engine };
     match resident {
         Resident::Knn(prog) => prog.step(&mut ctx),
+        Resident::RangeJoin(prog) => prog.step(&mut ctx),
         Resident::Kmeans { prog, .. } => prog.step(&mut ctx),
         Resident::Nbody { prog, .. } => prog.step(&mut ctx),
     }
@@ -704,6 +709,7 @@ fn finish_resident(engine: &Engine, resident: Resident, delta: &mut ShardDelta) 
     let mut ctx = StepCtx { engine };
     match resident {
         Resident::Knn(prog) => (*prog).finish_into(&mut ctx, delta),
+        Resident::RangeJoin(prog) => (*prog).finish_into(&mut ctx, delta),
         Resident::Kmeans { prog, pos, dups } => {
             let result = (*prog).finish(&mut ctx)?;
             delta.stats.kmeans_queries += 1 + dups.len() as u64;
@@ -839,7 +845,7 @@ fn plan_knn_cohort(
     cfg: &ServeConfig,
 ) -> Result<KnnCohortProgram> {
     let t0 = Instant::now();
-    let KnnCohort { trg, trg_fp, metric, queries } = cohort;
+    let KnnCohort { trg, trg_fp, metric, queries, .. } = cohort;
     let seed = engine.config.seed;
     let (iters, sample) = (engine.config.gti.grouping_iters, engine.config.gti.grouping_sample);
     let tile = engine.runtime.manifest().tile.clone();
@@ -1059,6 +1065,287 @@ impl KnnCohortProgram {
                 delta.responses.push((pos, ServeResponse::Knn(result.clone())));
             }
             delta.responses.push((u.q.pos, ServeResponse::Knn(result)));
+        }
+        Ok(())
+    }
+}
+
+// --- the range-join cohort program ------------------------------------------
+
+/// One planned unique range-join query inside a cohort.
+struct RangeJoinUniqueQuery {
+    q: RangeJoinQ,
+    src_pg: Arc<PackedGrouping>,
+    plan: rangejoin::RangeJoinPlan,
+    dups: Vec<usize>,
+}
+
+/// A whole range-join cohort as a one-shot stepwise program.  Mirror of
+/// [`KnnCohortProgram`]: planning shares the target grouping + packed
+/// slabs through the same `SlabKind::KnnTarget` scope (so range-join
+/// and KNN cohorts over one target set share slabs), the single step
+/// streams every unique query's straddling batches through one tagged
+/// bounded pipeline, and `finish_into` demuxes per-query merges into
+/// response slots.
+struct RangeJoinCohortProgram {
+    uniques: Vec<RangeJoinUniqueQuery>,
+    tile: TileInfo,
+    depth: usize,
+    /// (unique index, batch index) in query-major dispatch order.
+    flat: Vec<(usize, usize)>,
+    results: Vec<Vec<(usize, TileResult)>>,
+    tiles_by_query: Vec<u64>,
+    shared_tiles_by_query: Vec<u64>,
+    /// Dispatch batches whose packed target slab came from the cache.
+    slabs_shared: u64,
+    /// Cohort-scoped device counters (tile execution is deliberately
+    /// shared; per-query attribution would lie).
+    device: DeviceStats,
+    /// Wall seconds spent inside THIS cohort's plan/step calls.
+    wall_secs: f64,
+    executed: bool,
+}
+
+/// Plan one range-join cohort: shared target grouping + slabs (served
+/// through the shard's persistent caches), one plan per unique query,
+/// dedup under the admission identity.
+fn plan_rangejoin_cohort(
+    engine: &Engine,
+    state: &mut ShardState,
+    cohort: RangeJoinCohort,
+    cfg: &ServeConfig,
+) -> Result<RangeJoinCohortProgram> {
+    let t0 = Instant::now();
+    let RangeJoinCohort { trg, trg_fp, metric, queries, .. } = cohort;
+    let seed = engine.config.seed;
+    let (iters, sample) = (engine.config.gti.grouping_iters, engine.config.gti.grouping_sample);
+    let tile = engine.runtime.manifest().tile.clone();
+
+    let trg_groups = engine.trg_groups(trg.n());
+    let trg_seed = seed ^ 0x7267;
+    let trg_pg = cached_grouping(
+        engine,
+        &mut state.grouping_cache,
+        &trg,
+        trg_fp,
+        trg_groups,
+        trg_seed,
+        metric,
+    )?;
+    // Identical slab scope to the KNN cohort over the same target —
+    // that identity (not the algorithm) keys the cache, so range-join
+    // and KNN queries against one target set serve each other's slabs.
+    let d_pad = tile.pad_d(trg.d())?;
+    let slab_scope = SlabScope {
+        kind: SlabKind::KnnTarget,
+        fingerprint: trg_fp.0,
+        probe: trg_fp.1,
+        groups: trg_groups,
+        iters,
+        sample,
+        seed: trg_seed,
+        metric,
+        d_pad,
+        tile_n: tile.n,
+    };
+
+    let mut uniques: Vec<RangeJoinUniqueQuery> = Vec::new();
+    let mut slabs_shared = 0u64;
+    for q in queries {
+        if cfg.dedup {
+            if let Some(ui) = uniques.iter().position(|u| u.q.same_query(&q)) {
+                uniques[ui].dups.push(q.pos);
+                continue;
+            }
+        }
+        let src_groups = engine.src_groups(q.src.n());
+        let src_pg = cached_grouping(
+            engine,
+            &mut state.grouping_cache,
+            &q.src,
+            q.src_fp,
+            src_groups,
+            seed,
+            metric,
+        )?;
+        let plan = rangejoin::plan_metric(
+            &tile,
+            &q.src,
+            q.threshold,
+            metric,
+            &src_pg,
+            &trg_pg,
+            &slab_scope,
+            &mut state.slab_cache,
+        )?;
+        slabs_shared += plan.batches.iter().filter(|b| b.shared).count() as u64;
+        uniques.push(RangeJoinUniqueQuery { q, src_pg, plan, dups: Vec::new() });
+    }
+
+    // Query-major dispatch order: per-tag FIFO makes each query's
+    // merge identical to its solo run.
+    let flat: Vec<(usize, usize)> = uniques
+        .iter()
+        .enumerate()
+        .flat_map(|(qi, u)| (0..u.plan.batches.len()).map(move |bi| (qi, bi)))
+        .collect();
+    let results = uniques.iter().map(|_| Vec::new()).collect();
+    let tiles_by_query = vec![0u64; uniques.len()];
+    let shared_tiles_by_query = vec![0u64; uniques.len()];
+
+    Ok(RangeJoinCohortProgram {
+        uniques,
+        tile,
+        depth: cfg.pipeline_depth,
+        flat,
+        results,
+        tiles_by_query,
+        shared_tiles_by_query,
+        slabs_shared,
+        device: DeviceStats::default(),
+        wall_secs: t0.elapsed().as_secs_f64(),
+        executed: false,
+    })
+}
+
+impl CohortProgram for RangeJoinCohortProgram {
+    type Output = ShardDelta;
+
+    /// The device stage: every unique query's straddling batches
+    /// through one tagged bounded pipeline.  One-shot — converges on
+    /// the first call.
+    fn step(&mut self, ctx: &mut StepCtx<'_>) -> Result<StepOutcome> {
+        if self.executed {
+            return Ok(StepOutcome::Converged);
+        }
+        self.executed = true;
+        let step_t0 = Instant::now();
+        let engine = ctx.engine;
+        let dev0 = engine.device.stats();
+        let device = &engine.device;
+        let mut job_err: Option<Error> = None;
+        {
+            let flat = &self.flat;
+            let uniques_ref = &self.uniques;
+            let tile = &self.tile;
+            let results = &mut self.results;
+            let tiles_by_query = &mut self.tiles_by_query;
+            let shared_tiles_by_query = &mut self.shared_tiles_by_query;
+            pipeline::run_tagged(
+                self.depth,
+                |i| {
+                    let &(qi, bi) = flat.get(i as usize)?;
+                    let u = &uniques_ref[qi];
+                    Some((
+                        qi as u64,
+                        (
+                            bi,
+                            rangejoin::build_job_range(
+                                &u.plan.batches[bi],
+                                &u.src_pg,
+                                &u.plan,
+                                tile,
+                            ),
+                        ),
+                    ))
+                },
+                |tag, (bi, job)| {
+                    if job_err.is_some() {
+                        return;
+                    }
+                    if job.src_rows == 0 || job.trg_rows == 0 {
+                        return;
+                    }
+                    let qi = tag as usize;
+                    let before = device.stats().tiles;
+                    match device.distance_block(&job) {
+                        Ok(res) => {
+                            let tiles = device.stats().tiles - before;
+                            tiles_by_query[qi] += tiles;
+                            if uniques_ref[qi].plan.batches[bi].shared {
+                                shared_tiles_by_query[qi] += tiles;
+                            }
+                            results[qi].push((bi, res));
+                        }
+                        Err(e) => job_err = Some(e),
+                    }
+                },
+            );
+        }
+        if let Some(e) = job_err {
+            return Err(e);
+        }
+        program::absorb_device(
+            &mut self.device,
+            &program::device_delta(&dev0, &engine.device.stats()),
+        );
+        self.wall_secs += step_t0.elapsed().as_secs_f64();
+        Ok(StepOutcome::Converged)
+    }
+
+    /// The trait-level finish returns the cohort's whole delta so no
+    /// driver can lose responses; the serving layer uses
+    /// [`RangeJoinCohortProgram::finish_into`] to write into the
+    /// shard's accumulating delta directly.
+    fn finish(self, ctx: &mut StepCtx<'_>) -> Result<ShardDelta> {
+        let mut delta = ShardDelta::default();
+        self.finish_into(ctx, &mut delta)?;
+        Ok(delta)
+    }
+}
+
+impl RangeJoinCohortProgram {
+    /// Per-query merge + response fan-out into `delta`.
+    fn finish_into(self, _ctx: &mut StepCtx<'_>, delta: &mut ShardDelta) -> Result<()> {
+        let RangeJoinCohortProgram {
+            uniques,
+            mut results,
+            tiles_by_query,
+            shared_tiles_by_query,
+            slabs_shared,
+            device: cohort_device,
+            wall_secs: cohort_secs,
+            ..
+        } = self;
+        delta.stats.slabs_shared += slabs_shared;
+        for (qi, u) in uniques.into_iter().enumerate() {
+            let batch_results = std::mem::take(&mut results[qi]);
+            let neighbors = rangejoin::merge_results(&u.plan, batch_results.into_iter());
+            let mut report = RunReport::new("range_join", &u.q.src.name, "accd-serve");
+            report.filter.merge(&u.plan.filter_stats);
+            report.layout = u.plan.layout_stats.clone();
+            // Device/wall accounting is cohort-scoped: tile execution
+            // is deliberately shared, so per-query attribution would
+            // lie.
+            report.device = cohort_device.clone();
+            report.device_wall_secs = cohort_device.wall_secs;
+            report.device_modeled_secs = cohort_device.modeled_secs;
+            report.wall_secs = cohort_secs;
+            report.iterations = 1;
+            report.quality = rangejoin::quality_of(&neighbors);
+            let result = rangejoin::RangeJoinResult {
+                neighbors,
+                threshold: u.q.threshold,
+                report,
+            };
+
+            let has_dups = !u.dups.is_empty();
+            delta.stats.tiles_total += tiles_by_query[qi];
+            delta.stats.tiles_shared += if has_dups {
+                tiles_by_query[qi]
+            } else {
+                shared_tiles_by_query[qi]
+            };
+            // Sure-within rectangles answered on the CPU count as
+            // skipped tiles, same as every other GTI skip.
+            delta.stats.tiles_skipped += u.plan.filter_stats.tiles_skipped;
+            delta.stats.rangejoin_queries += 1 + u.dups.len() as u64;
+            delta.stats.queries += 1 + u.dups.len() as u64;
+            delta.stats.dedup_hits += u.dups.len() as u64;
+            for &pos in &u.dups {
+                delta.responses.push((pos, ServeResponse::RangeJoin(result.clone())));
+            }
+            delta.responses.push((u.q.pos, ServeResponse::RangeJoin(result)));
         }
         Ok(())
     }

@@ -1,6 +1,15 @@
 //! Bounded Top-K selection (the paper's `AccD_Dist_Select` construct on
 //! the CPU side) plus a k-way merge used when fusing per-tile Top-K
 //! results coming back from the accelerator.
+//!
+//! NaN policy: all comparisons use [`f32::total_cmp`], under which NaN
+//! ranks above +inf.  A NaN candidate therefore never displaces a real
+//! value and appears in the output only while the selector is
+//! under-full (fewer than k non-NaN candidates seen), always sorted
+//! last.  No input — including NaN from corrupt rows — can panic or
+//! corrupt the heap invariant.
+
+use std::cmp::Ordering;
 
 /// Max-heap based selector that keeps the K smallest (value, id) pairs.
 ///
@@ -47,7 +56,7 @@ impl TopK {
         if self.heap.len() < self.k {
             self.heap.push((val, id));
             self.sift_up(self.heap.len() - 1);
-        } else if val < self.heap[0].0 {
+        } else if val.total_cmp(&self.heap[0].0) == Ordering::Less {
             self.heap[0] = (val, id);
             self.sift_down(0);
         }
@@ -56,7 +65,7 @@ impl TopK {
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
             let parent = (i - 1) / 2;
-            if self.heap[i].0 > self.heap[parent].0 {
+            if self.heap[i].0.total_cmp(&self.heap[parent].0) == Ordering::Greater {
                 self.heap.swap(i, parent);
                 i = parent;
             } else {
@@ -70,10 +79,10 @@ impl TopK {
         loop {
             let (l, r) = (2 * i + 1, 2 * i + 2);
             let mut largest = i;
-            if l < n && self.heap[l].0 > self.heap[largest].0 {
+            if l < n && self.heap[l].0.total_cmp(&self.heap[largest].0) == Ordering::Greater {
                 largest = l;
             }
-            if r < n && self.heap[r].0 > self.heap[largest].0 {
+            if r < n && self.heap[r].0.total_cmp(&self.heap[largest].0) == Ordering::Greater {
                 largest = r;
             }
             if largest == i {
@@ -84,10 +93,10 @@ impl TopK {
         }
     }
 
-    /// Drain into (value, id) pairs sorted ascending by value.
+    /// Drain into (value, id) pairs sorted ascending by value (NaN,
+    /// if it survived an under-full heap, sorts last — total order).
     pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
-        self.heap
-            .sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        self.heap.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         self.heap
     }
 }
@@ -162,5 +171,30 @@ mod tests {
     fn k_larger_than_input() {
         let out = topk_smallest(&[2.0, 1.0], 10);
         assert_eq!(out, vec![(1.0, 1), (2.0, 0)]);
+    }
+
+    #[test]
+    fn nan_never_panics_and_never_displaces_real_values() {
+        // Regression: into_sorted used partial_cmp().unwrap() and the
+        // heap used `<`/`>`, so a NaN candidate panicked the sort and
+        // corrupted the sift invariants.  Under total_cmp a NaN row in
+        // the input is simply the worst candidate.
+        let vals = [3.0, f32::NAN, 1.0, f32::NAN, 2.0, 4.0];
+        let out = topk_smallest(&vals, 3);
+        assert_eq!(out, vec![(1.0, 2), (2.0, 4), (3.0, 0)]);
+
+        // NaN arriving first still gets evicted by real values.
+        let mut t = TopK::new(2);
+        t.push(f32::NAN, 0);
+        t.push(f32::NAN, 1);
+        t.push(5.0, 2);
+        t.push(1.0, 3);
+        assert_eq!(t.into_sorted(), vec![(1.0, 3), (5.0, 2)]);
+
+        // Under-full of non-NaN candidates: NaN appears, sorted last.
+        let out = topk_smallest(&[f32::NAN, 7.0], 3);
+        assert_eq!(out[0], (7.0, 1));
+        assert_eq!(out.len(), 2);
+        assert!(out[1].0.is_nan() && out[1].1 == 0);
     }
 }

@@ -7,6 +7,12 @@
 //! typechecker or planner refactor that silently changes program
 //! semantics fails here with a readable diff.
 //!
+//! Programs the compiler *rejects by design* (e.g. weighted metrics,
+//! which no execution path implements) are part of the corpus too:
+//! their snapshot is the rejection itself, rendered as `rejected: <msg>`.
+//! That locks the refusal — a regression that starts accepting such a
+//! program (or rewords the diagnostic) diffs here.
+//!
 //! Regenerate snapshots after an *intentional* semantic change with:
 //! `ACCD_UPDATE_GOLDEN=1 cargo test --test ddsl_golden`
 
@@ -23,6 +29,9 @@ fn render(plan: &ExecutionPlan) -> String {
         }
         PlanKind::KnnJoinLike { src, trg, k } => {
             format!("KnnJoinLike {{ src: {src}, trg: {trg}, k: {k} }}")
+        }
+        PlanKind::RangeJoinLike { src, trg, threshold } => {
+            format!("RangeJoinLike {{ src: {src}, trg: {trg}, threshold: {threshold} }}")
         }
         PlanKind::NbodyLike { particles, radius_expr, max_iters } => {
             format!("NbodyLike {{ particles: {particles}, radius: {radius_expr}, max_iters: {max_iters} }}")
@@ -67,9 +76,11 @@ fn golden_corpus_matches_snapshots() {
     for program in &programs {
         let name = program.file_stem().unwrap().to_string_lossy().to_string();
         let src = std::fs::read_to_string(program).expect("read .dd");
-        let plan = ddsl::compile_program(&src)
-            .unwrap_or_else(|e| panic!("{name}.dd failed to compile: {e}"));
-        let got = render(&plan);
+        let got = match ddsl::compile_program(&src) {
+            Ok(plan) => render(&plan),
+            // Intentionally-rejected programs snapshot their diagnostic.
+            Err(e) => format!("rejected: {e}\n"),
+        };
         let golden_path = dir.join(format!("{name}.golden"));
         if update {
             std::fs::write(&golden_path, &got).expect("write golden");
@@ -94,27 +105,37 @@ fn golden_corpus_matches_snapshots() {
     );
 }
 
-/// The goldens themselves are also sanity-locked in code for the three
+/// The goldens themselves are also sanity-locked in code for the four
 /// strategy families, so a wholesale regeneration of wrong snapshots
 /// (e.g. blindly re-blessing after a planner bug) still gets caught.
+/// Rejected programs don't contribute a family, but at least one must
+/// exist so the error-snapshot path stays exercised.
 #[test]
-fn golden_corpus_covers_all_three_strategy_families() {
+fn golden_corpus_covers_all_four_strategy_families() {
     let dir = golden_dir();
     let mut kinds = std::collections::BTreeSet::new();
+    let mut rejected = 0usize;
     for entry in std::fs::read_dir(&dir).expect("read golden dir") {
         let p = entry.expect("dir entry").path();
         if p.extension().is_some_and(|x| x == "dd") {
-            let plan = ddsl::compile_program(&std::fs::read_to_string(&p).unwrap()).unwrap();
-            kinds.insert(match plan.kind {
-                PlanKind::KmeansLike { .. } => "kmeans",
-                PlanKind::KnnJoinLike { .. } => "knn",
-                PlanKind::NbodyLike { .. } => "nbody",
-            });
+            match ddsl::compile_program(&std::fs::read_to_string(&p).unwrap()) {
+                Ok(plan) => {
+                    kinds.insert(match plan.kind {
+                        PlanKind::KmeansLike { .. } => "kmeans",
+                        PlanKind::KnnJoinLike { .. } => "knn",
+                        PlanKind::RangeJoinLike { .. } => "rangejoin",
+                        PlanKind::NbodyLike { .. } => "nbody",
+                    });
+                }
+                // The exact diagnostic is locked by the snapshot test.
+                Err(_) => rejected += 1,
+            }
         }
     }
     assert_eq!(
         kinds.into_iter().collect::<Vec<_>>(),
-        vec!["kmeans", "knn", "nbody"],
+        vec!["kmeans", "knn", "nbody", "rangejoin"],
         "corpus must exercise every planner family"
     );
+    assert!(rejected >= 1, "corpus must include at least one rejected program");
 }

@@ -206,6 +206,12 @@ fn invalid_arguments_are_rejected() {
     assert!(eng.kmeans(&ds, 51, 5).is_err());
     let trg = synthetic::uniform(50, 5, 13); // dim mismatch
     assert!(eng.knn_join(&ds, &trg, 5).is_err());
+    assert!(eng.range_join(&ds, &trg, 0.5).is_err()); // dim mismatch
+    let trg4 = synthetic::uniform(40, 4, 14);
+    assert!(eng.range_join(&ds, &trg4, 0.0).is_err()); // zero threshold
+    assert!(eng.range_join(&ds, &trg4, -1.0).is_err()); // negative
+    assert!(eng.range_join(&ds, &trg4, f32::NAN).is_err()); // non-finite
+    assert!(eng.range_join(&ds, &trg4, f32::INFINITY).is_err());
     let masses = vec![1.0f32; 50];
     assert!(eng.nbody(&ds, &masses, 1, 1e-3, 0.5).is_err()); // d != 3
 }
@@ -247,4 +253,88 @@ fn knn_join_l1_matches_scalar_reference() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Range join (radius query): EXACT agreement with a brute-force scan
+// ---------------------------------------------------------------------------
+
+/// Brute-force oracle: for every source point, every target point with
+/// device-space distance `<= to_device(threshold)`, sorted ascending by
+/// `(value, id)`.  Uses `Metric::device_dist` (the tile's accumulation
+/// order), so the comparison below can demand bit-for-bit equality —
+/// the GTI classification (pruned / sure-within / straddling) must
+/// never change a result, only where it is computed.
+fn brute_range_join(
+    src: &accd::data::Dataset,
+    trg: &accd::data::Dataset,
+    threshold: f32,
+    metric: accd::gti::Metric,
+) -> Vec<Vec<(f32, u32)>> {
+    let t_dev = metric.to_device(threshold);
+    (0..src.n())
+        .map(|i| {
+            let mut nb: Vec<(f32, u32)> = (0..trg.n())
+                .filter_map(|j| {
+                    let v = metric.device_dist(src.points.row(i), trg.points.row(j));
+                    (v <= t_dev).then_some((v, j as u32))
+                })
+                .collect();
+            nb.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            nb
+        })
+        .collect()
+}
+
+#[test]
+fn range_join_matches_brute_force_exactly_on_clustered_data() {
+    let Some(mut eng) = engine() else { return };
+    eng.config.gti.src_groups = 32;
+    eng.config.gti.trg_groups = 48;
+    let src = synthetic::clustered(400, 6, 12, 0.01, 1);
+    let trg = synthetic::clustered(700, 6, 12, 0.01, 2);
+    let threshold = 0.25f32;
+    let accd = eng.range_join(&src, &trg, threshold).unwrap();
+    let base = brute_range_join(&src, &trg, threshold, accd::gti::Metric::L2);
+    assert_eq!(accd.neighbors.len(), base.len());
+    for i in 0..src.n() {
+        assert_eq!(accd.neighbors[i], base[i], "point {i}: within-set differs from oracle");
+    }
+    // The result set must be non-trivial (tight clusters => neighbors
+    // exist) and the group filter must have pruned pairs on this data.
+    assert!(accd.neighbors.iter().any(|nb| !nb.is_empty()), "degenerate workload");
+    let f = &accd.report.filter;
+    assert!(
+        f.surviving_group_pairs < f.group_pairs,
+        "no group pair was pruned: {f:?}"
+    );
+}
+
+#[test]
+fn range_join_matches_brute_force_exactly_on_uniform_data() {
+    // Uniform data = worst case for TI; exactness must still hold.
+    let Some(mut eng) = engine() else { return };
+    let src = synthetic::uniform(300, 4, 3);
+    let trg = synthetic::uniform(500, 4, 4);
+    for threshold in [0.2f32, 0.6, 2.0] {
+        let accd = eng.range_join(&src, &trg, threshold).unwrap();
+        let base = brute_range_join(&src, &trg, threshold, accd::gti::Metric::L2);
+        for i in 0..src.n() {
+            assert_eq!(accd.neighbors[i], base[i], "T={threshold}, point {i}");
+        }
+    }
+}
+
+#[test]
+fn range_join_l1_matches_brute_force_exactly() {
+    let Some(mut eng) = engine() else { return };
+    let src = synthetic::clustered(250, 5, 8, 0.03, 21);
+    let trg = synthetic::clustered(400, 5, 8, 0.03, 22);
+    let threshold = 0.5f32;
+    let accd = eng.range_join_metric(&src, &trg, threshold, accd::gti::Metric::L1).unwrap();
+    let base = brute_range_join(&src, &trg, threshold, accd::gti::Metric::L1);
+    for i in 0..src.n() {
+        assert_eq!(accd.neighbors[i], base[i], "L1 point {i}");
+    }
+    assert_eq!(accd.threshold, threshold);
 }

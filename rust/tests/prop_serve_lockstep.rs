@@ -65,7 +65,9 @@ fn check_against_solo(
                 return Err(format!("{what}: nbody velocities diverged"));
             }
         }
-        ServeRequest::Knn { .. } => unreachable!("workload has no KNN queries"),
+        ServeRequest::Knn { .. } | ServeRequest::RangeJoin { .. } => {
+            unreachable!("workload has no KNN / range-join queries")
+        }
     }
     Ok(())
 }

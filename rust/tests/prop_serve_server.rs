@@ -60,6 +60,15 @@ fn check_against_solo(
                 return Err(format!("{what}: kmeans centers diverged"));
             }
         }
+        ServeRequest::RangeJoin { src, trg, threshold, metric } => {
+            let want = solo
+                .range_join_metric(src, trg, *threshold, *metric)
+                .map_err(|e| e.to_string())?;
+            let got = resp.as_rangejoin().ok_or_else(|| format!("{what}: wrong kind"))?;
+            if got.neighbors != want.neighbors {
+                return Err(format!("{what}: rangejoin diverged"));
+            }
+        }
         ServeRequest::Nbody { .. } => unreachable!("schedule has no N-body queries"),
     }
     Ok(())

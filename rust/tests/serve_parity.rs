@@ -44,6 +44,11 @@ fn assert_matches_solo(
             let want = solo.knn_join_metric(src, trg, *k, *metric).expect("solo knn");
             assert_knn_identical(resp, &want, what);
         }
+        ServeRequest::RangeJoin { src, trg, threshold, metric } => {
+            let want =
+                solo.range_join_metric(src, trg, *threshold, *metric).expect("solo rangejoin");
+            assert_rangejoin_identical(resp, &want, what);
+        }
         ServeRequest::Kmeans { ds, k, max_iters } => {
             let want = solo.kmeans(ds, *k, *max_iters).expect("solo kmeans");
             let got = resp.as_kmeans().unwrap_or_else(|| panic!("{what}: wrong response kind"));
@@ -71,6 +76,19 @@ fn assert_knn_identical(got: &ServeResponse, want: &accd::coordinator::KnnResult
     assert_eq!(got.neighbors.len(), want.neighbors.len(), "{what}: result size");
     for (i, (g, w)) in got.neighbors.iter().zip(&want.neighbors).enumerate() {
         assert_eq!(g, w, "{what}: neighbors of source point {i} differ");
+    }
+}
+
+fn assert_rangejoin_identical(
+    got: &ServeResponse,
+    want: &accd::coordinator::RangeJoinResult,
+    what: &str,
+) {
+    let got = got.as_rangejoin().unwrap_or_else(|| panic!("{what}: wrong response kind"));
+    assert_eq!(got.threshold, want.threshold, "{what}: threshold");
+    assert_eq!(got.neighbors.len(), want.neighbors.len(), "{what}: result size");
+    for (i, (g, w)) in got.neighbors.iter().zip(&want.neighbors).enumerate() {
+        assert_eq!(g, w, "{what}: within-set of source point {i} differs");
     }
 }
 
@@ -221,9 +239,11 @@ fn parity_holds_with_dedup_disabled() {
     assert!(batcher.stats().tiles_shared > 0, "{:?}", batcher.stats());
 }
 
-/// A mixed KNN / K-means / N-body workload with two KNN cohorts,
-/// duplicates and an L1 query — the same query set, bit-for-bit, for
-/// shard counts 1, 2 and 4.
+/// A mixed KNN / range-join / K-means / N-body workload with two KNN
+/// cohorts, duplicates and L1 queries — the same query set,
+/// bit-for-bit, for shard counts 1, 2 and 4.  The range-join queries
+/// hit the same target set as a KNN cohort, so their slab scopes
+/// coincide and the two workloads share packed slabs.
 fn mixed_workload() -> Vec<ServeRequest> {
     let trg_a = Arc::new(synthetic::clustered(500, 5, 8, 0.03, 31));
     let trg_b = Arc::new(synthetic::clustered(350, 5, 6, 0.03, 32));
@@ -239,9 +259,12 @@ fn mixed_workload() -> Vec<ServeRequest> {
         ServeRequest::knn(src_b.clone(), trg_b.clone(), 4),
         ServeRequest::knn(src_a.clone(), trg_a.clone(), 6), // duplicate of 0
         ServeRequest::nbody(nb_ds, masses, 3, 1e-3, 0.15),
-        ServeRequest::knn_metric(src_c, trg_a.clone(), 5, Metric::L1),
+        ServeRequest::knn_metric(src_c.clone(), trg_a.clone(), 5, Metric::L1),
         ServeRequest::kmeans(km_ds, 10, 5), // duplicate of 1
-        ServeRequest::knn(src_b, trg_a, 9), // same src, other cohort
+        ServeRequest::knn(src_b.clone(), trg_a.clone(), 9), // same src, other cohort
+        ServeRequest::rangejoin(src_a.clone(), trg_a.clone(), 0.6),
+        ServeRequest::rangejoin(src_a, trg_a, 0.6), // duplicate of 8
+        ServeRequest::rangejoin_metric(src_c, trg_b, 1.1, Metric::L1),
     ]
 }
 
@@ -264,7 +287,7 @@ fn sharded_mixed_workload_is_identical_for_1_2_and_4_shards() {
         // The shards actually shared the work and the stats merged.
         let stats = batcher.stats();
         assert_eq!(stats.queries, queries.len() as u64);
-        assert_eq!(stats.dedup_hits, 2, "{stats:?}");
+        assert_eq!(stats.dedup_hits, 3, "{stats:?}");
         let shard_sum: u64 = batcher.shard_stats().iter().map(|s| s.queries).sum();
         assert_eq!(shard_sum, stats.queries);
         if shards > 1 {
@@ -430,6 +453,9 @@ fn solo_response(solo: &mut Engine, req: &ServeRequest) -> ServeResponse {
         ServeRequest::Knn { src, trg, k, metric } => {
             ServeResponse::Knn(solo.knn_join_metric(src, trg, *k, *metric).expect("solo knn"))
         }
+        ServeRequest::RangeJoin { src, trg, threshold, metric } => ServeResponse::RangeJoin(
+            solo.range_join_metric(src, trg, *threshold, *metric).expect("solo rangejoin"),
+        ),
         ServeRequest::Kmeans { ds, k, max_iters } => {
             ServeResponse::Kmeans(solo.kmeans(ds, *k, *max_iters).expect("solo kmeans"))
         }
@@ -444,6 +470,10 @@ fn assert_same_response(got: &ServeResponse, want: &ServeResponse, what: &str) {
         (ServeResponse::Knn(g), ServeResponse::Knn(w)) => {
             assert_eq!(g.k, w.k, "{what}: k");
             assert_eq!(g.neighbors, w.neighbors, "{what}: neighbors");
+        }
+        (ServeResponse::RangeJoin(g), ServeResponse::RangeJoin(w)) => {
+            assert_eq!(g.threshold, w.threshold, "{what}: threshold");
+            assert_eq!(g.neighbors, w.neighbors, "{what}: within-sets");
         }
         (ServeResponse::Kmeans(g), ServeResponse::Kmeans(w)) => {
             assert_eq!(g.assign, w.assign, "{what}: assignment");
@@ -799,7 +829,7 @@ fn predictive_shedding_never_drops_a_reactively_met_query() {
 #[test]
 fn calibrator_warms_deterministically_across_identical_runs() {
     let queries = mixed_workload();
-    let kinds = [AlgoKind::Knn, AlgoKind::Kmeans, AlgoKind::Nbody];
+    let kinds = [AlgoKind::Knn, AlgoKind::RangeJoin, AlgoKind::Kmeans, AlgoKind::Nbody];
     let run = || {
         let mut cfg = AccdConfig::new();
         cfg.serve.shards = 2;

@@ -55,6 +55,12 @@ fn assert_solo_parity(resp: &ServeResponse, req: &ServeRequest, solo: &mut Engin
                 "{what}: kmeans centers diverged"
             );
         }
+        ServeRequest::RangeJoin { src, trg, threshold, metric } => {
+            let want =
+                solo.range_join_metric(src, trg, *threshold, *metric).expect("solo rangejoin");
+            let got = resp.as_rangejoin().unwrap_or_else(|| panic!("{what}: wrong kind"));
+            assert_eq!(got.neighbors, want.neighbors, "{what}: rangejoin diverged");
+        }
         ServeRequest::Nbody { .. } => unreachable!("workload has no N-body queries"),
     }
 }

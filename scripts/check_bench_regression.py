@@ -35,6 +35,9 @@ Hard invariants (any run, no baseline needed):
 * every ``kmeans*`` scenario must report ``prune_rate`` > 0 — later
   iterations of a repeated cohort must prune SOMETHING, or the
   incremental TI path has silently died.
+* every ``rangejoin*`` scenario must report ``prune_rate`` > 0 — the
+  group-level bounds must prove some group pairs outside the radius,
+  or threshold pruning has silently died.
 * ``predicted_sheds`` must be 0 everywhere EXCEPT scenarios with
   ``predictive`` in the name (the only rows that enable
   ``serve.predictive_shed``), which must report ``predicted_sheds``
@@ -115,6 +118,12 @@ def main():
                 failures.append(
                     f"{name}: prune_rate = {prune} (must be > 0 — incremental "
                     "TI pruning produced nothing after iteration 1)")
+        if "rangejoin" in name:
+            prune = metric(row, "prune_rate")
+            if not prune or prune <= 0:
+                failures.append(
+                    f"{name}: prune_rate = {prune} (must be > 0 — group-level "
+                    "threshold pruning produced nothing)")
         psheds = row.get("predicted_sheds", 0)
         if "predictive" in name:
             if not psheds:
